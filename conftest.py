@@ -1,0 +1,8 @@
+"""pytest root conftest: make `compile.*` importable when running
+`pytest python/tests/` from the repository root (the Makefile equivalently
+runs pytest from inside python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

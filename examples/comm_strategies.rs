@@ -1,0 +1,56 @@
+//! Compare parameter-exchange strategies at full model scale (Fig. 3 / §3.2).
+//!
+//! ```bash
+//! cargo run --release --offline --example comm_strategies [-- <model> <workers>]
+//! ```
+//!
+//! Exchanges buffers sized to the *true* Table 2 parameter counts of
+//! AlexNet / GoogLeNet / VGGNet over the paper's topologies and prints the
+//! per-iteration communication cost of MPI_Allreduce (AR), CUDA-aware
+//! Alltoall-sum-Allgather (ASA), its fp16 variant (ASA16), and the ring
+//! allreduce ablation.
+
+use theano_mpi::collectives::StrategyKind;
+use theano_mpi::models;
+use theano_mpi::Session;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("alexnet");
+    let workers: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    let sess = Session::new(
+        std::env::var("TMPI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        "runs",
+    )?;
+    let bytes = models::full_scale_bytes(&sess.rt.manifest, model)?;
+    let topo = models::paper_topology(model);
+    println!(
+        "== exchange of {model} ({:.1} MB) across {workers} workers on {topo} ==",
+        bytes as f64 / 1e6
+    );
+    println!("{:<8} {:>12} {:>12} {:>10} {:>10}", "strategy", "transfer(s)", "kernel(s)", "total(s)", "kernel%");
+    let mut base = None;
+    for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring] {
+        let rep = sess.measure_exchange(strat, workers, topo, bytes, true)?;
+        let total = rep.sim_total();
+        base.get_or_insert(total);
+        println!(
+            "{:<8} {:>12.4} {:>12.4} {:>10.4} {:>9.1}%   ({:.2}x vs AR)",
+            strat.name(),
+            rep.sim_transfer,
+            rep.sim_kernel,
+            total,
+            rep.kernel_share() * 100.0,
+            base.unwrap() / total,
+        );
+    }
+
+    // CUDA-awareness ablation (paper §3.2: the point of GPUDirect P2P)
+    println!("\n-- ASA with vs without CUDA-aware transfers (copper, 8 GPUs) --");
+    for aware in [true, false] {
+        let rep = sess.measure_exchange(StrategyKind::Asa, 8, "copper", bytes, aware)?;
+        println!("cuda_aware={aware:<5}  total {:.4}s", rep.sim_total());
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! End-to-end validation driver (DESIGN.md §5): train a ~10.5M-parameter
+//! transformer LM for a few hundred BSP steps across simulated workers.
+//!
+//! ```bash
+//! cargo run --release --offline --example e2e_train_transformer \
+//!     [-- --workers 4 --iters 200 --strategy asa]
+//! ```
+//!
+//! Proves all layers compose on a real workload:
+//!   L1 — the Pallas tiled matmul runs inside every dense projection of the
+//!        forward AND backward pass (custom VJP), plus the ASA sum and the
+//!        fp16 cast kernels inside the exchange;
+//!   L2 — the jax transformer train step, AOT-lowered to HLO text;
+//!   L3 — the rust BSP engine: ranked workers, barriers, ASA exchange over
+//!        the mosaic fabric, virtual-time accounting.
+//!
+//! The corpus is a Markov chain with 4 successors per state, so the optimal
+//! next-token loss is ln(4) ≈ 1.386: the loss curve dropping from ~ln(2048)
+//! ≈ 7.6 toward that floor is the correctness signal. The curve lands in
+//! runs/e2e_loss.csv and is recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use theano_mpi::bsp::{run_bsp, BspConfig};
+use theano_mpi::collectives::StrategyKind;
+use theano_mpi::runtime::Runtime;
+use theano_mpi::sgd::{LrSchedule, Scheme};
+use theano_mpi::Session;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let workers = get("--workers", 4);
+    let iters = get("--iters", 200);
+    let strategy = args
+        .iter()
+        .position(|a| a == "--strategy")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| StrategyKind::parse(s))
+        .unwrap_or(StrategyKind::Asa);
+
+    let sess = Session::new(
+        std::env::var("TMPI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        "runs",
+    )?;
+    let rt: &Arc<Runtime> = &sess.rt;
+    let n_params = rt.manifest.models["transformer"].param_count;
+
+    let mut cfg = BspConfig::quick("transformer", workers, iters);
+    cfg.scheme = Scheme::Subgd;
+    cfg.strategy = strategy;
+    cfg.lr = LrSchedule::StepDecay { base: 3e-3, factor: 0.5, every: iters / 2 };
+    cfg.momentum = 0.9;
+    cfg.eval_every = (iters / 20).max(5);
+    cfg.seed = 1;
+
+    println!(
+        "== e2e: transformer LM ({:.1}M params) x{workers} workers, {iters} BSP steps, {} exchange ==",
+        n_params as f64 / 1e6,
+        strategy.name()
+    );
+    println!("optimal loss floor = ln(4) = 1.386 (Markov corpus)");
+    let t0 = std::time::Instant::now();
+    let rep = run_bsp(rt, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\niter  vtime(s)  train_loss  token_err");
+    for p in &rep.curve {
+        println!("{:>4}  {:>8.2}  {:>10.4}  {:>9.3}", p.iter, p.vtime, p.train_loss, p.val_err);
+    }
+    let rows: Vec<String> = rep
+        .curve
+        .iter()
+        .map(|p| format!("{},{:.4},{:.6},{:.4}", p.iter, p.vtime, p.train_loss, p.val_err))
+        .collect();
+    let path = sess.write_csv("e2e_loss.csv", "iter,vtime_s,train_loss,token_err", &rows)?;
+
+    println!(
+        "\nwall {wall:.0}s | virtual {:.1}s | throughput {:.1} seq/s (virtual)",
+        rep.vtime_total, rep.throughput
+    );
+    println!(
+        "breakdown: compute {:.1}s | comm {:.2}s (kernel {:.1}%) | apply {:.1}s | {} wire bytes/exchange",
+        rep.breakdown.compute,
+        rep.breakdown.comm(),
+        rep.breakdown.kernel_share_of_comm() * 100.0,
+        rep.breakdown.apply,
+        rep.comm.wire_bytes / rep.iters.max(1) as u64,
+    );
+    println!("loss curve -> {path:?}");
+
+    let first = rep.curve.first().map(|p| p.train_loss).unwrap_or(f64::NAN);
+    let last = rep.final_train_loss;
+    let first_err = rep.curve.first().map(|p| p.val_err).unwrap_or(f64::NAN);
+    // success = clear learning signal: loss down >= 0.5 nats from ~ln(vocab)
+    // and token error off its random-chance start (the full descent to the
+    // ln(4) floor takes a few thousand steps; the recorded 150-step run
+    // drops 7.69 -> 6.84 with token error 0.999 -> 0.871 — EXPERIMENTS.md)
+    anyhow::ensure!(
+        last < first - 0.5 && rep.final_val_err < first_err - 0.05,
+        "no learning signal: loss {first:.3} -> {last:.3}, err {first_err:.3} -> {:.3}",
+        rep.final_val_err
+    );
+    println!("e2e OK: loss {first:.3} -> {last:.3}, token err {first_err:.3} -> {:.3}",
+        rep.final_val_err);
+    Ok(())
+}

@@ -1,0 +1,225 @@
+"""AOT compile path: jax/pallas -> HLO text artifacts + manifest.json.
+
+Runs ONCE at `make artifacts`; the rust runtime (rust/src/runtime) loads the
+HLO text via `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+client, and executes it from the L3 hot path. Python is never on the request
+path.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs in --out (default ../artifacts):
+  <name>.hlo.txt        one per artifact (see DESIGN.md artifact inventory)
+  <model>_init.bin      raw little-endian f32 initial flat parameter vector
+  manifest.json         artifact signatures + model/kernel metadata for rust
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as modellib
+from .flatparams import ParamSpec
+from .kernels import fp16, sgd, sumreduce
+from .models import (
+    alexnet_proxy,
+    googlenet_proxy,
+    mlp,
+    registry,
+    transformer,
+    vgg_proxy,
+)
+
+# flat-vector chunk size shared by sum/pack kernels and rust. 1M elements:
+# one PJRT call per 4 MB of exchanged parameters (65536 made the ASA hot
+# path call-bound — DESIGN.md #Perf); inside a chunk the kernels still walk
+# 64k-element VMEM-sized blocks.
+CHUNK = 1 << 20
+SUM_KS = (2, 4, 8)  # worker counts with a dedicated sum-stack artifact
+
+# model name -> (module, kind); proxy cfgs use module defaults
+MODELS = {
+    "mlp": (mlp, "cls"),
+    "alexnet": (alexnet_proxy, "cls"),
+    "googlenet": (googlenet_proxy, "cls"),
+    "vgg": (vgg_proxy, "cls"),
+    "transformer": (transformer, "lm"),
+}
+
+# extra per-worker batch-size variants (paper benchmarks AlexNet at 128 and 32)
+EXTRA_BATCHES = {"alexnet": [128, 8]}  # 128: Table 3; 8: the Fig. 4 small-batch recovery row
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(s) -> str:
+    return {"float32": "f32", "int32": "i32", "uint16": "u16"}[str(s)]
+
+
+def _sig(avals):
+    return [{"shape": [int(d) for d in a.shape], "dtype": _dt(a.dtype)} for a in avals]
+
+
+class Builder:
+    def __init__(self, out_dir: str, only=None):
+        self.out = out_dir
+        self.only = only
+        self.artifacts = {}
+
+    def add(self, name: str, fn, example_args):
+        """Lower fn at the example shapes and write <name>.hlo.txt."""
+        if self.only and name not in self.only:
+            return
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": _sig(example_args),
+            "outputs": _sig(out_avals),
+        }
+        print(f"  [aot] {name}: {len(text)} chars, "
+              f"{len(example_args)} inputs -> {len(out_avals)} outputs", flush=True)
+
+
+def shaped(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def build_model_artifacts(b: Builder, name: str, mod, kind: str, manifest_models: dict):
+    cfg = mod.config()
+    spec = ParamSpec(mod.param_shapes(cfg))
+    n = spec.total
+    f32, i32 = jnp.float32, jnp.int32
+
+    batches = [cfg["batch"]] + EXTRA_BATCHES.get(name, [])
+    entries = {}
+    for bs in batches:
+        suffix = "" if bs == cfg["batch"] else f"{bs}"
+        key = f"{name}{suffix}"
+        if kind == "cls":
+            x = shaped(mod.input_shape(cfg, bs), f32)
+            y = shaped((bs,), i32)
+            ex = shaped(mod.input_shape(cfg, cfg["eval_batch"]), f32)
+            ey = shaped((cfg["eval_batch"],), i32)
+            train = modellib.make_train_step(mod, cfg, spec)
+            grad = modellib.make_grad_step(mod, cfg, spec)
+            evals = modellib.make_eval_step(mod, cfg, spec)
+        else:
+            x = shaped(mod.input_shape(cfg, bs), i32)
+            y = shaped(mod.input_shape(cfg, bs), i32)
+            ex = shaped(mod.input_shape(cfg, cfg["eval_batch"]), i32)
+            ey = shaped(mod.input_shape(cfg, cfg["eval_batch"]), i32)
+            train = modellib.make_lm_train_step(cfg, spec)
+            grad = modellib.make_lm_grad_step(cfg, spec)
+            evals = modellib.make_lm_eval_step(cfg, spec)
+
+        p, m = shaped((n,), f32), shaped((n,), f32)
+        s = shaped((), f32)
+        b.add(f"{key}_train", train, (p, m, x, y, s, s))
+        b.add(f"{key}_grad", grad, (p, x, y))
+        if bs == cfg["batch"]:
+            b.add(f"{key}_eval", evals, (p, ex, ey))
+        entries[bs] = key
+
+    # fused momentum-SGD apply over the full flat vector (SUBGD second half)
+    fn, args = sgd.apply_entry(n)
+    b.add(f"sgd_apply_{name}", fn, args)
+
+    # deterministic initial parameters, raw f32 LE
+    init = spec.flatten([jnp.asarray(t) for t in mod.init_params(cfg, seed=0)])
+    init_file = f"{name}_init.bin"
+    np.asarray(init, dtype="<f4").tofile(os.path.join(b.out, init_file))
+
+    manifest_models[name] = {
+        "kind": kind,
+        "param_count": n,
+        "batch": cfg["batch"],
+        "eval_batch": cfg["eval_batch"],
+        "batches": {str(bs): key for bs, key in entries.items()},
+        "classes": cfg.get("classes"),
+        "input_shape": list(mod.input_shape(cfg, cfg["batch"])),
+        "init_file": init_file,
+        "segments": [[nm, off, sz] for nm, off, sz in spec.segments()],
+        "sgd_apply": f"sgd_apply_{name}",
+        "config": {k: v for k, v in cfg.items() if isinstance(v, (int, float, str))},
+    }
+
+
+def build_kernel_artifacts(b: Builder, manifest: dict):
+    for k in SUM_KS:
+        fn, args = sumreduce.sum_stack_entry(k, CHUNK)
+        b.add(f"sum_stack_k{k}", fn, args)
+    for wire in ("f16", "bf16"):
+        fn, args = fp16.pack_entry(CHUNK, wire)
+        b.add(f"fp16_pack_{wire}", fn, args)
+        fn, args = fp16.unpack_entry(CHUNK, wire)
+        b.add(f"fp16_unpack_{wire}", fn, args)
+    manifest["kernels"] = {
+        "chunk": CHUNK,
+        "sum_stack": {str(k): f"sum_stack_k{k}" for k in SUM_KS},
+        "fp16_pack": {w: f"fp16_pack_{w}" for w in ("f16", "bf16")},
+        "fp16_unpack": {w: f"fp16_unpack_{w}" for w in ("f16", "bf16")},
+    }
+
+
+def build_full_scale(manifest: dict):
+    manifest["full_scale"] = {
+        name: {
+            "depth": info["depth"],
+            "params": registry.total_params(name),
+            "paper_params": registry.PAPER_COUNTS[name],
+            "batches": list(info["batches"]),
+            "segments": [[nm, sz] for nm, sz in registry.segments(name)],
+        }
+        for name, info in registry.FULL_SCALE.items()
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="build only these artifact names (still writes manifest)")
+    ap.add_argument("--skip-models", nargs="*", default=[],
+                    help="model names to skip (e.g. transformer for quick builds)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    b = Builder(args.out, only=args.only)
+    manifest = {"version": 1, "models": {}}
+
+    for name, (mod, kind) in MODELS.items():
+        if name in args.skip_models:
+            continue
+        print(f"[aot] model {name}", flush=True)
+        build_model_artifacts(b, name, mod, kind, manifest["models"])
+
+    print("[aot] kernels", flush=True)
+    build_kernel_artifacts(b, manifest)
+    build_full_scale(manifest)
+    manifest["artifacts"] = b.artifacts
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote manifest with {len(b.artifacts)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Flat parameter-vector layout shared between L2 (jax) and L3 (rust).
+
+Every train-step artifact takes model parameters as ONE flat f32[N] vector so
+the rust exchanger (collectives over MPI-style communicators) can operate on
+the exact buffer the executable consumes — the same trick Theano-MPI used by
+exchanging the concatenated list of Theano shared variables.
+
+The layout (name, shape, offset per tensor) is recorded in the artifact
+manifest so rust can segment the vector per-layer (ASA splits on layer
+boundaries, mirroring the paper's per-parameter Alltoall).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+class ParamSpec:
+    """Describes the flattening of a list of named tensors into one f32 vector."""
+
+    def __init__(self, shapes: Sequence[Tuple[str, Tuple[int, ...]]]):
+        self.names: List[str] = [n for n, _ in shapes]
+        self.shapes: List[Tuple[int, ...]] = [tuple(s) for _, s in shapes]
+        self.sizes: List[int] = [int(math.prod(s)) if s else 1 for s in self.shapes]
+        self.offsets: List[int] = []
+        off = 0
+        for sz in self.sizes:
+            self.offsets.append(off)
+            off += sz
+        self.total: int = off
+
+    def flatten(self, tensors) -> jnp.ndarray:
+        """Concatenate tensors (in spec order) into a flat f32 vector."""
+        assert len(tensors) == len(self.shapes), (len(tensors), len(self.shapes))
+        parts = []
+        for t, s in zip(tensors, self.shapes):
+            assert tuple(t.shape) == s, (tuple(t.shape), s)
+            parts.append(jnp.ravel(t).astype(jnp.float32))
+        return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(self, flat: jnp.ndarray):
+        """Slice the flat vector back into the original tensor list (jit-safe:
+        all offsets are static)."""
+        out = []
+        for off, sz, shape in zip(self.offsets, self.sizes, self.shapes):
+            out.append(jnp.reshape(flat[off : off + sz], shape))
+        return out
+
+    def segments(self):
+        """(name, offset, size) triples — the manifest's layer map."""
+        return list(zip(self.names, self.offsets, self.sizes))

@@ -1,0 +1,116 @@
+"""L1: Pallas tiled matmul — the dense-layer hot spot of every model here.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's dense
+layers run through cuDNN GEMM on K80s. On the TPU-flavoured Pallas model the
+equivalent is an MXU-shaped blocked matmul: blocks are multiples of (8, 128),
+the K reduction walks grid axis 2 with the f32 accumulator resident in VMEM
+(revisited output block), and HBM<->VMEM movement is expressed by BlockSpec
+index maps instead of CUDA threadblocks.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; interpret mode lowers the same grid walk to
+plain HLO (fori_loop of dynamic-slice / dot / dynamic-update-slice), which is
+what the rust runtime loads.
+
+Differentiability: pallas_call has no autodiff rule, so `matmul` carries a
+custom VJP built from the same kernel (dx = dy @ w.T, dw = x.T @ dy) — the
+backward pass of the AOT train-step artifacts therefore also runs the Pallas
+kernel.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output block; grid axis 2 walks the K dimension.
+
+    The output block is revisited across k-steps, so the f32 accumulator
+    lives in the (VMEM) output ref — initialized at k==0, accumulated after.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(dim: int, target: int, align: int) -> int:
+    """Largest MXU-aligned block <= target that does not over-pad `dim`."""
+    if dim <= target:
+        return _ceil_to(dim, align)
+    return target
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(x, w, block_m: int = 256, block_n: int = 256, block_k: int = 512):
+    """Blocked matmul via Pallas: (m, k) @ (k, n) -> (m, n), f32.
+
+    Shapes need not be block-aligned: inputs are zero-padded to the block
+    grid and the result is sliced back. Zero padding is exact for matmul.
+    """
+    return _matmul_fwd_impl(x, w, block_m, block_n, block_k)
+
+
+def _matmul_fwd_impl(x, w, block_m, block_n, block_k):
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"matmul inner dims mismatch: {x.shape} @ {w.shape}"
+
+    bm = _pick_block(m, block_m, 8)
+    bn = _pick_block(n, block_n, 128)
+    bk = _pick_block(kdim, block_k, 128)
+
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(kdim, bk)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - kdim)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - kdim), (0, np_ - n)))
+
+    n_k = kp // bk
+    grid = (mp // bm, np_ // bn, n_k)
+
+    out = pl.pallas_call(
+        partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _matmul_vjp_fwd(x, w, block_m, block_n, block_k):
+    y = _matmul_fwd_impl(x, w, block_m, block_n, block_k)
+    return y, (x, w)
+
+
+def _matmul_vjp_bwd(block_m, block_n, block_k, res, dy):
+    x, w = res
+    # Both cotangents run the same Pallas kernel (transposed operands).
+    dx = _matmul_fwd_impl(dy, w.T, block_m, block_n, block_k)
+    dw = _matmul_fwd_impl(x.T, dy, block_m, block_n, block_k)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_vjp_fwd, _matmul_vjp_bwd)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM residency of one grid step (f32): x + w + out blocks.
+
+    Used by DESIGN.md §Perf to keep blocks inside a 16 MB VMEM budget."""
+    return 4 * (block_m * block_k + block_k * block_n + block_m * block_n)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis and
+asserts each kernel matches its oracle to tight tolerances. These oracles are
+also what the kernels *replace* on the roofline: the perf notes in DESIGN.md
+S-Perf compare the blocked kernels' HLO structure against these fused forms.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain GEMM oracle: f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def sumreduce_ref(stack):
+    """k-way segment sum oracle: sum over the leading (rank) axis.
+
+    This is the arithmetic half of the paper's Alltoall-sum-Allgather
+    exchange: after the Alltoall, each rank holds a (k, n/k) stack of
+    sub-arrays to be summed (Fig. 2)."""
+    return jnp.sum(stack.astype(jnp.float32), axis=0)
+
+
+def fp16_pack_ref(x, wire="f16"):
+    """f32 -> half bits carried as u16 (the ASA16 wire format)."""
+    dt = jnp.float16 if wire == "f16" else jnp.bfloat16
+    return jax.lax.bitcast_convert_type(x.astype(dt), jnp.uint16)
+
+
+def fp16_unpack_ref(bits, wire="f16"):
+    """u16 half bits -> f32 (summation happens at full precision, S3.2)."""
+    dt = jnp.float16 if wire == "f16" else jnp.bfloat16
+    return jax.lax.bitcast_convert_type(bits, dt).astype(jnp.float32)
+
+
+def sgd_update_ref(w, v, g, lr, mu, scale=1.0):
+    """Classical momentum SGD: v' = mu*v - lr*(g*scale) ; w' = w + v'."""
+    v2 = mu * v - lr * (g * scale)
+    return w + v2, v2

@@ -1,0 +1,71 @@
+"""L1: Pallas k-way segment summation — the GPU-sum of Alltoall-sum-Allgather.
+
+Paper §3.2: after the CUDA-aware Alltoall, each rank holds k sub-arrays that
+must be summed; Theano-MPI runs a CUDA summation kernel (measured at 1.6 % of
+total communication time). Here the same arithmetic is a Pallas kernel over a
+(k, n) stack: the grid walks the n axis in VMEM-sized blocks and each block's
+k-way sum stays resident — the HBM->VMEM schedule replaces the CUDA
+threadblock decomposition.
+
+The rust ASA strategy calls the AOT-compiled form of `sum_stack` on each
+rank's post-Alltoall segments (runtime::kernels), so this kernel is on the L3
+exchange hot path.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sum_kernel(s_ref, o_ref):
+    # Block is (k, bn): the whole rank axis fits in one block so the k-way
+    # sum is a single VMEM reduction per grid step.
+    o_ref[...] = jnp.sum(s_ref[...], axis=0)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def sum_stack(stack, block_n: int = 65536):
+    """Sum a (k, n) f32 stack over axis 0 via a blocked Pallas kernel.
+
+    n need not be block-aligned; zero padding is exact for summation.
+    """
+    k, n = stack.shape
+    bn = min(block_n, _ceil_to(n, 128))
+    np_ = _ceil_to(n, bn)
+    sp = jnp.pad(stack.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _sum_kernel,
+        grid=(np_ // bn,),
+        in_specs=[pl.BlockSpec((k, bn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(sp)
+    return out[:n]
+
+
+def sum_stack_entry(k: int, n: int):
+    """AOT entry point: fixed (k, n) -> jitted fn + example args.
+
+    The rust exchanger pads layer segments to `n` and loops chunks, so a
+    small set of (k, n) artifacts covers all models (see aot.py)."""
+
+    def fn(stack):
+        # single grid step for the AOT artifact (see sgd.apply_entry's perf
+        # note): interpret-mode multi-step grids cost per-step buffer copies
+        # on XLA CPU; real-TPU builds would restore 64k blocking for VMEM.
+        return (sum_stack(stack, block_n=n),)
+
+    spec = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return fn, (spec,)
+
+
+def vmem_footprint_bytes(k: int, block_n: int) -> int:
+    """One grid step holds the (k, bn) input block + (bn,) output in VMEM."""
+    return 4 * (k * block_n + block_n)

@@ -1,0 +1,108 @@
+"""L2: train/grad/eval step builders over flat parameter vectors.
+
+Each builder returns a jax-jittable function whose inputs/outputs are the
+exact artifact signature the rust runtime executes:
+
+  train_step(fp, fm, x, y, lr, mu) -> (fp', fm', loss)
+      the AWAGD local step: fwd/bwd + classical momentum SGD. Workers run
+      this, then the exchanger AVERAGES weights+momentum (paper §4, [15,7]).
+
+  grad_step(fp, x, y) -> (grads, loss)
+      the SUBGD half-step: fwd/bwd only. Workers exchange (sum) raw
+      gradients, then the sgd_apply kernel artifact applies the update once.
+
+  eval_step(fp, x, y) -> (loss, n_correct)
+      validation: mean loss + correct predictions in the batch.
+
+GoogLeNet-style aux classifiers contribute `aux_weight`-scaled losses during
+training only (train=True), matching BVLC GoogLeNet / the paper's setup.
+"""
+
+import jax
+
+from .flatparams import ParamSpec
+from .models import nn, transformer
+
+
+def make_spec(model_mod, cfg) -> ParamSpec:
+    return ParamSpec(model_mod.param_shapes(cfg))
+
+
+def _classifier_loss(model_mod, cfg, spec, fp, x, y, train):
+    logits, auxes = model_mod.apply(cfg, spec.unflatten(fp), x, train=train)
+    loss = nn.cross_entropy(logits, y)
+    w = cfg.get("aux_weight", 0.3)
+    for a in auxes:
+        loss = loss + w * nn.cross_entropy(a, y)
+    return loss, logits
+
+
+def make_train_step(model_mod, cfg, spec):
+    def train_step(fp, fm, x, y, lr, mu):
+        def loss_fn(p):
+            loss, _ = _classifier_loss(model_mod, cfg, spec, p, x, y, True)
+            return loss
+
+        loss, g = jax.value_and_grad(loss_fn)(fp)
+        v = mu * fm - lr * g
+        return fp + v, v, loss
+
+    return train_step
+
+
+def make_grad_step(model_mod, cfg, spec):
+    def grad_step(fp, x, y):
+        def loss_fn(p):
+            loss, _ = _classifier_loss(model_mod, cfg, spec, p, x, y, True)
+            return loss
+
+        loss, g = jax.value_and_grad(loss_fn)(fp)
+        return g, loss
+
+    return grad_step
+
+
+def make_eval_step(model_mod, cfg, spec):
+    def eval_step(fp, x, y):
+        logits, _ = model_mod.apply(cfg, spec.unflatten(fp), x, train=False)
+        loss = nn.cross_entropy(logits, y)
+        return loss, nn.correct_count(logits, y)
+
+    return eval_step
+
+
+# --- transformer LM variants (targets are i32[B, L] token grids) ------------
+
+
+def make_lm_train_step(cfg, spec):
+    def train_step(fp, fm, x, y, lr, mu):
+        def loss_fn(p):
+            logits, _ = transformer.apply(cfg, spec.unflatten(p), x, train=True)
+            return transformer.lm_loss(logits, y)
+
+        loss, g = jax.value_and_grad(loss_fn)(fp)
+        v = mu * fm - lr * g
+        return fp + v, v, loss
+
+    return train_step
+
+
+def make_lm_grad_step(cfg, spec):
+    def grad_step(fp, x, y):
+        def loss_fn(p):
+            logits, _ = transformer.apply(cfg, spec.unflatten(p), x, train=True)
+            return transformer.lm_loss(logits, y)
+
+        loss, g = jax.value_and_grad(loss_fn)(fp)
+        return g, loss
+
+    return grad_step
+
+
+def make_lm_eval_step(cfg, spec):
+    def eval_step(fp, x, y):
+        logits, _ = transformer.apply(cfg, spec.unflatten(fp), x, train=False)
+        loss = transformer.lm_loss(logits, y)
+        return loss, transformer.token_correct(logits, y)
+
+    return eval_step

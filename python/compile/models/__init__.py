@@ -1,0 +1,14 @@
+"""Model zoo for the reproduction.
+
+Each model module exposes:
+  config(**overrides) -> dict          hyper-parameter dict
+  param_shapes(cfg)   -> [(name, shape)]
+  init_params(cfg, seed) -> [np.ndarray]   deterministic He/Glorot init
+  apply(cfg, params, x, train) -> (logits, [aux_logits...])
+
+`registry` carries the *full-scale* architectures' exact layer tables (paper
+Table 2 parameter counts) that drive the rust communication simulator; the
+modules here are the runnable reduced-resolution proxies (DESIGN.md §2).
+"""
+
+from . import alexnet_proxy, googlenet_proxy, mlp, registry, transformer, vgg_proxy  # noqa: F401

@@ -1,0 +1,93 @@
+"""AlexNet proxy: the paper's 8-weighted-layer topology at 32x32 resolution.
+
+Same layer *sequence* as Krizhevsky's AlexNet (5 convs with pools after
+1/2/5, then 3 FCs) with channels scaled for a single-CPU-core testbed. The
+full-scale layer table — exactly 60,965,224 parameters — lives in
+`registry.py` and drives the rust communication simulator; this proxy
+provides real convergence dynamics (Fig. 4, Table 1 rows).
+"""
+
+import numpy as np
+
+from . import nn
+
+
+def config(**kw):
+    cfg = dict(
+        in_hw=32,
+        classes=16,
+        batch=32,
+        eval_batch=128,
+        convs=[
+            # (out_c, kernel, stride, pool_after)
+            (32, 3, 1, True),
+            (64, 3, 1, True),
+            (96, 3, 1, False),
+            (64, 3, 1, False),
+            (64, 3, 1, True),
+        ],
+        fc=(256, 128),
+    )
+    cfg.update(kw)
+    return cfg
+
+
+def _dims(cfg):
+    hw = cfg["in_hw"]
+    in_c = 3
+    dims = []
+    for out_c, k, s, pool in cfg["convs"]:
+        dims.append((in_c, out_c, k))
+        hw = hw // s
+        if pool:
+            hw //= 2
+        in_c = out_c
+    return dims, in_c * hw * hw
+
+
+def param_shapes(cfg):
+    dims, flat = _dims(cfg)
+    shapes = []
+    for i, (in_c, out_c, k) in enumerate(dims):
+        shapes.append((f"conv{i + 1}_w", (out_c, in_c, k, k)))
+        shapes.append((f"conv{i + 1}_b", (out_c,)))
+    fc_dims = [flat, *cfg["fc"], cfg["classes"]]
+    for i in range(len(fc_dims) - 1):
+        shapes.append((f"fc{i + 6}_w", (fc_dims[i], fc_dims[i + 1])))
+        shapes.append((f"fc{i + 6}_b", (fc_dims[i + 1],)))
+    return shapes
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in param_shapes(cfg):
+        if name.startswith("conv") and name.endswith("_w"):
+            out.append(nn.he_conv(rng, *shape[:2], shape[2], shape[3]))
+        elif name.endswith("_w"):
+            out.append(nn.he_fc(rng, *shape))
+        else:
+            out.append(nn.zeros(*shape))
+    return out
+
+
+def input_shape(cfg, batch):
+    return (batch, 3, cfg["in_hw"], cfg["in_hw"])
+
+
+def apply(cfg, params, x, train=True):
+    i = 0
+    h = x
+    for out_c, k, s, pool in cfg["convs"]:
+        h = nn.relu(nn.conv2d(h, params[i], params[i + 1], stride=s))
+        if pool:
+            h = nn.max_pool(h)
+        i += 2
+    h = nn.flatten(h)
+    n_fc = len(cfg["fc"]) + 1
+    for j in range(n_fc):
+        h = nn.dense(h, params[i], params[i + 1])
+        if j < n_fc - 1:
+            h = nn.relu(h)
+        i += 2
+    return h, []

@@ -1,0 +1,136 @@
+"""GoogLeNet proxy: stem + inception blocks + two auxiliary classifiers.
+
+Mirrors the BVLC GoogLeNet structure the paper benchmarked (inception modules
+with 1x1 / 3x3-reduce / 5x5-reduce / pool-proj branches; aux classifiers with
+the 0.3 loss weight) at 32x32 with scaled channels. The exact 13,378,280
+full-scale parameter table (incl. both aux heads, paper footnote 12) is in
+`registry.py`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import nn
+
+# branch spec: (c1, c3r, c3, c5r, c5, cpool)
+def config(**kw):
+    cfg = dict(
+        in_hw=32,
+        classes=16,
+        batch=32,
+        eval_batch=128,
+        stem=32,
+        blocks=[
+            # (in resolution after stem pool = 16)
+            dict(spec=(16, 16, 24, 4, 8, 8), pool_after=False),
+            dict(spec=(24, 24, 32, 8, 16, 16), pool_after=True),
+            dict(spec=(32, 32, 48, 8, 16, 16), pool_after=False),
+        ],
+        aux_after=[1, 2],  # block indices with auxiliary heads
+        aux_proj=16,
+        aux_fc=64,
+        aux_weight=0.3,
+    )
+    cfg.update(kw)
+    return cfg
+
+
+def _block_out(spec):
+    c1, c3r, c3, c5r, c5, cp = spec
+    return c1 + c3 + c5 + cp
+
+
+def param_shapes(cfg):
+    shapes = [
+        ("stem_w", (cfg["stem"], 3, 3, 3)),
+        ("stem_b", (cfg["stem"],)),
+    ]
+    in_c = cfg["stem"]
+    for bi, blk in enumerate(cfg["blocks"]):
+        c1, c3r, c3, c5r, c5, cp = blk["spec"]
+        p = f"inc{bi}_"
+        shapes += [
+            (p + "b1_w", (c1, in_c, 1, 1)), (p + "b1_b", (c1,)),
+            (p + "b3r_w", (c3r, in_c, 1, 1)), (p + "b3r_b", (c3r,)),
+            (p + "b3_w", (c3, c3r, 3, 3)), (p + "b3_b", (c3,)),
+            (p + "b5r_w", (c5r, in_c, 1, 1)), (p + "b5r_b", (c5r,)),
+            (p + "b5_w", (c5, c5r, 5, 5)), (p + "b5_b", (c5,)),
+            (p + "bp_w", (cp, in_c, 1, 1)), (p + "bp_b", (cp,)),
+        ]
+        in_c = _block_out(blk["spec"])
+        if bi in cfg["aux_after"]:
+            a = f"aux{bi}_"
+            shapes += [
+                (a + "proj_w", (cfg["aux_proj"], in_c, 1, 1)),
+                (a + "proj_b", (cfg["aux_proj"],)),
+                # aux avg-pools to 4x4 before the projection
+                (a + "fc1_w", (cfg["aux_proj"] * 16, cfg["aux_fc"])),
+                (a + "fc1_b", (cfg["aux_fc"],)),
+                (a + "fc2_w", (cfg["aux_fc"], cfg["classes"])),
+                (a + "fc2_b", (cfg["classes"],)),
+            ]
+    shapes += [
+        ("head_w", (in_c, cfg["classes"])),
+        ("head_b", (cfg["classes"],)),
+    ]
+    return shapes
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in param_shapes(cfg):
+        if name.endswith("_w") and len(shape) == 4:
+            out.append(nn.he_conv(rng, shape[0], shape[1], shape[2], shape[3]))
+        elif name.endswith("_w"):
+            out.append(nn.he_fc(rng, *shape))
+        else:
+            out.append(nn.zeros(*shape))
+    return out
+
+
+def input_shape(cfg, batch):
+    return (batch, 3, cfg["in_hw"], cfg["in_hw"])
+
+
+def _inception(h, p, i):
+    """Apply one inception module; p is the param list, i the cursor."""
+    b1 = nn.relu(nn.conv2d(h, p[i], p[i + 1]))
+    b3 = nn.relu(nn.conv2d(h, p[i + 2], p[i + 3]))
+    b3 = nn.relu(nn.conv2d(b3, p[i + 4], p[i + 5]))
+    b5 = nn.relu(nn.conv2d(h, p[i + 6], p[i + 7]))
+    b5 = nn.relu(nn.conv2d(b5, p[i + 8], p[i + 9]))
+    # pool branch: 3x3/1 max pool at constant resolution (edge-padded)
+    bp = jnp.pad(h, ((0, 0), (0, 0), (1, 1), (1, 1)), mode="edge")
+    bp = nn.max_pool(bp, size=3, stride=1)
+    bp = nn.relu(nn.conv2d(bp, p[i + 10], p[i + 11]))
+    return jnp.concatenate([b1, b3, b5, bp], axis=1), i + 12
+
+
+def _aux_head(h, p, i, cfg):
+    """Aux classifier: avg-pool to 4x4 -> 1x1 conv -> fc -> fc."""
+    hw = h.shape[2]
+    a = nn.avg_pool(h, size=hw // 4, stride=hw // 4)
+    a = nn.relu(nn.conv2d(a, p[i], p[i + 1]))
+    a = nn.flatten(a)
+    a = nn.relu(nn.dense(a, p[i + 2], p[i + 3]))
+    a = nn.dense(a, p[i + 4], p[i + 5])
+    return a, i + 6
+
+
+def apply(cfg, params, x, train=True):
+    h = nn.relu(nn.conv2d(x, params[0], params[1]))
+    h = nn.max_pool(h)
+    i = 2
+    auxes = []
+    for bi, blk in enumerate(cfg["blocks"]):
+        h, i = _inception(h, params, i)
+        if bi in cfg["aux_after"]:
+            a, i = _aux_head(h, params, i, cfg)
+            if train:
+                auxes.append(a)
+        if blk["pool_after"]:
+            h = nn.max_pool(h)
+    h = nn.global_avg_pool(h)
+    logits = nn.dense(h, params[i], params[i + 1])
+    return logits, auxes

@@ -1,0 +1,51 @@
+"""MLP on flat synthetic features — the quickstart / fast-iteration model.
+
+Small enough that BSP convergence experiments run thousands of iterations in
+seconds, which is what the scheme-equivalence (AWAGD vs SUBGD) and
+effective-batch-size studies use before the CNN proxies confirm the shape.
+"""
+
+import numpy as np
+
+from . import nn
+
+
+def config(**kw):
+    cfg = dict(in_dim=256, hidden=(512, 256), classes=16, batch=32, eval_batch=256)
+    cfg.update(kw)
+    return cfg
+
+
+def param_shapes(cfg):
+    dims = [cfg["in_dim"], *cfg["hidden"], cfg["classes"]]
+    shapes = []
+    for i in range(len(dims) - 1):
+        shapes.append((f"fc{i}_w", (dims[i], dims[i + 1])))
+        shapes.append((f"fc{i}_b", (dims[i + 1],)))
+    return shapes
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in param_shapes(cfg):
+        if name.endswith("_w"):
+            out.append(nn.he_fc(rng, *shape))
+        else:
+            out.append(nn.zeros(*shape))
+    return out
+
+
+def input_shape(cfg, batch):
+    return (batch, cfg["in_dim"])
+
+
+def apply(cfg, params, x, train=True):
+    n_layers = len(cfg["hidden"]) + 1
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = nn.dense(h, w, b)
+        if i < n_layers - 1:
+            h = nn.relu(h)
+    return h, []

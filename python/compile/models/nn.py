@@ -1,0 +1,91 @@
+"""Shared layer primitives for the proxy CNNs (NCHW, jax.lax convs).
+
+Convolutions lower through XLA's conv (the paper likewise used cuDNN rather
+than custom conv kernels); all fully-connected layers go through the L1
+Pallas matmul so every model's hot path exercises the kernel.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.matmul import matmul as pallas_matmul
+
+
+def conv2d(x, w, b, stride=1, padding="SAME"):
+    """NCHW conv + bias. w: (out_c, in_c, kh, kw)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def max_pool(x, size=2, stride=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, 1, size, size),
+        (1, 1, stride, stride),
+        "VALID",
+    )
+
+
+def avg_pool(x, size, stride):
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, size, size), (1, 1, stride, stride), "VALID"
+    )
+    return s / float(size * size)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def dense(x, w, b):
+    """FC layer through the Pallas tiled matmul (L1 on the hot path)."""
+    return pallas_matmul(x, w) + b[None, :]
+
+
+def flatten(x):
+    return jnp.reshape(x, (x.shape[0], -1))
+
+
+# ---------------------------------------------------------------------------
+# deterministic init helpers (numpy, seeded)
+
+
+def he_conv(rng: np.random.RandomState, out_c, in_c, kh, kw):
+    fan_in = in_c * kh * kw
+    std = math.sqrt(2.0 / fan_in)
+    return (rng.randn(out_c, in_c, kh, kw) * std).astype(np.float32)
+
+
+def he_fc(rng: np.random.RandomState, n_in, n_out):
+    std = math.sqrt(2.0 / n_in)
+    return (rng.randn(n_in, n_out) * std).astype(np.float32)
+
+
+def zeros(*shape):
+    return np.zeros(shape, np.float32)
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def correct_count(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))

@@ -1,0 +1,144 @@
+"""Decoder-only transformer LM — the end-to-end validation workload.
+
+The mandated e2e driver (examples/e2e_train_transformer.rs) trains this model
+with BSP data parallelism across simulated workers for a few hundred steps on
+a synthetic Markov corpus and logs the loss curve. All dense projections (QKV,
+attention out, MLP, LM head) run through the L1 Pallas matmul, so the Pallas
+kernel sits on the forward AND backward hot path of the e2e artifact.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.matmul import matmul as pallas_matmul
+
+
+def config(**kw):
+    # Default size (~10.5M params) is chosen for the single-CPU-core testbed:
+    # the mandated e2e run does a few hundred BSP steps across multiple
+    # simulated workers whose compute serializes on one core, so step time
+    # (~1.5-2 s at this size) bounds the recorded run to minutes, not hours.
+    # Scale up via config overrides on real hardware.
+    cfg = dict(
+        vocab=2048,
+        d_model=384,
+        n_layer=5,
+        n_head=6,
+        d_ff=1536,
+        seq_len=96,
+        batch=4,
+        eval_batch=8,
+    )
+    cfg.update(kw)
+    assert cfg["d_model"] % cfg["n_head"] == 0
+    return cfg
+
+
+def param_shapes(cfg):
+    d, f, v, L = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["seq_len"]
+    shapes = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (L, d)),
+    ]
+    for i in range(cfg["n_layer"]):
+        p = f"l{i}_"
+        shapes += [
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "wqkv", (d, 3 * d)), (p + "bqkv", (3 * d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    shapes += [
+        ("lnf_g", (d,)), ("lnf_b", (d,)),
+        ("head", (d, v)),
+    ]
+    return shapes
+
+
+def param_count(cfg):
+    return sum(int(np.prod(s)) for _, s in param_shapes(cfg))
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    d = cfg["d_model"]
+    for name, shape in param_shapes(cfg):
+        if name.endswith(("_g",)):
+            out.append(np.ones(shape, np.float32))
+        elif name.endswith(("_b", "bqkv", "bo", "b1", "b2")):
+            out.append(np.zeros(shape, np.float32))
+        elif name in ("tok_emb", "pos_emb"):
+            out.append((rng.randn(*shape) * 0.02).astype(np.float32))
+        else:
+            std = 0.02 / math.sqrt(2 * cfg["n_layer"]) if name.endswith(("wo", "w2")) else 0.02
+            out.append((rng.randn(*shape) * std).astype(np.float32))
+    return out
+
+
+def input_shape(cfg, batch):
+    return (batch, cfg["seq_len"])  # int32 token ids
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _dense(x2d, w, b):
+    return pallas_matmul(x2d, w) + b[None, :]
+
+
+def apply(cfg, params, tokens, train=True):
+    """tokens: i32[B, L] -> logits f32[B, L, V]."""
+    d, H = cfg["d_model"], cfg["n_head"]
+    hd = d // H
+    B, L = tokens.shape
+    p = {name: t for (name, _), t in zip(param_shapes(cfg), params)}
+
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :L, :]
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    for i in range(cfg["n_layer"]):
+        pre = f"l{i}_"
+        x = _layer_norm(h, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        qkv = _dense(x.reshape(B * L, d), p[pre + "wqkv"], p[pre + "bqkv"])
+        qkv = qkv.reshape(B, L, 3, H, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        att = jnp.where(mask[None, None], att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B * L, d)
+        h = h + _dense(o, p[pre + "wo"], p[pre + "bo"]).reshape(B, L, d)
+
+        x = _layer_norm(h, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        m = _dense(x.reshape(B * L, d), p[pre + "w1"], p[pre + "b1"])
+        m = jax.nn.gelu(m)
+        m = _dense(m, p[pre + "w2"], p[pre + "b2"])
+        h = h + m.reshape(B, L, d)
+
+    h = _layer_norm(h, p["lnf_g"], p["lnf_b"])
+    logits = _dense(h.reshape(B * L, d), p["head"], jnp.zeros((cfg["vocab"],), jnp.float32))
+    return logits.reshape(B, L, cfg["vocab"]), []
+
+
+def lm_loss(logits, targets):
+    """Next-token cross entropy. targets: i32[B, L]."""
+    V = logits.shape[-1]
+    flat = logits.reshape(-1, V)
+    t = targets.reshape(-1).astype(jnp.int32)
+    logz = jax.nn.logsumexp(flat, axis=-1)
+    picked = jnp.take_along_axis(flat, t[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def token_correct(logits, targets):
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred == targets).astype(jnp.int32))

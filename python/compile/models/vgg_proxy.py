@@ -1,0 +1,78 @@
+"""VGGNet proxy: stacked 3x3 conv blocks + heavy FC head, at 32x32.
+
+VGG is the paper's communication stress test (138.4M parameters, Table 3's
+worst scaling); the proxy keeps the signature VGG shape — uniform 3x3 convs
+in doubling-width blocks and an FC head that dominates the parameter count —
+so the proxy, like the original, is FC/comm-heavy relative to its compute.
+"""
+
+import numpy as np
+
+from . import nn
+
+
+def config(**kw):
+    cfg = dict(
+        in_hw=32,
+        classes=16,
+        batch=32,
+        eval_batch=128,
+        blocks=[(32, 2), (64, 2), (128, 2)],  # (channels, convs per block)
+        fc=(256,),
+    )
+    cfg.update(kw)
+    return cfg
+
+
+def param_shapes(cfg):
+    shapes = []
+    in_c = 3
+    hw = cfg["in_hw"]
+    li = 0
+    for out_c, reps in cfg["blocks"]:
+        for _ in range(reps):
+            li += 1
+            shapes.append((f"conv{li}_w", (out_c, in_c, 3, 3)))
+            shapes.append((f"conv{li}_b", (out_c,)))
+            in_c = out_c
+        hw //= 2
+    fc_dims = [in_c * hw * hw, *cfg["fc"], cfg["classes"]]
+    for i in range(len(fc_dims) - 1):
+        shapes.append((f"fc{i + 1}_w", (fc_dims[i], fc_dims[i + 1])))
+        shapes.append((f"fc{i + 1}_b", (fc_dims[i + 1],)))
+    return shapes
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in param_shapes(cfg):
+        if name.startswith("conv") and name.endswith("_w"):
+            out.append(nn.he_conv(rng, shape[0], shape[1], shape[2], shape[3]))
+        elif name.endswith("_w"):
+            out.append(nn.he_fc(rng, *shape))
+        else:
+            out.append(nn.zeros(*shape))
+    return out
+
+
+def input_shape(cfg, batch):
+    return (batch, 3, cfg["in_hw"], cfg["in_hw"])
+
+
+def apply(cfg, params, x, train=True):
+    h = x
+    i = 0
+    for out_c, reps in cfg["blocks"]:
+        for _ in range(reps):
+            h = nn.relu(nn.conv2d(h, params[i], params[i + 1]))
+            i += 2
+        h = nn.max_pool(h)
+    h = nn.flatten(h)
+    n_fc = len(cfg["fc"]) + 1
+    for j in range(n_fc):
+        h = nn.dense(h, params[i], params[i + 1])
+        if j < n_fc - 1:
+            h = nn.relu(h)
+        i += 2
+    return h, []

@@ -1,0 +1,92 @@
+"""AOT artifact + manifest consistency (runs after `make artifacts`)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_every_artifact_file_exists_and_is_hlo_text():
+    m = _manifest()
+    for name, a in m["artifacts"].items():
+        p = os.path.join(ART, a["file"])
+        assert os.path.exists(p), name
+        with open(p) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), name
+
+
+def test_models_reference_existing_artifacts():
+    m = _manifest()
+    for name, info in m["models"].items():
+        for bs, key in info["batches"].items():
+            for suffix in ("_train", "_grad"):
+                assert key + suffix in m["artifacts"], (name, key + suffix)
+        assert f"{name}_eval" in m["artifacts"]
+        assert info["sgd_apply"] in m["artifacts"]
+
+
+def test_init_bins_match_param_counts():
+    m = _manifest()
+    for name, info in m["models"].items():
+        p = os.path.join(ART, info["init_file"])
+        data = np.fromfile(p, dtype="<f4")
+        assert data.shape[0] == info["param_count"], name
+        assert np.all(np.isfinite(data)), name
+
+
+def test_segments_partition_the_flat_vector():
+    m = _manifest()
+    for name, info in m["models"].items():
+        off = 0
+        for nm, o, sz in info["segments"]:
+            assert o == off, (name, nm)
+            off += sz
+        assert off == info["param_count"], name
+
+
+def test_train_signatures_flat_param_convention():
+    m = _manifest()
+    for name, info in m["models"].items():
+        n = info["param_count"]
+        art = m["artifacts"][info["batches"][str(info["batch"])] + "_train"]
+        ins, outs = art["inputs"], art["outputs"]
+        assert ins[0]["shape"] == [n] and ins[0]["dtype"] == "f32"  # params
+        assert ins[1]["shape"] == [n] and ins[1]["dtype"] == "f32"  # momentum
+        assert ins[4]["shape"] == [] and ins[5]["shape"] == []      # lr, mu
+        assert outs[0]["shape"] == [n] and outs[1]["shape"] == [n]
+        assert outs[2]["shape"] == []                               # loss
+
+
+def test_full_scale_table2_exact():
+    m = _manifest()
+    fs = m["full_scale"]
+    assert fs["alexnet"]["params"] == 60_965_224
+    assert fs["googlenet"]["params"] == 13_378_280
+    assert fs["vggnet"]["params"] == 138_357_544
+    for info in fs.values():
+        assert info["params"] == info["paper_params"]
+        assert sum(sz for _, sz in info["segments"]) == info["params"]
+
+
+def test_kernel_artifacts_present():
+    m = _manifest()
+    k = m["kernels"]
+    assert k["chunk"] == 1 << 20  # §Perf: 1M chunks keep the ASA path off the PJRT call-overhead wall
+    for key in list(k["sum_stack"].values()) + list(k["fp16_pack"].values()) + list(
+        k["fp16_unpack"].values()
+    ):
+        assert key in m["artifacts"], key

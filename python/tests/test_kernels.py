@@ -1,0 +1,142 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-block-aligned and degenerate sizes)
+and values; assert_allclose at tight tolerances. These are the core
+correctness signal for everything the rust hot path executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fp16, matmul, ref, sgd, sumreduce
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    got = matmul.matmul(x, w)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (256, 512, 256, 128, 128, 128),  # exactly block-aligned
+        (257, 513, 259, 128, 128, 128),  # one past alignment
+        (8, 128, 128, 256, 256, 512),    # smaller than one block
+        (300, 100, 40, 64, 128, 512),
+    ],
+)
+def test_matmul_block_shapes(m, k, n, bm, bn, bk):
+    rng = np.random.default_rng(0)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    got = matmul.matmul(x, w, bm, bn, bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(2, 24),
+    k=st.integers(2, 24),
+    n=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_vjp_matches_ref_grads(m, k, n, seed):
+    """The custom VJP (same Pallas kernel, transposed) must match jnp grads."""
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.tanh(matmul.matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(ref.matmul_ref(x, w)))
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    k=st.integers(1, 9),
+    n=st.integers(1, 200_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sum_stack_matches_ref(k, n, seed):
+    rng = np.random.default_rng(seed)
+    s = _arr(rng, k, n)
+    np.testing.assert_allclose(
+        sumreduce.sum_stack(s), ref.sumreduce_ref(s), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_sum_stack_block_boundary_exact():
+    # padding region must contribute exactly zero
+    for n in (65535, 65536, 65537, 1, 127, 128, 129):
+        s = jnp.ones((4, n), jnp.float32)
+        np.testing.assert_array_equal(sumreduce.sum_stack(s), 4.0 * jnp.ones(n))
+
+
+@given(
+    n=st.integers(1, 200_000),
+    seed=st.integers(0, 2**31 - 1),
+    wire=st.sampled_from(["f16", "bf16"]),
+)
+def test_fp16_pack_unpack_roundtrip(n, seed, wire):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, n)
+    bits = fp16.fp16_pack(x, wire=wire)
+    np.testing.assert_array_equal(bits, ref.fp16_pack_ref(x, wire))
+    back = fp16.fp16_unpack(bits, wire=wire)
+    np.testing.assert_array_equal(back, ref.fp16_unpack_ref(bits, wire))
+    # round-trip error bounded by half-precision ulp of the magnitude
+    tol = 1e-2 if wire == "bf16" else 1e-3
+    np.testing.assert_allclose(back, x, rtol=tol, atol=tol)
+
+
+def test_fp16_special_values():
+    x = jnp.asarray([0.0, -0.0, 1.0, -1.0, 65504.0, 1e-8, 123.456], jnp.float32)
+    bits = fp16.fp16_pack(x)
+    np.testing.assert_array_equal(bits, ref.fp16_pack_ref(x))
+    back = fp16.fp16_unpack(bits)
+    assert float(back[0]) == 0.0 and float(back[2]) == 1.0
+    assert float(back[4]) == 65504.0  # f16 max maps exactly
+
+
+@given(
+    n=st.integers(1, 300_000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    scale=st.floats(0.01, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_update_matches_ref(n, lr, mu, scale, seed):
+    rng = np.random.default_rng(seed)
+    w, v, g = _arr(rng, n), _arr(rng, n), _arr(rng, n)
+    w2, v2 = sgd.sgd_update(w, v, g, lr, mu, scale)
+    rw, rv = ref.sgd_update_ref(w, v, g, np.float32(lr), np.float32(mu), np.float32(scale))
+    np.testing.assert_allclose(w2, rw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v2, rv, rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_footprints_within_budget():
+    """DESIGN §Perf: one grid step must fit a 16 MB VMEM budget."""
+    assert matmul.vmem_footprint_bytes(256, 256, 512) <= 16 << 20
+    assert sumreduce.vmem_footprint_bytes(8, 65536) <= 16 << 20

@@ -1,0 +1,113 @@
+"""L2 model zoo: shapes, init, aux-classifier semantics, exact Table 2 counts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.flatparams import ParamSpec
+from compile.models import (
+    alexnet_proxy,
+    googlenet_proxy,
+    mlp,
+    registry,
+    transformer,
+    vgg_proxy,
+)
+
+PROXIES = [
+    ("mlp", mlp),
+    ("alexnet", alexnet_proxy),
+    ("googlenet", googlenet_proxy),
+    ("vgg", vgg_proxy),
+]
+
+
+@pytest.mark.parametrize("name,mod", PROXIES)
+def test_init_matches_shapes(name, mod):
+    cfg = mod.config()
+    shapes = mod.param_shapes(cfg)
+    params = mod.init_params(cfg, seed=0)
+    assert len(params) == len(shapes)
+    for (nm, s), p in zip(shapes, params):
+        assert tuple(p.shape) == tuple(s), nm
+        assert p.dtype == np.float32, nm
+
+
+@pytest.mark.parametrize("name,mod", PROXIES)
+def test_apply_output_shapes(name, mod):
+    cfg = mod.config()
+    params = [jnp.asarray(p) for p in mod.init_params(cfg, seed=0)]
+    bs = 4
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(mod.input_shape(cfg, bs)).astype(np.float32))
+    logits, auxes = mod.apply(cfg, params, x, train=True)
+    assert logits.shape == (bs, cfg["classes"])
+    for a in auxes:
+        assert a.shape == (bs, cfg["classes"])
+
+
+def test_googlenet_aux_heads_train_only():
+    cfg = googlenet_proxy.config()
+    params = [jnp.asarray(p) for p in googlenet_proxy.init_params(cfg, seed=0)]
+    x = jnp.zeros(googlenet_proxy.input_shape(cfg, 2), jnp.float32)
+    _, aux_train = googlenet_proxy.apply(cfg, params, x, train=True)
+    _, aux_eval = googlenet_proxy.apply(cfg, params, x, train=False)
+    assert len(aux_train) == len(cfg["aux_after"]) == 2  # paper footnote 12
+    assert aux_eval == []
+
+
+def test_alexnet_proxy_has_8_weighted_layers():
+    cfg = alexnet_proxy.config()
+    weighted = [n for n, _ in alexnet_proxy.param_shapes(cfg) if n.endswith("_w")]
+    assert len(weighted) == 8  # Table 2: AlexNet depth 8
+
+
+def test_transformer_shapes_and_loss():
+    cfg = transformer.config(vocab=64, d_model=32, n_layer=2, n_head=2, d_ff=64, seq_len=16)
+    params = [jnp.asarray(p) for p in transformer.init_params(cfg, seed=0)]
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits, aux = transformer.apply(cfg, params, toks, train=True)
+    assert logits.shape == (2, 16, 64)
+    assert aux == []
+    loss = transformer.lm_loss(logits, toks)
+    # untrained loss ~= ln(vocab)
+    assert abs(float(loss) - np.log(64)) < 0.5
+
+
+def test_flatten_unflatten_roundtrip():
+    cfg = mlp.config()
+    spec = ParamSpec(mlp.param_shapes(cfg))
+    params = [jnp.asarray(p) for p in mlp.init_params(cfg, seed=3)]
+    flat = spec.flatten(params)
+    assert flat.shape == (spec.total,)
+    back = spec.unflatten(flat)
+    for a, b in zip(params, back):
+        np.testing.assert_array_equal(a, b)
+
+
+# --- the paper's Table 2, exactly -------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["alexnet", "googlenet", "vggnet"])
+def test_registry_exact_paper_counts(name):
+    assert registry.total_params(name) == registry.PAPER_COUNTS[name]
+
+
+def test_registry_depths_match_paper():
+    assert registry.FULL_SCALE["alexnet"]["depth"] == 8
+    assert registry.FULL_SCALE["googlenet"]["depth"] == 22
+    assert registry.FULL_SCALE["vggnet"]["depth"] == 19  # as reported (count matches VGG-D)
+
+
+def test_registry_googlenet_includes_both_aux_heads():
+    names = [n for n, _ in registry.segments("googlenet")]
+    assert any(n.startswith("loss1/") for n in names)
+    assert any(n.startswith("loss2/") for n in names)
+    assert "loss3/classifier" in names
+
+
+def test_registry_segments_positive_and_ordered():
+    for m in ("alexnet", "googlenet", "vggnet"):
+        segs = registry.segments(m)
+        assert all(sz > 0 for _, sz in segs)
+        assert len({n for n, _ in segs}) == len(segs)  # unique names

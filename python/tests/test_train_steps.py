@@ -1,0 +1,104 @@
+"""L2 training semantics: loss decreases, scheme equivalences (paper §4).
+
+The key property the paper proves in [19] and relies on throughout: with a
+constant effective batch, SUBGD (sum updates before GD) equals sequential SGD
+on the concatenated batch, and AWAGD with LR scaled by k is equivalent to
+SUBGD. We assert both numerically for the MLP.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as modellib
+from compile.flatparams import ParamSpec
+from compile.models import mlp
+
+CFG = mlp.config()
+SPEC = ParamSpec(mlp.param_shapes(CFG))
+
+
+def _data(bs, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((bs, CFG["in_dim"])).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, CFG["classes"], bs).astype(np.int32))
+    return x, y
+
+
+def _init():
+    fp = SPEC.flatten([jnp.asarray(p) for p in mlp.init_params(CFG, seed=0)])
+    return fp, jnp.zeros_like(fp)
+
+
+def test_train_step_decreases_loss():
+    fp, fm = _init()
+    x, y = _data(64)
+    step = jax.jit(modellib.make_train_step(mlp, CFG, SPEC))
+    losses = []
+    for _ in range(10):
+        fp, fm, loss = step(fp, fm, x, y, jnp.float32(0.05), jnp.float32(0.9))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_grad_step_plus_apply_equals_train_step():
+    """grad_step + momentum update == train_step (k=1 SUBGD == local step)."""
+    fp, fm = _init()
+    x, y = _data(32, seed=1)
+    train = jax.jit(modellib.make_train_step(mlp, CFG, SPEC))
+    grad = jax.jit(modellib.make_grad_step(mlp, CFG, SPEC))
+
+    lr, mu = jnp.float32(0.01), jnp.float32(0.9)
+    fp1, fm1, loss1 = train(fp, fm, x, y, lr, mu)
+    g, loss2 = grad(fp, x, y)
+    v = mu * fm - lr * g
+    fp2, fm2 = fp + v, v
+    np.testing.assert_allclose(loss1, loss2, rtol=1e-6)
+    np.testing.assert_allclose(fp1, fp2, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(fm1, fm2, rtol=1e-5, atol=1e-7)
+
+
+def test_subgd_equals_sequential_sgd_constant_effective_batch():
+    """Sum of k workers' grads on batch shards == grad on the full batch
+    (cross-entropy means: average of shard means = full mean when shards are
+    equal size), so SUBGD reproduces sequential SGD exactly — paper §4."""
+    fp, _ = _init()
+    k = 4
+    x, y = _data(64, seed=2)
+    grad = jax.jit(modellib.make_grad_step(mlp, CFG, SPEC))
+
+    g_full, _ = grad(fp, x, y)
+    shards = [(x[i::k], y[i::k]) for i in range(k)]
+    g_avg = sum(grad(fp, xs, ys)[0] for xs, ys in shards) / k
+    np.testing.assert_allclose(g_full, g_avg, rtol=2e-4, atol=1e-6)
+
+
+def test_awagd_lr_scaling_equivalence():
+    """AWAGD at lr*k after averaging weights == SUBGD at lr with summed
+    updates, when workers start from identical params (paper §4, [15])."""
+    fp, fm = _init()
+    k = 2
+    x, y = _data(64, seed=3)
+    shards = [(x[i::k], y[i::k]) for i in range(k)]
+    lr, mu = 0.01, 0.9
+
+    # AWAGD: each worker steps at lr (per-worker), then average weights+mom.
+    # Summed-update form: w' = w + mean_i(v_i) with v_i = mu*v - lr*g_i.
+    train = jax.jit(modellib.make_train_step(mlp, CFG, SPEC))
+    outs = [train(fp, fm, xs, ys, jnp.float32(lr * k), jnp.float32(mu)) for xs, ys in shards]
+    w_awagd = sum(o[0] for o in outs) / k
+
+    grad = jax.jit(modellib.make_grad_step(mlp, CFG, SPEC))
+    g_sum = sum(grad(fp, xs, ys)[0] for xs, ys in shards)
+    v = mu * fm - lr * g_sum
+    w_subgd = fp + v
+    np.testing.assert_allclose(w_awagd, w_subgd, rtol=1e-4, atol=1e-6)
+
+
+def test_eval_step_counts_correct():
+    fp, _ = _init()
+    ev = jax.jit(modellib.make_eval_step(mlp, CFG, SPEC))
+    x, y = _data(CFG["eval_batch"], seed=4)
+    loss, correct = ev(fp, x, y)
+    assert 0 <= int(correct) <= CFG["eval_batch"]
+    assert np.isfinite(float(loss))

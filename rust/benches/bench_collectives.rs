@@ -1,0 +1,54 @@
+//! Bench: exchange strategies (regenerates the Fig. 3 / Table 3 numbers and
+//! the segmentation/worker-count ablations from DESIGN.md §6).
+//!
+//! `cargo bench --offline --bench bench_collectives`
+
+mod bench_common;
+
+use bench_common::{bench, report};
+use theano_mpi::collectives::StrategyKind;
+use theano_mpi::models;
+use theano_mpi::Session;
+
+fn main() -> anyhow::Result<()> {
+    let sess = Session::new(
+        std::env::var("TMPI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        "runs",
+    )?;
+
+    // --- Fig. 3 / Table 3: simulated comm time at full model scale ---------
+    for model in ["alexnet", "googlenet", "vggnet"] {
+        let bytes = models::full_scale_bytes(&sess.rt.manifest, model)?;
+        let topo = models::paper_topology(model);
+        for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring]
+        {
+            let rep = sess.measure_exchange(strat, 8, topo, bytes, true)?;
+            report(
+                &format!("comm_sim/{model}/{}", strat.name()),
+                rep.sim_total(),
+                "s",
+            );
+        }
+    }
+
+    // --- worker-count scaling of ASA (Table 1's speedup backbone) ----------
+    let bytes = models::full_scale_bytes(&sess.rt.manifest, "alexnet")?;
+    for k in [2usize, 4, 8] {
+        let rep = sess.measure_exchange(StrategyKind::Asa, k, "mosaic", bytes, true)?;
+        report(&format!("comm_sim/alexnet/asa_k{k}"), rep.sim_total(), "s");
+    }
+
+    // --- CUDA-awareness ablation -------------------------------------------
+    for aware in [true, false] {
+        let rep = sess.measure_exchange(StrategyKind::Asa, 8, "copper", bytes, aware)?;
+        report(&format!("comm_sim/alexnet/asa_cuda_aware_{aware}"), rep.sim_total(), "s");
+    }
+
+    // --- real wall time of the exchange machinery (1M f32, 4 workers) ------
+    for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring] {
+        bench(&format!("exchange_wall/{}/1Mf32x4", strat.name()), 5, || {
+            sess.measure_exchange(strat, 4, "mosaic", 4_000_000, true).unwrap();
+        });
+    }
+    Ok(())
+}

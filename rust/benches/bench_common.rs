@@ -1,0 +1,46 @@
+//! Tiny in-tree micro-bench harness (criterion is not vendored offline).
+//!
+//! `bench(name, iters, f)` runs `f` `iters` times after 2 warmups and prints
+//! mean / p10 / p90 wall time per call, in a stable grep-friendly format:
+//!
+//! ```text
+//! bench <name>  mean=1.234ms  p10=1.1ms  p90=1.4ms  n=20
+//! ```
+
+use std::time::Instant;
+
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..2 {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let p = |q: f64| times[((times.len() - 1) as f64 * q) as usize];
+    println!(
+        "bench {name}  mean={}  p10={}  p90={}  n={iters}",
+        fmt(mean),
+        fmt(p(0.1)),
+        fmt(p(0.9))
+    );
+}
+
+pub fn fmt(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Report a derived scalar (simulated seconds etc.) in the same format.
+pub fn report(name: &str, value: f64, unit: &str) {
+    println!("bench {name}  value={value:.6}{unit}");
+}

@@ -1,0 +1,41 @@
+//! Bench: EASGD comm overhead — CUDA-aware MPI vs Platoon-shm (the §4
+//! "42 % lower" comparison) and the τ sweep.
+//!
+//! `cargo bench --offline --bench bench_easgd`
+
+mod bench_common;
+
+use std::sync::Arc;
+
+use bench_common::report;
+use theano_mpi::easgd::{run_easgd, EasgdConfig, Transport};
+use theano_mpi::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::load_default()?);
+
+    let mut per = Vec::new();
+    for transport in [Transport::PlatoonShm, Transport::CudaAwareMpi] {
+        let mut cfg = EasgdConfig::quick("mlp", 4, 60);
+        cfg.transport = transport;
+        cfg.topology = "copper".into();
+        cfg.sim_model = Some("alexnet".into());
+        let rep = run_easgd(&rt, &cfg)?;
+        report(
+            &format!("easgd/comm_per_exchange/{}", transport.name()),
+            rep.comm_per_exchange,
+            "s",
+        );
+        per.push(rep.comm_per_exchange);
+    }
+    report("easgd/mpi_vs_shm_reduction", (per[0] - per[1]) / per[0], " (paper 0.42)");
+
+    for tau in [1usize, 2, 4, 8] {
+        let mut cfg = EasgdConfig::quick("mlp", 4, 60);
+        cfg.tau = tau;
+        cfg.sim_model = Some("alexnet".into());
+        let rep = run_easgd(&rt, &cfg)?;
+        report(&format!("easgd/comm_total/tau{tau}"), rep.comm_total, "s");
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Bench: parallel loader (Alg. 1) — load+preprocess throughput and the
+//! double-buffering ablation (DESIGN.md §6).
+//!
+//! `cargo bench --offline --bench bench_loader`
+
+mod bench_common;
+
+use bench_common::bench;
+use theano_mpi::data::{ImageDataset, ImageSpec};
+use theano_mpi::loader::{load_one, ParallelLoader};
+use theano_mpi::simnet::LinkParams;
+use theano_mpi::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ImageSpec::default();
+    let ds = ImageDataset::new(spec.clone());
+    let dir = std::env::temp_dir().join(format!("tmpi_bench_loader_{}", std::process::id()));
+    let batch = 32;
+    let shard = ds.write_shard(&dir, 0, 1, batch, 8)?;
+    let links = LinkParams::default();
+
+    let mut rng = Rng::new(1);
+    bench("loader/load_one/b32", 10, || {
+        load_one(&spec, &shard.mean, batch, &links, &mut rng, "train", &shard.files[0]).unwrap();
+    });
+
+    // parallel pipeline: request-ahead then drain (double-buffered)
+    bench("loader/pipeline8/parallel", 3, || {
+        let mut l = ParallelLoader::spawn(spec.clone(), shard.mean.clone(), batch, links, 2);
+        l.set_mode("train");
+        l.request(shard.files[0].clone());
+        for i in 0..8 {
+            if i + 1 < 8 {
+                l.request(shard.files[i + 1].clone());
+            }
+            let _ = l.ready().unwrap();
+        }
+        l.stop();
+    });
+
+    // sequential baseline for the same 8 files
+    bench("loader/pipeline8/direct", 3, || {
+        let mut r = Rng::new(2);
+        for f in &shard.files {
+            load_one(&spec, &shard.mean, batch, &links, &mut r, "train", f).unwrap();
+        }
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

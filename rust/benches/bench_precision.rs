@@ -1,0 +1,29 @@
+//! Bench: host f16/bf16 conversion throughput (the ASA16 host mirror) and
+//! round-trip error magnitudes.
+//!
+//! `cargo bench --offline --bench bench_precision`
+
+mod bench_common;
+
+use bench_common::{bench, report};
+use theano_mpi::precision::{roundtrip_rel_error, Wire};
+
+fn main() {
+    let xs: Vec<f32> = (0..4_000_000).map(|i| ((i as f32) * 1e-4).sin() * 30.0).collect();
+    let mut bits = Vec::new();
+    let mut back = Vec::new();
+
+    for wire in [Wire::F16, Wire::Bf16] {
+        bench(&format!("precision/pack_{}/4M", wire.name()), 10, || {
+            wire.pack(&xs, &mut bits);
+        });
+        bench(&format!("precision/unpack_{}/4M", wire.name()), 10, || {
+            wire.unpack(&bits, &mut back);
+        });
+        report(
+            &format!("precision/rel_err_{}", wire.name()),
+            roundtrip_rel_error(wire, &xs[..100_000]),
+            "",
+        );
+    }
+}

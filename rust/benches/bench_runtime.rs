@@ -1,0 +1,68 @@
+//! Bench: PJRT runtime hot path — train/grad/apply artifact execution and
+//! Literal marshalling overhead (the §Perf L3 targets).
+//!
+//! `cargo bench --offline --bench bench_runtime`
+
+mod bench_common;
+
+use bench_common::{bench, report};
+use theano_mpi::runtime::{HostTensor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+
+    for model in ["mlp", "alexnet", "googlenet", "vgg"] {
+        let info = rt.manifest.models[model].clone();
+        let n = info.param_count;
+        let params = rt.init_params(model)?;
+        let mom = vec![0.0f32; n];
+        let key = info.key_for_batch(info.batch)?.to_string();
+        let x_len: usize = info.input_shape.iter().product();
+        let x = HostTensor::f32(info.input_shape.clone(), vec![0.1; x_len]);
+        let y = HostTensor::i32(vec![info.batch], vec![0; info.batch]);
+
+        rt.warmup(&format!("{key}_grad"))?;
+        let mut exec_t = 0.0;
+        let mut marshal_t = 0.0;
+        bench(&format!("grad_step/{model}"), 5, || {
+            let r = rt
+                .exec(
+                    &format!("{key}_grad"),
+                    vec![HostTensor::f32(vec![n], params.clone()), x.clone(), y.clone()],
+                )
+                .unwrap();
+            exec_t = r.exec_time;
+            marshal_t = r.marshal_time;
+        });
+        report(&format!("grad_step/{model}/exec"), exec_t, "s");
+        report(&format!("grad_step/{model}/marshal"), marshal_t, "s");
+
+        rt.warmup(&info.sgd_apply)?;
+        bench(&format!("sgd_apply/{model}"), 10, || {
+            rt.exec(
+                &info.sgd_apply,
+                vec![
+                    HostTensor::f32(vec![n], params.clone()),
+                    HostTensor::f32(vec![n], mom.clone()),
+                    HostTensor::f32(vec![n], params.clone()),
+                    HostTensor::scalar_f32(0.01),
+                    HostTensor::scalar_f32(0.9),
+                    HostTensor::scalar_f32(1.0),
+                ],
+            )
+            .unwrap();
+        });
+    }
+
+    // kernel helpers: the ASA hot path pieces
+    let k = rt.kernels();
+    let a: Vec<f32> = (0..1_000_000).map(|i| i as f32 * 1e-6).collect();
+    let b = a.clone();
+    bench("kernels/sum_parts/2x1M", 5, || {
+        k.sum_parts(&[&a, &b]).unwrap();
+    });
+    bench("kernels/pack_f16/1M", 5, || {
+        k.pack(theano_mpi::precision::Wire::F16, &a).unwrap();
+    });
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! Cluster topology — the paper's Fig. 6 hardware, as data.
+//!
+//! *copper*: PI-contributed SHARCNET cluster; each node is a dual-socket
+//! system with two NVIDIA Tesla K80s per socket (a K80 is a dual-GPU card,
+//! so 4 GPU dies per socket / 8 per node), one PCIe switch per socket, QPI
+//! between sockets, Infiniband FDR between nodes.
+//!
+//! *mosaic*: one K20m GPU per node, Infiniband QDR between nodes.
+//!
+//! Routing rules (paper §6): GPUDirect P2P works only under a single PCIe
+//! switch; any path crossing the QPI goes through CPU RAM; multi-node
+//! transfers had no GPUDirect RDMA on the testbed, so they stage through
+//! host memory on both ends.
+
+/// Where a GPU sits in the fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GpuInfo {
+    pub node: usize,
+    pub socket: usize,
+    /// Globally-unique PCIe switch id (GPUDirect P2P domain).
+    pub switch: usize,
+}
+
+/// What kind of path connects two GPUs (drives the simnet cost model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathKind {
+    /// Same GPU (no transfer).
+    Local,
+    /// Same PCIe switch: GPUDirect P2P eligible.
+    P2p,
+    /// Same node, different socket: must traverse QPI via CPU RAM.
+    QpiStaged,
+    /// Different nodes: Infiniband, host-staged on both ends (no GPUDirect
+    /// RDMA on the paper's testbed).
+    Network,
+}
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub gpus: Vec<GpuInfo>,
+    pub n_nodes: usize,
+    /// Interconnect generation between nodes (FDR on copper, QDR on mosaic);
+    /// simnet maps this to bandwidth.
+    pub ib: IbGen,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IbGen {
+    Fdr,
+    Qdr,
+}
+
+impl Topology {
+    /// copper: `nodes` nodes × 8 GPUs (2 sockets × 2 K80 cards × 2 dies).
+    /// One PCIe switch per socket — Fig. 6.
+    pub fn copper(nodes: usize) -> Topology {
+        let mut gpus = Vec::new();
+        for n in 0..nodes {
+            for socket in 0..2 {
+                for _die in 0..4 {
+                    gpus.push(GpuInfo { node: n, socket, switch: n * 2 + socket });
+                }
+            }
+        }
+        Topology { name: format!("copper-{nodes}n"), gpus, n_nodes: nodes, ib: IbGen::Fdr }
+    }
+
+    /// mosaic: `nodes` nodes × 1 K20m GPU.
+    pub fn mosaic(nodes: usize) -> Topology {
+        let gpus = (0..nodes)
+            .map(|n| GpuInfo { node: n, socket: 0, switch: n * 2 })
+            .collect();
+        Topology { name: format!("mosaic-{nodes}n"), gpus, n_nodes: nodes, ib: IbGen::Qdr }
+    }
+
+    /// First `k` GPUs of a preset — how experiments place k workers.
+    pub fn by_name(name: &str, workers: usize) -> Option<Topology> {
+        let t = match name {
+            // one worker per node, like the paper's multi-node benchmarks
+            "mosaic" => Topology::mosaic(workers.max(1)),
+            // fill a single copper node first (the VGG single-node setup),
+            // then more nodes
+            "copper" => Topology::copper(workers.max(1).div_ceil(8)),
+            _ => return None,
+        };
+        Some(t)
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn path(&self, a: usize, b: usize) -> PathKind {
+        if a == b {
+            return PathKind::Local;
+        }
+        let (ga, gb) = (self.gpus[a], self.gpus[b]);
+        if ga.node != gb.node {
+            PathKind::Network
+        } else if ga.switch == gb.switch {
+            PathKind::P2p
+        } else {
+            PathKind::QpiStaged
+        }
+    }
+
+    /// ASCII rendering of the layout (the `tmpi topo` command → Fig. 6).
+    pub fn render(&self) -> String {
+        let mut out = format!("topology {} ({} GPUs, IB {:?})\n", self.name, self.n_gpus(), self.ib);
+        for n in 0..self.n_nodes {
+            out.push_str(&format!("node {n}\n"));
+            let mut sockets: Vec<usize> =
+                self.gpus.iter().filter(|g| g.node == n).map(|g| g.socket).collect();
+            sockets.sort_unstable();
+            sockets.dedup();
+            for s in sockets {
+                let ids: Vec<String> = self
+                    .gpus
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, g)| g.node == n && g.socket == s)
+                    .map(|(i, _)| format!("gpu{i}"))
+                    .collect();
+                out.push_str(&format!("  socket {s} (CPU)--PCIe switch--[{}]\n", ids.join(" ")));
+            }
+            if self.n_nodes > 1 {
+                out.push_str("  |-- IB NIC\n");
+            }
+        }
+        if self.gpus.iter().any(|g| g.node == 0 && g.socket == 1) {
+            out.push_str("(sockets joined by QPI; GPUDirect P2P only within a switch)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copper_shape_matches_fig6() {
+        let t = Topology::copper(2);
+        assert_eq!(t.n_gpus(), 16);
+        // 4 dies per socket
+        for n in 0..2 {
+            for s in 0..2 {
+                let count = t.gpus.iter().filter(|g| g.node == n && g.socket == s).count();
+                assert_eq!(count, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn mosaic_one_gpu_per_node() {
+        let t = Topology::mosaic(8);
+        assert_eq!(t.n_gpus(), 8);
+        assert_eq!(t.n_nodes, 8);
+        assert_eq!(t.ib, IbGen::Qdr);
+    }
+
+    #[test]
+    fn path_classification() {
+        let t = Topology::copper(2);
+        assert_eq!(t.path(0, 0), PathKind::Local);
+        assert_eq!(t.path(0, 1), PathKind::P2p); // same socket switch
+        assert_eq!(t.path(0, 4), PathKind::QpiStaged); // cross-socket
+        assert_eq!(t.path(0, 8), PathKind::Network); // cross-node
+        let m = Topology::mosaic(4);
+        assert_eq!(m.path(1, 2), PathKind::Network);
+    }
+
+    #[test]
+    fn path_is_symmetric() {
+        let t = Topology::copper(2);
+        for a in 0..t.n_gpus() {
+            for b in 0..t.n_gpus() {
+                assert_eq!(t.path(a, b), t.path(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_every_gpu() {
+        let t = Topology::copper(1);
+        let r = t.render();
+        for i in 0..8 {
+            assert!(r.contains(&format!("gpu{i}")), "{r}");
+        }
+    }
+}

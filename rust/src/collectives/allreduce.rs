@@ -1,0 +1,258 @@
+//! AR baseline: host-staged `MPI_Allreduce` (recursive doubling).
+//!
+//! Paper §3.2: "the CUDA-aware version of [MPI_Allreduce] in OpenMPI 1.8.7
+//! does not give much improvement since any collective MPI function with
+//! arithmetic operations still needs to copy data to host memory." So the
+//! cost structure is: D2H of the full vector, ⌈log2 k⌉ butterfly rounds of
+//! full-vector host-to-host transfers each followed by a CPU summation, and
+//! a final H2D. Non-power-of-two worker counts fold the excess ranks into
+//! the butterfly (MPICH-style pre/post phases).
+
+use anyhow::Result;
+
+use crate::mpi::{tags, Payload};
+use crate::simnet::Transfer;
+
+use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
+
+#[derive(Clone)]
+pub struct HostAllreduce;
+
+impl ExchangeStrategy for HostAllreduce {
+    fn name(&self) -> &'static str {
+        "ar"
+    }
+
+    fn exchange(
+        &self,
+        buf: &mut [f32],
+        op: ReduceOp,
+        ctx: &mut ExchangeCtx<'_, '_>,
+    ) -> Result<CommReport> {
+        let k = ctx.comm.size;
+        let rank = ctx.comm.rank;
+        let bytes = 4 * buf.len() as u64;
+        let mut rep = CommReport { strategy: "ar".into(), ..Default::default() };
+        if k == 1 {
+            return Ok(rep);
+        }
+
+        // D2H once per rank (all ranks in parallel: one PCIe crossing each).
+        rep.sim_transfer += ctx.links.pcie_time(bytes);
+
+        // Fold-down for non-power-of-two k: ranks >= p2 send to (r - p2).
+        let p2 = k.next_power_of_two() >> usize::from(!k.is_power_of_two());
+        let extra = k - p2; // ranks p2..k fold into 0..extra
+        if rank >= p2 {
+            let dst = rank - p2;
+            ctx.comm.send(dst, tags::REDUCE, Payload::F32(buf.to_vec()), 0.0)?;
+        } else if rank < extra {
+            let m = ctx.comm.recv(rank + p2, tags::REDUCE)?;
+            host_add(buf, &m.payload.into_f32()?);
+        }
+        if extra > 0 {
+            let folds: Vec<Transfer> = (p2..k)
+                .map(|r| Transfer { src: r, dst: r - p2, bytes })
+                .collect();
+            // host-level traffic: buffers already staged in host RAM
+            rep.sim_transfer += host_phase(ctx, &folds);
+            rep.sim_host_reduce += ctx.links.host_reduce_time(bytes);
+            rep.phases += 1;
+            if rank < extra {
+                rep.wire_bytes += 0; // received only
+            } else if rank >= p2 {
+                rep.wire_bytes += bytes;
+            }
+        }
+
+        // Butterfly over ranks 0..p2.
+        if rank < p2 {
+            let mut dist = 1;
+            while dist < p2 {
+                let peer = rank ^ dist;
+                let m =
+                    ctx.comm.sendrecv(peer, tags::REDUCE + dist as u64, Payload::F32(buf.to_vec()), 0.0)?;
+                host_add(buf, &m.payload.into_f32()?);
+                rep.wire_bytes += bytes;
+                dist <<= 1;
+            }
+        }
+        // all butterfly rounds have identical cost; charge them globally
+        let rounds = p2.trailing_zeros() as usize;
+        if rounds > 0 {
+            let mut per_round: Vec<Transfer> = Vec::new();
+            // round with dist=1 is representative for contention: every rank
+            // of the butterfly talks to a distinct peer simultaneously
+            for r in 0..p2 {
+                per_round.push(Transfer { src: r, dst: r ^ 1, bytes });
+            }
+            let t_round = host_phase(ctx, &per_round);
+            rep.sim_transfer += rounds as f64 * t_round;
+            rep.sim_host_reduce += rounds as f64 * ctx.links.host_reduce_time(bytes);
+            rep.phases += rounds;
+        }
+
+        // Unfold: results back to the folded ranks.
+        if extra > 0 {
+            if rank < extra {
+                ctx.comm.send(rank + p2, tags::REDUCE + 99, Payload::F32(buf.to_vec()), 0.0)?;
+                rep.wire_bytes += bytes;
+            } else if rank >= p2 {
+                let m = ctx.comm.recv(rank - p2, tags::REDUCE + 99)?;
+                buf.copy_from_slice(&m.payload.into_f32()?);
+            }
+            let unfolds: Vec<Transfer> = (p2..k)
+                .map(|r| Transfer { src: r - p2, dst: r, bytes })
+                .collect();
+            rep.sim_transfer += host_phase(ctx, &unfolds);
+            rep.phases += 1;
+        }
+
+        // H2D once per rank.
+        rep.sim_transfer += ctx.links.pcie_time(bytes);
+
+        if op == ReduceOp::Mean {
+            host_scale(buf, 1.0 / k as f32);
+            rep.sim_host_reduce += ctx.links.host_reduce_time(bytes) * 0.5;
+        }
+        Ok(rep)
+    }
+}
+
+/// Phase time for host-resident buffers: NIC/QPI crossings only (the D2H /
+/// H2D PCIe legs are charged once, outside the butterfly).
+fn host_phase(ctx: &ExchangeCtx<'_, '_>, transfers: &[Transfer]) -> f64 {
+    // Model by re-using the device-level phase pricing minus PCIe: we price
+    // a same-node host->host move as a QPI-or-memcpy and cross-node as NIC.
+    // Implemented by pricing the full path and subtracting the PCIe legs
+    // would couple us to internals; instead price with a host-level topology
+    // trick: transfers between GPUs on the same switch cost host memcpy.
+    let p = ctx.links;
+    let mut nic_out = vec![0.0f64; ctx.topo.n_nodes];
+    let mut nic_in = vec![0.0f64; ctx.topo.n_nodes];
+    let mut mem = vec![0.0f64; ctx.topo.n_nodes];
+    let mut qpi = vec![0.0f64; ctx.topo.n_nodes];
+    let mut lat: f64 = 0.0;
+    let ib = p.ib_gbps(ctx.topo.ib);
+    for t in transfers {
+        if t.src == t.dst || t.bytes == 0 {
+            continue;
+        }
+        let (a, b) = (ctx.topo.gpus[t.src], ctx.topo.gpus[t.dst]);
+        let gb = t.bytes as f64 / 1e9;
+        if a.node != b.node {
+            nic_out[a.node] += gb / ib;
+            nic_in[b.node] += gb / ib;
+            mem[a.node] += gb / p.host_mem_gbps;
+            mem[b.node] += gb / p.host_mem_gbps;
+            lat = lat.max(p.ib_lat_us * 1e-6);
+        } else if a.socket != b.socket {
+            qpi[a.node] += gb / p.qpi_gbps;
+            lat = lat.max(p.qpi_lat_us * 1e-6);
+        } else {
+            mem[a.node] += gb / p.host_mem_gbps;
+        }
+    }
+    let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
+    max(&nic_out).max(max(&nic_in)).max(max(&mem)).max(max(&qpi)) + lat
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::simnet::LinkParams;
+    use std::thread;
+
+    /// Run a collective across k threads over a topology; return rank-0 buf
+    /// and report.
+    pub(crate) fn run_collective<S: ExchangeStrategy + Clone + 'static>(
+        strat: S,
+        k: usize,
+        bufs: Vec<Vec<f32>>,
+        op: ReduceOp,
+        topo: Topology,
+    ) -> (Vec<Vec<f32>>, CommReport) {
+        let world = crate::mpi::world(k);
+        let links = LinkParams::default();
+        let handles: Vec<_> = world
+            .into_iter()
+            .zip(bufs)
+            .map(|(mut comm, mut buf)| {
+                let topo = topo.clone();
+                let strat = strat.clone();
+                thread::spawn(move || {
+                    let mut ctx = ExchangeCtx {
+                        comm: &mut comm,
+                        topo: &topo,
+                        links: &links,
+                        kernels: None,
+                        cuda_aware: true,
+                    };
+                    let rep = strat.exchange(&mut buf, op, &mut ctx).unwrap();
+                    (buf, rep)
+                })
+            })
+            .collect();
+        let mut outs = Vec::new();
+        let mut rep0 = CommReport::default();
+        for (i, h) in handles.into_iter().enumerate() {
+            let (buf, rep) = h.join().unwrap();
+            if i == 0 {
+                rep0 = rep;
+            }
+            outs.push(buf);
+        }
+        (outs, rep0)
+    }
+
+    fn expected_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = vec![0.0f32; bufs[0].len()];
+        for b in bufs {
+            for (o, x) in out.iter_mut().zip(b) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn allreduce_sums_for_all_world_sizes() {
+        for k in [2usize, 3, 4, 5, 8] {
+            let n = 1000;
+            let bufs: Vec<Vec<f32>> =
+                (0..k).map(|r| (0..n).map(|i| (r * n + i) as f32 * 0.01).collect()).collect();
+            let want = expected_sum(&bufs);
+            let (outs, rep) =
+                run_collective(HostAllreduce, k, bufs, ReduceOp::Sum, Topology::mosaic(k));
+            for (r, out) in outs.iter().enumerate() {
+                crate::testkit::allclose(out, &want, 1e-5, 1e-4)
+                    .unwrap_or_else(|e| panic!("k={k} rank={r}: {e}"));
+            }
+            assert!(rep.sim_total() > 0.0);
+            assert!(rep.sim_host_reduce > 0.0, "AR must reduce on host");
+        }
+    }
+
+    #[test]
+    fn allreduce_mean() {
+        let k = 4;
+        let bufs: Vec<Vec<f32>> = (0..k).map(|r| vec![r as f32; 16]).collect();
+        let (outs, _) =
+            run_collective(HostAllreduce, k, bufs, ReduceOp::Mean, Topology::mosaic(k));
+        for out in &outs {
+            for v in out {
+                assert!((v - 1.5).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_is_noop() {
+        let bufs = vec![vec![3.0f32; 8]];
+        let (outs, rep) =
+            run_collective(HostAllreduce, 1, bufs, ReduceOp::Sum, Topology::mosaic(1));
+        assert_eq!(outs[0], vec![3.0f32; 8]);
+        assert_eq!(rep.sim_total(), 0.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Parameter-exchange strategies — the paper's central contribution (§3.2).
+//!
+//! All strategies implement [`ExchangeStrategy`]: a collective over the flat
+//! f32 parameter/gradient vector that every rank calls simultaneously.
+//! Buffers really move through the `mpi` layer and the arithmetic really
+//! runs (host loops for AR, the L1 Pallas sum/cast kernels for ASA/ASA16);
+//! wire time is charged from the `simnet` topology model.
+//!
+//! * [`HostAllreduce`] (**AR**) — the `MPI_Allreduce` baseline. OpenMPI
+//!   1.8.7's CUDA-aware allreduce still stages through host memory because
+//!   the reduction arithmetic runs on the CPU: D2H, a recursive-doubling
+//!   butterfly between host buffers, host summation each round, H2D.
+//! * [`Asa`] (**ASA**) — CUDA-aware *Alltoall-sum-Allgather* (Fig. 2):
+//!   transfer and arithmetic separated; Alltoall/Allgather move device
+//!   buffers directly (no host staging within a PCIe switch), and each
+//!   rank's segment sum runs as the Pallas summation kernel.
+//! * [`Asa16`] (**ASA16**) — ASA with 16-bit wire format: pack to half
+//!   (Pallas cast kernel), exchange half the bytes, sum at full precision
+//!   (§3.2: "transfer of parameters at half-precision while summing them at
+//!   full precision"). The numeric degradation is real — Table 1's fp16
+//!   accuracy rows come from running exactly this path.
+//! * [`Ring`] — ring allreduce (reduce-scatter + allgather), the paper's
+//!   "better inter-node strategy" future work; included as an ablation.
+
+mod allreduce;
+mod asa;
+mod ring;
+
+pub use allreduce::HostAllreduce;
+pub use asa::{Asa, Asa16};
+pub use ring::Ring;
+
+use anyhow::Result;
+
+use crate::cluster::Topology;
+use crate::mpi::Comm;
+use crate::precision::Wire;
+use crate::runtime::Kernels;
+use crate::simnet::LinkParams;
+
+/// Reduction applied across ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// SUBGD: gradients are summed.
+    Sum,
+    /// AWAGD: weights are averaged.
+    Mean,
+}
+
+/// Everything a strategy needs from the calling worker.
+pub struct ExchangeCtx<'a, 'k> {
+    pub comm: &'a mut Comm,
+    pub topo: &'a Topology,
+    pub links: &'a LinkParams,
+    /// Pallas kernel handles; `None` falls back to host arithmetic (used by
+    /// unit tests without artifacts and by the AR baseline, which sums on
+    /// the host by definition).
+    pub kernels: Option<&'a Kernels<'k>>,
+    /// GPUDirect P2P available (paper §3.2/6; affects intra-switch paths).
+    pub cuda_aware: bool,
+}
+
+/// Per-exchange accounting (one rank's view; identical across ranks since
+/// the simulated phases are global).
+#[derive(Clone, Debug, Default)]
+pub struct CommReport {
+    pub strategy: String,
+    /// Bytes this rank moved (sent) across all phases.
+    pub wire_bytes: u64,
+    /// Simulated transfer time (s).
+    pub sim_transfer: f64,
+    /// Simulated GPU kernel time inside the exchange: sums + casts (s).
+    pub sim_kernel: f64,
+    /// Simulated host CPU reduction time (AR only) (s).
+    pub sim_host_reduce: f64,
+    /// Measured PJRT wall time of the real kernels (diagnostic).
+    pub real_kernel: f64,
+    /// Number of communication phases.
+    pub phases: usize,
+}
+
+impl CommReport {
+    /// Total simulated exchange time — what the virtual clock advances by.
+    pub fn sim_total(&self) -> f64 {
+        self.sim_transfer + self.sim_kernel + self.sim_host_reduce
+    }
+
+    /// Share of exchange time in GPU kernels (paper: 1.6 % for the ASA sum).
+    pub fn kernel_share(&self) -> f64 {
+        let t = self.sim_total();
+        if t > 0.0 {
+            self.sim_kernel / t
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A collective parameter-exchange strategy.
+pub trait ExchangeStrategy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Collectively reduce `buf` across all ranks of `ctx.comm` in place.
+    /// Every rank must call this with an equal-length buffer.
+    fn exchange(
+        &self,
+        buf: &mut [f32],
+        op: ReduceOp,
+        ctx: &mut ExchangeCtx<'_, '_>,
+    ) -> Result<CommReport>;
+}
+
+/// Strategy selection by name (config files / CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    Ar,
+    Asa,
+    Asa16,
+    Ring,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s {
+            "ar" | "allreduce" => Some(StrategyKind::Ar),
+            "asa" => Some(StrategyKind::Asa),
+            "asa16" => Some(StrategyKind::Asa16),
+            "ring" => Some(StrategyKind::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Ar => "ar",
+            StrategyKind::Asa => "asa",
+            StrategyKind::Asa16 => "asa16",
+            StrategyKind::Ring => "ring",
+        }
+    }
+
+    pub fn build(self, wire: Wire) -> Box<dyn ExchangeStrategy> {
+        match self {
+            StrategyKind::Ar => Box::new(HostAllreduce),
+            StrategyKind::Asa => Box::new(Asa),
+            StrategyKind::Asa16 => Box::new(Asa16::new(wire)),
+            StrategyKind::Ring => Box::new(Ring),
+        }
+    }
+}
+
+/// Host-side elementwise add (the AR baseline's reduction, and the fallback
+/// when no kernels are bound).
+pub(crate) fn host_add(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+pub(crate) fn host_scale(buf: &mut [f32], s: f32) {
+    for v in buf.iter_mut() {
+        *v *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_kind_parse_roundtrip() {
+        for k in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring] {
+            assert_eq!(StrategyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StrategyKind::parse("allreduce"), Some(StrategyKind::Ar));
+        assert_eq!(StrategyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn report_totals() {
+        let r = CommReport {
+            sim_transfer: 0.9,
+            sim_kernel: 0.016,
+            sim_host_reduce: 0.0,
+            ..Default::default()
+        };
+        assert!((r.sim_total() - 0.916).abs() < 1e-12);
+        assert!((r.kernel_share() - 0.016 / 0.916).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,159 @@
+//! Ring allreduce — the paper's future-work "better inter-node strategy".
+//!
+//! Reduce-scatter ring (k-1 steps) + allgather ring (k-1 steps); each step
+//! moves N/k elements to the next neighbour. Total wire traffic per rank is
+//! 2·(k-1)/k·N — the same as ASA — but every step is neighbour-to-neighbour,
+//! which on switch-heavy fabrics avoids the all-pairs contention of the
+//! Alltoall phase. Included as an ablation (DESIGN.md §6): on mosaic's
+//! one-GPU-per-node fabric the two are nearly equivalent; on copper's
+//! multi-GPU nodes the ring's neighbour placement wins.
+
+use anyhow::Result;
+
+use crate::mpi::{tags, Payload};
+use crate::simnet::{phase_time, Transfer};
+use crate::util::split_even;
+
+use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
+
+#[derive(Clone)]
+pub struct Ring;
+
+impl ExchangeStrategy for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn exchange(
+        &self,
+        buf: &mut [f32],
+        op: ReduceOp,
+        ctx: &mut ExchangeCtx<'_, '_>,
+    ) -> Result<CommReport> {
+        let k = ctx.comm.size;
+        let rank = ctx.comm.rank;
+        let n = buf.len();
+        let mut rep = CommReport { strategy: "ring".into(), ..Default::default() };
+        if k == 1 {
+            return Ok(rep);
+        }
+        let parts = split_even(n, k);
+        let next = (rank + 1) % k;
+        let prev = (rank + k - 1) % k;
+
+        // price one ring step (all ranks send their segment simultaneously);
+        // segment sizes differ by <=1 element, use the largest
+        let max_seg = parts.iter().map(|p| p.1).max().unwrap_or(0) as u64;
+        let step_transfers: Vec<Transfer> = (0..k)
+            .map(|r| Transfer { src: r, dst: (r + 1) % k, bytes: 4 * max_seg })
+            .collect();
+        let t_step = phase_time(ctx.topo, ctx.links, &step_transfers, ctx.cuda_aware);
+
+        // --- reduce-scatter: after k-1 steps, rank owns the full sum of
+        // segment (rank+1) mod k ------------------------------------------------
+        for step in 0..k - 1 {
+            let send_seg = (rank + k - step) % k;
+            let recv_seg = (rank + k - step - 1) % k;
+            let (soff, slen) = parts[send_seg];
+            let payload = Payload::F32(buf[soff..soff + slen].to_vec());
+            ctx.comm.send(next, tags::EXCHANGE + step as u64, payload, 0.0)?;
+            let m = ctx.comm.recv(prev, tags::EXCHANGE + step as u64)?;
+            let (roff, rlen) = parts[recv_seg];
+            let incoming = m.payload.into_f32()?;
+            host_add(&mut buf[roff..roff + rlen], &incoming);
+            rep.wire_bytes += 4 * slen as u64;
+            rep.sim_transfer += t_step;
+            // each step's partial sum runs on the GPU in a real ring impl
+            rep.sim_kernel += ctx.links.gpu_reduce_time(4 * rlen as u64);
+            rep.phases += 1;
+        }
+
+        let own_seg = (rank + 1) % k;
+        if op == ReduceOp::Mean {
+            let (off, len) = parts[own_seg];
+            host_scale(&mut buf[off..off + len], 1.0 / k as f32);
+        }
+
+        // --- allgather ring: circulate the reduced segments -------------------
+        for step in 0..k - 1 {
+            let send_seg = (rank + 1 + k - step) % k;
+            let recv_seg = (rank + k - step) % k;
+            let (soff, slen) = parts[send_seg];
+            let payload = Payload::F32(buf[soff..soff + slen].to_vec());
+            ctx.comm.send(next, tags::ALLGATHER + step as u64, payload, 0.0)?;
+            let m = ctx.comm.recv(prev, tags::ALLGATHER + step as u64)?;
+            let (roff, rlen) = parts[recv_seg];
+            let incoming = m.payload.into_f32()?;
+            debug_assert_eq!(incoming.len(), rlen);
+            buf[roff..roff + rlen].copy_from_slice(&incoming);
+            rep.wire_bytes += 4 * slen as u64;
+            rep.sim_transfer += t_step;
+            rep.phases += 1;
+        }
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::allreduce::tests::run_collective;
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::testkit;
+
+    fn expected(bufs: &[Vec<f32>], mean: bool) -> Vec<f32> {
+        let mut out = vec![0.0f32; bufs[0].len()];
+        for b in bufs {
+            for (o, x) in out.iter_mut().zip(b) {
+                *o += x;
+            }
+        }
+        if mean {
+            for o in out.iter_mut() {
+                *o /= bufs.len() as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ring_matches_sum_for_world_sizes_and_ragged_n() {
+        for k in [2usize, 3, 4, 5, 8] {
+            for n in [1usize, 7, 64, 1003] {
+                let bufs: Vec<Vec<f32>> = (0..k)
+                    .map(|r| (0..n).map(|i| ((r + 2) * (i + 3)) as f32 * 0.01).collect())
+                    .collect();
+                let want = expected(&bufs, false);
+                let (outs, rep) = run_collective(Ring, k, bufs, ReduceOp::Sum, Topology::mosaic(k));
+                for (r, out) in outs.iter().enumerate() {
+                    testkit::allclose(out, &want, 1e-5, 1e-5)
+                        .unwrap_or_else(|e| panic!("k={k} n={n} rank={r}: {e}"));
+                }
+                assert_eq!(rep.phases, 2 * (k - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_mean() {
+        let k = 3;
+        let bufs: Vec<Vec<f32>> = (0..k).map(|r| vec![(r * 3) as f32; 10]).collect();
+        let want = expected(&bufs, true);
+        let (outs, _) = run_collective(Ring, k, bufs, ReduceOp::Mean, Topology::mosaic(k));
+        for out in &outs {
+            testkit::allclose(out, &want, 1e-6, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn ring_wire_bytes_match_asa() {
+        // both move ~2*(k-1)/k*N per rank
+        let k = 4;
+        let n = 4096;
+        let mk = || (0..k).map(|r| vec![r as f32; n]).collect::<Vec<_>>();
+        let (_, ring) = run_collective(Ring, k, mk(), ReduceOp::Sum, Topology::mosaic(k));
+        let (_, asa) = run_collective(super::super::Asa, k, mk(), ReduceOp::Sum, Topology::mosaic(k));
+        let diff = ring.wire_bytes.abs_diff(asa.wire_bytes);
+        assert!(diff <= 8 * (k as u64), "ring={} asa={}", ring.wire_bytes, asa.wire_bytes);
+    }
+}

@@ -1,0 +1,342 @@
+//! Config system: a TOML-subset parser + typed experiment configs.
+//!
+//! The offline container vendors no TOML crate, so this is an in-tree
+//! parser covering the subset the framework uses: `[section]` headers and
+//! `key = value` pairs with strings, integers, floats, booleans and flat
+//! arrays. `BspConfig`/`EasgdConfig` build from a parsed file via
+//! `from_table`, with every field optional over the `quick()` defaults —
+//! the launcher (`tmpi train --config run.toml`) is driven by this.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bsp::BspConfig;
+use crate::collectives::StrategyKind;
+use crate::easgd::{EasgdConfig, Transport};
+use crate::precision::Wire;
+use crate::sgd::{LrSchedule, Scheme};
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// section -> key -> value
+pub type Table = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse the TOML subset. Unknown syntax is a hard error (configs should
+/// never be silently misread).
+pub fn parse(text: &str) -> Result<Table> {
+    let mut out: Table = BTreeMap::new();
+    let mut section = String::new();
+    out.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+        let value = parse_value(v.trim())
+            .with_context(|| format!("line {}: bad value '{}'", lineno + 1, v.trim()))?;
+        out.get_mut(&section).unwrap().insert(k.trim().to_string(), value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but safe for our configs: '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value> {
+    if let Some(inner) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value")
+}
+
+/// Read `[train]`-section BSP config over `BspConfig::quick` defaults.
+pub fn bsp_from_file(path: &Path) -> Result<BspConfig> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+    let table = parse(&text)?;
+    bsp_from_table(&table)
+}
+
+pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
+    let t = table.get("train").or_else(|| table.get("")).ok_or_else(|| anyhow!("no [train]"))?;
+    let mut cfg = BspConfig::quick(
+        t.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("mlp"),
+        t.get("workers").map(|v| v.as_usize()).transpose()?.unwrap_or(2),
+        t.get("iters").map(|v| v.as_usize()).transpose()?.unwrap_or(50),
+    );
+    if let Some(v) = t.get("batch") {
+        cfg.batch = v.as_usize()?;
+    }
+    if let Some(v) = t.get("scheme") {
+        cfg.scheme = Scheme::parse(v.as_str()?).ok_or_else(|| anyhow!("bad scheme"))?;
+    }
+    if let Some(v) = t.get("strategy") {
+        cfg.strategy = StrategyKind::parse(v.as_str()?).ok_or_else(|| anyhow!("bad strategy"))?;
+    }
+    if let Some(v) = t.get("wire") {
+        cfg.wire = match v.as_str()? {
+            "f16" => Wire::F16,
+            "bf16" => Wire::Bf16,
+            w => bail!("bad wire '{w}'"),
+        };
+    }
+    if let Some(v) = t.get("momentum") {
+        cfg.momentum = v.as_f64()?;
+    }
+    if let Some(v) = t.get("eval_every") {
+        cfg.eval_every = v.as_usize()?;
+    }
+    if let Some(v) = t.get("topology") {
+        cfg.topology = v.as_str()?.to_string();
+    }
+    if let Some(v) = t.get("cuda_aware") {
+        cfg.cuda_aware = v.as_bool()?;
+    }
+    if let Some(v) = t.get("seed") {
+        cfg.seed = v.as_usize()? as u64;
+    }
+    if let Some(v) = t.get("use_loader") {
+        cfg.use_loader = v.as_bool()?;
+    }
+    if let Some(v) = t.get("sim_model") {
+        cfg.sim_model = Some(v.as_str()?.to_string());
+    }
+    if let Some(v) = t.get("data_dir") {
+        cfg.data_dir = Some(PathBuf::from(v.as_str()?));
+    }
+    if let Some(v) = t.get("exchange_momentum") {
+        cfg.exchange_momentum = v.as_bool()?;
+    }
+    cfg.lr = lr_from(t)?;
+    Ok(cfg)
+}
+
+/// lr schedule keys: lr (base) + lr_policy = "const"|"step"|"poly" (+
+/// lr_step_every, lr_step_factor, lr_poly_power, lr_max_iters)
+fn lr_from(t: &BTreeMap<String, Value>) -> Result<LrSchedule> {
+    let base = t.get("lr").map(|v| v.as_f64()).transpose()?.unwrap_or(0.01);
+    let policy = t.get("lr_policy").map(|v| v.as_str()).transpose()?.unwrap_or("const");
+    Ok(match policy {
+        "const" => LrSchedule::Const { base },
+        "step" => LrSchedule::StepDecay {
+            base,
+            factor: t.get("lr_step_factor").map(|v| v.as_f64()).transpose()?.unwrap_or(0.1),
+            every: t.get("lr_step_every").map(|v| v.as_usize()).transpose()?.unwrap_or(100),
+        },
+        "poly" => LrSchedule::Poly {
+            base,
+            power: t.get("lr_poly_power").map(|v| v.as_f64()).transpose()?.unwrap_or(0.5),
+            max_iters: t.get("lr_max_iters").map(|v| v.as_usize()).transpose()?.unwrap_or(1000),
+        },
+        p => bail!("unknown lr_policy '{p}'"),
+    })
+}
+
+/// Read `[easgd]`-section config.
+pub fn easgd_from_file(path: &Path) -> Result<EasgdConfig> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+    let table = parse(&text)?;
+    let t = table.get("easgd").ok_or_else(|| anyhow!("no [easgd] section"))?;
+    let mut cfg = EasgdConfig::quick(
+        t.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("mlp"),
+        t.get("workers").map(|v| v.as_usize()).transpose()?.unwrap_or(2),
+        t.get("iters").map(|v| v.as_usize()).transpose()?.unwrap_or(50),
+    );
+    if let Some(v) = t.get("batch") {
+        cfg.batch = v.as_usize()?;
+    }
+    if let Some(v) = t.get("alpha") {
+        cfg.alpha = v.as_f64()?;
+    }
+    if let Some(v) = t.get("tau") {
+        cfg.tau = v.as_usize()?;
+    }
+    if let Some(v) = t.get("momentum") {
+        cfg.momentum = v.as_f64()?;
+    }
+    if let Some(v) = t.get("eval_every") {
+        cfg.eval_every = v.as_usize()?;
+    }
+    if let Some(v) = t.get("topology") {
+        cfg.topology = v.as_str()?.to_string();
+    }
+    if let Some(v) = t.get("transport") {
+        cfg.transport = match v.as_str()? {
+            "cuda-aware-mpi" | "mpi" => Transport::CudaAwareMpi,
+            "platoon-shm" | "shm" => Transport::PlatoonShm,
+            x => bail!("bad transport '{x}'"),
+        };
+    }
+    if let Some(v) = t.get("seed") {
+        cfg.seed = v.as_usize()? as u64;
+    }
+    if let Some(v) = t.get("sim_model") {
+        cfg.sim_model = Some(v.as_str()?.to_string());
+    }
+    cfg.lr = lr_from(t)?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+[train]
+model = "alexnet"        # inline comment
+workers = 8
+iters = 200
+batch = 32
+scheme = "subgd"
+strategy = "asa16"
+wire = "f16"
+lr = 0.005
+lr_policy = "step"
+lr_step_every = 40
+topology = "mosaic"
+cuda_aware = true
+sim_model = "alexnet"
+
+[easgd]
+model = "mlp"
+workers = 4
+iters = 100
+alpha = 0.5
+tau = 1
+transport = "platoon-shm"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(SAMPLE).unwrap();
+        assert_eq!(t["train"]["workers"], Value::Int(8));
+        assert_eq!(t["train"]["model"], Value::Str("alexnet".into()));
+        assert_eq!(t["train"]["cuda_aware"], Value::Bool(true));
+        assert_eq!(t["easgd"]["alpha"], Value::Float(0.5));
+    }
+
+    #[test]
+    fn bsp_config_roundtrip() {
+        let t = parse(SAMPLE).unwrap();
+        let cfg = bsp_from_table(&t).unwrap();
+        assert_eq!(cfg.model, "alexnet");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.batch, 32);
+        assert_eq!(cfg.scheme, Scheme::Subgd);
+        assert_eq!(cfg.strategy, StrategyKind::Asa16);
+        assert_eq!(cfg.sim_model.as_deref(), Some("alexnet"));
+        match cfg.lr {
+            LrSchedule::StepDecay { base, every, .. } => {
+                assert!((base - 0.005).abs() < 1e-12);
+                assert_eq!(every, 40);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn arrays_and_errors() {
+        let t = parse("xs = [1, 2, 3]\nname = \"a\"").unwrap();
+        assert_eq!(
+            t[""]["xs"],
+            Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert!(parse("broken line").is_err());
+        assert!(parse("k = @nope").is_err());
+    }
+
+    #[test]
+    fn easgd_config_from_text() {
+        let t = parse(SAMPLE).unwrap();
+        let _ = t;
+        let p = std::env::temp_dir().join(format!("tmpi_cfg_{}.toml", std::process::id()));
+        std::fs::write(&p, SAMPLE).unwrap();
+        let cfg = easgd_from_file(&p).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.tau, 1);
+        assert_eq!(cfg.transport, Transport::PlatoonShm);
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,522 @@
+//! The leader: experiment drivers that regenerate every table and figure.
+//!
+//! `Session` owns the shared `Runtime` and an output directory (`runs/` by
+//! default). Each driver returns the rendered table (also printed by the
+//! CLI) and writes machine-readable CSV/JSON next to it. The experiment ↔
+//! paper mapping lives in DESIGN.md §5.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::bsp::{run_bsp, BspConfig, BspReport};
+use crate::cluster::Topology;
+use crate::collectives::{CommReport, ExchangeCtx, ReduceOp, StrategyKind};
+use crate::easgd::{run_easgd, EasgdConfig, Transport};
+use crate::metrics::Table;
+use crate::models;
+use crate::precision::Wire;
+use crate::runtime::Runtime;
+use crate::sgd::{LrSchedule, Scheme};
+use crate::simnet::LinkParams;
+
+pub struct Session {
+    pub rt: Arc<Runtime>,
+    pub out_dir: PathBuf,
+}
+
+impl Session {
+    pub fn new(artifacts_dir: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Result<Session> {
+        let rt = Arc::new(Runtime::load(artifacts_dir)?);
+        let out_dir = out_dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Session { rt, out_dir })
+    }
+
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+        let path = self.out_dir.join(name);
+        let mut text = String::from(header);
+        text.push('\n');
+        for r in rows {
+            text.push_str(r);
+            text.push('\n');
+        }
+        std::fs::write(&path, text).with_context(|| format!("{path:?}"))?;
+        Ok(path)
+    }
+
+    // -----------------------------------------------------------------------
+    // Communication-only measurement (Fig. 3 / Table 3 backbone): run one
+    // exchange of a buffer across k worker threads on a topology and return
+    // the rank-0 report with times scaled to `full_bytes`.
+    pub fn measure_exchange(
+        &self,
+        strategy: StrategyKind,
+        k: usize,
+        topology: &str,
+        full_bytes: u64,
+        cuda_aware: bool,
+    ) -> Result<CommReport> {
+        // real buffers are capped; sim time scales linearly to full_bytes
+        let probe_elems: usize = 1_000_000.min((full_bytes / 4) as usize).max(1);
+        let scale = full_bytes as f64 / (4.0 * probe_elems as f64);
+        let topo = Topology::by_name(topology, k)
+            .ok_or_else(|| anyhow::anyhow!("unknown topology '{topology}'"))?;
+        let links = LinkParams::default();
+        let rt = self.rt.clone();
+
+        let world = crate::mpi::world(k);
+        let mut handles = Vec::new();
+        for (rank, mut comm) in world.into_iter().enumerate() {
+            let topo = topo.clone();
+            let rt = rt.clone();
+            handles.push(std::thread::spawn(move || -> Result<CommReport> {
+                let mut buf: Vec<f32> =
+                    (0..probe_elems).map(|i| ((rank * 31 + i) % 1000) as f32 * 1e-3).collect();
+                let kernels = rt.kernels();
+                let strat = strategy.build(Wire::F16);
+                let mut ctx = ExchangeCtx {
+                    comm: &mut comm,
+                    topo: &topo,
+                    links: &links,
+                    kernels: Some(&kernels),
+                    cuda_aware,
+                };
+                strat.exchange(&mut buf, ReduceOp::Sum, &mut ctx)
+            }));
+        }
+        let mut rep = CommReport::default();
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.join().map_err(|_| anyhow::anyhow!("exchange worker panicked"))??;
+            if i == 0 {
+                rep = r;
+            }
+        }
+        rep.sim_transfer *= scale;
+        rep.sim_kernel *= scale;
+        rep.sim_host_reduce *= scale;
+        rep.wire_bytes = (rep.wire_bytes as f64 * scale) as u64;
+        Ok(rep)
+    }
+
+    // -----------------------------------------------------------------------
+    /// **Fig. 3**: computation vs relative communication overhead of AR /
+    /// ASA / ASA16 while training AlexNet-128b on 8 single-GPU nodes.
+    pub fn fig3(&self) -> Result<String> {
+        let k = 8;
+        let model = "alexnet";
+        let batch = 128;
+        let bytes = models::full_scale_bytes(&self.rt.manifest, model)?;
+        let train_per_iter =
+            models::paper_train_5120(model, batch).unwrap() / (5120.0 / batch as f64);
+
+        let mut table = Table::new(&[
+            "strategy", "comm/iter (s)", "train/iter (s)", "comm/train", "vs AR", "kernel %",
+        ]);
+        let mut rows = Vec::new();
+        let mut ar_time = 0.0;
+        for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16] {
+            let rep = self.measure_exchange(strat, k, "mosaic", bytes, true)?;
+            let t = rep.sim_total();
+            if strat == StrategyKind::Ar {
+                ar_time = t;
+            }
+            table.row(vec![
+                strat.name().to_uppercase(),
+                format!("{t:.3}"),
+                format!("{train_per_iter:.3}"),
+                format!("{:.2}", t / train_per_iter),
+                format!("{:.2}x", ar_time / t),
+                format!("{:.1}%", rep.kernel_share() * 100.0),
+            ]);
+            rows.push(format!(
+                "{},{t:.6},{train_per_iter:.6},{:.6},{:.4}",
+                strat.name(),
+                t / train_per_iter,
+                ar_time / t
+            ));
+        }
+        self.write_csv("fig3.csv", "strategy,comm_s,train_s,comm_over_train,speedup_vs_ar", &rows)?;
+        Ok(format!(
+            "Fig. 3 — AlexNet-128b on mosaic (8 nodes x 1 GPU), paper: ASA ~3x, ASA16 ~6x vs AR\n{}",
+            table.render()
+        ))
+    }
+
+    // -----------------------------------------------------------------------
+    /// **Table 2**: structural comparison (exact parameter counts).
+    pub fn table2(&self) -> Result<String> {
+        let mut table = Table::new(&["model", "depth", "params", "paper", "match"]);
+        let mut rows = Vec::new();
+        for name in ["alexnet", "googlenet", "vggnet"] {
+            let m = &self.rt.manifest.full_scale[name];
+            table.row(vec![
+                name.to_string(),
+                m.depth.to_string(),
+                m.params.to_string(),
+                m.paper_params.to_string(),
+                if m.params == m.paper_params { "exact" } else { "MISMATCH" }.to_string(),
+            ]);
+            rows.push(format!("{name},{},{},{}", m.depth, m.params, m.paper_params));
+        }
+        self.write_csv("table2.csv", "model,depth,params,paper_params", &rows)?;
+        Ok(format!("Table 2 — structural comparison\n{}", table.render()))
+    }
+
+    // -----------------------------------------------------------------------
+    /// **Table 3**: communication overhead per 5,120 images / 8-GPU speedup
+    /// for AlexNet-128b/32b, GoogLeNet-32b (mosaic) and VGGNet-32b (copper).
+    pub fn table3(&self) -> Result<String> {
+        let k = 8;
+        let rows_spec: &[(&str, usize)] =
+            &[("alexnet", 128), ("alexnet", 32), ("googlenet", 32), ("vggnet", 32)];
+        let mut table = Table::new(&[
+            "model", "train1GPU/5120 (s)", "AR (s/x)", "ASA (s/x)", "ASA16 (s/x)",
+        ]);
+        let mut rows = Vec::new();
+        for &(model, batch) in rows_spec {
+            let topo = models::paper_topology(model);
+            let bytes = models::full_scale_bytes(&self.rt.manifest, model)?;
+            let t1 = models::paper_train_5120(model, batch).unwrap();
+            let iters_per_5120 = 5120.0 / (batch as f64 * k as f64);
+            let mut cells =
+                vec![format!("{model}-{batch}b ({topo})"), format!("{t1:.1}")];
+            let mut csv = format!("{model},{batch},{topo},{t1}");
+            for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16] {
+                let rep = self.measure_exchange(strat, k, topo, bytes, true)?;
+                let comm_5120 = rep.sim_total() * iters_per_5120;
+                let total = t1 / k as f64 + comm_5120;
+                let speedup = t1 / total;
+                cells.push(format!("{comm_5120:.2}/{speedup:.1}x"));
+                csv.push_str(&format!(",{comm_5120:.4},{speedup:.3}"));
+            }
+            table.row(cells);
+            rows.push(csv);
+        }
+        self.write_csv(
+            "table3.csv",
+            "model,batch,topology,train1gpu_s,ar_comm_s,ar_speedup,asa_comm_s,asa_speedup,asa16_comm_s,asa16_speedup",
+            &rows,
+        )?;
+        Ok(format!(
+            "Table 3 — comm overhead per 5,120 images (s) / speedup on 8 GPUs\n\
+             (paper: ASA 2.94/4.9x + ASA16 1.83/5.7x on AlexNet-32b; 1.96/7.2x + 1.76/7.3x on GoogLeNet)\n{}",
+            table.render()
+        ))
+    }
+
+    // -----------------------------------------------------------------------
+    /// Convergence suite behind **Table 1 / Fig. 4 / Fig. 5**: BSP proxy
+    /// runs at k ∈ scales. Returns (report per run, csv rows).
+    pub fn convergence(
+        &self,
+        model: &str,
+        scales: &[usize],
+        batch: usize,
+        iters: usize,
+        lrs: &[f64],
+        strategy: StrategyKind,
+        tag: &str,
+    ) -> Result<Vec<(usize, BspReport)>> {
+        let mut out = Vec::new();
+        let mut curve_rows: Vec<String> = Vec::new();
+        for (i, &k) in scales.iter().enumerate() {
+            let mut cfg = BspConfig::quick(model, k, iters);
+            cfg.batch = batch;
+            cfg.scheme = Scheme::Subgd;
+            cfg.strategy = strategy;
+            cfg.lr = match model {
+                // GoogLeNet policy (footnote 13): poly 0.5
+                "googlenet" => LrSchedule::Poly { base: lrs[i], power: 0.5, max_iters: iters },
+                // AlexNet policy: /10 every "20 epochs" ~ 40% of the run
+                _ => LrSchedule::StepDecay { base: lrs[i], factor: 0.1, every: (iters * 2) / 5 },
+            };
+            cfg.eval_every = (iters / 12).max(1);
+            cfg.sim_model = models::full_scale_of(model).map(|s| s.to_string());
+            cfg.topology = models::full_scale_of(model)
+                .map(models::paper_topology)
+                .unwrap_or("mosaic")
+                .to_string();
+            cfg.seed = 42;
+            let rep = run_bsp(&self.rt, &cfg)?;
+            for p in &rep.curve {
+                curve_rows.push(format!(
+                    "{k},{batch},{},{:.4},{:.6},{:.4}",
+                    p.iter, p.vtime, p.train_loss, p.val_err
+                ));
+            }
+            out.push((k, rep));
+        }
+        self.write_csv(
+            &format!("{tag}_curves.csv"),
+            "workers,batch,iter,vtime_s,train_loss,val_err",
+            &curve_rows,
+        )?;
+        Ok(out)
+    }
+
+    /// **Fig. 4**: AlexNet-proxy validation error at k ∈ {1,2,4,8} (+ the
+    /// 8-worker small-batch recovery row).
+    pub fn fig4(&self, iters: usize) -> Result<String> {
+        let runs = self.convergence(
+            "alexnet",
+            &[1, 2, 4, 8],
+            32,
+            iters,
+            &[0.01, 0.01, 0.01, 0.005],
+            StrategyKind::Asa,
+            "fig4",
+        )?;
+        // the paper's recovery: 8 workers at a smaller per-worker batch
+        let small = self.convergence(
+            "alexnet",
+            &[8],
+            8,
+            iters,
+            &[0.005],
+            StrategyKind::Asa,
+            "fig4_smallbatch",
+        )?;
+        let mut table =
+            Table::new(&["workers", "batch", "eff.batch", "final val err", "final loss"]);
+        for (k, rep) in runs.iter().chain(small.iter()) {
+            table.row(vec![
+                k.to_string(),
+                rep.batch.to_string(),
+                (k * rep.batch).to_string(),
+                format!("{:.3}", rep.final_val_err),
+                format!("{:.3}", rep.final_train_loss),
+            ]);
+        }
+        Ok(format!(
+            "Fig. 4 — AlexNet-proxy convergence vs scale (paper: larger effective batch converges worse;\n\
+             smaller per-worker batch at 8 GPUs recovers it)\n{}",
+            table.render()
+        ))
+    }
+
+    /// **Fig. 5**: GoogLeNet-proxy validation error at k ∈ {2,4,8} with the
+    /// poly(0.5) policy and per-scale LRs from Table 1.
+    pub fn fig5(&self, iters: usize) -> Result<String> {
+        let runs = self.convergence(
+            "googlenet",
+            &[2, 4, 8],
+            32,
+            iters,
+            &[0.007, 0.005, 0.005],
+            StrategyKind::Asa,
+            "fig5",
+        )?;
+        let mut table = Table::new(&["workers", "batch", "final val err", "final loss"]);
+        for (k, rep) in &runs {
+            table.row(vec![
+                k.to_string(),
+                rep.batch.to_string(),
+                format!("{:.3}", rep.final_val_err),
+                format!("{:.3}", rep.final_train_loss),
+            ]);
+        }
+        Ok(format!("Fig. 5 — GoogLeNet-proxy convergence vs scale\n{}", table.render()))
+    }
+
+    /// **Table 1**: accuracy/speedup trade-off. Accuracy from proxy
+    /// convergence runs (incl. ASA16 rows — real half-precision exchange);
+    /// speedup from the full-scale comm simulation (Table 3 machinery).
+    pub fn table1(&self, iters: usize) -> Result<String> {
+        let k_speedup = |model: &str, batch: usize, strat: StrategyKind, k: usize| -> Result<f64> {
+            if k == 1 {
+                return Ok(1.0);
+            }
+            let fs = models::full_scale_of(model).unwrap();
+            let topo = models::paper_topology(fs);
+            let bytes = models::full_scale_bytes(&self.rt.manifest, fs)?;
+            // paper's 1-GPU time is batch-dependent; fall back to bs=32 row
+            let t1 = models::paper_train_5120(fs, batch)
+                .or_else(|| models::paper_train_5120(fs, 32))
+                .unwrap();
+            let rep = self.measure_exchange(strat, k, topo, bytes, true)?;
+            let iters_per_5120 = 5120.0 / (batch as f64 * k as f64);
+            let total = t1 / k as f64 + rep.sim_total() * iters_per_5120;
+            Ok(t1 / total)
+        };
+
+        let mut table = Table::new(&[
+            "row", "workers", "LR", "BS", "val err", "speedup(sim)",
+        ]);
+        let mut csv = Vec::new();
+
+        // AlexNet rows at k=1,2,4,8 (bs 32 proxy; paper used 128 at full scale)
+        let alex = self.convergence(
+            "alexnet",
+            &[1, 2, 4, 8],
+            32,
+            iters,
+            &[0.01, 0.01, 0.01, 0.005],
+            StrategyKind::Asa,
+            "table1_alexnet",
+        )?;
+        let alex_lr = [0.01, 0.01, 0.01, 0.005];
+        for ((k, rep), lr) in alex.iter().zip(alex_lr) {
+            let sp = k_speedup("alexnet", 32, StrategyKind::Asa, *k)?;
+            table.row(vec![
+                "AlexNet".into(),
+                k.to_string(),
+                format!("{lr}"),
+                rep.batch.to_string(),
+                format!("{:.3}", rep.final_val_err),
+                format!("{sp:.1}x"),
+            ]);
+            csv.push(format!("alexnet,{k},{lr},{},{:.4},{sp:.3}", rep.batch, rep.final_val_err));
+        }
+        // 8GPU small-batch + fp16 rows
+        let small = self.convergence(
+            "alexnet", &[8], 8, iters, &[0.005], StrategyKind::Asa, "table1_alexnet_small",
+        )?;
+        let sp = k_speedup("alexnet", 8, StrategyKind::Asa, 8)?;
+        table.row(vec![
+            "AlexNet-smallBS".into(),
+            "8".into(),
+            "0.005".into(),
+            "8".into(),
+            format!("{:.3}", small[0].1.final_val_err),
+            format!("{sp:.1}x"),
+        ]);
+        csv.push(format!("alexnet_small,8,0.005,8,{:.4},{sp:.3}", small[0].1.final_val_err));
+
+        let fp16 = self.convergence(
+            "alexnet", &[8], 8, iters, &[0.005], StrategyKind::Asa16, "table1_alexnet_fp16",
+        )?;
+        let sp = k_speedup("alexnet", 8, StrategyKind::Asa16, 8)?;
+        table.row(vec![
+            "AlexNet-fp16".into(),
+            "8".into(),
+            "0.005".into(),
+            "8".into(),
+            format!("{:.3}", fp16[0].1.final_val_err),
+            format!("{sp:.1}x"),
+        ]);
+        csv.push(format!("alexnet_fp16,8,0.005,8,{:.4},{sp:.3}", fp16[0].1.final_val_err));
+
+        // GoogLeNet rows
+        let goog = self.convergence(
+            "googlenet",
+            &[2, 4, 8],
+            32,
+            iters,
+            &[0.007, 0.005, 0.005],
+            StrategyKind::Asa,
+            "table1_googlenet",
+        )?;
+        for ((k, rep), lr) in goog.iter().zip([0.007, 0.005, 0.005]) {
+            let sp = k_speedup("googlenet", 32, StrategyKind::Asa, *k)?;
+            table.row(vec![
+                "GoogLeNet".into(),
+                k.to_string(),
+                format!("{lr}"),
+                rep.batch.to_string(),
+                format!("{:.3}", rep.final_val_err),
+                format!("{sp:.1}x"),
+            ]);
+            csv.push(format!("googlenet,{k},{lr},{},{:.4},{sp:.3}", rep.batch, rep.final_val_err));
+        }
+        let gfp16 = self.convergence(
+            "googlenet", &[8], 32, iters, &[0.005], StrategyKind::Asa16, "table1_googlenet_fp16",
+        )?;
+        let sp = k_speedup("googlenet", 32, StrategyKind::Asa16, 8)?;
+        table.row(vec![
+            "GoogLeNet-fp16".into(),
+            "8".into(),
+            "0.005".into(),
+            "32".into(),
+            format!("{:.3}", gfp16[0].1.final_val_err),
+            format!("{sp:.1}x"),
+        ]);
+        csv.push(format!("googlenet_fp16,8,0.005,32,{:.4},{sp:.3}", gfp16[0].1.final_val_err));
+
+        self.write_csv("table1.csv", "row,workers,lr,batch,val_err,speedup", &csv)?;
+        Ok(format!(
+            "Table 1 — accuracy/speedup trade-off (proxy accuracy, full-scale simulated speedup)\n{}",
+            table.render()
+        ))
+    }
+
+    // -----------------------------------------------------------------------
+    /// **§4 EASGD**: comm overhead of the CUDA-aware MPI transport vs the
+    /// Platoon-like shm baseline at τ=1 (paper: 42 % lower), same model/k.
+    pub fn easgd_compare(&self, iters: usize) -> Result<String> {
+        let mut results = Vec::new();
+        for transport in [Transport::PlatoonShm, Transport::CudaAwareMpi] {
+            let mut cfg = EasgdConfig::quick("mlp", 4, iters);
+            cfg.transport = transport;
+            cfg.tau = 1;
+            cfg.topology = "copper".to_string(); // Platoon is single-node
+            cfg.sim_model = Some("alexnet".to_string());
+            let rep = run_easgd(&self.rt, &cfg)?;
+            results.push((transport, rep));
+        }
+        let shm = results[0].1.comm_per_exchange;
+        let mpi = results[1].1.comm_per_exchange;
+        let reduction = (shm - mpi) / shm * 100.0;
+        let mut table =
+            Table::new(&["transport", "comm/exchange (s)", "total comm (s)", "throughput (ex/s)"]);
+        let mut rows = Vec::new();
+        for (t, rep) in &results {
+            table.row(vec![
+                t.name().to_string(),
+                format!("{:.4}", rep.comm_per_exchange),
+                format!("{:.3}", rep.comm_total),
+                format!("{:.1}", rep.throughput),
+            ]);
+            rows.push(format!("{},{},{}", t.name(), rep.comm_per_exchange, rep.comm_total));
+        }
+        self.write_csv("easgd_compare.csv", "transport,comm_per_exchange_s,comm_total_s", &rows)?;
+        Ok(format!(
+            "EASGD comm overhead at tau=1 (AlexNet-scale exchange, 1 node): \
+             CUDA-aware MPI is {reduction:.0}% lower than the Platoon-shm baseline (paper: 42%)\n{}",
+            table.render()
+        ))
+    }
+
+    /// **§4 EASGD grid**: α × τ search (paper best: α=0.5, τ=1).
+    pub fn easgd_grid(&self, iters: usize) -> Result<String> {
+        let mut table = Table::new(&["alpha", "tau", "final val err", "throughput (ex/s)"]);
+        let mut rows = Vec::new();
+        let mut best: Option<(f64, usize, f64)> = None;
+        for &alpha in &[0.1, 0.3, 0.5, 0.9] {
+            for &tau in &[1usize, 2, 4, 8] {
+                let mut cfg = EasgdConfig::quick("mlp", 4, iters);
+                cfg.alpha = alpha;
+                cfg.tau = tau;
+                cfg.eval_every = (iters / 4).max(1);
+                cfg.lr = LrSchedule::Const { base: 0.05 };
+                let rep = run_easgd(&self.rt, &cfg)?;
+                table.row(vec![
+                    format!("{alpha}"),
+                    tau.to_string(),
+                    format!("{:.3}", rep.final_val_err),
+                    format!("{:.1}", rep.throughput),
+                ]);
+                rows.push(format!("{alpha},{tau},{:.4},{:.2}", rep.final_val_err, rep.throughput));
+                if best.map(|(_, _, e)| rep.final_val_err < e).unwrap_or(true) {
+                    best = Some((alpha, tau, rep.final_val_err));
+                }
+            }
+        }
+        self.write_csv("easgd_grid.csv", "alpha,tau,val_err,throughput", &rows)?;
+        let (ba, bt, be) = best.unwrap();
+        Ok(format!(
+            "EASGD grid search (paper best: alpha=0.5, tau=1, 21.12% top-5)\n\
+             best here: alpha={ba}, tau={bt}, val_err={be:.3}\n{}",
+            table.render()
+        ))
+    }
+
+    // -----------------------------------------------------------------------
+    /// **Fig. 6**: topology rendering.
+    pub fn topo(&self, name: &str) -> Result<String> {
+        let t = Topology::by_name(name, 8)
+            .ok_or_else(|| anyhow::anyhow!("unknown topology '{name}'"))?;
+        Ok(t.render())
+    }
+}

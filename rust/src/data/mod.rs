@@ -1,0 +1,409 @@
+//! Synthetic workloads — the ImageNet / corpus substitute (DESIGN.md §2).
+//!
+//! * [`ImageDataset`]: a deterministic image-classification task. Each class
+//!   has a fixed random prototype image; samples are prototype + Gaussian
+//!   noise + random shift, quantized to u8 and written as **batch files on
+//!   disk** exactly like the paper's preprocessed ImageNet batches (§3.3) so
+//!   the parallel loader exercises real file I/O, mean subtraction,
+//!   cropping and mirroring. Labels (small) stay in memory, as in the paper
+//!   (footnote 6).
+//! * [`TokenStream`]: an order-1 Markov chain over a vocabulary (4 likely
+//!   successors per state ⇒ optimal LM loss ≈ ln 4); the e2e transformer
+//!   trains on it.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Rng;
+
+/// Storage resolution is larger than the model input so the loader's random
+/// crop (Alg. 1 step 11) is a real operation: store 36×36, crop to 32×32.
+#[derive(Clone, Debug)]
+pub struct ImageSpec {
+    pub classes: usize,
+    pub channels: usize,
+    /// stored resolution (pre-crop)
+    pub store_hw: usize,
+    /// model input resolution (crop target)
+    pub crop_hw: usize,
+    pub noise: f32,
+    pub label_noise: f32,
+    pub seed: u64,
+}
+
+impl Default for ImageSpec {
+    fn default() -> Self {
+        ImageSpec {
+            classes: 16,
+            channels: 3,
+            store_hw: 36,
+            crop_hw: 32,
+            noise: 0.18,
+            label_noise: 0.02,
+            seed: 1234,
+        }
+    }
+}
+
+/// In-memory generator (prototypes) + on-disk batch store.
+pub struct ImageDataset {
+    pub spec: ImageSpec,
+    prototypes: Vec<Vec<f32>>, // classes × (C*store*store), values in [0,1]
+}
+
+impl ImageDataset {
+    pub fn new(spec: ImageSpec) -> ImageDataset {
+        let mut rng = Rng::new(spec.seed);
+        let px = spec.channels * spec.store_hw * spec.store_hw;
+        // smooth prototypes: low-frequency random fields so crops stay
+        // class-informative
+        let prototypes = (0..spec.classes)
+            .map(|_| {
+                let mut base = vec![0.0f32; px];
+                let hw = spec.store_hw;
+                for c in 0..spec.channels {
+                    // random plane waves per channel
+                    let (fx, fy) = (rng.next_f64() * 0.6 + 0.1, rng.next_f64() * 0.6 + 0.1);
+                    let (px_, py_) = (rng.next_f64() * 6.0, rng.next_f64() * 6.0);
+                    let amp = 0.35 + 0.15 * rng.next_f64();
+                    for y in 0..hw {
+                        for x in 0..hw {
+                            let v = ((x as f64 * fx + px_).sin() * (y as f64 * fy + py_).cos())
+                                * amp
+                                + 0.5;
+                            base[c * hw * hw + y * hw + x] = v as f32;
+                        }
+                    }
+                }
+                base
+            })
+            .collect();
+        ImageDataset { spec, prototypes }
+    }
+
+    /// Deterministic example by global index: (u8 pixels, label).
+    pub fn example(&self, index: u64) -> (Vec<u8>, i32) {
+        let s = &self.spec;
+        let mut rng = Rng::new(s.seed ^ 0x1111).fork(index + 1);
+        let true_class = (index as usize) % s.classes;
+        let label = if rng.next_f64() < s.label_noise as f64 {
+            rng.below(s.classes) as i32
+        } else {
+            true_class as i32
+        };
+        let proto = &self.prototypes[true_class];
+        let px = proto.len();
+        let mut img = Vec::with_capacity(px);
+        for i in 0..px {
+            let v = proto[i] + s.noise * rng.gauss_f32();
+            img.push((v.clamp(0.0, 1.0) * 255.0) as u8);
+        }
+        (img, label)
+    }
+
+    /// Mean image over the prototype set (the paper subtracts a fixed
+    /// ImageNet mean image) as f32 in pixel units.
+    pub fn mean_image(&self) -> Vec<f32> {
+        let px = self.prototypes[0].len();
+        let mut mean = vec![0.0f32; px];
+        for p in &self.prototypes {
+            for (m, v) in mean.iter_mut().zip(p) {
+                *m += v * 255.0;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= self.prototypes.len() as f32;
+        }
+        mean
+    }
+
+    /// Write `n_batches` batch files of `batch` examples (shard `shard` of
+    /// `n_shards`) under `dir`, plus labels and the mean image. Returns the
+    /// file paths in order — the training process feeds these to its loader
+    /// child one filename at a time (Alg. 1).
+    pub fn write_shard(
+        &self,
+        dir: &Path,
+        shard: usize,
+        n_shards: usize,
+        batch: usize,
+        n_batches: usize,
+    ) -> Result<ShardFiles> {
+        fs::create_dir_all(dir)?;
+        let mut files = Vec::with_capacity(n_batches);
+        let mut labels = Vec::with_capacity(n_batches * batch);
+        for b in 0..n_batches {
+            let path = dir.join(format!("shard{shard}_batch{b:05}.bin"));
+            let mut buf = Vec::with_capacity(batch * self.prototypes[0].len());
+            for i in 0..batch {
+                // global index interleaves shards (disjoint coverage)
+                let idx = ((b * batch + i) * n_shards + shard) as u64;
+                let (img, label) = self.example(idx);
+                buf.extend_from_slice(&img);
+                labels.push(label);
+            }
+            let mut f = fs::File::create(&path).with_context(|| format!("{path:?}"))?;
+            f.write_all(&buf)?;
+            files.push(path);
+        }
+        let mean = self.mean_image();
+        Ok(ShardFiles { files, labels, mean, batch, spec: self.spec.clone() })
+    }
+
+    /// An in-memory eval batch (already mean-subtracted + center-cropped):
+    /// returns (x: f32 NCHW, y) ready for the eval artifact.
+    pub fn eval_batch(&self, start_index: u64, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let s = &self.spec;
+        let mean = self.mean_image();
+        let mut xs = Vec::with_capacity(batch * s.channels * s.crop_hw * s.crop_hw);
+        let mut ys = Vec::with_capacity(batch);
+        let off = (s.store_hw - s.crop_hw) / 2;
+        for i in 0..batch {
+            // eval stream offset far from train indices
+            let (img, label) = self.example(1_000_000_007 + start_index + i as u64);
+            xs.extend(crop(&img, &mean, s, off, off, false));
+            ys.push(label);
+        }
+        (xs, ys)
+    }
+}
+
+/// One worker's on-disk shard.
+pub struct ShardFiles {
+    pub files: Vec<PathBuf>,
+    /// labels for batch b are labels[b*batch..(b+1)*batch] — in memory,
+    /// like the paper's label handling (footnote 6)
+    pub labels: Vec<i32>,
+    pub mean: Vec<f32>,
+    pub batch: usize,
+    pub spec: ImageSpec,
+}
+
+/// Mean-subtract + crop (+ optional horizontal mirror) one stored image.
+/// `img` is u8 at store_hw; output is f32 NCHW at crop_hw. This is Alg. 1
+/// steps 10–11, shared by the loader and the eval path.
+pub fn crop(img: &[u8], mean: &[f32], s: &ImageSpec, ox: usize, oy: usize, mirror: bool) -> Vec<f32> {
+    let (hw, chw) = (s.store_hw, s.crop_hw);
+    let mut out = Vec::with_capacity(s.channels * chw * chw);
+    for c in 0..s.channels {
+        for y in 0..chw {
+            for x in 0..chw {
+                let sx = if mirror { ox + chw - 1 - x } else { ox + x };
+                let idx = c * hw * hw + (oy + y) * hw + sx;
+                out.push((img[idx] as f32 - mean[idx]) / 255.0);
+            }
+        }
+    }
+    out
+}
+
+/// Flat-feature classification task for the MLP (class prototypes in R^d +
+/// Gaussian noise; the fast model for scheme/strategy studies).
+pub struct FeatureDataset {
+    pub dim: usize,
+    pub classes: usize,
+    pub noise: f32,
+    pub label_noise: f32,
+    seed: u64,
+    prototypes: Vec<Vec<f32>>,
+}
+
+impl FeatureDataset {
+    pub fn new(dim: usize, classes: usize, seed: u64) -> FeatureDataset {
+        let mut rng = Rng::new(seed ^ 0xFEA7);
+        let prototypes = (0..classes)
+            .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        FeatureDataset { dim, classes, noise: 0.8, label_noise: 0.02, seed, prototypes }
+    }
+
+    pub fn example(&self, index: u64) -> (Vec<f32>, i32) {
+        let mut rng = Rng::new(self.seed ^ 0x2222).fork(index + 1);
+        let true_class = (index as usize) % self.classes;
+        let label = if rng.next_f64() < self.label_noise as f64 {
+            rng.below(self.classes) as i32
+        } else {
+            true_class as i32
+        };
+        let proto = &self.prototypes[true_class];
+        let x = proto.iter().map(|&p| p + self.noise * rng.gauss_f32()).collect();
+        (x, label)
+    }
+
+    /// Shard-disjoint training batch (worker `shard` of `n_shards`).
+    pub fn batch(
+        &self,
+        shard: usize,
+        n_shards: usize,
+        iter: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(batch * self.dim);
+        let mut ys = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let idx = (((iter * batch + i) * n_shards) + shard) as u64;
+            let (x, y) = self.example(idx);
+            xs.extend(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    pub fn eval_batch(&self, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(batch * self.dim);
+        let mut ys = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let (x, y) = self.example(2_000_000_011 + i as u64);
+            xs.extend(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+}
+
+/// Markov-chain token stream for the LM workload.
+pub struct TokenStream {
+    pub vocab: usize,
+    seed: u64,
+}
+
+impl TokenStream {
+    pub fn new(vocab: usize, seed: u64) -> TokenStream {
+        TokenStream { vocab, seed }
+    }
+
+    /// successors of state s: 4 deterministic pseudo-random candidates
+    fn successors(&self, s: i32) -> [i32; 4] {
+        let v = self.vocab as u64;
+        let h = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.seed;
+        [
+            (h % v) as i32,
+            ((h >> 16) % v) as i32,
+            ((h >> 32) % v) as i32,
+            ((h >> 48) % v) as i32,
+        ]
+    }
+
+    /// Generate a stream of `n` tokens for `stream_id` (worker shard).
+    pub fn generate(&self, stream_id: u64, n: usize) -> Vec<i32> {
+        let mut rng = Rng::new(self.seed ^ 0xBEEF).fork(stream_id);
+        let mut out = Vec::with_capacity(n);
+        let mut s = rng.below(self.vocab) as i32;
+        for _ in 0..n {
+            out.push(s);
+            s = self.successors(s)[rng.below(4)];
+        }
+        out
+    }
+
+    /// (x, y) next-token batch: x = tokens[i..i+L], y = tokens[i+1..i+L+1].
+    pub fn lm_batch(
+        &self,
+        stream_id: u64,
+        cursor: usize,
+        batch: usize,
+        seq: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let need = cursor + batch * (seq + 1) + 1;
+        let toks = self.generate(stream_id, need);
+        let mut xs = Vec::with_capacity(batch * seq);
+        let mut ys = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let start = cursor + b * (seq + 1);
+            xs.extend_from_slice(&toks[start..start + seq]);
+            ys.extend_from_slice(&toks[start + 1..start + seq + 1]);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_deterministic() {
+        let d = ImageDataset::new(ImageSpec::default());
+        let (a1, l1) = d.example(42);
+        let (a2, l2) = d.example(42);
+        assert_eq!(a1, a2);
+        assert_eq!(l1, l2);
+        let (b, _) = d.example(43);
+        assert_ne!(a1, b);
+    }
+
+    #[test]
+    fn labels_mostly_match_class() {
+        let d = ImageDataset::new(ImageSpec::default());
+        let n = 1000u64;
+        let matches = (0..n)
+            .filter(|&i| d.example(i).1 as u64 == i % d.spec.classes as u64)
+            .count();
+        assert!(matches as f64 / n as f64 > 0.95, "{matches}");
+    }
+
+    #[test]
+    fn shards_are_disjoint_and_cover() {
+        let d = ImageDataset::new(ImageSpec::default());
+        let tmp = std::env::temp_dir().join(format!("tmpi_data_test_{}", std::process::id()));
+        let k = 3;
+        let mut all_first_pixels = Vec::new();
+        for shard in 0..k {
+            let sf = d.write_shard(&tmp, shard, k, 4, 2).unwrap();
+            assert_eq!(sf.files.len(), 2);
+            assert_eq!(sf.labels.len(), 8);
+            for f in &sf.files {
+                let bytes = std::fs::read(f).unwrap();
+                assert_eq!(bytes.len(), 4 * 3 * 36 * 36);
+                all_first_pixels.push(bytes[..8].to_vec());
+            }
+        }
+        // shards saw different examples
+        all_first_pixels.dedup();
+        assert!(all_first_pixels.len() > 1);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn crop_shapes_and_mirror() {
+        let s = ImageSpec::default();
+        let d = ImageDataset::new(s.clone());
+        let (img, _) = d.example(0);
+        let mean = d.mean_image();
+        let a = crop(&img, &mean, &s, 0, 0, false);
+        let m = crop(&img, &mean, &s, 0, 0, true);
+        assert_eq!(a.len(), 3 * 32 * 32);
+        // mirror flips x within each row
+        assert_eq!(a[0], m[31]);
+        assert!(a.iter().all(|v| v.is_finite() && v.abs() <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn token_stream_learnable_and_deterministic() {
+        let t = TokenStream::new(256, 7);
+        let a = t.generate(0, 1000);
+        let b = t.generate(0, 1000);
+        assert_eq!(a, b);
+        // every transition lands in the 4-successor set
+        for w in a.windows(2) {
+            assert!(t.successors(w[0]).contains(&w[1]));
+        }
+        // different stream ids decorrelate
+        let c = t.generate(1, 1000);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn lm_batch_shifted_by_one() {
+        let t = TokenStream::new(64, 3);
+        let (x, y) = t.lm_batch(0, 0, 2, 8);
+        assert_eq!(x.len(), 16);
+        assert_eq!(y.len(), 16);
+        // y is x shifted within each row
+        assert_eq!(x[1], y[0]);
+        assert_eq!(x[9], y[8]);
+    }
+}

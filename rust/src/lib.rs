@@ -1,0 +1,48 @@
+//! # theano-mpi-rs
+//!
+//! A Rust + JAX + Pallas reproduction of **Theano-MPI: a Theano-based
+//! Distributed Training Framework** (He Ma, Fei Mao, Graham W. Taylor, 2016).
+//!
+//! Theano-MPI trains data-parallel replicas of a deep model across GPUs with
+//! MPI-based parameter exchange. This crate rebuilds the whole system as a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: BSP engine,
+//!   CUDA-aware exchange strategies (`collectives`: AR / ASA / ASA16 / Ring),
+//!   asynchronous EASGD (`easgd`), the parallel loading pipeline (`loader`),
+//!   plus every substrate the paper depends on: an MPI-style message-passing
+//!   layer (`mpi`), the copper/mosaic cluster topologies (`cluster`), and an
+//!   interconnect timing model (`simnet`).
+//! * **L2 (python/compile)** — jax model fwd/bwd lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels: tiled matmul, the ASA
+//!   summation kernel, fp16 pack/unpack, fused momentum SGD.
+//!
+//! The `runtime` module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and executes them from the hot path; Python never runs at
+//! request time.
+//!
+//! Workers are OS threads ("processes" of the paper) whose **compute time is
+//! real** (measured around PJRT execution) and whose **communication time is
+//! simulated** from the cluster topology (DESIGN.md §2), giving
+//! deterministic, paper-faithful speedup accounting on a single-core testbed.
+
+pub mod bsp;
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod easgd;
+pub mod loader;
+pub mod metrics;
+pub mod models;
+pub mod mpi;
+pub mod precision;
+pub mod runtime;
+pub mod sgd;
+pub mod simnet;
+pub mod testkit;
+pub mod trace;
+pub mod util;
+
+pub use coordinator::Session;

@@ -1,0 +1,265 @@
+//! Parallel data loading — the paper's Algorithm 1 (§3.3).
+//!
+//! Each training worker spawns a **loader child** (the paper uses
+//! `MPI_Spawn` + an intra-communicator; here a thread + channel pair, same
+//! protocol). The child loads a batch file from disk, subtracts the mean
+//! image, crops and mirrors according to the mode, "transfers" to the GPU
+//! (a real HostTensor build + a simulated H2D charge), then waits for the
+//! next filename before flipping the double buffer — so steps 9–13 of
+//! Alg. 1 overlap with the training process's fwd/bwd on the previous
+//! batch.
+//!
+//! The worker-side handle measures its own blocked time on `ready()` — the
+//! *load stall*, i.e. the part of loading the overlap failed to hide. The
+//! `direct` mode (no child, synchronous load) is the ablation baseline.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{crop, ImageSpec};
+use crate::runtime::HostTensor;
+use crate::simnet::LinkParams;
+use crate::util::Rng;
+
+/// Worker -> loader messages (Alg. 1's `recv`).
+enum Ctl {
+    /// mode: "train" (random crop + mirror) or "val" (center crop)
+    Mode(String),
+    /// next filename to prefetch
+    File(PathBuf),
+    Stop,
+}
+
+/// One preprocessed batch, ready for the train artifact.
+pub struct LoadedBatch {
+    pub x: HostTensor,
+    /// real seconds the child spent on disk + preprocess + tensor build
+    pub load_time: f64,
+    /// simulated H2D time (PCIe) for the preprocessed bytes
+    pub h2d_sim: f64,
+}
+
+/// Worker-side handle to its loader child.
+pub struct ParallelLoader {
+    tx: Sender<Ctl>,
+    rx: Receiver<Result<LoadedBatch>>,
+    handle: Option<JoinHandle<()>>,
+    /// accumulated time the worker spent blocked waiting on the child
+    pub stall_time: f64,
+    pub batches_loaded: usize,
+}
+
+impl ParallelLoader {
+    /// Spawn the child (Alg. 1 start) with the shard's static context.
+    pub fn spawn(spec: ImageSpec, mean: Vec<f32>, batch: usize, links: LinkParams, seed: u64) -> ParallelLoader {
+        let (tx, crx) = channel::<Ctl>();
+        let (ctx_, rx) = channel::<Result<LoadedBatch>>();
+        let handle = std::thread::Builder::new()
+            .name("loader-child".into())
+            .spawn(move || child_main(spec, mean, batch, links, seed, crx, ctx_))
+            .expect("spawn loader child");
+        ParallelLoader { tx, rx, handle: Some(handle), stall_time: 0.0, batches_loaded: 0 }
+    }
+
+    /// Set the mode (Alg. 1 step 2/6).
+    pub fn set_mode(&self, mode: &str) {
+        let _ = self.tx.send(Ctl::Mode(mode.to_string()));
+    }
+
+    /// Send the next filename to prefetch (Alg. 1 step 7/13-17).
+    pub fn request(&self, file: PathBuf) {
+        let _ = self.tx.send(Ctl::File(file));
+    }
+
+    /// Block until the previously-requested batch is resident ("notify
+    /// training process to proceed", Alg. 1 step 20). Measures the stall.
+    pub fn ready(&mut self) -> Result<LoadedBatch> {
+        let t0 = Instant::now();
+        let out = self.rx.recv().map_err(|_| anyhow!("loader child died"))?;
+        self.stall_time += t0.elapsed().as_secs_f64();
+        self.batches_loaded += 1;
+        out
+    }
+
+    pub fn stop(&mut self) {
+        let _ = self.tx.send(Ctl::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ParallelLoader {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn child_main(
+    spec: ImageSpec,
+    mean: Vec<f32>,
+    batch: usize,
+    links: LinkParams,
+    seed: u64,
+    rx: Receiver<Ctl>,
+    tx: Sender<Result<LoadedBatch>>,
+) {
+    let mut mode = "train".to_string();
+    let mut rng = Rng::new(seed ^ 0x10AD);
+    while let Ok(ctl) = rx.recv() {
+        let file = match ctl {
+            Ctl::Stop => break,
+            Ctl::Mode(m) => {
+                mode = m;
+                continue;
+            }
+            Ctl::File(f) => f,
+        };
+        let out = load_one(&spec, &mean, batch, &links, &mut rng, &mode, &file);
+        if tx.send(out).is_err() {
+            break;
+        }
+    }
+}
+
+/// Alg. 1 steps 9–12 for one batch file (also used by the direct loader).
+pub fn load_one(
+    spec: &ImageSpec,
+    mean: &[f32],
+    batch: usize,
+    links: &LinkParams,
+    rng: &mut Rng,
+    mode: &str,
+    file: &PathBuf,
+) -> Result<LoadedBatch> {
+    let t0 = Instant::now();
+    // step 9: load file from disk into host memory
+    let bytes = std::fs::read(file).map_err(|e| anyhow!("read {file:?}: {e}"))?;
+    let px = spec.channels * spec.store_hw * spec.store_hw;
+    if bytes.len() != batch * px {
+        return Err(anyhow!(
+            "{file:?}: expected {} bytes ({batch}x{px}), got {}",
+            batch * px,
+            bytes.len()
+        ));
+    }
+    // steps 10-11: mean subtract + crop/mirror per mode
+    let margin = spec.store_hw - spec.crop_hw;
+    let mut xs = Vec::with_capacity(batch * spec.channels * spec.crop_hw * spec.crop_hw);
+    for b in 0..batch {
+        let img = &bytes[b * px..(b + 1) * px];
+        let (ox, oy, mirror) = if mode == "train" {
+            (rng.below(margin + 1), rng.below(margin + 1), rng.next_f64() < 0.5)
+        } else {
+            (margin / 2, margin / 2, false)
+        };
+        xs.extend(crop(img, mean, spec, ox, oy, mirror));
+    }
+    // step 12: host -> device transfer (simulated PCIe charge; the tensor
+    // build is the real representational work)
+    let h2d_bytes = 4 * xs.len() as u64;
+    let h2d_sim = links.pcie_time(h2d_bytes);
+    let x = HostTensor::f32(
+        vec![batch, spec.channels, spec.crop_hw, spec.crop_hw],
+        xs,
+    );
+    Ok(LoadedBatch { x, load_time: t0.elapsed().as_secs_f64(), h2d_sim })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ImageDataset, ImageSpec};
+
+    fn setup(n_batches: usize) -> (crate::data::ShardFiles, ImageSpec) {
+        let spec = ImageSpec::default();
+        let d = ImageDataset::new(spec.clone());
+        let tmp = std::env::temp_dir().join(format!(
+            "tmpi_loader_test_{}_{n_batches}",
+            std::process::id()
+        ));
+        let sf = d.write_shard(&tmp, 0, 1, 8, n_batches).unwrap();
+        (sf, spec)
+    }
+
+    #[test]
+    fn loads_and_preprocesses_batches_in_order() {
+        let (sf, spec) = setup(3);
+        let mut loader =
+            ParallelLoader::spawn(spec, sf.mean.clone(), sf.batch, LinkParams::default(), 1);
+        loader.set_mode("train");
+        for f in &sf.files {
+            loader.request(f.clone());
+        }
+        for _ in 0..3 {
+            let b = loader.ready().unwrap();
+            assert_eq!(b.x.shape, vec![8, 3, 32, 32]);
+            assert!(b.load_time > 0.0);
+            assert!(b.h2d_sim > 0.0);
+            let xs = b.x.as_f32().unwrap();
+            assert!(xs.iter().all(|v| v.is_finite()));
+        }
+        loader.stop();
+        let _ = std::fs::remove_dir_all(sf.files[0].parent().unwrap());
+    }
+
+    #[test]
+    fn val_mode_is_deterministic_train_mode_augments() {
+        let (sf, spec) = setup(1);
+        let links = LinkParams::default();
+        let f = &sf.files[0];
+        let mut rng = Rng::new(9);
+        let v1 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "val", f).unwrap();
+        let v2 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "val", f).unwrap();
+        assert_eq!(v1.x.as_f32().unwrap(), v2.x.as_f32().unwrap());
+        let t1 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "train", f).unwrap();
+        let t2 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "train", f).unwrap();
+        assert_ne!(t1.x.as_f32().unwrap(), t2.x.as_f32().unwrap());
+        let _ = std::fs::remove_dir_all(f.parent().unwrap());
+    }
+
+    #[test]
+    fn missing_file_reports_error_not_panic() {
+        let spec = ImageSpec::default();
+        let mut loader = ParallelLoader::spawn(
+            spec.clone(),
+            vec![0.0; spec.channels * spec.store_hw * spec.store_hw],
+            4,
+            LinkParams::default(),
+            2,
+        );
+        loader.request(PathBuf::from("/nonexistent/batch.bin"));
+        let err = match loader.ready() {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected load error"),
+        };
+        assert!(err.contains("read"), "{err}");
+        loader.stop();
+    }
+
+    #[test]
+    fn double_buffering_overlaps() {
+        // request two files up-front; while the worker "trains" (sleeps),
+        // the child prefetches, so the second ready() stall is near zero.
+        let (sf, spec) = setup(2);
+        let mut loader =
+            ParallelLoader::spawn(spec, sf.mean.clone(), sf.batch, LinkParams::default(), 3);
+        loader.request(sf.files[0].clone());
+        let _first = loader.ready().unwrap();
+        loader.request(sf.files[1].clone());
+        std::thread::sleep(std::time::Duration::from_millis(60)); // "training"
+        let stall_before = loader.stall_time;
+        let _second = loader.ready().unwrap();
+        let second_stall = loader.stall_time - stall_before;
+        assert!(
+            second_stall < 0.03,
+            "prefetch failed to hide load: stall={second_stall}s"
+        );
+        loader.stop();
+        let _ = std::fs::remove_dir_all(sf.files[0].parent().unwrap());
+    }
+}

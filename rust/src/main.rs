@@ -1,0 +1,303 @@
+//! `tmpi` — the Theano-MPI-rs launcher (the paper's process-management CLI).
+//!
+//! ```text
+//! tmpi train  [--config run.toml] [--model m] [--workers k] [--iters n] ...
+//! tmpi easgd  [--config run.toml] [--alpha a] [--tau t] ...
+//! tmpi repro  <fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all> [--iters n]
+//! tmpi topo   <copper|mosaic>
+//! tmpi info
+//! ```
+//!
+//! Artifacts dir defaults to ./artifacts ($TMPI_ARTIFACTS overrides);
+//! reports land in ./runs.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use theano_mpi::bsp::{run_bsp, BspConfig};
+use theano_mpi::collectives::StrategyKind;
+use theano_mpi::config;
+use theano_mpi::easgd::{run_easgd, EasgdConfig, Transport};
+use theano_mpi::precision::Wire;
+use theano_mpi::sgd::{LrSchedule, Scheme};
+use theano_mpi::Session;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?
+                .clone();
+            flags.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(Args { positional, flags })
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key).map(|v| v.parse::<usize>().map_err(|e| anyhow!("--{key}: {e}"))).transpose()
+    }
+
+    fn f64_(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key).map(|v| v.parse::<f64>().map_err(|e| anyhow!("--{key}: {e}"))).transpose()
+    }
+}
+
+fn artifacts_dir() -> String {
+    std::env::var("TMPI_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn session() -> Result<Session> {
+    Session::new(artifacts_dir(), "runs")
+}
+
+fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(k) = args.usize_("workers")? {
+        cfg.workers = k;
+    }
+    if let Some(n) = args.usize_("iters")? {
+        cfg.iters = n;
+    }
+    if let Some(b) = args.usize_("batch")? {
+        cfg.batch = b;
+    }
+    if let Some(s) = args.get("scheme") {
+        cfg.scheme = Scheme::parse(s).ok_or_else(|| anyhow!("bad --scheme"))?;
+    }
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = StrategyKind::parse(s).ok_or_else(|| anyhow!("bad --strategy"))?;
+    }
+    if let Some(w) = args.get("wire") {
+        cfg.wire = match w {
+            "f16" => Wire::F16,
+            "bf16" => Wire::Bf16,
+            _ => bail!("bad --wire"),
+        };
+    }
+    if let Some(lr) = args.f64_("lr")? {
+        cfg.lr = LrSchedule::Const { base: lr };
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = t.to_string();
+    }
+    if let Some(e) = args.usize_("eval-every")? {
+        cfg.eval_every = e;
+    }
+    if let Some(s) = args.get("sim-model") {
+        cfg.sim_model = Some(s.to_string());
+    }
+    if let Some(l) = args.get("loader") {
+        cfg.use_loader = l == "parallel";
+    }
+    if let Some(c) = args.get("cuda-aware") {
+        cfg.cuda_aware = c == "true";
+    }
+    if let Some(s) = args.usize_("seed")? {
+        cfg.seed = s as u64;
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => config::bsp_from_file(std::path::Path::new(path))?,
+        None => BspConfig::quick("mlp", 2, 50),
+    };
+    apply_bsp_flags(&mut cfg, args)?;
+    if cfg.eval_every == 0 {
+        cfg.eval_every = (cfg.iters / 10).max(1);
+    }
+    let sess = session()?;
+    println!(
+        "training {} x{} workers, {} iters, scheme={} strategy={} topo={}",
+        cfg.model,
+        cfg.workers,
+        cfg.iters,
+        cfg.scheme.name(),
+        cfg.strategy.name(),
+        cfg.topology
+    );
+    let rep = run_bsp(&sess.rt, &cfg)?;
+    println!(
+        "done: vtime={:.2}s throughput={:.1} ex/s final_loss={:.4} final_val_err={:.3}",
+        rep.vtime_total, rep.throughput, rep.final_train_loss, rep.final_val_err
+    );
+    println!(
+        "breakdown: compute={:.2}s comm={:.2}s (kernel {:.1}%) stall={:.2}s apply={:.2}s",
+        rep.breakdown.compute,
+        rep.breakdown.comm(),
+        rep.breakdown.kernel_share_of_comm() * 100.0,
+        rep.breakdown.load_stall,
+        rep.breakdown.apply
+    );
+    let rows: Vec<String> = rep
+        .curve
+        .iter()
+        .map(|p| format!("{},{:.4},{:.6},{:.4}", p.iter, p.vtime, p.train_loss, p.val_err))
+        .collect();
+    let path = sess.write_csv("train_curve.csv", "iter,vtime_s,train_loss,val_err", &rows)?;
+    println!("curve -> {path:?}");
+    Ok(())
+}
+
+fn cmd_easgd(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => config::easgd_from_file(std::path::Path::new(path))?,
+        None => EasgdConfig::quick("mlp", 4, 100),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(k) = args.usize_("workers")? {
+        cfg.workers = k;
+    }
+    if let Some(n) = args.usize_("iters")? {
+        cfg.iters = n;
+    }
+    if let Some(a) = args.f64_("alpha")? {
+        cfg.alpha = a;
+    }
+    if let Some(t) = args.usize_("tau")? {
+        cfg.tau = t;
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = match t {
+            "mpi" => Transport::CudaAwareMpi,
+            "shm" => Transport::PlatoonShm,
+            _ => bail!("bad --transport (mpi|shm)"),
+        };
+    }
+    if cfg.eval_every == 0 {
+        cfg.eval_every = (cfg.iters / 5).max(1);
+    }
+    let sess = session()?;
+    println!(
+        "easgd {} x{} workers, alpha={} tau={} transport={}",
+        cfg.model,
+        cfg.workers,
+        cfg.alpha,
+        cfg.tau,
+        cfg.transport.name()
+    );
+    let rep = run_easgd(&sess.rt, &cfg)?;
+    println!(
+        "done: vtime={:.2}s throughput={:.1} ex/s comm/exchange={:.4}s final_val_err={:.3}",
+        rep.vtime_total, rep.throughput, rep.comm_per_exchange, rep.final_val_err
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| {
+            anyhow!("repro needs a target: fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all")
+        })?;
+    let iters = args.usize_("iters")?;
+    let sess = session()?;
+    let run = |name: &str, sess: &Session| -> Result<String> {
+        match name {
+            "fig3" => sess.fig3(),
+            "table2" => sess.table2(),
+            "table3" => sess.table3(),
+            "fig4" => sess.fig4(iters.unwrap_or(120)),
+            "fig5" => sess.fig5(iters.unwrap_or(120)),
+            "table1" => sess.table1(iters.unwrap_or(120)),
+            "easgd" => sess.easgd_compare(iters.unwrap_or(60)),
+            "easgd-grid" => sess.easgd_grid(iters.unwrap_or(120)),
+            other => bail!("unknown repro target '{other}'"),
+        }
+    };
+    if what == "all" {
+        for name in ["table2", "fig3", "table3", "easgd", "easgd-grid", "fig4", "fig5", "table1"] {
+            println!("==> {name}");
+            println!("{}", run(name, &sess)?);
+        }
+    } else {
+        println!("{}", run(what, &sess)?);
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let sess = session()?;
+    println!("artifacts: {}", artifacts_dir());
+    println!("models:");
+    let mut names: Vec<_> = sess.rt.manifest.models.keys().collect();
+    names.sort();
+    for name in names {
+        let m = &sess.rt.manifest.models[name];
+        println!(
+            "  {name:<12} kind={} params={} batches={:?}",
+            m.kind,
+            m.param_count,
+            m.batches.keys().collect::<Vec<_>>()
+        );
+    }
+    println!("full-scale (Table 2):");
+    for name in ["alexnet", "googlenet", "vggnet"] {
+        let m = &sess.rt.manifest.full_scale[name];
+        println!("  {name:<12} depth={} params={}", m.depth, m.params);
+    }
+    println!("artifacts: {} compiled lazily from HLO text", sess.rt.manifest.artifacts.len());
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: tmpi <train|easgd|repro|topo|info> [flags]\n\
+         \n\
+         tmpi train --model mlp --workers 4 --iters 100 --strategy asa --scheme subgd\n\
+         tmpi train --config examples/configs/alexnet_bsp.toml\n\
+         tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\
+         tmpi repro <fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all> [--iters n]\n\
+         tmpi topo <copper|mosaic>\n\
+         tmpi info"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else { usage() };
+    let args = parse_args(&argv[1..])?;
+    match cmd {
+        "train" => cmd_train(&args),
+        "easgd" => cmd_easgd(&args),
+        "repro" => cmd_repro(&args),
+        "topo" => {
+            let name = args.positional.first().map(|s| s.as_str()).unwrap_or("copper");
+            let sess = session()?;
+            println!("{}", sess.topo(name)?);
+            Ok(())
+        }
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}

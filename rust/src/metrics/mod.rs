@@ -1,0 +1,149 @@
+//! Timing accounting and paper-style reporting.
+//!
+//! The paper's headline metric is **data throughput speedup**: the change in
+//! total (train + communication) time to process a fixed number of examples
+//! (footnote 4). `Breakdown` carries exactly that decomposition per worker,
+//! and `speedup` computes the ratio the tables report.
+
+use std::time::Instant;
+
+/// Per-worker virtual-time decomposition of a run (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    /// PJRT execution of train/grad steps (real, measured).
+    pub compute: f64,
+    /// Simulated wire time of parameter exchange.
+    pub comm_transfer: f64,
+    /// Simulated GPU kernel time inside exchange (sum / cast).
+    pub comm_kernel: f64,
+    /// Time blocked waiting for the parallel loader (overlap miss).
+    pub load_stall: f64,
+    /// SUBGD second half: sgd_apply execution (real, measured).
+    pub apply: f64,
+}
+
+impl Breakdown {
+    pub fn comm(&self) -> f64 {
+        self.comm_transfer + self.comm_kernel
+    }
+
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm() + self.load_stall + self.apply
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.compute += other.compute;
+        self.comm_transfer += other.comm_transfer;
+        self.comm_kernel += other.comm_kernel;
+        self.load_stall += other.load_stall;
+        self.apply += other.apply;
+    }
+
+    /// Fraction of exchange time spent in the GPU kernel (paper §3.2
+    /// measures 1.6 % for the ASA summation kernel).
+    pub fn kernel_share_of_comm(&self) -> f64 {
+        if self.comm() <= 0.0 {
+            0.0
+        } else {
+            self.comm_kernel / self.comm()
+        }
+    }
+}
+
+/// Data throughput speedup of a k-worker run vs the 1-GPU baseline,
+/// normalized to the same number of examples (paper footnote 4/5).
+pub fn speedup(t1_per_example: f64, tk_per_example: f64) -> f64 {
+    if tk_per_example <= 0.0 {
+        return 0.0;
+    }
+    t1_per_example / tk_per_example
+}
+
+/// Wall-clock stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Fixed-width table printer (the `tmpi repro …` stdout format).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_totals() {
+        let b = Breakdown {
+            compute: 1.0,
+            comm_transfer: 0.5,
+            comm_kernel: 0.01,
+            load_stall: 0.1,
+            apply: 0.05,
+        };
+        assert!((b.total() - 1.66).abs() < 1e-12);
+        assert!((b.kernel_share_of_comm() - 0.01 / 0.51).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        assert!((speedup(1.0, 0.125) - 8.0).abs() < 1e-12);
+        assert_eq!(speedup(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "speedup"]);
+        t.row(vec!["alexnet".into(), "6.7x".into()]);
+        t.row(vec!["vgg".into(), "4.9x".into()]);
+        let r = t.render();
+        assert!(r.contains("alexnet  6.7x"), "{r}");
+    }
+}

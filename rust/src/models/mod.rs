@@ -1,0 +1,102 @@
+//! Model registry glue: runnable proxies ↔ full-scale paper architectures.
+//!
+//! The communication benchmarks (Fig. 3 / Table 3) exchange buffers at the
+//! *true* parameter counts of Table 2 (from `manifest.full_scale`), while
+//! convergence runs execute the reduced proxies. `PAPER_TRAIN_5120` carries
+//! the paper's measured 1-GPU train times per 5,120 images (Table 3's
+//! "Train(1GPU)" column) so the simulated speedup column reproduces the
+//! paper's accounting; our own measured proxy step times are reported
+//! alongside (EXPERIMENTS.md).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Manifest, ModelInfo};
+
+/// Table 3 constants: (model, per-worker batch) -> 1-GPU training time for
+/// 5,120 images, seconds, as measured by the paper on the K20m/K80 testbed.
+pub const PAPER_TRAIN_5120: &[(&str, usize, f64)] = &[
+    ("alexnet", 128, 31.2),
+    ("alexnet", 32, 36.40),
+    ("googlenet", 32, 134.9),
+    ("vggnet", 32, 405.2),
+];
+
+pub fn paper_train_5120(model: &str, batch: usize) -> Option<f64> {
+    PAPER_TRAIN_5120
+        .iter()
+        .find(|(m, b, _)| *m == model && *b == batch)
+        .map(|(_, _, t)| *t)
+}
+
+/// Which cluster the paper benchmarked each full-scale model on (§4):
+/// AlexNet/GoogLeNet on 8 distributed mosaic nodes; VGG on one copper node
+/// with 8 GPUs (its memory needs shared-memory locality).
+pub fn paper_topology(model: &str) -> &'static str {
+    match model {
+        "vggnet" => "copper",
+        _ => "mosaic",
+    }
+}
+
+/// Bytes on the wire for one full parameter exchange of a full-scale model.
+pub fn full_scale_bytes(manifest: &Manifest, model: &str) -> Result<u64> {
+    manifest
+        .full_scale
+        .get(model)
+        .map(|m| 4 * m.params as u64)
+        .ok_or_else(|| anyhow!("unknown full-scale model '{model}'"))
+}
+
+/// Map a proxy model name to its full-scale counterpart for comm simulation.
+pub fn full_scale_of(proxy: &str) -> Option<&'static str> {
+    match proxy {
+        "alexnet" => Some("alexnet"),
+        "googlenet" => Some("googlenet"),
+        "vgg" => Some("vggnet"),
+        _ => None,
+    }
+}
+
+/// Artifact names for a model at a per-worker batch size.
+pub struct ModelArtifacts {
+    pub train: String,
+    pub grad: String,
+    pub eval: String,
+    pub sgd_apply: String,
+}
+
+pub fn artifacts_for(info: &ModelInfo, model: &str, batch: usize) -> Result<ModelArtifacts> {
+    let key = info.key_for_batch(batch)?;
+    Ok(ModelArtifacts {
+        train: format!("{key}_train"),
+        grad: format!("{key}_grad"),
+        // eval is only built at the default batch's key
+        eval: format!("{model}_eval"),
+        sgd_apply: info.sgd_apply.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants_present() {
+        assert_eq!(paper_train_5120("alexnet", 128), Some(31.2));
+        assert_eq!(paper_train_5120("vggnet", 32), Some(405.2));
+        assert_eq!(paper_train_5120("alexnet", 64), None);
+    }
+
+    #[test]
+    fn topology_assignment_matches_paper() {
+        assert_eq!(paper_topology("vggnet"), "copper");
+        assert_eq!(paper_topology("alexnet"), "mosaic");
+        assert_eq!(paper_topology("googlenet"), "mosaic");
+    }
+
+    #[test]
+    fn full_scale_mapping() {
+        assert_eq!(full_scale_of("vgg"), Some("vggnet"));
+        assert_eq!(full_scale_of("mlp"), None);
+    }
+}

@@ -1,0 +1,345 @@
+//! In-process message-passing layer — the MPI substitute (DESIGN.md §2).
+//!
+//! The paper drives one GPU per MPI process; here each "process" is an OS
+//! thread holding a [`Comm`] endpoint. The layer reproduces the MPI surface
+//! the framework uses — ranked point-to-point `send`/`recv` with tags,
+//! `sendrecv` (the EASGD exchange), and a clock-reconciling `barrier` (the
+//! BSP superstep boundary) — over std channels, with out-of-order tag
+//! buffering like a real MPI matching engine.
+//!
+//! Buffers really move (the payloads are the actual parameter vectors);
+//! only *time* is simulated: every message carries the sender's virtual
+//! clock, and receivers reconcile via `max(local, sent + wire_time)` where
+//! wire time comes from `simnet`.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+/// Message payloads: real data, not placeholders.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    U16(Vec<u16>),
+    I32(Vec<i32>),
+    Ctl(String),
+    Empty,
+}
+
+impl Payload {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Payload::F32(v) => 4 * v.len() as u64,
+            Payload::U16(v) => 2 * v.len() as u64,
+            Payload::I32(v) => 4 * v.len() as u64,
+            Payload::Ctl(s) => s.len() as u64,
+            Payload::Empty => 0,
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Payload::F32(v) => Ok(v),
+            other => Err(anyhow!("expected F32 payload, got {other:?}")),
+        }
+    }
+
+    pub fn into_u16(self) -> Result<Vec<u16>> {
+        match self {
+            Payload::U16(v) => Ok(v),
+            other => Err(anyhow!("expected U16 payload, got {other:?}")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub from: usize,
+    pub tag: u64,
+    pub payload: Payload,
+    /// Sender's virtual clock at send time (seconds).
+    pub sent_clock: f64,
+}
+
+/// Generation-counted barrier that also reconciles virtual clocks: every
+/// participant contributes its clock and all leave with the maximum — the
+/// BSP superstep semantics (stragglers gate the step).
+struct ClockBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    size: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    max_clock: f64,
+    /// max clock of the generation that just completed
+    released_clock: f64,
+}
+
+impl ClockBarrier {
+    fn new(size: usize) -> Self {
+        ClockBarrier {
+            state: Mutex::new(BarrierState {
+                arrived: 0,
+                generation: 0,
+                max_clock: 0.0,
+                released_clock: 0.0,
+            }),
+            cv: Condvar::new(),
+            size,
+        }
+    }
+
+    fn wait(&self, clock: f64) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        st.max_clock = st.max_clock.max(clock);
+        st.arrived += 1;
+        if st.arrived == self.size {
+            st.arrived = 0;
+            st.released_clock = st.max_clock;
+            st.max_clock = 0.0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return st.released_clock;
+        }
+        let gen = st.generation;
+        while st.generation == gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.released_clock
+    }
+}
+
+/// One rank's endpoint into the world.
+pub struct Comm {
+    pub rank: usize,
+    pub size: usize,
+    senders: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Out-of-order buffer: messages received while waiting for another
+    /// (from, tag) match — MPI's unexpected-message queue.
+    pending: HashMap<(usize, u64), VecDeque<Msg>>,
+    barrier: Arc<ClockBarrier>,
+}
+
+/// Create a fully-connected world of `size` ranks.
+pub fn world(size: usize) -> Vec<Comm> {
+    assert!(size > 0);
+    let mut txs = Vec::with_capacity(size);
+    let mut rxs = Vec::with_capacity(size);
+    for _ in 0..size {
+        let (tx, rx) = channel::<Msg>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let barrier = Arc::new(ClockBarrier::new(size));
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| Comm {
+            rank,
+            size,
+            senders: txs.clone(),
+            rx,
+            pending: HashMap::new(),
+            barrier: barrier.clone(),
+        })
+        .collect()
+}
+
+impl Comm {
+    /// Non-blocking ranked send (MPI_Isend-like; channels buffer).
+    pub fn send(&self, to: usize, tag: u64, payload: Payload, clock: f64) -> Result<()> {
+        self.senders[to]
+            .send(Msg { from: self.rank, tag, payload, sent_clock: clock })
+            .map_err(|_| anyhow!("rank {to} hung up"))
+    }
+
+    /// Blocking matched receive: returns the first message from `from` with
+    /// `tag`, buffering non-matching arrivals.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Msg> {
+        if let Some(q) = self.pending.get_mut(&(from, tag)) {
+            if let Some(m) = q.pop_front() {
+                return Ok(m);
+            }
+        }
+        loop {
+            let m = self.rx.recv().map_err(|_| anyhow!("world torn down"))?;
+            if m.from == from && m.tag == tag {
+                return Ok(m);
+            }
+            self.pending.entry((m.from, m.tag)).or_default().push_back(m);
+        }
+    }
+
+    /// Receive from any rank with `tag` (MPI_ANY_SOURCE) — the EASGD server
+    /// loop uses this to serve whichever worker arrives first.
+    pub fn recv_any(&mut self, tag: u64) -> Result<Msg> {
+        for ((_, t), q) in self.pending.iter_mut() {
+            if *t == tag {
+                if let Some(m) = q.pop_front() {
+                    return Ok(m);
+                }
+            }
+        }
+        loop {
+            let m = self.rx.recv().map_err(|_| anyhow!("world torn down"))?;
+            if m.tag == tag {
+                return Ok(m);
+            }
+            self.pending.entry((m.from, m.tag)).or_default().push_back(m);
+        }
+    }
+
+    /// Receive the next message whose tag is in `tag_set`, from any rank —
+    /// the EASGD server multiplexes pushes and stop-controls this way.
+    pub fn recv_any_of(&mut self, tag_set: &[u64]) -> Result<Msg> {
+        for ((_, t), q) in self.pending.iter_mut() {
+            if tag_set.contains(t) {
+                if let Some(m) = q.pop_front() {
+                    return Ok(m);
+                }
+            }
+        }
+        loop {
+            let m = self.rx.recv().map_err(|_| anyhow!("world torn down"))?;
+            if tag_set.contains(&m.tag) {
+                return Ok(m);
+            }
+            self.pending.entry((m.from, m.tag)).or_default().push_back(m);
+        }
+    }
+
+    /// MPI_Sendrecv: simultaneous exchange with one peer.
+    pub fn sendrecv(
+        &mut self,
+        peer: usize,
+        tag: u64,
+        payload: Payload,
+        clock: f64,
+    ) -> Result<Msg> {
+        self.send(peer, tag, payload, clock)?;
+        self.recv(peer, tag)
+    }
+
+    /// BSP barrier; returns the reconciled (max) virtual clock.
+    pub fn barrier(&self, clock: f64) -> f64 {
+        self.barrier.wait(clock)
+    }
+}
+
+/// Tag namespaces (keep p2p traffic of different subsystems disjoint).
+pub mod tags {
+    pub const EXCHANGE: u64 = 0x10;
+    pub const ALLGATHER: u64 = 0x11;
+    pub const REDUCE: u64 = 0x12;
+    pub const EASGD_PUSH: u64 = 0x20;
+    pub const EASGD_PULL: u64 = 0x21;
+    pub const CTL: u64 = 0x30;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let mut w = world(2);
+        let mut c1 = w.pop().unwrap();
+        let mut c0 = w.pop().unwrap();
+        let t = thread::spawn(move || {
+            let m = c1.recv(0, 7).unwrap();
+            assert_eq!(m.payload.bytes(), 12);
+            c1.send(0, 8, Payload::Ctl("done".into()), 1.0).unwrap();
+        });
+        c0.send(1, 7, Payload::F32(vec![1.0, 2.0, 3.0]), 0.5).unwrap();
+        let m = c0.recv(1, 8).unwrap();
+        assert_eq!(m.sent_clock, 1.0);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_tags_buffered() {
+        let mut w = world(2);
+        let mut c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        c0.send(1, 2, Payload::Ctl("second".into()), 0.0).unwrap();
+        c0.send(1, 1, Payload::Ctl("first".into()), 0.0).unwrap();
+        // ask for tag 1 first even though tag 2 arrived first
+        let m1 = c1.recv(0, 1).unwrap();
+        let m2 = c1.recv(0, 2).unwrap();
+        match (m1.payload, m2.payload) {
+            (Payload::Ctl(a), Payload::Ctl(b)) => {
+                assert_eq!(a, "first");
+                assert_eq!(b, "second");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn barrier_reconciles_clocks() {
+        let w = world(4);
+        let hs: Vec<_> = w
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                thread::spawn(move || {
+                    let released = c.barrier(i as f64);
+                    assert_eq!(released, 3.0);
+                    // second generation gets fresh max
+                    let released = c.barrier(10.0 + i as f64);
+                    assert_eq!(released, 13.0);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn fifo_per_sender_same_tag() {
+        let mut w = world(2);
+        let mut c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        for i in 0..10 {
+            c0.send(1, 5, Payload::I32(vec![i]), 0.0).unwrap();
+        }
+        for i in 0..10 {
+            match c1.recv(0, 5).unwrap().payload {
+                Payload::I32(v) => assert_eq!(v[0], i),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn recv_any_serves_all_ranks() {
+        let mut w = world(3);
+        let mut server = w.remove(0);
+        let hs: Vec<_> = w
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    c.send(0, tags::EASGD_PUSH, Payload::F32(vec![c.rank as f32]), 0.0).unwrap();
+                })
+            })
+            .collect();
+        let mut seen = vec![];
+        for _ in 0..2 {
+            let m = server.recv_any(tags::EASGD_PUSH).unwrap();
+            seen.push(m.from);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![1, 2]);
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Half-precision (IEEE f16 / bfloat16) software conversion.
+//!
+//! The ASA16 strategy (paper §3.2) transfers parameters as 16-bit halves and
+//! sums at full precision. On the wire the bits are `u16`; the Pallas
+//! pack/unpack kernels (L1) produce/consume the same format, and this module
+//! is the host-side mirror: it must match XLA's f32->f16 conversion
+//! **bit-exactly** (round-to-nearest-even, as both IEEE 754 and XLA use) so
+//! the rust baseline path and the kernel path are interchangeable —
+//! integration tests assert equality against the AOT kernels.
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: keep a quiet-NaN payload bit if NaN
+        return sign | 0x7C00 | u16::from(man != 0) << 9;
+    }
+
+    // unbiased exponent; f16 bias is 15, f32 bias is 127
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign; // underflow to signed zero
+        }
+        // implicit leading 1, shifted into subnormal position
+        let man = man | 0x0080_0000;
+        let shift = 14 - e; // 14..24
+        let half = 1u32 << (shift - 1);
+        let rounded = man + (half - 1) + ((man >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // normal: round mantissa from 23 to 10 bits, round-to-nearest-even
+    let rounded = man + 0x0FFF + ((man >> 13) & 1);
+    if rounded & 0x0080_0000 != 0 {
+        // mantissa overflow bumps the exponent
+        let e = e + 1;
+        if e >= 0x1F {
+            return sign | 0x7C00;
+        }
+        return sign | ((e as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | (rounded >> 13) as u16
+}
+
+/// IEEE binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = u32::from(h & 0x03FF);
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign // signed zero
+            } else {
+                // subnormal: value = man * 2^-24; normalize to 1.f * 2^(p-24)
+                // where p is the highest set bit of man (0..=9)
+                let p = 31 - man.leading_zeros();
+                let frac = (man << (10 - p)) & 0x03FF;
+                let e = p + 103; // (p - 24) + 127
+                sign | (e << 23) | (frac << 13)
+            }
+        }
+        0x1F => sign | 0x7F80_0000 | (man << 13), // inf / nan
+        _ => {
+            let e = u32::from(exp) + 127 - 15;
+            sign | (e << 23) | (man << 13)
+        }
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bfloat16 bits, round-to-nearest-even (XLA semantics).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet the NaN
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bfloat16 bits -> f32 (exact).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits(u32::from(h) << 16)
+}
+
+/// Wire format used by the ASA16 exchange (paper uses CUDA half = IEEE f16;
+/// bf16 is the TPU-native option — DESIGN.md §Hardware-Adaptation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    F16,
+    Bf16,
+}
+
+impl Wire {
+    pub fn name(self) -> &'static str {
+        match self {
+            Wire::F16 => "f16",
+            Wire::Bf16 => "bf16",
+        }
+    }
+
+    #[inline]
+    pub fn pack_one(self, x: f32) -> u16 {
+        match self {
+            Wire::F16 => f32_to_f16_bits(x),
+            Wire::Bf16 => f32_to_bf16_bits(x),
+        }
+    }
+
+    #[inline]
+    pub fn unpack_one(self, h: u16) -> f32 {
+        match self {
+            Wire::F16 => f16_bits_to_f32(h),
+            Wire::Bf16 => bf16_bits_to_f32(h),
+        }
+    }
+
+    pub fn pack(self, xs: &[f32], out: &mut Vec<u16>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.pack_one(x)));
+    }
+
+    pub fn unpack(self, hs: &[u16], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(hs.iter().map(|&h| self.unpack_one(h)));
+    }
+}
+
+/// Max relative error of a half-precision round trip (for reports/tests).
+pub fn roundtrip_rel_error(wire: Wire, xs: &[f32]) -> f64 {
+    xs.iter()
+        .map(|&x| {
+            let back = wire.unpack_one(wire.pack_one(x));
+            if x.abs() > 1e-20 {
+                ((back - x).abs() / x.abs()) as f64
+            } else {
+                (back - x).abs() as f64
+            }
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds to inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(5.9604645e-8), 0x0001); // smallest subnormal
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_for_representables() {
+        // all 2^16 f16 bit patterns (minus NaNs) round-trip exactly
+        for h in 0..=u16::MAX {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "bits {h:#06x} -> {f}");
+        }
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and 1.0+2^-10: ties-to-even -> 1.0
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3C00);
+        // 1.0 + 3*2^-11 is halfway between consecutive halves: rounds up to even
+        let y = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(y), 0x3C02);
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16_bits(-1.0), 0xBF80);
+        assert_eq!(bf16_bits_to_f32(0x3F80), 1.0);
+        // round-to-nearest-even on the 16th bit
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8000)), 0x3F80); // tie -> even
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F81_8000)), 0x3F82); // tie -> even (up)
+    }
+
+    #[test]
+    fn rel_error_bounds() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.37).collect();
+        assert!(roundtrip_rel_error(Wire::F16, &xs) < 1e-3);
+        assert!(roundtrip_rel_error(Wire::Bf16, &xs) < 1e-2);
+    }
+}

@@ -1,0 +1,182 @@
+//! Kernel-artifact helpers: the L1 Pallas kernels as callable operations.
+//!
+//! The ASA exchange's arithmetic — k-way segment summation and fp16
+//! pack/unpack — runs through these AOT-compiled Pallas kernels, so the L1
+//! kernels sit on the L3 exchange hot path exactly as the paper's CUDA
+//! summation kernel did (§3.2). Buffers are chunked/padded to the fixed
+//! artifact shape (`chunk` from the manifest, default 65536) and worker
+//! counts are rounded up to the nearest compiled k with zero rows.
+
+use anyhow::{anyhow, Result};
+
+use crate::precision::Wire;
+
+use super::tensor::HostTensor;
+use super::Runtime;
+
+pub struct Kernels<'a> {
+    rt: &'a Runtime,
+    chunk: usize,
+}
+
+/// Output of a kernel helper: result + time spent in PJRT execution.
+pub struct KernelOut<T> {
+    pub value: T,
+    pub exec_time: f64,
+}
+
+impl<'a> Kernels<'a> {
+    pub fn new(rt: &'a Runtime) -> Kernels<'a> {
+        Kernels { rt, chunk: rt.manifest.kernels.chunk }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Smallest compiled sum-stack k that fits `k` inputs.
+    fn sum_k_for(&self, k: usize) -> Result<usize> {
+        let mut ks: Vec<usize> = self.rt.manifest.kernels.sum_stack.keys().copied().collect();
+        ks.sort_unstable();
+        ks.into_iter()
+            .find(|&kk| kk >= k)
+            .ok_or_else(|| anyhow!("no sum_stack artifact holds k={k}"))
+    }
+
+    /// Sum `parts` (equal-length f32 slices) elementwise via the Pallas
+    /// sum-stack kernel. Returns the sum and accumulated kernel time.
+    pub fn sum_parts(&self, parts: &[&[f32]]) -> Result<KernelOut<Vec<f32>>> {
+        let k = parts.len();
+        assert!(k >= 1);
+        let n = parts[0].len();
+        for p in parts {
+            assert_eq!(p.len(), n, "sum_parts: ragged inputs");
+        }
+        if k == 1 {
+            return Ok(KernelOut { value: parts[0].to_vec(), exec_time: 0.0 });
+        }
+        let kk = self.sum_k_for(k)?;
+        let art = self.rt.manifest.kernels.sum_stack[&kk].clone();
+
+        let mut out = vec![0.0f32; n];
+        let mut exec_time = 0.0;
+        let mut off = 0;
+        while off < n {
+            let len = (n - off).min(self.chunk);
+            // (kk, chunk) stack: real rows then zero padding rows
+            let mut stack = vec![0.0f32; kk * self.chunk];
+            for (row, p) in parts.iter().enumerate() {
+                stack[row * self.chunk..row * self.chunk + len]
+                    .copy_from_slice(&p[off..off + len]);
+            }
+            let t = HostTensor::f32(vec![kk, self.chunk], stack);
+            let r = self.rt.exec(&art, vec![t])?;
+            exec_time += r.exec_time;
+            out[off..off + len].copy_from_slice(&r.outputs[0].as_f32()?[..len]);
+            off += len;
+        }
+        Ok(KernelOut { value: out, exec_time })
+    }
+
+    /// f32 -> 16-bit wire bits via the Pallas pack kernel.
+    pub fn pack(&self, wire: Wire, xs: &[f32]) -> Result<KernelOut<Vec<u16>>> {
+        let art = self
+            .rt
+            .manifest
+            .kernels
+            .fp16_pack
+            .get(wire.name())
+            .ok_or_else(|| anyhow!("no pack artifact for {}", wire.name()))?
+            .clone();
+        let n = xs.len();
+        let mut out = vec![0u16; n];
+        let mut exec_time = 0.0;
+        let mut off = 0;
+        while off < n {
+            let len = (n - off).min(self.chunk);
+            let mut buf = vec![0.0f32; self.chunk];
+            buf[..len].copy_from_slice(&xs[off..off + len]);
+            let r = self.rt.exec(&art, vec![HostTensor::f32(vec![self.chunk], buf)])?;
+            exec_time += r.exec_time;
+            out[off..off + len].copy_from_slice(&r.outputs[0].as_u16()?[..len]);
+            off += len;
+        }
+        Ok(KernelOut { value: out, exec_time })
+    }
+
+    /// 16-bit wire bits -> f32 via the Pallas unpack kernel.
+    pub fn unpack(&self, wire: Wire, bits: &[u16]) -> Result<KernelOut<Vec<f32>>> {
+        let art = self
+            .rt
+            .manifest
+            .kernels
+            .fp16_unpack
+            .get(wire.name())
+            .ok_or_else(|| anyhow!("no unpack artifact for {}", wire.name()))?
+            .clone();
+        let n = bits.len();
+        let mut out = vec![0.0f32; n];
+        let mut exec_time = 0.0;
+        let mut off = 0;
+        while off < n {
+            let len = (n - off).min(self.chunk);
+            let mut buf = vec![0u16; self.chunk];
+            buf[..len].copy_from_slice(&bits[off..off + len]);
+            let r = self.rt.exec(&art, vec![HostTensor::u16(vec![self.chunk], buf)])?;
+            exec_time += r.exec_time;
+            out[off..off + len].copy_from_slice(&r.outputs[0].as_f32()?[..len]);
+            off += len;
+        }
+        Ok(KernelOut { value: out, exec_time })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision;
+    use std::path::PathBuf;
+
+    fn rt() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn sum_parts_matches_scalar_sum_across_sizes() {
+        let Some(rt) = rt() else { return };
+        let k = rt.kernels();
+        for n in [1usize, 100, 65536, 65537, 200_000] {
+            let a: Vec<f32> = (0..n).map(|i| (i % 97) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i % 31) as f32 * 0.5).collect();
+            let c: Vec<f32> = (0..n).map(|i| -((i % 13) as f32)).collect();
+            let out = k.sum_parts(&[&a, &b, &c]).unwrap(); // k=3 -> padded to 4
+            for i in (0..n).step_by((n / 7).max(1)) {
+                let want = a[i] + b[i] + c[i];
+                assert!((out.value[i] - want).abs() < 1e-4, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_kernel_matches_host_precision_bitexact() {
+        let Some(rt) = rt() else { return };
+        let k = rt.kernels();
+        let xs: Vec<f32> = (0..70_000).map(|i| ((i as f32) - 35_000.0) * 0.123).collect();
+        for wire in [Wire::F16, Wire::Bf16] {
+            let bits = k.pack(wire, &xs).unwrap().value;
+            let mut host_bits = Vec::new();
+            wire.pack(&xs, &mut host_bits);
+            assert_eq!(bits, host_bits, "{}", wire.name());
+            let back = k.unpack(wire, &bits).unwrap().value;
+            let mut host_back = Vec::new();
+            wire.unpack(&bits, &mut host_back);
+            assert_eq!(back, host_back, "{}", wire.name());
+        }
+        let _ = precision::roundtrip_rel_error(Wire::F16, &xs);
+    }
+}

@@ -1,0 +1,247 @@
+//! manifest.json — the contract between aot.py (L2) and this runtime (L3).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::Dtype;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// A runnable proxy model binding (train/grad/eval/sgd_apply artifacts).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub kind: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// per-worker batch size -> artifact key prefix (e.g. 128 -> "alexnet128")
+    pub batches: HashMap<usize, String>,
+    pub classes: Option<usize>,
+    pub input_shape: Vec<usize>,
+    pub init_file: String,
+    /// (name, offset, size) per parameter tensor — the ASA split points.
+    pub segments: Vec<(String, usize, usize)>,
+    pub sgd_apply: String,
+}
+
+impl ModelInfo {
+    /// Artifact name prefix for a per-worker batch size.
+    pub fn key_for_batch(&self, bs: usize) -> Result<&str> {
+        self.batches
+            .get(&bs)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("no artifact for batch {bs} (have {:?})", self.batches.keys()))
+    }
+}
+
+/// Full-scale architecture metadata (the paper's Table 2 — drives comm sim).
+#[derive(Clone, Debug)]
+pub struct FullScaleModel {
+    pub depth: usize,
+    pub params: usize,
+    pub paper_params: usize,
+    pub batches: Vec<usize>,
+    /// (layer name, param count) in exchange order.
+    pub segments: Vec<(String, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelIndex {
+    pub chunk: usize,
+    /// worker count -> sum artifact name
+    pub sum_stack: HashMap<usize, String>,
+    /// wire name ("f16"/"bf16") -> artifact names
+    pub fp16_pack: HashMap<String, String>,
+    pub fp16_unpack: HashMap<String, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSig>,
+    pub models: HashMap<String, ModelInfo>,
+    pub full_scale: HashMap<String, FullScaleModel>,
+    pub kernels: KernelIndex,
+}
+
+fn sig_list(v: &Json) -> Result<Vec<TensorSig>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                shape: t.get("shape")?.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?,
+                dtype: Dtype::parse(t.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in root.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: sig_list(a.get("inputs")?)?,
+                    outputs: sig_list(a.get("outputs")?)?,
+                },
+            );
+        }
+
+        let mut models = HashMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            let mut batches = HashMap::new();
+            for (bs, key) in m.get("batches")?.as_obj()? {
+                batches.insert(bs.parse::<usize>()?, key.as_str()?.to_string());
+            }
+            let segments = m
+                .get("segments")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    let s = s.as_arr()?;
+                    Ok((s[0].as_str()?.to_string(), s[1].as_usize()?, s[2].as_usize()?))
+                })
+                .collect::<Result<_>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    kind: m.get("kind")?.as_str()?.to_string(),
+                    param_count: m.get("param_count")?.as_usize()?,
+                    batch: m.get("batch")?.as_usize()?,
+                    eval_batch: m.get("eval_batch")?.as_usize()?,
+                    batches,
+                    classes: m.opt("classes").and_then(|c| c.as_usize().ok()),
+                    input_shape: m
+                        .get("input_shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    init_file: m.get("init_file")?.as_str()?.to_string(),
+                    segments,
+                    sgd_apply: m.get("sgd_apply")?.as_str()?.to_string(),
+                },
+            );
+        }
+
+        let mut full_scale = HashMap::new();
+        for (name, f) in root.get("full_scale")?.as_obj()? {
+            let segments = f
+                .get("segments")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    let s = s.as_arr()?;
+                    Ok((s[0].as_str()?.to_string(), s[1].as_usize()?))
+                })
+                .collect::<Result<_>>()?;
+            full_scale.insert(
+                name.clone(),
+                FullScaleModel {
+                    depth: f.get("depth")?.as_usize()?,
+                    params: f.get("params")?.as_usize()?,
+                    paper_params: f.get("paper_params")?.as_usize()?,
+                    batches: f
+                        .get("batches")?
+                        .as_arr()?
+                        .iter()
+                        .map(|b| b.as_usize())
+                        .collect::<Result<_>>()?,
+                    segments,
+                },
+            );
+        }
+
+        let k = root.get("kernels")?;
+        let mut sum_stack = HashMap::new();
+        for (ks, name) in k.get("sum_stack")?.as_obj()? {
+            sum_stack.insert(ks.parse::<usize>()?, name.as_str()?.to_string());
+        }
+        let str_map = |v: &Json| -> Result<HashMap<String, String>> {
+            Ok(v.as_obj()?
+                .iter()
+                .map(|(a, b)| Ok((a.clone(), b.as_str()?.to_string())))
+                .collect::<Result<_>>()?)
+        };
+        let kernels = KernelIndex {
+            chunk: k.get("chunk")?.as_usize()?,
+            sum_stack,
+            fp16_pack: str_map(k.get("fp16_pack")?)?,
+            fp16_unpack: str_map(k.get("fp16_unpack")?)?,
+        };
+
+        Ok(Manifest { artifacts, models, full_scale, kernels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "artifacts": {
+        "m_train": {"file": "m_train.hlo.txt",
+          "inputs": [{"shape": [10], "dtype": "f32"}],
+          "outputs": [{"shape": [], "dtype": "f32"}]}
+      },
+      "models": {
+        "m": {"kind": "cls", "param_count": 10, "batch": 4, "eval_batch": 8,
+              "batches": {"4": "m"}, "classes": 2, "input_shape": [4, 3],
+              "init_file": "m_init.bin",
+              "segments": [["w", 0, 6], ["b", 6, 4]],
+              "sgd_apply": "sgd_apply_m"}
+      },
+      "full_scale": {
+        "alexnet": {"depth": 8, "params": 60965224, "paper_params": 60965224,
+                    "batches": [128, 32], "segments": [["conv1", 34944]]}
+      },
+      "kernels": {"chunk": 65536,
+        "sum_stack": {"2": "sum_stack_k2"},
+        "fp16_pack": {"f16": "fp16_pack_f16"},
+        "fp16_unpack": {"f16": "fp16_unpack_f16"}}
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.artifacts["m_train"].inputs[0].shape, vec![10]);
+        assert_eq!(m.models["m"].segments[1], ("b".to_string(), 6, 4));
+        assert_eq!(m.models["m"].key_for_batch(4).unwrap(), "m");
+        assert!(m.models["m"].key_for_batch(99).is_err());
+        assert_eq!(m.full_scale["alexnet"].params, 60_965_224);
+        assert_eq!(m.kernels.sum_stack[&2], "sum_stack_k2");
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(p) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.len() >= 20);
+            assert_eq!(m.full_scale["vggnet"].params, 138_357_544);
+            // segments sum to param_count for every model
+            for (name, info) in &m.models {
+                let sum: usize = info.segments.iter().map(|s| s.2).sum();
+                assert_eq!(sum, info.param_count, "{name}");
+            }
+        }
+    }
+}

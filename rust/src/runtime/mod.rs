@@ -1,0 +1,212 @@
+//! PJRT runtime — loads AOT artifacts and executes them on the hot path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `client.compile` → `execute`. The PJRT wrapper types
+//! hold raw pointers (not `Send`), so a dedicated **device-service thread**
+//! owns the client and all compiled executables; worker threads submit
+//! requests over a channel and block on a reply. That mirrors a GPU command
+//! queue and serializes device work exactly like the single-accelerator
+//! testbed the virtual-time model assumes.
+//!
+//! Execution wall time is measured inside the service around the PJRT call
+//! and returned with the outputs; it is the *compute* component of a
+//! worker's virtual clock (DESIGN.md §2).
+
+mod kernels;
+mod manifest;
+mod service;
+mod tensor;
+
+pub use kernels::Kernels;
+pub use manifest::{ArtifactSig, FullScaleModel, Manifest, ModelInfo, TensorSig};
+pub use service::{DeviceService, ExecOut};
+pub use tensor::{Data, Dtype, HostTensor};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// The shared runtime: manifest + device service + lazy executable cache.
+pub struct Runtime {
+    svc: DeviceService,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    exes: Mutex<HashMap<String, usize>>,
+}
+
+/// Result of one artifact execution.
+pub struct ExecResult {
+    pub outputs: Vec<HostTensor>,
+    /// Seconds spent in the PJRT execute call (device compute time).
+    pub exec_time: f64,
+    /// Seconds spent converting HostTensor <-> Literal (host marshalling).
+    pub marshal_time: f64,
+}
+
+impl Runtime {
+    /// Load the manifest and start the device service. Artifacts are
+    /// compiled lazily on first execution and cached for the process life.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::parse(&text)?;
+        let svc = DeviceService::start()?;
+        Ok(Runtime { svc, manifest, dir, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts dir: $TMPI_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("TMPI_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::load(dir)
+    }
+
+    fn exe_id(&self, name: &str) -> Result<usize> {
+        if let Some(&id) = self.exes.lock().unwrap().get(name) {
+            return Ok(id);
+        }
+        let art = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&art.file);
+        let id = self.svc.load(path.to_str().unwrap())?;
+        self.exes.lock().unwrap().insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// Pre-compile an artifact (hide XLA compile latency before timing).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.exe_id(name).map(|_| ())
+    }
+
+    /// Execute artifact `name` with shape/dtype validation from the manifest.
+    pub fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<ExecResult> {
+        let sig = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != sig.inputs.len() {
+            return Err(anyhow!(
+                "'{name}' wants {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                return Err(anyhow!(
+                    "'{name}' input {i}: expected {:?}{:?}, got {:?}{:?}",
+                    s.dtype,
+                    s.shape,
+                    t.dtype(),
+                    t.shape
+                ));
+            }
+        }
+        let id = self.exe_id(name)?;
+        if std::env::var("TMPI_TRACE_EXEC").is_ok() {
+            eprintln!("[exec] {name}");
+        }
+        let out = self.svc.exec(id, inputs)?;
+        Ok(ExecResult {
+            outputs: out.outputs,
+            exec_time: out.exec_time,
+            marshal_time: out.marshal_time,
+        })
+    }
+
+    /// Initial flat parameter vector for a model (raw f32 LE from aot.py).
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let info = self
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+        let path = self.dir.join(&info.init_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != 4 * info.param_count {
+            return Err(anyhow!(
+                "{path:?}: expected {} f32s, file has {} bytes",
+                info.param_count,
+                bytes.len()
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Kernel helpers (sum/pack/unpack artifacts) bound to this runtime.
+    pub fn kernels(&self) -> Kernels<'_> {
+        Kernels::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn rt() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_loads_and_models_present() {
+        let Some(rt) = rt() else { return };
+        for m in ["mlp", "alexnet", "googlenet", "vgg", "transformer"] {
+            assert!(rt.manifest.models.contains_key(m), "{m}");
+        }
+    }
+
+    #[test]
+    fn exec_validates_shapes() {
+        let Some(rt) = rt() else { return };
+        // wrong arity
+        assert!(rt.exec("sum_stack_k2", vec![]).is_err());
+        // wrong shape
+        let bad = HostTensor::f32(vec![2, 2], vec![0.0; 4]);
+        assert!(rt.exec("sum_stack_k2", vec![bad]).is_err());
+    }
+
+    #[test]
+    fn init_params_match_manifest_count() {
+        let Some(rt) = rt() else { return };
+        let p = rt.init_params("mlp").unwrap();
+        assert_eq!(p.len(), rt.manifest.models["mlp"].param_count);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sum_stack_kernel_runs_and_sums() {
+        let Some(rt) = rt() else { return };
+        let n = rt.manifest.kernels.chunk;
+        let mut stack = vec![0.0f32; 2 * n];
+        for (i, v) in stack.iter_mut().enumerate() {
+            *v = (i % 1000) as f32 * 0.25;
+        }
+        let t = HostTensor::f32(vec![2, n], stack.clone());
+        let out = rt.exec("sum_stack_k2", vec![t]).unwrap();
+        let got = out.outputs[0].as_f32().unwrap();
+        for i in (0..n).step_by(4097) {
+            let want = stack[i] + stack[n + i];
+            assert!((got[i] - want).abs() < 1e-5, "i={i}");
+        }
+        assert!(out.exec_time > 0.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! The device-service thread: sole owner of all PJRT state.
+//!
+//! `xla` crate wrappers hold raw pointers and are not `Send`; everything
+//! PJRT lives on this thread. Requests arrive over an mpsc channel (the
+//! "command queue") and replies go back on per-request channels. Execution
+//! wall time is measured here, around the PJRT calls only, and reported to
+//! the caller for virtual-clock accounting.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::tensor::{Data, HostTensor};
+
+enum Cmd {
+    Load { path: String, resp: Sender<Result<usize>> },
+    Exec { exe: usize, inputs: Vec<HostTensor>, resp: Sender<Result<ExecOut>> },
+    Shutdown,
+}
+
+pub struct ExecOut {
+    pub outputs: Vec<HostTensor>,
+    pub exec_time: f64,
+    pub marshal_time: f64,
+}
+
+pub struct DeviceService {
+    /// Mutex makes the service `Sync` so workers can share one `Runtime`
+    /// behind an `Arc` (the lock is held only for the enqueue).
+    tx: Mutex<Sender<Cmd>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl DeviceService {
+    pub fn start() -> Result<DeviceService> {
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("PjRtClient::cpu: {e:?}")));
+                        return;
+                    }
+                };
+                let mut exes: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Load { path, resp } => {
+                            let r = load_one(&client, &path).map(|exe| {
+                                exes.push(exe);
+                                exes.len() - 1
+                            });
+                            let _ = resp.send(r);
+                        }
+                        Cmd::Exec { exe, inputs, resp } => {
+                            let r = match exes.get(exe) {
+                                Some(e) => exec_one(&client, e, inputs),
+                                None => Err(anyhow!("bad exe id {exe}")),
+                            };
+                            let _ = resp.send(r);
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow!("device thread died at startup"))??;
+        Ok(DeviceService { tx: Mutex::new(tx), handle: Some(handle) })
+    }
+
+    pub fn load(&self, path: &str) -> Result<usize> {
+        let (resp, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Load { path: path.to_string(), resp })
+            .map_err(|_| anyhow!("device service down"))?;
+        rx.recv().map_err(|_| anyhow!("device service down"))?
+    }
+
+    pub fn exec(&self, exe: usize, inputs: Vec<HostTensor>) -> Result<ExecOut> {
+        let (resp, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Exec { exe, inputs, resp })
+            .map_err(|_| anyhow!("device service down"))?;
+        rx.recv().map_err(|_| anyhow!("device service down"))?
+    }
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn load_one(client: &xla::PjRtClient, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse HLO {path}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile {path}: {e:?}"))
+}
+
+/// Host tensor -> device buffer, directly via `buffer_from_host_buffer`.
+///
+/// §Perf + leak note: the crate's `execute::<Literal>` path converts every
+/// input literal to a device buffer inside the C++ shim and never frees
+/// those intermediates (~tens of MB per train step at our sizes — confirmed
+/// by RSS growth). Building `PjRtBuffer`s here keeps ownership in rust
+/// (freed on Drop) and also saves one host-side copy per input.
+/// Returns the device buffer plus an optional host-side keepalive: PJRT CPU
+/// copies host memory **asynchronously**, so the source (the u16 literal
+/// here; the HostTensor vecs for f32/i32) must outlive the execution —
+/// dropping the literal right after `buffer_from_host_literal` is a
+/// use-after-free race (crashed ~1 in 10 fp16 exchanges before keepalives).
+fn to_buffer(
+    client: &xla::PjRtClient,
+    t: &HostTensor,
+) -> Result<(xla::PjRtBuffer, Option<xla::Literal>)> {
+    let out = match &t.data {
+        Data::F32(v) => (
+            client
+                .buffer_from_host_buffer(v, &t.shape, None)
+                .map_err(|e| anyhow!("f32 buffer: {e:?}"))?,
+            None,
+        ),
+        Data::I32(v) => (
+            client
+                .buffer_from_host_buffer(v, &t.shape, None)
+                .map_err(|e| anyhow!("i32 buffer: {e:?}"))?,
+            None,
+        ),
+        Data::U16(v) => {
+            // u16 has no NativeType in the crate, and buffer_from_host_raw_
+            // bytes passes `ElementType as i32` where the C shim expects
+            // PrimitiveType numbering (U16 would arrive as U8 and build a
+            // half-sized buffer). Go through a rust-owned Literal instead.
+            let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U16,
+                &t.shape,
+                &bytes,
+            )
+            .map_err(|e| anyhow!("u16 literal: {e:?}"))?;
+            let buf = client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("u16 buffer: {e:?}"))?;
+            (buf, Some(lit))
+        }
+    };
+    Ok(out)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(|e| anyhow!("ty: {e:?}"))?;
+    let data = match ty {
+        xla::ElementType::F32 => Data::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),
+        xla::ElementType::S32 => Data::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?),
+        xla::ElementType::U16 => Data::U16(lit.to_vec::<u16>().map_err(|e| anyhow!("{e:?}"))?),
+        other => return Err(anyhow!("unsupported output dtype {other:?}")),
+    };
+    Ok(HostTensor { shape: dims, data })
+}
+
+fn exec_one(
+    client: &xla::PjRtClient,
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: Vec<HostTensor>,
+) -> Result<ExecOut> {
+    let m0 = Instant::now();
+    let pairs: Vec<(xla::PjRtBuffer, Option<xla::Literal>)> =
+        inputs.iter().map(|t| to_buffer(client, t)).collect::<Result<_>>()?;
+    let (in_bufs, _keepalive): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
+    let marshal_in = m0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let bufs = exe.execute_b::<xla::PjRtBuffer>(&in_bufs).map_err(|e| anyhow!("execute: {e:?}"))?;
+    // to_literal_sync blocks on the output; `inputs` and `_keepalive` both
+    // live past this point, covering PJRT's async host->device copies
+    let result = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    let exec_time = t0.elapsed().as_secs_f64();
+
+    let m1 = Instant::now();
+    // aot.py lowers with return_tuple=True: always a tuple, possibly 1-ary
+    let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+    let outputs: Vec<HostTensor> = parts.iter().map(from_literal).collect::<Result<_>>()?;
+    let marshal_time = marshal_in + m1.elapsed().as_secs_f64();
+
+    Ok(ExecOut { outputs, exec_time, marshal_time })
+}

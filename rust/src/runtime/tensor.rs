@@ -1,0 +1,149 @@
+//! Host-side tensors: the rust/PJRT interchange type.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U16,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u16" => Ok(Dtype::U16),
+            _ => Err(anyhow!("unknown dtype '{s}'")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U16(Vec<u16>),
+}
+
+/// A dense host tensor (row-major) moving to/from PJRT literals.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn u16(shape: Vec<usize>, data: Vec<u16>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: Data::U16(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Data::F32(_) => Dtype::F32,
+            Data::I32(_) => Dtype::I32,
+            Data::U16(_) => Dtype::U16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shape.iter().product::<usize>() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn as_u16(&self) -> Result<&[u16]> {
+        match &self.data {
+            Data::U16(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not u16")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn into_u16(self) -> Result<Vec<u16>> {
+        match self.data {
+            Data::U16(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not u16")),
+        }
+    }
+
+    /// Scalar f32 value (loss outputs).
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(anyhow!("not a scalar: {:?}", self.shape));
+        }
+        Ok(v[0])
+    }
+
+    /// Scalar i32 value (correct-count outputs).
+    pub fn scalar_i32(&self) -> Result<i32> {
+        let v = self.as_i32()?;
+        if v.len() != 1 {
+            return Err(anyhow!("not a scalar: {:?}", self.shape));
+        }
+        Ok(v[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.len(), 6);
+        assert!(t.as_i32().is_err());
+
+        let s = HostTensor::scalar_f32(7.0);
+        assert_eq!(s.scalar().unwrap(), 7.0);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("u16").unwrap(), Dtype::U16);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

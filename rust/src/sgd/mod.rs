@@ -1,0 +1,126 @@
+//! Parallel-SGD semantics: schemes and learning-rate schedules (paper §4).
+//!
+//! **AWAGD** — average weights after gradient descent: each worker applies a
+//! full local momentum-SGD step, then workers average parameters; the
+//! learning rate is scaled with worker count k ([15], [7]).
+//!
+//! **SUBGD** — sum updates before gradient descent: workers exchange (sum)
+//! raw gradients and apply one update; the LR is *not* scaled. The paper
+//! proves ([19]) the two are equivalent when workers stay synchronized, and
+//! trains Figs. 4–5 with SUBGD.
+
+/// Which parallel-SGD scheme the BSP engine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Local full step (train artifact) + weight averaging.
+    Awagd,
+    /// Grad-only step (grad artifact) + gradient sum + sgd_apply artifact.
+    Subgd,
+}
+
+impl Scheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Awagd => "awagd",
+            Scheme::Subgd => "subgd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "awagd" => Some(Scheme::Awagd),
+            "subgd" => Some(Scheme::Subgd),
+            _ => None,
+        }
+    }
+}
+
+/// Learning-rate schedules used in the paper's benchmarks.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Const {
+        base: f64,
+    },
+    /// AlexNet policy: scale down by `factor` every `every` iterations
+    /// (the paper: /10 every 20 epochs).
+    StepDecay {
+        base: f64,
+        factor: f64,
+        every: usize,
+    },
+    /// GoogLeNet policy (footnote 13): base * (1 - iter/max_iters)^power
+    /// with power = 0.5.
+    Poly {
+        base: f64,
+        power: f64,
+        max_iters: usize,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, iter: usize) -> f64 {
+        match *self {
+            LrSchedule::Const { base } => base,
+            LrSchedule::StepDecay { base, factor, every } => {
+                base * factor.powi((iter / every.max(1)) as i32)
+            }
+            LrSchedule::Poly { base, power, max_iters } => {
+                let frac = 1.0 - (iter as f64 / max_iters.max(1) as f64).min(1.0);
+                base * frac.powf(power)
+            }
+        }
+    }
+}
+
+/// Host-side momentum SGD (reference/EASGD local steps without artifacts):
+/// v' = mu*v - lr*g ; w' = w + v'.
+pub fn momentum_step(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    debug_assert_eq!(w.len(), v.len());
+    debug_assert_eq!(w.len(), g.len());
+    for i in 0..w.len() {
+        v[i] = mu * v[i] - lr * g[i];
+        w[i] += v[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_matches_paper_policy() {
+        // /10 every "20 epochs" (expressed in iterations)
+        let s = LrSchedule::StepDecay { base: 0.01, factor: 0.1, every: 100 };
+        assert!((s.at(0) - 0.01).abs() < 1e-12);
+        assert!((s.at(99) - 0.01).abs() < 1e-12);
+        assert!((s.at(100) - 0.001).abs() < 1e-12);
+        assert!((s.at(250) - 0.0001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poly_decays_to_zero_with_sqrt_shape() {
+        let s = LrSchedule::Poly { base: 0.01, power: 0.5, max_iters: 100 };
+        assert!((s.at(0) - 0.01).abs() < 1e-12);
+        let mid = s.at(75);
+        assert!((mid - 0.005).abs() < 1e-9, "{mid}"); // sqrt(0.25) = 0.5
+        assert_eq!(s.at(100), 0.0);
+        assert_eq!(s.at(1000), 0.0); // clamped past max
+    }
+
+    #[test]
+    fn momentum_step_reference() {
+        let mut w = vec![1.0f32, 2.0];
+        let mut v = vec![0.5f32, -0.5];
+        momentum_step(&mut w, &mut v, &[1.0, 1.0], 0.1, 0.9);
+        // v' = 0.9*0.5 - 0.1 = 0.35 ; w' = 1.35
+        assert!((v[0] - 0.35).abs() < 1e-6);
+        assert!((w[0] - 1.35).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("awagd"), Some(Scheme::Awagd));
+        assert_eq!(Scheme::parse("subgd"), Some(Scheme::Subgd));
+        assert_eq!(Scheme::parse("x"), None);
+    }
+}

@@ -1,0 +1,261 @@
+//! Interconnect timing model — the simulated clock behind every exchange.
+//!
+//! The paper's communication results (Fig. 3, Table 3) are bandwidth
+//! phenomena: who crosses PCIe/QPI/IB how many times, with or without host
+//! staging. This module prices a *phase* — a set of point-to-point transfers
+//! that proceed concurrently — with a contention-aware model:
+//!
+//!   phase time = max over shared link resources (total bytes / bandwidth)
+//!              + max over transfers (sum of per-hop latencies)
+//!
+//! Pipelined hops (MPI chunking) justify the `max` across a single
+//! transfer's hops; serialization on a shared resource (one PCIe lane per
+//! GPU, one NIC per node, one QPI per node) justifies the byte accumulation.
+//!
+//! CUDA-awareness (paper §3.2): with `cuda_aware`, a P2P transfer under one
+//! PCIe switch moves device-to-device (GPUDirect); without it, the buffer
+//! staged through host RAM, adding host-memory crossings. QPI-crossing and
+//! inter-node paths always stage through the host on the paper's testbed
+//! (no GPUDirect RDMA; P2P limited to one switch — §6).
+
+use std::collections::HashMap;
+
+use crate::cluster::{IbGen, PathKind, Topology};
+
+/// Bandwidths in GB/s, latencies in microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkParams {
+    pub pcie_gbps: f64,
+    pub pcie_lat_us: f64,
+    pub qpi_gbps: f64,
+    pub qpi_lat_us: f64,
+    pub ib_fdr_gbps: f64,
+    pub ib_qdr_gbps: f64,
+    pub ib_lat_us: f64,
+    /// Host memcpy bandwidth for staged paths.
+    pub host_mem_gbps: f64,
+    /// CPU-side elementwise reduction (the AR baseline sums on the host).
+    pub host_reduce_gbps: f64,
+    /// GPU summation kernel effective bandwidth (the ASA sum — §3.2 measured
+    /// it at 1.6 % of communication time).
+    pub gpu_reduce_gbps: f64,
+    /// GPU cast kernel effective bandwidth (fp16 pack/unpack).
+    pub gpu_cast_gbps: f64,
+}
+
+impl Default for LinkParams {
+    fn default() -> Self {
+        // K80-era constants: PCIe gen3 x16 effective ~12 GB/s, QPI ~16 GB/s,
+        // IB FDR ~6.8 GB/s, IB QDR ~4 GB/s; host reduction is memory-bound.
+        LinkParams {
+            pcie_gbps: 12.0,
+            pcie_lat_us: 10.0,
+            qpi_gbps: 16.0,
+            qpi_lat_us: 1.0,
+            ib_fdr_gbps: 6.8,
+            ib_qdr_gbps: 4.0,
+            ib_lat_us: 1.5,
+            host_mem_gbps: 10.0,
+            host_reduce_gbps: 5.0,
+            gpu_reduce_gbps: 150.0,
+            gpu_cast_gbps: 200.0,
+        }
+    }
+}
+
+impl LinkParams {
+    pub fn ib_gbps(&self, gen: IbGen) -> f64 {
+        match gen {
+            IbGen::Fdr => self.ib_fdr_gbps,
+            IbGen::Qdr => self.ib_qdr_gbps,
+        }
+    }
+
+    /// Time to reduce `bytes` of f32 on the host CPU (AR baseline).
+    pub fn host_reduce_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.host_reduce_gbps * 1e9)
+    }
+
+    /// Time for the GPU summation kernel over `bytes` (ASA sum).
+    pub fn gpu_reduce_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.gpu_reduce_gbps * 1e9)
+    }
+
+    /// Time for the GPU fp16 cast kernel over `bytes` of f32 input.
+    pub fn gpu_cast_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.gpu_cast_gbps * 1e9)
+    }
+
+    /// Host-staged D2H or H2D copy of `bytes` (one PCIe crossing).
+    pub fn pcie_time(&self, bytes: u64) -> f64 {
+        self.pcie_lat_us * 1e-6 + bytes as f64 / (self.pcie_gbps * 1e9)
+    }
+}
+
+/// One point-to-point transfer inside a phase.
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+}
+
+/// Shared fabric resources that serialize concurrent transfers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum Resource {
+    PcieUp(usize),
+    PcieDown(usize),
+    Qpi(usize),
+    NicOut(usize),
+    NicIn(usize),
+    HostMem(usize),
+}
+
+/// Price one phase of concurrent transfers on the topology.
+pub fn phase_time(
+    topo: &Topology,
+    p: &LinkParams,
+    transfers: &[Transfer],
+    cuda_aware: bool,
+) -> f64 {
+    let mut load: HashMap<Resource, f64> = HashMap::new();
+    let mut max_lat = 0.0f64;
+    let add = |load: &mut HashMap<Resource, f64>, r: Resource, bytes: u64, gbps: f64| {
+        *load.entry(r).or_insert(0.0) += bytes as f64 / (gbps * 1e9);
+    };
+
+    for t in transfers {
+        if t.src == t.dst || t.bytes == 0 {
+            continue;
+        }
+        let (src, dst) = (topo.gpus[t.src], topo.gpus[t.dst]);
+        let mut lat = 0.0;
+        match topo.path(t.src, t.dst) {
+            PathKind::Local => {}
+            PathKind::P2p => {
+                add(&mut load, Resource::PcieUp(t.src), t.bytes, p.pcie_gbps);
+                add(&mut load, Resource::PcieDown(t.dst), t.bytes, p.pcie_gbps);
+                lat += 2.0 * p.pcie_lat_us;
+                if !cuda_aware {
+                    // staged through host RAM: two extra memory crossings
+                    add(&mut load, Resource::HostMem(src.node), 2 * t.bytes, p.host_mem_gbps);
+                    lat += 2.0 * p.pcie_lat_us;
+                }
+            }
+            PathKind::QpiStaged => {
+                // always via CPU RAM (paper §6: P2P requires one switch)
+                add(&mut load, Resource::PcieUp(t.src), t.bytes, p.pcie_gbps);
+                add(&mut load, Resource::Qpi(src.node), t.bytes, p.qpi_gbps);
+                add(&mut load, Resource::HostMem(src.node), 2 * t.bytes, p.host_mem_gbps);
+                add(&mut load, Resource::PcieDown(t.dst), t.bytes, p.pcie_gbps);
+                lat += 2.0 * p.pcie_lat_us + p.qpi_lat_us;
+            }
+            PathKind::Network => {
+                // no GPUDirect RDMA: D2H, NIC out, NIC in, H2D
+                let ib = p.ib_gbps(topo.ib);
+                add(&mut load, Resource::PcieUp(t.src), t.bytes, p.pcie_gbps);
+                add(&mut load, Resource::HostMem(src.node), t.bytes, p.host_mem_gbps);
+                add(&mut load, Resource::NicOut(src.node), t.bytes, ib);
+                add(&mut load, Resource::NicIn(dst.node), t.bytes, ib);
+                add(&mut load, Resource::HostMem(dst.node), t.bytes, p.host_mem_gbps);
+                add(&mut load, Resource::PcieDown(t.dst), t.bytes, p.pcie_gbps);
+                lat += 2.0 * p.pcie_lat_us + p.ib_lat_us;
+            }
+        }
+        max_lat = max_lat.max(lat * 1e-6);
+    }
+
+    load.values().copied().fold(0.0, f64::max) + max_lat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+
+    fn p() -> LinkParams {
+        LinkParams::default()
+    }
+
+    #[test]
+    fn zero_bytes_costs_nothing() {
+        let t = Topology::mosaic(2);
+        assert_eq!(phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: 0 }], true), 0.0);
+    }
+
+    #[test]
+    fn p2p_cheaper_than_network() {
+        let t = Topology::copper(2);
+        let bytes = 100 << 20;
+        let p2p = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
+        let net = phase_time(&t, &p(), &[Transfer { src: 0, dst: 8, bytes }], true);
+        assert!(p2p < net, "p2p={p2p} net={net}");
+    }
+
+    #[test]
+    fn cuda_aware_helps_p2p_only_when_host_is_bottleneck() {
+        let t = Topology::copper(1);
+        let bytes = 256 << 20;
+        let aware = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
+        let staged = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], false);
+        assert!(staged > aware, "staged={staged} aware={aware}");
+    }
+
+    #[test]
+    fn qpi_crossing_costs_more_than_switch_local() {
+        let t = Topology::copper(1);
+        let bytes = 64 << 20;
+        let local = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
+        let cross = phase_time(&t, &p(), &[Transfer { src: 0, dst: 4, bytes }], true);
+        assert!(cross > local, "cross={cross} local={local}");
+    }
+
+    #[test]
+    fn shared_nic_serializes() {
+        let t = Topology::mosaic(3);
+        let bytes = 64 << 20;
+        // two transfers out of node 0 share its NIC -> ~2x one transfer
+        let one = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
+        let two = phase_time(
+            &t,
+            &p(),
+            &[Transfer { src: 0, dst: 1, bytes }, Transfer { src: 0, dst: 2, bytes }],
+            true,
+        );
+        assert!(two > 1.8 * one, "two={two} one={one}");
+    }
+
+    #[test]
+    fn disjoint_transfers_parallelize() {
+        let t = Topology::mosaic(4);
+        let bytes = 64 << 20;
+        let one = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
+        // 0->1 and 2->3 share nothing: phase is as fast as one transfer
+        let both = phase_time(
+            &t,
+            &p(),
+            &[Transfer { src: 0, dst: 1, bytes }, Transfer { src: 2, dst: 3, bytes }],
+            true,
+        );
+        assert!((both - one).abs() < 1e-9, "both={both} one={one}");
+    }
+
+    #[test]
+    fn latency_counted_once_per_phase() {
+        let t = Topology::mosaic(2);
+        let tiny = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: 4 }], true);
+        // dominated by latency terms (μs scale), far below 1 ms
+        assert!(tiny < 1e-3 && tiny > 0.0);
+    }
+
+    #[test]
+    fn fdr_beats_qdr() {
+        let params = p();
+        let f = Topology::copper(2); // FDR
+        let q = Topology::mosaic(2); // QDR
+        let bytes = 100 << 20;
+        let tf = phase_time(&f, &params, &[Transfer { src: 0, dst: 8, bytes }], true);
+        let tq = phase_time(&q, &params, &[Transfer { src: 0, dst: 1, bytes }], true);
+        assert!(tf < tq, "fdr={tf} qdr={tq}");
+    }
+}

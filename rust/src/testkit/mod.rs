@@ -1,0 +1,82 @@
+//! In-tree property-testing harness (proptest is not vendored offline).
+//!
+//! `prop(name, cases, f)` runs `f` against `cases` independent seeded RNGs
+//! and panics with the failing seed on the first counterexample, so failures
+//! reproduce with `check_one(name, seed, f)`.
+
+use crate::util::Rng;
+
+/// Run a property over `cases` random seeds. `f` returns Err(description)
+/// on a counterexample.
+pub fn prop<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_one<F>(name: &str, seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+    }
+}
+
+/// Random f32 vector with entries in roughly N(0, scale).
+pub fn gauss_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gauss_f32() * scale).collect()
+}
+
+/// Assert two f32 slices are elementwise close; Err with first offender.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_passes_for_tautology() {
+        prop("tautology", 50, |rng| {
+            let v = gauss_vec(rng, 10, 1.0);
+            if v.len() == 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn prop_reports_failures() {
+        prop("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(allclose(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(allclose(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+}

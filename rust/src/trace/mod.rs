@@ -1,0 +1,108 @@
+//! Chrome-tracing export: worker timelines for `chrome://tracing`.
+//!
+//! Collects `(worker, name, start, duration)` spans on the **virtual**
+//! clock — compute / barrier-wait / exchange per superstep — and writes the
+//! Trace Event Format JSON. Handy for seeing the BSP straggler structure
+//! and the comm/compute overlap at a glance.
+
+use std::fs;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One span on a worker's virtual timeline.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub worker: usize,
+    pub name: String,
+    /// virtual seconds
+    pub start: f64,
+    pub dur: f64,
+}
+
+/// Thread-safe span collector.
+#[derive(Default)]
+pub struct Trace {
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn record(&self, worker: usize, name: &str, start: f64, dur: f64) {
+        self.spans
+            .lock()
+            .unwrap()
+            .push(Span { worker, name: name.to_string(), start, dur });
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize to Trace Event Format (microsecond timestamps).
+    pub fn to_json(&self) -> Json {
+        let spans = self.spans.lock().unwrap();
+        let events: Vec<Json> = spans
+            .iter()
+            .map(|sp| {
+                obj(vec![
+                    ("name", s(&sp.name)),
+                    ("cat", s("bsp")),
+                    ("ph", s("X")),
+                    ("ts", num(sp.start * 1e6)),
+                    ("dur", num(sp.dur * 1e6)),
+                    ("pid", num(0.0)),
+                    ("tid", num(sp.worker as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![("traceEvents", arr(events)), ("displayTimeUnit", s("ms"))])
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_serializes() {
+        let t = Trace::new();
+        t.record(0, "compute", 0.0, 0.5);
+        t.record(1, "exchange", 0.5, 0.1);
+        assert_eq!(t.len(), 2);
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"traceEvents\""));
+        assert!(j.contains("\"compute\""));
+        // parses back
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("traceEvents").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn writes_file() {
+        let t = Trace::new();
+        t.record(0, "x", 0.0, 1.0);
+        let p = std::env::temp_dir().join(format!("tmpi_trace_{}.json", std::process::id()));
+        t.write(&p).unwrap();
+        assert!(p.exists());
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,93 @@
+//! Dependency-free utilities: deterministic PRNG, JSON, small helpers.
+//!
+//! The offline container only vendors the `xla` crate's dependency tree, so
+//! the framework carries its own tiny substrate here instead of pulling
+//! `rand`/`serde_json` (DESIGN.md §2, Cargo.toml note).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Round `x` up to a multiple of `m`.
+pub fn ceil_to(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Split `n` items into `k` contiguous near-equal parts; returns (offset, len)
+/// per part. The first `n % k` parts get one extra item (MPI_Scatterv style).
+pub fn split_even(n: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k > 0);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut off = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((off, len));
+        off += len;
+    }
+    debug_assert_eq!(off, n);
+    out
+}
+
+/// Mean of a slice (0.0 for empty — callers use it for timing summaries).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// p-quantile (0..=1) by sorting a copy; nearest-rank.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * p).round() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even_covers_disjointly() {
+        for n in [0usize, 1, 7, 64, 65, 1000] {
+            for k in [1usize, 2, 3, 4, 8] {
+                let parts = split_even(n, k);
+                assert_eq!(parts.len(), k);
+                let mut covered = 0;
+                for (i, (off, len)) in parts.iter().enumerate() {
+                    assert_eq!(*off, covered, "n={n} k={k} i={i}");
+                    covered += len;
+                }
+                assert_eq!(covered, n);
+                // sizes differ by at most 1
+                let min = parts.iter().map(|p| p.1).min().unwrap();
+                let max = parts.iter().map(|p| p.1).max().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn ceil_to_basics() {
+        assert_eq!(ceil_to(0, 128), 0);
+        assert_eq!(ceil_to(1, 128), 128);
+        assert_eq!(ceil_to(128, 128), 128);
+        assert_eq!(ceil_to(129, 128), 256);
+    }
+
+    #[test]
+    fn quantile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Property tests: collective-exchange invariants over random shapes/values
+//! (in-tree testkit harness; DESIGN.md §6 scheme-equivalence properties).
+
+use std::thread;
+
+use theano_mpi::cluster::Topology;
+use theano_mpi::collectives::{
+    Asa, Asa16, ExchangeCtx, ExchangeStrategy, HostAllreduce, ReduceOp, Ring,
+};
+use theano_mpi::mpi;
+use theano_mpi::precision::Wire;
+use theano_mpi::simnet::LinkParams;
+use theano_mpi::testkit::{allclose, gauss_vec, prop};
+use theano_mpi::util::Rng;
+
+fn run<S: ExchangeStrategy + Clone + 'static>(
+    strat: S,
+    bufs: Vec<Vec<f32>>,
+    op: ReduceOp,
+    topo: Topology,
+) -> Vec<Vec<f32>> {
+    let k = bufs.len();
+    let world = mpi::world(k);
+    let links = LinkParams::default();
+    let handles: Vec<_> = world
+        .into_iter()
+        .zip(bufs)
+        .map(|(mut comm, mut buf)| {
+            let topo = topo.clone();
+            let strat = strat.clone();
+            thread::spawn(move || {
+                let mut ctx = ExchangeCtx {
+                    comm: &mut comm,
+                    topo: &topo,
+                    links: &links,
+                    kernels: None,
+                    cuda_aware: true,
+                };
+                strat.exchange(&mut buf, op, &mut ctx).unwrap();
+                buf
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn host_reduce(bufs: &[Vec<f32>], op: ReduceOp) -> Vec<f32> {
+    let mut out = vec![0.0f32; bufs[0].len()];
+    for b in bufs {
+        for (o, x) in out.iter_mut().zip(b) {
+            *o += x;
+        }
+    }
+    if op == ReduceOp::Mean {
+        for o in out.iter_mut() {
+            *o /= bufs.len() as f32;
+        }
+    }
+    out
+}
+
+fn random_world(rng: &mut Rng) -> (usize, usize, Vec<Vec<f32>>, Topology) {
+    let k = 1 + rng.below(8);
+    let n = 1 + rng.below(3000);
+    let bufs: Vec<Vec<f32>> = (0..k).map(|_| gauss_vec(rng, n, 2.0)).collect();
+    let topo = if rng.below(2) == 0 {
+        Topology::mosaic(k.max(1))
+    } else {
+        Topology::copper(k.div_ceil(8).max(1))
+    };
+    (k, n, bufs, topo)
+}
+
+#[test]
+fn prop_asa_equals_host_sum() {
+    prop("asa == host sum", 40, |rng| {
+        let (_, _, bufs, topo) = random_world(rng);
+        let want = host_reduce(&bufs, ReduceOp::Sum);
+        let outs = run(Asa, bufs, ReduceOp::Sum, topo);
+        for out in &outs {
+            allclose(out, &want, 1e-4, 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ring_equals_allreduce() {
+    prop("ring == allreduce", 40, |rng| {
+        let (_, _, bufs, topo) = random_world(rng);
+        let a = run(Ring, bufs.clone(), ReduceOp::Sum, topo.clone());
+        let b = run(HostAllreduce, bufs, ReduceOp::Sum, topo);
+        for (x, y) in a.iter().zip(&b) {
+            allclose(x, y, 1e-4, 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_ranks_agree_after_exchange() {
+    prop("replica consistency", 30, |rng| {
+        let (_, _, bufs, topo) = random_world(rng);
+        let outs = run(Asa, bufs, ReduceOp::Mean, topo);
+        for out in &outs[1..] {
+            // every rank must hold exactly rank 0's result (exact, since
+            // each segment is computed once and broadcast)
+            if out != &outs[0] {
+                return Err("ranks disagree after ASA".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_asa16_close_to_f32_sum() {
+    prop("asa16 within half-precision error", 30, |rng| {
+        let (_, _, bufs, topo) = random_world(rng);
+        let want = host_reduce(&bufs, ReduceOp::Sum);
+        let outs = run(Asa16::new(Wire::F16), bufs, ReduceOp::Sum, topo);
+        // |err| bounded by k * eps_f16 * magnitude; generous band
+        for out in &outs {
+            allclose(out, &want, 2e-2, 2e-2)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mean_is_sum_over_k() {
+    prop("mean == sum/k", 30, |rng| {
+        let (k, _, bufs, topo) = random_world(rng);
+        let sums = run(Asa, bufs.clone(), ReduceOp::Sum, topo.clone());
+        let means = run(Asa, bufs, ReduceOp::Mean, topo);
+        let scaled: Vec<f32> = sums[0].iter().map(|x| x / k as f32).collect();
+        allclose(&means[0], &scaled, 1e-5, 1e-5)
+    });
+}
+
+#[test]
+fn prop_sim_times_identical_across_ranks_and_positive() {
+    prop("sim time sane", 20, |rng| {
+        let (k, n, bufs, topo) = random_world(rng);
+        if k == 1 {
+            return Ok(());
+        }
+        let world = mpi::world(k);
+        let links = LinkParams::default();
+        let handles: Vec<_> = world
+            .into_iter()
+            .zip(bufs)
+            .map(|(mut comm, mut buf)| {
+                let topo = topo.clone();
+                thread::spawn(move || {
+                    let mut ctx = ExchangeCtx {
+                        comm: &mut comm,
+                        topo: &topo,
+                        links: &links,
+                        kernels: None,
+                        cuda_aware: true,
+                    };
+                    Asa.exchange(&mut buf, ReduceOp::Sum, &mut ctx).unwrap().sim_total()
+                })
+            })
+            .collect();
+        let times: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for t in &times {
+            if *t <= 0.0 {
+                return Err(format!("non-positive sim time {t} (k={k}, n={n})"));
+            }
+            if (t - times[0]).abs() > 1e-12 {
+                return Err("ranks computed different sim times".into());
+            }
+        }
+        Ok(())
+    });
+}

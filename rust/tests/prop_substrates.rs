@@ -1,0 +1,200 @@
+//! Property tests over the substrates: topology routing, simnet pricing
+//! monotonicity, JSON round-trips, config parsing, f16 conversion.
+
+use theano_mpi::cluster::{PathKind, Topology};
+use theano_mpi::precision::{f16_bits_to_f32, f32_to_f16_bits, Wire};
+use theano_mpi::simnet::{phase_time, LinkParams, Transfer};
+use theano_mpi::testkit::prop;
+use theano_mpi::util::json::Json;
+use theano_mpi::util::{split_even, Rng};
+
+fn random_topo(rng: &mut Rng) -> Topology {
+    if rng.below(2) == 0 {
+        Topology::mosaic(1 + rng.below(12))
+    } else {
+        Topology::copper(1 + rng.below(3))
+    }
+}
+
+#[test]
+fn prop_routing_symmetric_and_classified() {
+    prop("routing symmetric", 50, |rng| {
+        let t = random_topo(rng);
+        let n = t.n_gpus();
+        let a = rng.below(n);
+        let b = rng.below(n);
+        let ab = t.path(a, b);
+        let ba = t.path(b, a);
+        if ab != ba {
+            return Err(format!("asymmetric path {a}<->{b}"));
+        }
+        let (ga, gb) = (t.gpus[a], t.gpus[b]);
+        let want = if a == b {
+            PathKind::Local
+        } else if ga.node != gb.node {
+            PathKind::Network
+        } else if ga.switch == gb.switch {
+            PathKind::P2p
+        } else {
+            PathKind::QpiStaged
+        };
+        if ab != want {
+            return Err(format!("misclassified {a}->{b}: {ab:?} vs {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phase_time_monotone_in_bytes() {
+    prop("phase time monotone", 50, |rng| {
+        let t = random_topo(rng);
+        let n = t.n_gpus();
+        if n < 2 {
+            return Ok(());
+        }
+        let p = LinkParams::default();
+        let a = rng.below(n);
+        let mut b = rng.below(n);
+        if a == b {
+            b = (b + 1) % n;
+        }
+        let small = 1 + rng.below(1 << 20) as u64;
+        let big = small * (2 + rng.below(8) as u64);
+        let ts = phase_time(&t, &p, &[Transfer { src: a, dst: b, bytes: small }], true);
+        let tb = phase_time(&t, &p, &[Transfer { src: a, dst: b, bytes: big }], true);
+        if tb < ts {
+            return Err(format!("bigger transfer cheaper: {tb} < {ts}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adding_transfers_never_speeds_a_phase() {
+    prop("phase superadditive", 40, |rng| {
+        let t = random_topo(rng);
+        let n = t.n_gpus();
+        if n < 2 {
+            return Ok(());
+        }
+        let p = LinkParams::default();
+        let mk = |rng: &mut Rng| {
+            let a = rng.below(n);
+            let mut b = rng.below(n);
+            if a == b {
+                b = (b + 1) % n;
+            }
+            Transfer { src: a, dst: b, bytes: 1 + rng.below(1 << 22) as u64 }
+        };
+        let t1 = mk(rng);
+        let t2 = mk(rng);
+        let one = phase_time(&t, &p, &[t1], true);
+        let both = phase_time(&t, &p, &[t1, t2], true);
+        if both + 1e-12 < one {
+            return Err(format!("adding a transfer reduced phase time: {both} < {one}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cuda_aware_never_slower() {
+    prop("cuda-aware <= staged", 40, |rng| {
+        let t = random_topo(rng);
+        let n = t.n_gpus();
+        if n < 2 {
+            return Ok(());
+        }
+        let p = LinkParams::default();
+        let a = rng.below(n);
+        let mut b = rng.below(n);
+        if a == b {
+            b = (b + 1) % n;
+        }
+        let tr = Transfer { src: a, dst: b, bytes: 1 + rng.below(1 << 24) as u64 };
+        let aware = phase_time(&t, &p, &[tr], true);
+        let staged = phase_time(&t, &p, &[tr], false);
+        if aware > staged + 1e-12 {
+            return Err(format!("cuda-aware slower: {aware} > {staged}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(1_000_000) as f64) - 500_000.0),
+            3 => Json::Str(format!("s{}\n\"x\"", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop("json roundtrip", 100, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("reparse failed: {e} on {text}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_order_preserved() {
+    // monotone: a <= b implies f16(a) <= f16(b) as floats (finite range)
+    prop("f16 monotone", 60, |rng| {
+        let a = (rng.next_f32() - 0.5) * 100.0;
+        let b = (rng.next_f32() - 0.5) * 100.0;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let flo = f16_bits_to_f32(f32_to_f16_bits(lo));
+        let fhi = f16_bits_to_f32(f32_to_f16_bits(hi));
+        if flo > fhi {
+            return Err(format!("order broken: {lo}->{flo} vs {hi}->{fhi}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_pack_unpack_idempotent() {
+    // pack(unpack(pack(x))) == pack(x): half-precision projection is stable
+    prop("wire idempotent", 30, |rng| {
+        let xs: Vec<f32> = (0..64).map(|_| rng.gauss_f32() * 10.0).collect();
+        for wire in [Wire::F16, Wire::Bf16] {
+            let mut b1 = Vec::new();
+            wire.pack(&xs, &mut b1);
+            let mut back = Vec::new();
+            wire.unpack(&b1, &mut back);
+            let mut b2 = Vec::new();
+            wire.pack(&back, &mut b2);
+            if b1 != b2 {
+                return Err(format!("{} projection unstable", wire.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_even_matches_mpi_scatterv() {
+    prop("split_even", 50, |rng| {
+        let n = rng.below(100_000);
+        let k = 1 + rng.below(16);
+        let parts = split_even(n, k);
+        let total: usize = parts.iter().map(|p| p.1).sum();
+        if total != n || parts.len() != k {
+            return Err(format!("bad split n={n} k={k}"));
+        }
+        Ok(())
+    });
+}
