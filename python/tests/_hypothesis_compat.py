@@ -1,0 +1,107 @@
+"""Minimal offline stand-in for the `hypothesis` API test_kernels.py uses.
+
+The container has no `hypothesis` wheel and no network. This shim keeps the
+property tests runnable: `@given(...)` draws `max_examples` pseudo-random
+examples from the declared strategies with a per-test deterministic seed
+(plus the min/max boundary example first, which is where block-alignment
+bugs live). When the real `hypothesis` is installed, test_kernels.py
+imports it instead and this module is unused.
+
+Supported surface: `given`, `settings.register_profile/load_profile`,
+`strategies.integers/floats/sampled_from`.
+"""
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Profile:
+    def __init__(self, max_examples=10, deadline=None):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' lowercase class name
+    _profiles = {}
+    _current = _Profile()
+
+    def __init__(self, max_examples=10, deadline=None):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    @classmethod
+    def register_profile(cls, name, max_examples=10, deadline=None):
+        cls._profiles[name] = _Profile(max_examples, deadline)
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = cls._profiles.get(name, _Profile())
+
+
+class _Strategy:
+    """A strategy is a draw function plus optional boundary examples."""
+
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self.boundaries = tuple(boundaries)
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: rng.randint(min_value, max_value),
+            boundaries=(min_value, max_value),
+        )
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: rng.uniform(min_value, max_value),
+            boundaries=(min_value, max_value),
+        )
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: rng.choice(seq), boundaries=(seq[0], seq[-1]))
+
+
+st = strategies
+
+
+def given(**param_strategies):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = settings._current.max_examples
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            names = list(param_strategies)
+            for case in range(n):
+                drawn = {}
+                for name in names:
+                    strat = param_strategies[name]
+                    # case 0: all minima; case 1: all maxima; then random
+                    if case < 2 and strat.boundaries:
+                        drawn[name] = strat.boundaries[min(case, len(strat.boundaries) - 1)]
+                    else:
+                        drawn[name] = strat.draw(rng)
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {case}: {drawn!r}: {e}"
+                    ) from e
+
+        # pytest must see a zero-argument test, not the wrapped params
+        # (functools.wraps sets __wrapped__, which inspect.signature follows)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorator

@@ -9,8 +9,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: deterministic in-repo fallback
+    from _hypothesis_compat import given, settings, st
 
 from compile.kernels import fp16, matmul, ref, sgd, sumreduce
 

@@ -44,6 +44,55 @@ fn main() -> anyhow::Result<()> {
         report(&format!("comm_sim/alexnet/asa_cuda_aware_{aware}"), rep.sim_total(), "s");
     }
 
+    // --- chunked pipeline overlap sweep: monolithic vs chunked+pipelined ---
+    // On copper (multi-GPU nodes, 8 workers) the pipeline hides the sum /
+    // cast / host-reduce kernels of chunk i-1 under chunk i's wire time;
+    // the win grows with model size (more bytes => more kernel time hidden
+    // behind the same per-stream latency) — the Poseidon trend.
+    for model in ["googlenet", "alexnet", "vggnet"] {
+        // ascending parameter count: 13.4M, 61.0M, 138.4M
+        let bytes = models::full_scale_bytes(&sess.rt.manifest, model)?;
+        for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring]
+        {
+            let mono = sess.measure_exchange(strat, 8, "copper", bytes, true)?;
+            for chunks in [8usize, 32] {
+                let piped =
+                    sess.measure_exchange_opts(strat, 8, "copper", bytes, true, chunks, true)?;
+                let serial =
+                    sess.measure_exchange_opts(strat, 8, "copper", bytes, true, chunks, false)?;
+                report(
+                    &format!("overlap/{model}/{}/m{chunks}/win", strat.name()),
+                    mono.sim_total() - piped.sim_total(),
+                    "s",
+                );
+                report(
+                    &format!("overlap/{model}/{}/m{chunks}/eff_gbps", strat.name()),
+                    piped.effective_gbps(),
+                    "",
+                );
+                if strat == StrategyKind::Asa && chunks == 8 {
+                    report(
+                        &format!("overlap/{model}/asa/m8/mono_vs_piped"),
+                        mono.sim_total() / piped.sim_total(),
+                        "x",
+                    );
+                }
+                assert!(
+                    piped.sim_total() < mono.sim_total(),
+                    "{model}/{}/m{chunks}: pipelined {} !< monolithic {}",
+                    strat.name(),
+                    piped.sim_total(),
+                    mono.sim_total()
+                );
+                assert!(
+                    serial.sim_total() >= mono.sim_total() - 1e-12,
+                    "{model}/{}/m{chunks}: serial chunking must not beat monolithic",
+                    strat.name()
+                );
+            }
+        }
+    }
+
     // --- real wall time of the exchange machinery (1M f32, 4 workers) ------
     for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring] {
         bench(&format!("exchange_wall/{}/1Mf32x4", strat.name()), 5, || {

@@ -65,6 +65,11 @@ pub struct BspConfig {
     pub exchange_momentum: bool,
     /// cross-rank parameter checksum every N iters (0 = off; test hook)
     pub integrity_every: usize,
+    /// KiB per pipeline chunk of the exchange (0 = monolithic exchange)
+    pub chunk_kib: usize,
+    /// overlap chunk transfers with the previous chunk's kernels; with
+    /// `false` chunks are priced serially (the ablation knob)
+    pub pipeline: bool,
 }
 
 impl BspConfig {
@@ -88,6 +93,8 @@ impl BspConfig {
             data_dir: None,
             exchange_momentum: false,
             integrity_every: 0,
+            chunk_kib: 0,
+            pipeline: true,
         }
     }
 }
@@ -297,7 +304,16 @@ fn worker_main(
     let mut curve = Vec::new();
     let mut last_loss = f64::NAN;
     let kernels = rt.kernels();
-    let strategy = cfg.strategy.build(cfg.wire);
+    // route the exchange through the chunked pipeline scheduler when asked
+    let strategy: Box<dyn crate::collectives::ExchangeStrategy> = if cfg.chunk_kib > 0 {
+        Box::new(crate::collectives::ChunkedPipeline::new(
+            cfg.strategy.build(cfg.wire),
+            (cfg.chunk_kib * 1024 / 4).max(1),
+            cfg.pipeline,
+        ))
+    } else {
+        cfg.strategy.build(cfg.wire)
+    };
     let mut rng = crate::util::Rng::new(cfg.seed).fork(rank as u64 + 1);
 
     // --- data source ---------------------------------------------------------
@@ -375,6 +391,7 @@ fn worker_main(
                     links,
                     kernels: Some(&kernels),
                     cuda_aware: cfg.cuda_aware,
+                    chunk_elems: 0,
                 };
                 let rep = strategy.exchange(&mut params, ReduceOp::Mean, &mut ctx)?;
                 let mut t_comm = rep.sim_total() * comm_scale;
@@ -382,11 +399,11 @@ fn worker_main(
                 if cfg.exchange_momentum {
                     let rep2 = strategy.exchange(&mut momentum, ReduceOp::Mean, &mut ctx)?;
                     t_comm += rep2.sim_total() * comm_scale;
+                    charge_comm(&mut bd, &rep2, comm_scale);
                     accumulate(&mut comm_total, &rep2);
                 }
                 clock += t_comm;
-                bd.comm_transfer += rep.sim_transfer * comm_scale;
-                bd.comm_kernel += rep.sim_kernel * comm_scale;
+                charge_comm(&mut bd, &rep, comm_scale);
             }
             Scheme::Subgd => {
                 let res = rt.exec(
@@ -407,11 +424,11 @@ fn worker_main(
                     links,
                     kernels: Some(&kernels),
                     cuda_aware: cfg.cuda_aware,
+                    chunk_elems: 0,
                 };
                 let rep = strategy.exchange(&mut grads, ReduceOp::Sum, &mut ctx)?;
                 clock += rep.sim_total() * comm_scale;
-                bd.comm_transfer += rep.sim_transfer * comm_scale;
-                bd.comm_kernel += rep.sim_kernel * comm_scale;
+                charge_comm(&mut bd, &rep, comm_scale);
                 accumulate(&mut comm_total, &rep);
 
                 // --- apply (identical update on every rank; summed grads are
@@ -473,14 +490,27 @@ fn worker_main(
     })
 }
 
+/// Charge one exchange to the breakdown, overlap-aware: pipelined time is
+/// hidden kernel time first (the usual case — sums/casts under the wire),
+/// any remainder is wire time hidden under kernels.
+fn charge_comm(bd: &mut Breakdown, rep: &CommReport, scale: f64) {
+    let k_hidden = rep.sim_overlapped.min(rep.sim_kernel);
+    let t_hidden = (rep.sim_overlapped - k_hidden).min(rep.sim_transfer);
+    bd.comm_transfer += (rep.sim_transfer - t_hidden) * scale;
+    bd.comm_kernel += (rep.sim_kernel - k_hidden) * scale;
+}
+
 fn accumulate(total: &mut CommReport, rep: &CommReport) {
     total.strategy = rep.strategy.clone();
     total.wire_bytes += rep.wire_bytes;
     total.sim_transfer += rep.sim_transfer;
+    total.sim_latency += rep.sim_latency;
     total.sim_kernel += rep.sim_kernel;
     total.sim_host_reduce += rep.sim_host_reduce;
+    total.sim_overlapped += rep.sim_overlapped;
     total.real_kernel += rep.real_kernel;
     total.phases += rep.phases;
+    total.chunks += rep.chunks;
 }
 
 /// Produce the next (x, y) batch + (stall, h2d) charges.

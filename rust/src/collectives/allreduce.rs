@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
-use crate::simnet::Transfer;
+use crate::simnet::{PhaseCost, Transfer};
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
 
@@ -39,6 +39,7 @@ impl ExchangeStrategy for HostAllreduce {
 
         // D2H once per rank (all ranks in parallel: one PCIe crossing each).
         rep.sim_transfer += ctx.links.pcie_time(bytes);
+        rep.sim_latency += ctx.links.pcie_lat_us * 1e-6;
 
         // Fold-down for non-power-of-two k: ranks >= p2 send to (r - p2).
         let p2 = k.next_power_of_two() >> usize::from(!k.is_power_of_two());
@@ -55,7 +56,9 @@ impl ExchangeStrategy for HostAllreduce {
                 .map(|r| Transfer { src: r, dst: r - p2, bytes })
                 .collect();
             // host-level traffic: buffers already staged in host RAM
-            rep.sim_transfer += host_phase(ctx, &folds);
+            let c = host_phase(ctx, &folds);
+            rep.sim_transfer += c.total();
+            rep.sim_latency += c.latency;
             rep.sim_host_reduce += ctx.links.host_reduce_time(bytes);
             rep.phases += 1;
             if rank < extra {
@@ -86,8 +89,9 @@ impl ExchangeStrategy for HostAllreduce {
             for r in 0..p2 {
                 per_round.push(Transfer { src: r, dst: r ^ 1, bytes });
             }
-            let t_round = host_phase(ctx, &per_round);
-            rep.sim_transfer += rounds as f64 * t_round;
+            let c = host_phase(ctx, &per_round);
+            rep.sim_transfer += rounds as f64 * c.total();
+            rep.sim_latency += rounds as f64 * c.latency;
             rep.sim_host_reduce += rounds as f64 * ctx.links.host_reduce_time(bytes);
             rep.phases += rounds;
         }
@@ -104,12 +108,15 @@ impl ExchangeStrategy for HostAllreduce {
             let unfolds: Vec<Transfer> = (p2..k)
                 .map(|r| Transfer { src: r - p2, dst: r, bytes })
                 .collect();
-            rep.sim_transfer += host_phase(ctx, &unfolds);
+            let c = host_phase(ctx, &unfolds);
+            rep.sim_transfer += c.total();
+            rep.sim_latency += c.latency;
             rep.phases += 1;
         }
 
         // H2D once per rank.
         rep.sim_transfer += ctx.links.pcie_time(bytes);
+        rep.sim_latency += ctx.links.pcie_lat_us * 1e-6;
 
         if op == ReduceOp::Mean {
             host_scale(buf, 1.0 / k as f32);
@@ -119,9 +126,9 @@ impl ExchangeStrategy for HostAllreduce {
     }
 }
 
-/// Phase time for host-resident buffers: NIC/QPI crossings only (the D2H /
+/// Phase cost for host-resident buffers: NIC/QPI crossings only (the D2H /
 /// H2D PCIe legs are charged once, outside the butterfly).
-fn host_phase(ctx: &ExchangeCtx<'_, '_>, transfers: &[Transfer]) -> f64 {
+fn host_phase(ctx: &ExchangeCtx<'_, '_>, transfers: &[Transfer]) -> PhaseCost {
     // Model by re-using the device-level phase pricing minus PCIe: we price
     // a same-node host->host move as a QPI-or-memcpy and cross-node as NIC.
     // Implemented by pricing the full path and subtracting the PCIe legs
@@ -154,7 +161,10 @@ fn host_phase(ctx: &ExchangeCtx<'_, '_>, transfers: &[Transfer]) -> f64 {
         }
     }
     let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
-    max(&nic_out).max(max(&nic_in)).max(max(&mem)).max(max(&qpi)) + lat
+    PhaseCost {
+        bandwidth: max(&nic_out).max(max(&nic_in)).max(max(&mem)).max(max(&qpi)),
+        latency: lat,
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +198,7 @@ pub(crate) mod tests {
                         links: &links,
                         kernels: None,
                         cuda_aware: true,
+                        chunk_elems: 0,
                     };
                     let rep = strat.exchange(&mut buf, op, &mut ctx).unwrap();
                     (buf, rep)

@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
 use crate::precision::Wire;
-use crate::simnet::{phase_time, Transfer};
+use crate::simnet::{phase_cost, Transfer};
 use crate::util::split_even;
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
@@ -104,7 +104,9 @@ fn asa_exchange(
             }
         }
     }
-    rep.sim_transfer += phase_time(ctx.topo, ctx.links, &transfers, ctx.cuda_aware);
+    let cost = phase_cost(ctx.topo, ctx.links, &transfers, ctx.cuda_aware);
+    rep.sim_transfer += cost.total();
+    rep.sim_latency += cost.latency;
     rep.phases += 1;
 
     // --- Sum: reduce my k copies on the "GPU" (Pallas sum-stack kernel) -----
@@ -181,7 +183,9 @@ fn asa_exchange(
             }
         }
     }
-    rep.sim_transfer += phase_time(ctx.topo, ctx.links, &transfers, ctx.cuda_aware);
+    let cost = phase_cost(ctx.topo, ctx.links, &transfers, ctx.cuda_aware);
+    rep.sim_transfer += cost.total();
+    rep.sim_latency += cost.latency;
     rep.phases += 1;
 
     Ok(rep)

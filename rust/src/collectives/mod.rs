@@ -24,13 +24,15 @@
 
 mod allreduce;
 mod asa;
+mod chunked;
 mod ring;
 
 pub use allreduce::HostAllreduce;
 pub use asa::{Asa, Asa16};
+pub use chunked::ChunkedPipeline;
 pub use ring::Ring;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::cluster::Topology;
 use crate::mpi::Comm;
@@ -58,6 +60,11 @@ pub struct ExchangeCtx<'a, 'k> {
     pub kernels: Option<&'a Kernels<'k>>,
     /// GPUDirect P2P available (paper §3.2/6; affects intra-switch paths).
     pub cuda_aware: bool,
+    /// Accounting metadata: elements per pipeline chunk this exchange runs
+    /// under (0 = monolithic). Set by the [`ChunkedPipeline`] scheduler on
+    /// its inner per-chunk calls; no strategy branches on it today — it
+    /// exists so tracing/kernels can observe the chunking regime.
+    pub chunk_elems: usize,
 }
 
 /// Per-exchange accounting (one rank's view; identical across ranks since
@@ -67,22 +74,42 @@ pub struct CommReport {
     pub strategy: String,
     /// Bytes this rank moved (sent) across all phases.
     pub wire_bytes: u64,
-    /// Simulated transfer time (s).
+    /// Simulated transfer time (s), latency included.
     pub sim_transfer: f64,
+    /// Latency component of `sim_transfer` (per-message terms, s).
+    pub sim_latency: f64,
     /// Simulated GPU kernel time inside the exchange: sums + casts (s).
     pub sim_kernel: f64,
     /// Simulated host CPU reduction time (AR only) (s).
     pub sim_host_reduce: f64,
+    /// Time hidden by the chunked pipeline's comm/compute overlap (s):
+    /// chunk *i*'s wire transfer runs under chunk *i−1*'s kernels.
+    /// Zero for monolithic exchanges.
+    pub sim_overlapped: f64,
     /// Measured PJRT wall time of the real kernels (diagnostic).
     pub real_kernel: f64,
     /// Number of communication phases.
     pub phases: usize,
+    /// Pipeline chunks this exchange was driven in (0 or 1 = monolithic).
+    pub chunks: usize,
 }
 
 impl CommReport {
     /// Total simulated exchange time — what the virtual clock advances by.
+    /// Overlapped time is real wall-clock saving, so it subtracts.
     pub fn sim_total(&self) -> f64 {
-        self.sim_transfer + self.sim_kernel + self.sim_host_reduce
+        self.sim_transfer + self.sim_kernel + self.sim_host_reduce - self.sim_overlapped
+    }
+
+    /// Wire bytes per simulated second — the effective exchange bandwidth
+    /// a worker observes (rises when the pipeline hides kernel time).
+    pub fn effective_gbps(&self) -> f64 {
+        let t = self.sim_total();
+        if t > 0.0 {
+            self.wire_bytes as f64 / t / 1e9
+        } else {
+            0.0
+        }
     }
 
     /// Share of exchange time in GPU kernels (paper: 1.6 % for the ASA sum).
@@ -120,14 +147,25 @@ pub enum StrategyKind {
 }
 
 impl StrategyKind {
+    /// The valid names, for error messages and help text.
+    pub const NAMES: &'static str = "ar|allreduce|asa|asa16|ring";
+
+    /// Case-insensitive name lookup ("ASA16" from a config file is valid).
     pub fn parse(s: &str) -> Option<StrategyKind> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "ar" | "allreduce" => Some(StrategyKind::Ar),
             "asa" => Some(StrategyKind::Asa),
             "asa16" => Some(StrategyKind::Asa16),
             "ring" => Some(StrategyKind::Ring),
             _ => None,
         }
+    }
+
+    /// [`parse`](Self::parse) that fails with an error naming the valid
+    /// strategies — what config files and CLI flags surface to the user.
+    pub fn from_name(s: &str) -> Result<StrategyKind> {
+        Self::parse(s)
+            .ok_or_else(|| anyhow!("unknown exchange strategy '{s}' (valid: {})", Self::NAMES))
     }
 
     pub fn name(self) -> &'static str {
@@ -178,6 +216,21 @@ mod tests {
     }
 
     #[test]
+    fn strategy_kind_parse_is_case_insensitive() {
+        assert_eq!(StrategyKind::parse("ASA16"), Some(StrategyKind::Asa16));
+        assert_eq!(StrategyKind::parse("Ring"), Some(StrategyKind::Ring));
+        assert_eq!(StrategyKind::parse("AllReduce"), Some(StrategyKind::Ar));
+    }
+
+    #[test]
+    fn from_name_error_lists_valid_strategies() {
+        let err = StrategyKind::from_name("warp").unwrap_err().to_string();
+        assert!(err.contains("warp"), "{err}");
+        assert!(err.contains("asa16") && err.contains("ring"), "{err}");
+        assert_eq!(StrategyKind::from_name("ASA").unwrap(), StrategyKind::Asa);
+    }
+
+    #[test]
     fn report_totals() {
         let r = CommReport {
             sim_transfer: 0.9,
@@ -187,5 +240,19 @@ mod tests {
         };
         assert!((r.sim_total() - 0.916).abs() < 1e-12);
         assert!((r.kernel_share() - 0.016 / 0.916).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_subtracts_from_total_and_raises_effective_bandwidth() {
+        let base = CommReport {
+            wire_bytes: 1_000_000_000,
+            sim_transfer: 1.0,
+            sim_kernel: 0.25,
+            ..Default::default()
+        };
+        let overlapped = CommReport { sim_overlapped: 0.2, ..base.clone() };
+        assert!((base.sim_total() - 1.25).abs() < 1e-12);
+        assert!((overlapped.sim_total() - 1.05).abs() < 1e-12);
+        assert!(overlapped.effective_gbps() > base.effective_gbps());
     }
 }

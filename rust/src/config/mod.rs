@@ -152,7 +152,7 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
         cfg.scheme = Scheme::parse(v.as_str()?).ok_or_else(|| anyhow!("bad scheme"))?;
     }
     if let Some(v) = t.get("strategy") {
-        cfg.strategy = StrategyKind::parse(v.as_str()?).ok_or_else(|| anyhow!("bad strategy"))?;
+        cfg.strategy = StrategyKind::from_name(v.as_str()?)?;
     }
     if let Some(v) = t.get("wire") {
         cfg.wire = match v.as_str()? {
@@ -187,6 +187,12 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
     }
     if let Some(v) = t.get("exchange_momentum") {
         cfg.exchange_momentum = v.as_bool()?;
+    }
+    if let Some(v) = t.get("chunk_kib") {
+        cfg.chunk_kib = v.as_usize()?;
+    }
+    if let Some(v) = t.get("pipeline") {
+        cfg.pipeline = v.as_bool()?;
     }
     cfg.lr = lr_from(t)?;
     Ok(cfg)
@@ -254,6 +260,12 @@ pub fn easgd_from_file(path: &Path) -> Result<EasgdConfig> {
     if let Some(v) = t.get("sim_model") {
         cfg.sim_model = Some(v.as_str()?.to_string());
     }
+    if let Some(v) = t.get("chunk_kib") {
+        cfg.chunk_kib = v.as_usize()?;
+    }
+    if let Some(v) = t.get("pipeline") {
+        cfg.pipeline = v.as_bool()?;
+    }
     cfg.lr = lr_from(t)?;
     Ok(cfg)
 }
@@ -278,6 +290,8 @@ lr_step_every = 40
 topology = "mosaic"
 cuda_aware = true
 sim_model = "alexnet"
+chunk_kib = 4096
+pipeline = true
 
 [easgd]
 model = "mlp"
@@ -307,6 +321,8 @@ transport = "platoon-shm"
         assert_eq!(cfg.scheme, Scheme::Subgd);
         assert_eq!(cfg.strategy, StrategyKind::Asa16);
         assert_eq!(cfg.sim_model.as_deref(), Some("alexnet"));
+        assert_eq!(cfg.chunk_kib, 4096);
+        assert!(cfg.pipeline);
         match cfg.lr {
             LrSchedule::StepDecay { base, every, .. } => {
                 assert!((base - 0.005).abs() < 1e-12);
@@ -314,6 +330,17 @@ transport = "platoon-shm"
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn bad_strategy_error_names_the_valid_set() {
+        let t = parse("[train]\nstrategy = \"warpspeed\"").unwrap();
+        let err = bsp_from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("warpspeed"), "{err}");
+        assert!(err.contains("asa16"), "{err}");
+        // and case-insensitive names parse fine
+        let t = parse("[train]\nstrategy = \"RING\"").unwrap();
+        assert_eq!(bsp_from_table(&t).unwrap().strategy, StrategyKind::Ring);
     }
 
     #[test]

@@ -58,9 +58,29 @@ impl Session {
         full_bytes: u64,
         cuda_aware: bool,
     ) -> Result<CommReport> {
+        self.measure_exchange_opts(strategy, k, topology, full_bytes, cuda_aware, 0, false)
+    }
+
+    /// [`measure_exchange`](Self::measure_exchange) with the chunked
+    /// pipeline scheduler engaged: `chunks > 1` splits the probe into that
+    /// many pipeline chunks (so the full-scale chunk size is
+    /// `full_bytes / chunks`); `pipeline` toggles the comm/compute overlap
+    /// (off = serially-priced chunking, the ablation).
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_exchange_opts(
+        &self,
+        strategy: StrategyKind,
+        k: usize,
+        topology: &str,
+        full_bytes: u64,
+        cuda_aware: bool,
+        chunks: usize,
+        pipeline: bool,
+    ) -> Result<CommReport> {
         // real buffers are capped; sim time scales linearly to full_bytes
         let probe_elems: usize = 1_000_000.min((full_bytes / 4) as usize).max(1);
         let scale = full_bytes as f64 / (4.0 * probe_elems as f64);
+        let chunk_elems = if chunks > 1 { probe_elems.div_ceil(chunks) } else { 0 };
         let topo = Topology::by_name(topology, k)
             .ok_or_else(|| anyhow::anyhow!("unknown topology '{topology}'"))?;
         let links = LinkParams::default();
@@ -75,13 +95,22 @@ impl Session {
                 let mut buf: Vec<f32> =
                     (0..probe_elems).map(|i| ((rank * 31 + i) % 1000) as f32 * 1e-3).collect();
                 let kernels = rt.kernels();
-                let strat = strategy.build(Wire::F16);
+                let strat: Box<dyn crate::collectives::ExchangeStrategy> = if chunk_elems > 0 {
+                    Box::new(crate::collectives::ChunkedPipeline::new(
+                        strategy.build(Wire::F16),
+                        chunk_elems,
+                        pipeline,
+                    ))
+                } else {
+                    strategy.build(Wire::F16)
+                };
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
                     topo: &topo,
                     links: &links,
                     kernels: Some(&kernels),
                     cuda_aware,
+                    chunk_elems: 0,
                 };
                 strat.exchange(&mut buf, ReduceOp::Sum, &mut ctx)
             }));
@@ -94,8 +123,10 @@ impl Session {
             }
         }
         rep.sim_transfer *= scale;
+        rep.sim_latency *= scale;
         rep.sim_kernel *= scale;
         rep.sim_host_reduce *= scale;
+        rep.sim_overlapped *= scale;
         rep.wire_bytes = (rep.wire_bytes as f64 * scale) as u64;
         Ok(rep)
     }

@@ -70,6 +70,11 @@ pub struct EasgdConfig {
     pub seed: u64,
     /// scale exchange time to a full-scale model (like BSP's sim_model)
     pub sim_model: Option<String>,
+    /// KiB per pipeline chunk of the elastic exchange (0 = monolithic)
+    pub chunk_kib: usize,
+    /// stream chunks so the server's elastic update of chunk i−1 overlaps
+    /// chunk i's arrival (only meaningful with `chunk_kib > 0`)
+    pub pipeline: bool,
 }
 
 impl EasgdConfig {
@@ -88,6 +93,8 @@ impl EasgdConfig {
             transport: Transport::CudaAwareMpi,
             seed: 42,
             sim_model: None,
+            chunk_kib: 0,
+            pipeline: true,
         }
     }
 }
@@ -154,6 +161,25 @@ fn server_update_cost(transport: Transport, links: &LinkParams, bytes: u64) -> f
         // Platoon's server updates on host under the GIL
         Transport::PlatoonShm => links.host_reduce_time(2 * bytes),
     }
+}
+
+/// Server occupancy per request when the exchange streams in `chunk_kib`
+/// chunks: the elastic update of chunk i−1 runs while chunk i is still on
+/// the wire (the worker's wire charge covers that arrival time), so only
+/// the *last* chunk's update extends the server's busy window. The hidden
+/// portion is clamped by the incoming stream itself (`down_wire`, the
+/// one-way w-down transfer time): updates cannot hide under wire time that
+/// does not exist, so shrinking `chunk_kib` cannot shrink the cost below
+/// `full - down_wire`.
+fn server_handle_cost(cfg: &EasgdConfig, links: &LinkParams, bytes: u64, down_wire: f64) -> f64 {
+    let full = server_update_cost(cfg.transport, links, bytes);
+    if cfg.chunk_kib == 0 || !cfg.pipeline {
+        return full;
+    }
+    let chunks = (bytes as usize).div_ceil(cfg.chunk_kib * 1024).max(1) as f64;
+    // updates of chunks 0..m-1 overlap the arrival of chunks 1..m
+    let hidden = (full - full / chunks).min(down_wire * (chunks - 1.0) / chunks).max(0.0);
+    full - hidden
 }
 
 pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
@@ -411,7 +437,7 @@ fn worker_main(
 fn server_main(
     mut comm: mpi::Comm,
     cfg: &EasgdConfig,
-    _topo: &Topology,
+    topo: &Topology,
     links: &LinkParams,
     init: &Arc<Vec<f32>>,
     bytes: u64,
@@ -421,7 +447,10 @@ fn server_main(
     let mut server_clock = 0.0f64;
     let mut stopped = 0usize;
     let alpha = cfg.alpha as f32;
-    let handle_cost = server_update_cost(cfg.transport, links, bytes) * comm_scale;
+    // one-way w-down wire time (worker 0's path is representative: every
+    // worker reaches the server over an equivalent leg on both presets)
+    let down_wire = exchange_cost(cfg.transport, topo, links, 0, cfg.workers, bytes) / 2.0;
+    let handle_cost = server_handle_cost(cfg, links, bytes, down_wire) * comm_scale;
 
     while stopped < cfg.workers {
         // serve pushes and stops in arrival order
@@ -443,4 +472,39 @@ fn server_main(
         }
     }
     Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipelined_server_handle_cost_shrinks_with_chunks_but_is_wire_clamped() {
+        let links = LinkParams::default();
+        let bytes = 8 << 20; // 8 MiB of parameters
+        let mut cfg = EasgdConfig::quick("mlp", 4, 10);
+        let full = server_handle_cost(&cfg, &links, bytes, 1.0);
+        assert!(full > 0.0);
+        cfg.chunk_kib = 1024; // 8 chunks; ample wire to hide under
+        let piped = server_handle_cost(&cfg, &links, bytes, 1.0);
+        assert!((piped - full / 8.0).abs() < 1e-15, "piped={piped} full={full}");
+        // updates cannot hide under wire time that does not exist
+        assert_eq!(server_handle_cost(&cfg, &links, bytes, 0.0), full);
+        cfg.chunk_kib = 4; // absurdly fine chunking must not price below
+        let tiny_wire = full * 0.25;
+        let clamped = server_handle_cost(&cfg, &links, bytes, tiny_wire);
+        assert!(clamped >= full - tiny_wire, "clamped={clamped} full={full}");
+        cfg.pipeline = false;
+        assert_eq!(server_handle_cost(&cfg, &links, bytes, 1.0), full);
+    }
+
+    #[test]
+    fn exchange_cost_positive_on_both_transports() {
+        let links = LinkParams::default();
+        let topo = Topology::by_name("copper", 5).unwrap();
+        for t in [Transport::CudaAwareMpi, Transport::PlatoonShm] {
+            let c = exchange_cost(t, &topo, &links, 0, 4, 4 << 20);
+            assert!(c > 0.0, "{t:?}");
+        }
+    }
 }

@@ -25,6 +25,23 @@
 //! real** (measured around PJRT execution) and whose **communication time is
 //! simulated** from the cluster topology (DESIGN.md §2), giving
 //! deterministic, paper-faithful speedup accounting on a single-core testbed.
+//!
+//! ## Chunked pipelined exchange (comm/compute overlap)
+//!
+//! [`collectives::ChunkedPipeline`] splits the flat vector into
+//! rank-segment-aligned chunks and drives any inner strategy chunk-by-chunk
+//! through a software pipeline: chunk *i*'s wire transfer overlaps chunk
+//! *i−1*'s summation/cast kernels. The data path stays bit-identical to the
+//! monolithic exchange (alignment preserves each element's owner rank and
+//! f32 reduction order) while the virtual clock prices the overlap via
+//! [`simnet::pipeline_time`] — per stage `max(transfer, kernel)` instead of
+//! their sum, with later chunks' per-message latency pipelined away
+//! ([`simnet::PhaseCost`] keeps bandwidth and latency separable). The win
+//! is reported as `CommReport::sim_overlapped` / `effective_gbps()` and is
+//! enabled with `BspConfig::chunk_kib` / `--chunk-kib` (`--pipeline false`
+//! is the serially-priced ablation). The EASGD server uses the same idea:
+//! with chunking enabled its elastic update of chunk *i−1* overlaps chunk
+//! *i*'s arrival.
 
 pub mod bsp;
 pub mod cluster;

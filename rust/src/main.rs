@@ -89,7 +89,7 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
         cfg.scheme = Scheme::parse(s).ok_or_else(|| anyhow!("bad --scheme"))?;
     }
     if let Some(s) = args.get("strategy") {
-        cfg.strategy = StrategyKind::parse(s).ok_or_else(|| anyhow!("bad --strategy"))?;
+        cfg.strategy = StrategyKind::from_name(s)?;
     }
     if let Some(w) = args.get("wire") {
         cfg.wire = match w {
@@ -118,6 +118,16 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
     }
     if let Some(s) = args.usize_("seed")? {
         cfg.seed = s as u64;
+    }
+    if let Some(c) = args.usize_("chunk-kib")? {
+        cfg.chunk_kib = c;
+    }
+    if let Some(p) = args.get("pipeline") {
+        cfg.pipeline = match p {
+            "true" => true,
+            "false" => false,
+            _ => bail!("bad --pipeline (true|false)"),
+        };
     }
     Ok(())
 }
@@ -189,6 +199,16 @@ fn cmd_easgd(args: &Args) -> Result<()> {
             "mpi" => Transport::CudaAwareMpi,
             "shm" => Transport::PlatoonShm,
             _ => bail!("bad --transport (mpi|shm)"),
+        };
+    }
+    if let Some(c) = args.usize_("chunk-kib")? {
+        cfg.chunk_kib = c;
+    }
+    if let Some(p) = args.get("pipeline") {
+        cfg.pipeline = match p {
+            "true" => true,
+            "false" => false,
+            _ => bail!("bad --pipeline (true|false)"),
         };
     }
     if cfg.eval_every == 0 {
@@ -274,6 +294,7 @@ fn usage() -> ! {
         "usage: tmpi <train|easgd|repro|topo|info> [flags]\n\
          \n\
          tmpi train --model mlp --workers 4 --iters 100 --strategy asa --scheme subgd\n\
+         tmpi train --model mlp --workers 8 --chunk-kib 256 --pipeline true\n\
          tmpi train --config examples/configs/alexnet_bsp.toml\n\
          tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\
          tmpi repro <fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all> [--iters n]\n\

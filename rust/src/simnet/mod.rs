@@ -111,6 +111,58 @@ enum Resource {
     HostMem(usize),
 }
 
+/// A phase's cost split into its bandwidth and latency components.
+///
+/// The split exists for the chunked pipeline scheduler: when the same
+/// logical phase repeats back-to-back over a stream of chunks, the
+/// per-message latency of chunk *i* rides under chunk *i−1*'s bandwidth
+/// occupancy (the same wormhole-pipelining argument that justifies the
+/// per-hop `max` inside one transfer), so a pipeline charges latency once
+/// per stream while bandwidth accumulates per chunk.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseCost {
+    /// Serialized byte time on the most-loaded shared resource (s).
+    pub bandwidth: f64,
+    /// Worst per-transfer hop-latency sum in the phase (s).
+    pub latency: f64,
+}
+
+impl PhaseCost {
+    pub fn total(&self) -> f64 {
+        self.bandwidth + self.latency
+    }
+}
+
+/// One stage of a chunked software pipeline: the wire time of a chunk's
+/// transfers and the kernel/arithmetic time that must follow them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineStage {
+    /// Full wire time of this chunk (bandwidth + latency), as priced by
+    /// the strategy for the chunk in isolation.
+    pub transfer: f64,
+    /// Latency part of `transfer` — hidden under the previous chunk's
+    /// bandwidth for every stage after the first.
+    pub latency: f64,
+    /// Summation/cast/host-reduce time gated on this chunk's arrival.
+    pub kernel: f64,
+}
+
+/// Overlap-aware makespan of a chunked exchange: the wire and the kernel
+/// engine are each serial resources, a chunk's kernel starts only after its
+/// own transfer, and transfers stream back-to-back (later chunks' latency is
+/// pipelined away). Per stage this takes `max(transfer, kernel)` instead of
+/// their sum — chunk *i*'s wire time overlaps chunk *i−1*'s kernels.
+pub fn pipeline_time(stages: &[PipelineStage]) -> f64 {
+    let mut wire_free = 0.0f64;
+    let mut kernel_free = 0.0f64;
+    for (i, s) in stages.iter().enumerate() {
+        let t = if i == 0 { s.transfer } else { (s.transfer - s.latency).max(0.0) };
+        wire_free += t;
+        kernel_free = kernel_free.max(wire_free) + s.kernel;
+    }
+    kernel_free.max(wire_free)
+}
+
 /// Price one phase of concurrent transfers on the topology.
 pub fn phase_time(
     topo: &Topology,
@@ -118,6 +170,16 @@ pub fn phase_time(
     transfers: &[Transfer],
     cuda_aware: bool,
 ) -> f64 {
+    phase_cost(topo, p, transfers, cuda_aware).total()
+}
+
+/// Like [`phase_time`] but keeps bandwidth and latency separable.
+pub fn phase_cost(
+    topo: &Topology,
+    p: &LinkParams,
+    transfers: &[Transfer],
+    cuda_aware: bool,
+) -> PhaseCost {
     let mut load: HashMap<Resource, f64> = HashMap::new();
     let mut max_lat = 0.0f64;
     let add = |load: &mut HashMap<Resource, f64>, r: Resource, bytes: u64, gbps: f64| {
@@ -165,7 +227,7 @@ pub fn phase_time(
         max_lat = max_lat.max(lat * 1e-6);
     }
 
-    load.values().copied().fold(0.0, f64::max) + max_lat
+    PhaseCost { bandwidth: load.values().copied().fold(0.0, f64::max), latency: max_lat }
 }
 
 #[cfg(test)]
@@ -246,6 +308,56 @@ mod tests {
         let tiny = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: 4 }], true);
         // dominated by latency terms (μs scale), far below 1 ms
         assert!(tiny < 1e-3 && tiny > 0.0);
+    }
+
+    #[test]
+    fn phase_cost_splits_time() {
+        let t = Topology::mosaic(2);
+        let tr = [Transfer { src: 0, dst: 1, bytes: 64 << 20 }];
+        let c = phase_cost(&t, &p(), &tr, true);
+        assert!(c.bandwidth > 0.0 && c.latency > 0.0);
+        assert!((c.total() - phase_time(&t, &p(), &tr, true)).abs() < 1e-15);
+        // latency is the per-message term: μs scale, independent of bytes
+        let c2 = phase_cost(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: 4 }], true);
+        assert!((c.latency - c2.latency).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pipeline_time_matches_hand_computation() {
+        // two stages, no latency: t0 | max(t1 overlaps k0) | k1 drain
+        let s = [
+            PipelineStage { transfer: 1.0, latency: 0.0, kernel: 0.5 },
+            PipelineStage { transfer: 1.0, latency: 0.0, kernel: 0.5 },
+        ];
+        // wire: 1.0 then 2.0; k0 runs 1.0..1.5; k1 starts max(2.0, 1.5)=2.0
+        assert!((pipeline_time(&s) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_never_exceeds_serial_sum() {
+        let mk = |t: f64, l: f64, k: f64| PipelineStage { transfer: t, latency: l, kernel: k };
+        let stages = [mk(0.3, 0.01, 0.2), mk(0.5, 0.01, 0.1), mk(0.2, 0.01, 0.4)];
+        let serial: f64 = stages.iter().map(|s| s.transfer + s.kernel).sum();
+        let piped = pipeline_time(&stages);
+        assert!(piped <= serial + 1e-12, "piped={piped} serial={serial}");
+        // with >1 stage and nonzero kernels there is genuine overlap
+        assert!(piped < serial, "no overlap: piped={piped} serial={serial}");
+    }
+
+    #[test]
+    fn pipeline_kernel_bound_when_kernels_dominate() {
+        // kernels much larger than transfers: makespan ~= t0 + sum(kernels)
+        let stages: Vec<PipelineStage> = (0..4)
+            .map(|_| PipelineStage { transfer: 0.01, latency: 0.0, kernel: 1.0 })
+            .collect();
+        let t = pipeline_time(&stages);
+        assert!((t - (0.01 + 4.0)).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn pipeline_single_stage_is_plain_sum() {
+        let s = [PipelineStage { transfer: 0.7, latency: 0.1, kernel: 0.2 }];
+        assert!((pipeline_time(&s) - 0.9).abs() < 1e-12);
     }
 
     #[test]

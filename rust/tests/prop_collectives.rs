@@ -35,6 +35,7 @@ fn run<S: ExchangeStrategy + Clone + 'static>(
                     links: &links,
                     kernels: None,
                     cuda_aware: true,
+                    chunk_elems: 0,
                 };
                 strat.exchange(&mut buf, op, &mut ctx).unwrap();
                 buf
@@ -159,6 +160,7 @@ fn prop_sim_times_identical_across_ranks_and_positive() {
                         links: &links,
                         kernels: None,
                         cuda_aware: true,
+                        chunk_elems: 0,
                     };
                     Asa.exchange(&mut buf, ReduceOp::Sum, &mut ctx).unwrap().sim_total()
                 })

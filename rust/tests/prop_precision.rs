@@ -1,0 +1,172 @@
+//! Property tests: the bit-twiddling f32→f16/bf16 converters against a
+//! bit-twiddling-free round-to-nearest-even reference.
+//!
+//! The reference converts through f64 and *searches* the decoded half
+//! codes for the nearest value (ties to the even code), so it shares no
+//! logic with the shift-and-round implementation under test. The decoders
+//! (`f16_bits_to_f32` / `bf16_bits_to_f32`) are themselves pinned by the
+//! exhaustive round-trip test in `precision::tests`, which makes them a
+//! sound oracle here. Overflow is clamped to infinity at the IEEE halfway
+//! threshold; the comparisons are exact because every tie midpoint is a
+//! short dyadic rational and f64 carries 53 bits.
+
+use theano_mpi::precision::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits,
+};
+use theano_mpi::util::Rng;
+
+/// Round-to-nearest-even f32 -> f16 by exhaustive nearest-value search.
+fn f16_ref(x: f32) -> u16 {
+    assert!(!x.is_nan());
+    let sign: u16 = if x.is_sign_negative() { 0x8000 } else { 0 };
+    let mag = (x as f64).abs();
+    // halfway between the largest finite f16 (65504) and the next step
+    // (65536): at and beyond, RTNE overflows to infinity
+    if mag >= 65520.0 {
+        return sign | 0x7C00;
+    }
+    let mut best = 0u16;
+    let mut best_err = f64::INFINITY;
+    for h in 0..=0x7BFFu16 {
+        let err = (f16_bits_to_f32(h) as f64 - mag).abs();
+        if err < best_err || (err == best_err && h & 1 == 0) {
+            best = h;
+            best_err = err;
+        }
+    }
+    sign | best
+}
+
+/// Round-to-nearest-even f32 -> bf16 by exhaustive nearest-value search.
+fn bf16_ref(x: f32) -> u16 {
+    assert!(!x.is_nan());
+    let sign: u16 = if x.is_sign_negative() { 0x8000 } else { 0 };
+    let mag = (x as f64).abs();
+    let max_finite = bf16_bits_to_f32(0x7F7F) as f64;
+    let ulp_top = 2.0f64.powi(120); // ulp in the top binade (exp 127, 7-bit mantissa)
+    if mag >= max_finite + ulp_top / 2.0 {
+        return sign | 0x7F80;
+    }
+    let mut best = 0u16;
+    let mut best_err = f64::INFINITY;
+    for h in 0..=0x7F7Fu16 {
+        let err = (bf16_bits_to_f32(h) as f64 - mag).abs();
+        if err < best_err || (err == best_err && h & 1 == 0) {
+            best = h;
+            best_err = err;
+        }
+    }
+    sign | best
+}
+
+fn check_f16(x: f32) {
+    let got = f32_to_f16_bits(x);
+    let want = f16_ref(x);
+    assert_eq!(
+        got, want,
+        "f16({x:e} = {:#010x}): got {got:#06x} ({}), want {want:#06x} ({})",
+        x.to_bits(),
+        f16_bits_to_f32(got),
+        f16_bits_to_f32(want)
+    );
+}
+
+fn check_bf16(x: f32) {
+    let got = f32_to_bf16_bits(x);
+    let want = bf16_ref(x);
+    assert_eq!(
+        got, want,
+        "bf16({x:e} = {:#010x}): got {got:#06x} ({}), want {want:#06x} ({})",
+        x.to_bits(),
+        bf16_bits_to_f32(got),
+        bf16_bits_to_f32(want)
+    );
+}
+
+#[test]
+fn prop_f16_matches_nearest_even_reference_on_random_values() {
+    let mut rng = Rng::new(0x5EED_F16);
+    for case in 0..120 {
+        // sweep magnitudes across binades: normals, f16 subnormals,
+        // underflow-to-zero and overflow-to-inf regions
+        let exp = (case % 60) as i32 - 30; // 2^-30 .. 2^29
+        let x = rng.gauss_f32() * 2.0f32.powi(exp);
+        check_f16(x);
+    }
+}
+
+#[test]
+fn prop_bf16_matches_nearest_even_reference_on_random_values() {
+    let mut rng = Rng::new(0x5EED_BF16);
+    for case in 0..120 {
+        let exp = (case as i32 % 80) * 2 - 80; // 2^-80 .. 2^78
+        let x = rng.gauss_f32() * 2.0f32.powi(exp);
+        check_bf16(x);
+    }
+}
+
+#[test]
+fn f16_reference_agrees_on_edge_cases() {
+    let edges: &[f32] = &[
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        65504.0,                  // largest finite f16
+        65519.96,                 // just below the overflow threshold
+        65520.0,                  // exact halfway: ties to even -> inf
+        65536.0,                  // beyond: inf
+        f32::MAX,                 // deep overflow
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        5.960_464_5e-8,           // smallest f16 subnormal (2^-24)
+        2.980_232_2e-8,           // 2^-25: halfway to zero, ties to even -> 0
+        4.470_348_4e-8,           // 1.5 * 2^-24: rounds up
+        8.940_697e-8,             // 1.5 * 2^-25 * 2 = 3 * 2^-25: tie -> even (2^-23)
+        6.103_515_6e-5,           // smallest f16 normal (2^-14)
+        6.097_555_1e-5,           // largest f16 subnormal region value
+        1.0 + 2.0f32.powi(-11),   // tie at the 1.0 binade -> stays 1.0
+        1.0 + 3.0 * 2.0f32.powi(-11), // tie -> rounds to even (up)
+        -123.456,
+        0.1,
+        3.141_592_7,
+    ];
+    for &x in edges {
+        check_f16(x);
+    }
+}
+
+#[test]
+fn bf16_reference_agrees_on_edge_cases() {
+    let tie_down = f32::from_bits(0x3F80_8000); // halfway, even below
+    let tie_up = f32::from_bits(0x3F81_8000); // halfway, even above
+    let max_bf16 = bf16_bits_to_f32(0x7F7F);
+    let edges: &[f32] = &[
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        tie_down,
+        tie_up,
+        max_bf16,
+        f32::MAX, // overflows to inf in bf16
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE,       // 2^-126: exactly representable in bf16
+        1e-40,                   // f32 subnormal -> bf16 subnormal region
+        -3.912e7,
+        0.333_333_34,
+    ];
+    for &x in edges {
+        check_bf16(x);
+    }
+}
+
+#[test]
+fn nan_payloads_stay_nan() {
+    assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    let neg_nan = f32::from_bits(0xFFC0_0001);
+    assert!(f16_bits_to_f32(f32_to_f16_bits(neg_nan)).is_nan());
+    assert!(bf16_bits_to_f32(f32_to_bf16_bits(neg_nan)).is_nan());
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the gate every PR must keep green.
+#
+#   rust:   cargo build --release && cargo test -q   (offline workspace;
+#           artifact-dependent tests skip when artifacts/ is absent)
+#   python: pytest python/tests -q                   (L1/L2 kernel + model
+#           oracles; uses the in-repo hypothesis shim when offline)
+#
+# Usage: scripts/tier1.sh  (from anywhere; cd's to the repo root)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== tier-1: pytest python/tests -q =="
+python3 -m pytest python/tests -q
+
+echo "tier-1 green"
