@@ -6,7 +6,8 @@
 mod bench_common;
 
 use bench_common::{bench, report};
-use theano_mpi::collectives::StrategyKind;
+use theano_mpi::cluster::Topology;
+use theano_mpi::collectives::{FlatKind, StrategyKind};
 use theano_mpi::models;
 use theano_mpi::Session;
 
@@ -91,6 +92,67 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+    }
+
+    // --- hierarchical two-level exchange (hier) sweep -----------------------
+    // On copper every flat strategy funnels each of a node's 8 GPUs through
+    // the node's single NIC. hier reduces up the switch/socket tree, runs
+    // the inner strategy across node leaders only (~8x fewer NIC bytes vs
+    // flat ASA/AR), and — composed with the chunked pipeline — streams
+    // chunks through the level flow-shop so the leader-level NIC leg of
+    // chunk i overlaps the intra-node tree of chunk i+1. Monolithic hier
+    // loses to the neighbour-placed flat ring (full-vector tree legs);
+    // pipelined hier beats it, and the win grows with GPUs per node.
+    let bytes = models::full_scale_bytes(&sess.rt.manifest, "alexnet")?;
+    let hier_ring = StrategyKind::Hier { inner: FlatKind::Ring };
+    for nodes in [2usize, 4] {
+        let k = nodes * 8;
+        let flat = sess.measure_exchange(StrategyKind::Ring, k, "copper", bytes, true)?;
+        let flat_piped =
+            sess.measure_exchange_opts(StrategyKind::Ring, k, "copper", bytes, true, 8, true)?;
+        let hier = sess.measure_exchange_opts(hier_ring, k, "copper", bytes, true, 8, true)?;
+        report(&format!("hier/copper{nodes}n/flat_ring"), flat.sim_total(), "s");
+        report(&format!("hier/copper{nodes}n/hier_ring_piped"), hier.sim_total(), "s");
+        report(
+            &format!("hier/copper{nodes}n/nic_bytes_cut"),
+            flat.wire_inter_bytes as f64 / hier.wire_inter_bytes as f64,
+            "x",
+        );
+        assert!(
+            hier.sim_total() < flat.sim_total(),
+            "copper {nodes}n: hier:ring piped {} !< flat ring {}",
+            hier.sim_total(),
+            flat.sim_total()
+        );
+        assert!(
+            hier.sim_total() < flat_piped.sim_total(),
+            "copper {nodes}n: hier:ring piped {} !< chunked flat ring {}",
+            hier.sim_total(),
+            flat_piped.sim_total()
+        );
+        assert!(
+            hier.wire_inter_bytes < flat.wire_inter_bytes,
+            "copper {nodes}n: hier must move fewer NIC bytes"
+        );
+    }
+    // GPUs-per-node ablation on explicit grid fabrics: the flat/hier ratio
+    // grows with GPU density (Shi et al. 2017's regime)
+    let mut prev_ratio = 0.0;
+    for dies in [1usize, 2, 4] {
+        let gpn = 2 * dies;
+        let k = 2 * gpn;
+        let topo = Topology::grid(2, 2, dies);
+        let flat = sess.measure_exchange_on(
+            StrategyKind::Ring, k, topo.clone(), bytes, true, 8, true,
+        )?;
+        let hier = sess.measure_exchange_on(hier_ring, k, topo, bytes, true, 8, true)?;
+        let ratio = flat.sim_total() / hier.sim_total();
+        report(&format!("hier/gpn{gpn}/flat_over_hier"), ratio, "x");
+        assert!(
+            ratio > prev_ratio,
+            "gpn={gpn}: hier win must grow with GPUs/node ({ratio} <= {prev_ratio})"
+        );
+        prev_ratio = ratio;
     }
 
     // --- real wall time of the exchange machinery (1M f32, 4 workers) ------

@@ -12,6 +12,8 @@
 //! transfers had no GPUDirect RDMA on the testbed, so they stage through
 //! host memory on both ends.
 
+use std::collections::BTreeMap;
+
 /// Where a GPU sits in the fabric.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GpuInfo {
@@ -66,6 +68,28 @@ impl Topology {
         Topology { name: format!("copper-{nodes}n"), gpus, n_nodes: nodes, ib: IbGen::Fdr }
     }
 
+    /// Parameterized copper-style fabric: `nodes` × `sockets` ×
+    /// `dies_per_socket` GPUs, one PCIe switch per socket, FDR between
+    /// nodes — the GPUs-per-node ablation axis of the hierarchical
+    /// exchange benchmarks (copper itself is `grid(n, 2, 4)`).
+    pub fn grid(nodes: usize, sockets: usize, dies_per_socket: usize) -> Topology {
+        assert!(nodes > 0 && sockets > 0 && dies_per_socket > 0);
+        let mut gpus = Vec::new();
+        for n in 0..nodes {
+            for socket in 0..sockets {
+                for _die in 0..dies_per_socket {
+                    gpus.push(GpuInfo { node: n, socket, switch: n * sockets + socket });
+                }
+            }
+        }
+        Topology {
+            name: format!("grid-{nodes}n{sockets}s{dies_per_socket}d"),
+            gpus,
+            n_nodes: nodes,
+            ib: IbGen::Fdr,
+        }
+    }
+
     /// mosaic: `nodes` nodes × 1 K20m GPU.
     pub fn mosaic(nodes: usize) -> Topology {
         let gpus = (0..nodes)
@@ -105,8 +129,57 @@ impl Topology {
         }
     }
 
+    /// Topology restricted to `ranks` (in order): what a leader-level inner
+    /// strategy prices against. GPUs keep their node/socket/switch
+    /// coordinates, so path classification is unchanged.
+    pub fn subset(&self, ranks: &[usize]) -> Topology {
+        let gpus: Vec<GpuInfo> = ranks.iter().map(|&r| self.gpus[r]).collect();
+        let n_nodes = gpus.iter().map(|g| g.node + 1).max().unwrap_or(0);
+        Topology {
+            name: format!("{}[{}]", self.name, ranks.len()),
+            gpus,
+            n_nodes,
+            ib: self.ib,
+        }
+    }
+
+    fn groups_by(&self, k: usize, key: impl Fn(&GpuInfo) -> usize) -> Vec<Vec<usize>> {
+        assert!(
+            k <= self.gpus.len(),
+            "{k} workers exceed the {}-GPU topology {}",
+            self.gpus.len(),
+            self.name
+        );
+        let mut map: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for r in 0..k {
+            map.entry(key(&self.gpus[r])).or_default().push(r);
+        }
+        map.into_values().collect()
+    }
+
+    /// Ranks `0..k` grouped by PCIe switch (the GPUDirect P2P domains),
+    /// ascending switch id; each group is ascending, so `group[0]` is the
+    /// switch leader.
+    pub fn switch_groups(&self, k: usize) -> Vec<Vec<usize>> {
+        self.groups_by(k, |g| g.switch)
+    }
+
+    /// Ranks `0..k` grouped by node, ascending node id; `group[0]` is the
+    /// node leader. Rank 0 always leads node 0, so rank 0's exchange
+    /// report covers every level of a hierarchical exchange.
+    pub fn node_groups(&self, k: usize) -> Vec<Vec<usize>> {
+        self.groups_by(k, |g| g.node)
+    }
+
+    /// One leader rank per populated node — the `hier` strategies run
+    /// their inner collective across exactly these ranks.
+    pub fn node_leaders(&self, k: usize) -> Vec<usize> {
+        self.node_groups(k).into_iter().map(|g| g[0]).collect()
+    }
+
     /// ASCII rendering of the layout (the `tmpi topo` command → Fig. 6).
     pub fn render(&self) -> String {
+        let leaders = self.node_leaders(self.n_gpus());
         let mut out = format!("topology {} ({} GPUs, IB {:?})\n", self.name, self.n_gpus(), self.ib);
         for n in 0..self.n_nodes {
             out.push_str(&format!("node {n}\n"));
@@ -120,7 +193,13 @@ impl Topology {
                     .iter()
                     .enumerate()
                     .filter(|(_, g)| g.node == n && g.socket == s)
-                    .map(|(i, _)| format!("gpu{i}"))
+                    .map(|(i, _)| {
+                        if leaders.contains(&i) {
+                            format!("gpu{i}*")
+                        } else {
+                            format!("gpu{i}")
+                        }
+                    })
                     .collect();
                 out.push_str(&format!("  socket {s} (CPU)--PCIe switch--[{}]\n", ids.join(" ")));
             }
@@ -131,6 +210,7 @@ impl Topology {
         if self.gpus.iter().any(|g| g.node == 0 && g.socket == 1) {
             out.push_str("(sockets joined by QPI; GPUDirect P2P only within a switch)\n");
         }
+        out.push_str("(* = node leader: root of the hier exchange's intra-node reduce tree)\n");
         out
     }
 }
@@ -188,5 +268,66 @@ mod tests {
         for i in 0..8 {
             assert!(r.contains(&format!("gpu{i}")), "{r}");
         }
+    }
+
+    #[test]
+    fn render_annotates_node_leaders() {
+        let r = Topology::copper(2).render();
+        assert!(r.contains("gpu0*"), "{r}");
+        assert!(r.contains("gpu8*"), "{r}");
+        assert!(!r.contains("gpu1*") && !r.contains("gpu4*"), "{r}");
+        assert!(r.contains("node leader"), "{r}");
+    }
+
+    #[test]
+    fn grid_generalizes_copper() {
+        let g = Topology::grid(2, 2, 4);
+        let c = Topology::copper(2);
+        assert_eq!(g.gpus, c.gpus);
+        assert_eq!(g.ib, IbGen::Fdr);
+        let small = Topology::grid(3, 2, 1);
+        assert_eq!(small.n_gpus(), 6);
+        assert_eq!(small.path(0, 1), PathKind::QpiStaged);
+        assert_eq!(small.path(1, 2), PathKind::Network);
+    }
+
+    #[test]
+    fn switch_and_node_groups_partition_ranks() {
+        let t = Topology::copper(2);
+        for k in [1usize, 3, 8, 11, 16] {
+            for groups in [t.switch_groups(k), t.node_groups(k)] {
+                let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..k).collect::<Vec<_>>(), "k={k}");
+                for g in &groups {
+                    assert!(!g.is_empty());
+                    assert!(g.windows(2).all(|w| w[0] < w[1]), "groups ascend");
+                }
+            }
+        }
+        // copper 16 ranks: 4 switches of 4, 2 nodes of 8
+        assert_eq!(t.switch_groups(16).len(), 4);
+        assert_eq!(t.node_groups(16).len(), 2);
+        assert_eq!(t.node_leaders(16), vec![0, 8]);
+        // partial fill: 11 ranks leave node 1 with 3 GPUs
+        assert_eq!(t.node_groups(11)[1], vec![8, 9, 10]);
+        // rank 0 is always the first node's leader
+        assert_eq!(t.node_leaders(5)[0], 0);
+        let m = Topology::mosaic(4);
+        assert_eq!(m.node_leaders(4), vec![0, 1, 2, 3]);
+        assert_eq!(m.switch_groups(4).len(), 4);
+    }
+
+    #[test]
+    fn subset_keeps_coordinates() {
+        let t = Topology::copper(2);
+        let s = t.subset(&[0, 8]);
+        assert_eq!(s.n_gpus(), 2);
+        assert_eq!(s.path(0, 1), PathKind::Network);
+        assert_eq!(s.ib, IbGen::Fdr);
+        assert_eq!(s.n_nodes, 2);
+        let one = t.subset(&[4, 5]);
+        assert_eq!(one.path(0, 1), PathKind::P2p);
+        assert_eq!(one.n_nodes, 1);
     }
 }

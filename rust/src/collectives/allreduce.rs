@@ -7,11 +7,17 @@
 //! full-vector host-to-host transfers each followed by a CPU summation, and
 //! a final H2D. Non-power-of-two worker counts fold the excess ranks into
 //! the butterfly (MPICH-style pre/post phases).
+//!
+//! Each butterfly round is priced with its *actual* dist-peers: on copper
+//! the dist=1 round pairs switch-local GPUs while the dist=8 round pairs
+//! GPUs across the NIC, so a single representative round would underprice
+//! the fabric (and misattribute the NIC byte split). On mosaic every round
+//! crosses nodes, so per-round pricing reproduces the old numbers exactly.
 
 use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
-use crate::simnet::{PhaseCost, Transfer};
+use crate::simnet::{split_traffic, PhaseCost, Transfer};
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
 
@@ -61,6 +67,9 @@ impl ExchangeStrategy for HostAllreduce {
             rep.sim_latency += c.latency;
             rep.sim_host_reduce += ctx.links.host_reduce_time(bytes);
             rep.phases += 1;
+            let s = split_traffic(ctx.topo, &folds);
+            rep.wire_intra_bytes += s.intra_bytes;
+            rep.wire_inter_bytes += s.inter_bytes;
             if rank < extra {
                 rep.wire_bytes += 0; // received only
             } else if rank >= p2 {
@@ -80,20 +89,23 @@ impl ExchangeStrategy for HostAllreduce {
                 dist <<= 1;
             }
         }
-        // all butterfly rounds have identical cost; charge them globally
+        // each round priced with its actual dist-peers (see module docs)
         let rounds = p2.trailing_zeros() as usize;
         if rounds > 0 {
-            let mut per_round: Vec<Transfer> = Vec::new();
-            // round with dist=1 is representative for contention: every rank
-            // of the butterfly talks to a distinct peer simultaneously
-            for r in 0..p2 {
-                per_round.push(Transfer { src: r, dst: r ^ 1, bytes });
+            let mut dist = 1;
+            while dist < p2 {
+                let per_round: Vec<Transfer> =
+                    (0..p2).map(|r| Transfer { src: r, dst: r ^ dist, bytes }).collect();
+                let c = host_phase(ctx, &per_round);
+                rep.sim_transfer += c.total();
+                rep.sim_latency += c.latency;
+                rep.sim_host_reduce += ctx.links.host_reduce_time(bytes);
+                rep.phases += 1;
+                let s = split_traffic(ctx.topo, &per_round);
+                rep.wire_intra_bytes += s.intra_bytes;
+                rep.wire_inter_bytes += s.inter_bytes;
+                dist <<= 1;
             }
-            let c = host_phase(ctx, &per_round);
-            rep.sim_transfer += rounds as f64 * c.total();
-            rep.sim_latency += rounds as f64 * c.latency;
-            rep.sim_host_reduce += rounds as f64 * ctx.links.host_reduce_time(bytes);
-            rep.phases += rounds;
         }
 
         // Unfold: results back to the folded ranks.
@@ -112,6 +124,9 @@ impl ExchangeStrategy for HostAllreduce {
             rep.sim_transfer += c.total();
             rep.sim_latency += c.latency;
             rep.phases += 1;
+            let s = split_traffic(ctx.topo, &unfolds);
+            rep.wire_intra_bytes += s.intra_bytes;
+            rep.wire_inter_bytes += s.inter_bytes;
         }
 
         // H2D once per rank.

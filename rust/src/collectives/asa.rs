@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
 use crate::precision::Wire;
-use crate::simnet::{phase_cost, Transfer};
+use crate::simnet::{phase_cost, split_traffic, Transfer};
 use crate::util::split_even;
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
@@ -108,6 +108,9 @@ fn asa_exchange(
     rep.sim_transfer += cost.total();
     rep.sim_latency += cost.latency;
     rep.phases += 1;
+    let s = split_traffic(ctx.topo, &transfers);
+    rep.wire_intra_bytes += s.intra_bytes;
+    rep.wire_inter_bytes += s.inter_bytes;
 
     // --- Sum: reduce my k copies on the "GPU" (Pallas sum-stack kernel) -----
     let (_, my_len) = parts[rank];
@@ -187,6 +190,9 @@ fn asa_exchange(
     rep.sim_transfer += cost.total();
     rep.sim_latency += cost.latency;
     rep.phases += 1;
+    let s = split_traffic(ctx.topo, &transfers);
+    rep.wire_intra_bytes += s.intra_bytes;
+    rep.wire_inter_bytes += s.inter_bytes;
 
     Ok(rep)
 }

@@ -1,0 +1,467 @@
+//! Hierarchical two-level exchange — the paper's §7 "better inter-node
+//! strategy" future work, in the hybrid intra/inter-node style of Poseidon
+//! (Zhang et al. 2015) and the topology-aware schemes Shi et al. (2017)
+//! show dominating flat collectives at high GPU-per-node counts.
+//!
+//! On copper, a flat strategy pushes every one of a node's 8 GPUs' traffic
+//! through the node's single NIC (`shared_nic_serializes`). The hierarchy
+//! instead:
+//!
+//! 1. **switch level (up)** — every GPU under a PCIe switch sends its
+//!    vector to the switch leader over GPUDirect P2P; the leader sums
+//!    (Pallas sum kernel when bound, host loop otherwise);
+//! 2. **socket level (up)** — switch leaders forward their partial sums
+//!    across the QPI to the node leader, which sums again;
+//! 3. **leader level** — node leaders run any flat inner strategy
+//!    (`ar|asa|asa16|ring`) across nodes only, over a group view of the
+//!    communicator ([`Comm::push_group`](crate::mpi::Comm::push_group)) and
+//!    a [`Topology::subset`](crate::cluster::Topology::subset) — so
+//!    per-node NIC traffic drops from ~8× the vector to the inner
+//!    strategy's leader-only footprint (8× less vs flat ASA/AR on copper);
+//! 4. **socket + switch level (down)** — the result broadcasts back down
+//!    the same tree.
+//!
+//! Monolithically the tree's intra-node legs cost more wire time than a
+//! neighbour-placed flat ring; the hierarchy wins by *streaming*: each
+//! level occupies a distinct serial fabric resource (switch PCIe up, host
+//! RAM/QPI, NIC, switch PCIe down), so under [`ChunkedPipeline`] chunk *i*'s
+//! leader-level NIC leg runs while chunk *i+1* climbs its intra-node tree.
+//! The per-level [`Leg`]s this strategy reports feed
+//! [`flow_pipeline_time`](crate::simnet::flow_pipeline_time), which prices
+//! exactly that flow-shop overlap (the up and down socket hops share the
+//! host-RAM machine, so their contention is never overlapped away).
+//!
+//! Accounting caveat: only node leaders run the leader-level inner
+//! exchange, so a non-leader rank's `CommReport` omits that level. Rank 0
+//! is always a node leader (it leads node 0), so rank 0's report — the one
+//! every driver and test reads — is complete. `Mean` divides once by the
+//! global rank count on the node leaders after the inner `Sum`.
+
+use anyhow::Result;
+
+use crate::mpi::{tags, Payload};
+use crate::precision::Wire;
+use crate::simnet::{
+    phase_cost, split_traffic, Leg, Transfer, MACHINE_HOST, MACHINE_INTER, MACHINE_INTRA_DOWN,
+    MACHINE_INTRA_UP,
+};
+
+use super::{
+    host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, FlatKind, ReduceOp,
+    StrategyKind,
+};
+
+/// Two-level hierarchical exchange over a flat inner strategy.
+#[derive(Clone)]
+pub struct Hierarchical {
+    inner: FlatKind,
+    wire: Wire,
+}
+
+impl Hierarchical {
+    pub fn new(inner: FlatKind, wire: Wire) -> Hierarchical {
+        Hierarchical { inner, wire }
+    }
+
+    /// The flat strategy the node leaders run.
+    pub fn inner(&self) -> FlatKind {
+        self.inner
+    }
+
+    /// Price one tree level (a phase of concurrent transfers): wire time,
+    /// global byte split, the flow-pipeline leg, and — for up-tree levels
+    /// that end in a summation of `sum_elems` f32 copies — the kernel
+    /// charge (gated on bound kernels like `Ring`'s, and charged at the
+    /// global maximum so every rank books the same phase).
+    fn charge_level(
+        &self,
+        rep: &mut CommReport,
+        ctx: &ExchangeCtx<'_, '_>,
+        transfers: &[Transfer],
+        machine: usize,
+        sum_elems: Option<usize>,
+    ) {
+        let c = phase_cost(ctx.topo, ctx.links, transfers, ctx.cuda_aware);
+        rep.sim_transfer += c.total();
+        rep.sim_latency += c.latency;
+        rep.sim_intra += c.total();
+        rep.phases += 1;
+        let s = split_traffic(ctx.topo, transfers);
+        rep.wire_intra_bytes += s.intra_bytes;
+        rep.wire_inter_bytes += s.inter_bytes;
+        rep.legs.push(Leg { machine, transfer: c.total(), latency: c.latency });
+        if let Some(elems) = sum_elems {
+            if ctx.kernels.is_some() {
+                rep.sim_kernel += ctx.links.gpu_reduce_time(4 * elems as u64);
+            }
+        }
+    }
+}
+
+/// Leader-side reduction of gathered copies into `buf` (Pallas sum kernel
+/// when bound, host loop otherwise — the ASA sum path).
+fn reduce_into(
+    buf: &mut [f32],
+    copies: &[Vec<f32>],
+    ctx: &ExchangeCtx<'_, '_>,
+    rep: &mut CommReport,
+) -> Result<()> {
+    if copies.is_empty() || buf.is_empty() {
+        return Ok(());
+    }
+    if let Some(kn) = ctx.kernels {
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(copies.len() + 1);
+        refs.push(&*buf);
+        for c in copies {
+            refs.push(c.as_slice());
+        }
+        let out = kn.sum_parts(&refs)?;
+        rep.real_kernel += out.exec_time;
+        buf.copy_from_slice(&out.value);
+    } else {
+        for c in copies {
+            host_add(buf, c);
+        }
+    }
+    Ok(())
+}
+
+impl ExchangeStrategy for Hierarchical {
+    fn name(&self) -> &'static str {
+        StrategyKind::Hier { inner: self.inner }.name()
+    }
+
+    fn exchange(
+        &self,
+        buf: &mut [f32],
+        op: ReduceOp,
+        ctx: &mut ExchangeCtx<'_, '_>,
+    ) -> Result<CommReport> {
+        let k = ctx.comm.size;
+        let rank = ctx.comm.rank;
+        let n = buf.len();
+        let mut rep = CommReport { strategy: self.name().into(), ..Default::default() };
+        if k == 1 {
+            return Ok(rep);
+        }
+        let sw_groups = ctx.topo.switch_groups(k);
+        let node_groups = ctx.topo.node_groups(k);
+        let leaders: Vec<usize> = node_groups.iter().map(|g| g[0]).collect();
+        let my_sw = sw_groups.iter().find(|g| g.contains(&rank)).unwrap().clone();
+        let my_node = node_groups.iter().find(|g| g.contains(&rank)).unwrap().clone();
+        let sw_leader = my_sw[0];
+        let node_leader = my_node[0];
+        // the switch leaders inside one node group (node leader is first)
+        let sw_leaders_of = |node_group: &[usize]| -> Vec<usize> {
+            node_group
+                .iter()
+                .copied()
+                .filter(|r| sw_groups.iter().any(|g| g[0] == *r))
+                .collect()
+        };
+
+        // ---- switch level, up: members -> switch leader (P2P) ------------
+        let bytes = 4 * n as u64;
+        let level_a: Vec<Transfer> = sw_groups
+            .iter()
+            .flat_map(|g| {
+                let leader = g[0];
+                g[1..].iter().map(move |&m| Transfer { src: m, dst: leader, bytes })
+            })
+            .collect();
+        if !level_a.is_empty() {
+            if rank != sw_leader {
+                ctx.comm.send(sw_leader, tags::HIER_UP, Payload::F32(buf.to_vec()), 0.0)?;
+                rep.wire_bytes += bytes;
+            } else {
+                let mut copies = Vec::with_capacity(my_sw.len() - 1);
+                for &m in &my_sw[1..] {
+                    copies.push(ctx.comm.recv(m, tags::HIER_UP)?.payload.into_f32()?);
+                }
+                reduce_into(buf, &copies, ctx, &mut rep)?;
+            }
+            let g_max = sw_groups.iter().map(|g| g.len()).max().unwrap();
+            self.charge_level(&mut rep, ctx, &level_a, MACHINE_INTRA_UP, Some(g_max * n));
+        }
+
+        // ---- socket level, up: switch leaders -> node leader (QPI) -------
+        let mut level_b: Vec<Transfer> = Vec::new();
+        let mut s_max = 1usize;
+        for g in &node_groups {
+            let sls = sw_leaders_of(g);
+            s_max = s_max.max(sls.len());
+            for &sl in &sls {
+                if sl != g[0] {
+                    level_b.push(Transfer { src: sl, dst: g[0], bytes });
+                }
+            }
+        }
+        if !level_b.is_empty() {
+            if rank == node_leader {
+                let sls = sw_leaders_of(&my_node);
+                let mut copies = Vec::with_capacity(sls.len().saturating_sub(1));
+                for &sl in &sls {
+                    if sl != rank {
+                        copies.push(ctx.comm.recv(sl, tags::HIER_UP + 1)?.payload.into_f32()?);
+                    }
+                }
+                reduce_into(buf, &copies, ctx, &mut rep)?;
+            } else if rank == sw_leader {
+                ctx.comm.send(node_leader, tags::HIER_UP + 1, Payload::F32(buf.to_vec()), 0.0)?;
+                rep.wire_bytes += bytes;
+            }
+            self.charge_level(&mut rep, ctx, &level_b, MACHINE_HOST, Some(s_max * n));
+        }
+
+        // ---- leader level: inner strategy across node leaders ------------
+        if leaders.len() > 1 {
+            let sub_topo = ctx.topo.subset(&leaders);
+            if rank == node_leader {
+                let frame = ctx.comm.push_group(&leaders)?;
+                let res = {
+                    let mut sub_ctx = ExchangeCtx {
+                        comm: &mut *ctx.comm,
+                        topo: &sub_topo,
+                        links: ctx.links,
+                        kernels: ctx.kernels,
+                        cuda_aware: ctx.cuda_aware,
+                        chunk_elems: ctx.chunk_elems,
+                    };
+                    self.inner.build(self.wire).exchange(buf, ReduceOp::Sum, &mut sub_ctx)
+                };
+                ctx.comm.pop_group(frame);
+                let sub = res?;
+                rep.legs.push(Leg {
+                    machine: MACHINE_INTER,
+                    transfer: sub.sim_transfer,
+                    latency: sub.sim_latency,
+                });
+                rep.sim_inter += sub.sim_transfer;
+                rep.merge(&sub);
+            }
+            // non-leaders wait for the broadcast; their report omits this
+            // level (rank 0 always leads node 0, so its report is complete)
+        }
+
+        // ---- mean: one global scale on the node leaders ------------------
+        if op == ReduceOp::Mean && rank == node_leader {
+            host_scale(buf, 1.0 / k as f32);
+        }
+
+        // ---- socket level, down: node leader -> switch leaders -----------
+        let level_d: Vec<Transfer> =
+            level_b.iter().map(|t| Transfer { src: t.dst, dst: t.src, bytes: t.bytes }).collect();
+        if !level_d.is_empty() {
+            if rank == node_leader {
+                for &sl in &sw_leaders_of(&my_node) {
+                    if sl != rank {
+                        ctx.comm.send(sl, tags::HIER_DOWN, Payload::F32(buf.to_vec()), 0.0)?;
+                        rep.wire_bytes += bytes;
+                    }
+                }
+            } else if rank == sw_leader {
+                let m = ctx.comm.recv(node_leader, tags::HIER_DOWN)?;
+                buf.copy_from_slice(&m.payload.into_f32()?);
+            }
+            self.charge_level(&mut rep, ctx, &level_d, MACHINE_HOST, None);
+        }
+
+        // ---- switch level, down: switch leader -> members ----------------
+        let level_e: Vec<Transfer> =
+            level_a.iter().map(|t| Transfer { src: t.dst, dst: t.src, bytes: t.bytes }).collect();
+        if !level_e.is_empty() {
+            if rank == sw_leader {
+                for &m in &my_sw[1..] {
+                    ctx.comm.send(m, tags::HIER_DOWN + 1, Payload::F32(buf.to_vec()), 0.0)?;
+                    rep.wire_bytes += bytes;
+                }
+            } else {
+                let m = ctx.comm.recv(sw_leader, tags::HIER_DOWN + 1)?;
+                buf.copy_from_slice(&m.payload.into_f32()?);
+            }
+            self.charge_level(&mut rep, ctx, &level_e, MACHINE_INTRA_DOWN, None);
+        }
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Asa, Ring};
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::testkit;
+
+    /// The shared exchange harness, pinned to a hier composition.
+    fn run_hier(
+        inner: FlatKind,
+        k: usize,
+        bufs: Vec<Vec<f32>>,
+        op: ReduceOp,
+        topo: Topology,
+    ) -> (Vec<Vec<f32>>, CommReport) {
+        assert_eq!(bufs.len(), k);
+        testkit::run_exchange(StrategyKind::Hier { inner }, None, bufs, op, &topo)
+    }
+
+    fn expected(bufs: &[Vec<f32>], mean: bool) -> Vec<f32> {
+        let mut out = vec![0.0f32; bufs[0].len()];
+        for b in bufs {
+            for (o, x) in out.iter_mut().zip(b) {
+                *o += x;
+            }
+        }
+        if mean {
+            for o in out.iter_mut() {
+                *o /= bufs.len() as f32;
+            }
+        }
+        out
+    }
+
+    fn mk_bufs(k: usize, n: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|r| (0..n).map(|i| (((r * 131 + i * 17) % 997) as f32 - 498.0) * 1e-3).collect())
+            .collect()
+    }
+
+    #[test]
+    fn hier_matches_host_sum_on_copper_and_mosaic() {
+        for inner in [FlatKind::Ar, FlatKind::Asa, FlatKind::Ring] {
+            for (k, topo) in [
+                (16usize, Topology::copper(2)),
+                (8, Topology::copper(1)),
+                (5, Topology::mosaic(5)),
+                (11, Topology::copper(2)),
+                (2, Topology::grid(1, 2, 1)),
+            ] {
+                for n in [0usize, 1, 3, 64, 1003] {
+                    let bufs = mk_bufs(k, n);
+                    let want = expected(&bufs, false);
+                    let (outs, _) = run_hier(inner, k, bufs, ReduceOp::Sum, topo.clone());
+                    for (r, out) in outs.iter().enumerate() {
+                        testkit::allclose(out, &want, 1e-4, 1e-4).unwrap_or_else(|e| {
+                            panic!("{:?} k={k} n={n} rank={r}: {e}", inner)
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_mean_divides_by_global_rank_count() {
+        let k = 16;
+        let n = 257;
+        let bufs = mk_bufs(k, n);
+        let want = expected(&bufs, true);
+        let (outs, _) = run_hier(FlatKind::Ring, k, bufs, ReduceOp::Mean, Topology::copper(2));
+        for out in &outs {
+            testkit::allclose(out, &want, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn hier_asa16_close_within_half_precision() {
+        let k = 16;
+        let n = 512;
+        let bufs = mk_bufs(k, n);
+        let want = expected(&bufs, false);
+        let (outs, rep) =
+            run_hier(FlatKind::Asa16, k, bufs, ReduceOp::Sum, Topology::copper(2));
+        for out in &outs {
+            testkit::allclose(out, &want, 2e-2, 2e-2).unwrap();
+        }
+        // the leader-level inner moved half-width bytes across the NIC
+        assert!(rep.wire_inter_bytes > 0);
+    }
+
+    #[test]
+    fn hier_all_ranks_agree_exactly_for_f32_inners() {
+        for inner in [FlatKind::Ar, FlatKind::Asa, FlatKind::Ring] {
+            let (outs, _) =
+                run_hier(inner, 16, mk_bufs(16, 777), ReduceOp::Sum, Topology::copper(2));
+            for out in &outs[1..] {
+                assert_eq!(out, &outs[0], "{inner:?}: broadcast must leave ranks identical");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_cuts_nic_bytes_vs_flat_inner_on_copper() {
+        use super::super::allreduce::tests::run_collective;
+        let k = 16;
+        let n = 40_000;
+        let topo = Topology::copper(2);
+        let mk = || mk_bufs(k, n);
+        let (_, flat_asa) = run_collective(Asa, k, mk(), ReduceOp::Sum, topo.clone());
+        let (_, flat_ring) = run_collective(Ring, k, mk(), ReduceOp::Sum, topo.clone());
+        let (_, h_asa) = run_hier(FlatKind::Asa, k, mk(), ReduceOp::Sum, topo.clone());
+        let (_, h_ring) = run_hier(FlatKind::Ring, k, mk(), ReduceOp::Sum, topo);
+        assert!(
+            h_asa.wire_inter_bytes < flat_asa.wire_inter_bytes,
+            "hier:asa {} !< asa {}",
+            h_asa.wire_inter_bytes,
+            flat_asa.wire_inter_bytes
+        );
+        assert!(h_ring.wire_inter_bytes < flat_ring.wire_inter_bytes);
+        // the paper's motivation: ~8x on copper's 8-GPU nodes for all-pairs
+        // flat strategies (every GPU pushed ~the full vector through the NIC)
+        assert!(
+            flat_asa.wire_inter_bytes as f64 / h_asa.wire_inter_bytes as f64 > 7.0,
+            "expected ~8x NIC cut, got {}x",
+            flat_asa.wire_inter_bytes as f64 / h_asa.wire_inter_bytes as f64
+        );
+    }
+
+    #[test]
+    fn hier_report_splits_transfer_into_intra_and_inter() {
+        let (_, rep) =
+            run_hier(FlatKind::Ring, 16, mk_bufs(16, 10_000), ReduceOp::Sum, Topology::copper(2));
+        assert!(rep.sim_intra > 0.0 && rep.sim_inter > 0.0);
+        assert!((rep.sim_intra + rep.sim_inter - rep.sim_transfer).abs() < 1e-12);
+        // 5 legs on copper-2: switch up, socket up, leaders, socket down,
+        // switch down
+        assert_eq!(rep.legs.len(), 5);
+        let leg_total: f64 = rep.legs.iter().map(|l| l.transfer).sum();
+        assert!((leg_total - rep.sim_transfer).abs() < 1e-12);
+        // host fallback: no GPU kernel charge (ring-style gating)
+        assert_eq!(rep.sim_kernel, 0.0);
+    }
+
+    #[test]
+    fn hier_on_mosaic_degenerates_to_inner() {
+        use super::super::allreduce::tests::run_collective;
+        let k = 5;
+        let n = 1003;
+        let topo = Topology::mosaic(k);
+        let (flat_outs, flat) =
+            run_collective(Ring, k, mk_bufs(k, n), ReduceOp::Sum, topo.clone());
+        let (h_outs, h) = run_hier(FlatKind::Ring, k, mk_bufs(k, n), ReduceOp::Sum, topo);
+        assert_eq!(flat_outs, h_outs, "1 GPU/node: hier is exactly its inner");
+        assert!((flat.sim_transfer - h.sim_transfer).abs() < 1e-15);
+        assert_eq!(flat.wire_inter_bytes, h.wire_inter_bytes);
+        assert_eq!(h.legs.len(), 1, "only the leader-level leg");
+    }
+
+    #[test]
+    fn hier_single_node_skips_the_inner_strategy() {
+        // all ranks under one node: tree up + broadcast down, no NIC bytes
+        let (outs, rep) =
+            run_hier(FlatKind::Asa, 8, mk_bufs(8, 501), ReduceOp::Sum, Topology::copper(1));
+        let want = expected(&mk_bufs(8, 501), false);
+        for out in &outs {
+            testkit::allclose(out, &want, 1e-4, 1e-4).unwrap();
+        }
+        assert_eq!(rep.wire_inter_bytes, 0);
+        assert_eq!(rep.sim_inter, 0.0);
+        assert!(rep.sim_intra > 0.0);
+        assert_eq!(rep.legs.len(), 4, "up x2 + down x2, no inter leg");
+    }
+
+    #[test]
+    fn hier_builds_from_strategy_kind() {
+        let s = StrategyKind::Hier { inner: FlatKind::Asa16 }.build(Wire::Bf16);
+        assert_eq!(s.name(), "hier:asa16");
+    }
+}

@@ -25,11 +25,13 @@
 mod allreduce;
 mod asa;
 mod chunked;
+mod hier;
 mod ring;
 
 pub use allreduce::HostAllreduce;
 pub use asa::{Asa, Asa16};
 pub use chunked::ChunkedPipeline;
+pub use hier::Hierarchical;
 pub use ring::Ring;
 
 use anyhow::{anyhow, Result};
@@ -38,7 +40,7 @@ use crate::cluster::Topology;
 use crate::mpi::Comm;
 use crate::precision::Wire;
 use crate::runtime::Kernels;
-use crate::simnet::LinkParams;
+use crate::simnet::{Leg, LinkParams};
 
 /// Reduction applied across ranks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -92,6 +94,21 @@ pub struct CommReport {
     pub phases: usize,
     /// Pipeline chunks this exchange was driven in (0 or 1 = monolithic).
     pub chunks: usize,
+    /// Global bytes the whole exchange moved on intra-node paths (P2P or
+    /// QPI), summed over every rank's transfers — identical across ranks.
+    pub wire_intra_bytes: u64,
+    /// Global bytes that crossed a node boundary (the NIC traffic the
+    /// hierarchical exchange exists to cut).
+    pub wire_inter_bytes: u64,
+    /// Transfer time of the intra-node tree levels (`hier` only; flat
+    /// strategies leave the intra/inter time split at zero).
+    pub sim_intra: f64,
+    /// Transfer time of the leader-level inter-node exchange (`hier` only).
+    pub sim_inter: f64,
+    /// Per-level wire legs of one exchange (`hier` only): the chunked
+    /// scheduler prices cross-level overlap from these via
+    /// [`flow_pipeline_time`](crate::simnet::flow_pipeline_time).
+    pub legs: Vec<Leg>,
 }
 
 impl CommReport {
@@ -110,6 +127,25 @@ impl CommReport {
         } else {
             0.0
         }
+    }
+
+    /// Accumulate a sub-exchange's accounting into this report — used by
+    /// the chunked scheduler (per chunk) and the hierarchical strategy
+    /// (leader-level sub-report). `strategy`, `chunks` and `legs` are the
+    /// caller's to manage.
+    pub fn merge(&mut self, sub: &CommReport) {
+        self.wire_bytes += sub.wire_bytes;
+        self.wire_intra_bytes += sub.wire_intra_bytes;
+        self.wire_inter_bytes += sub.wire_inter_bytes;
+        self.sim_transfer += sub.sim_transfer;
+        self.sim_latency += sub.sim_latency;
+        self.sim_kernel += sub.sim_kernel;
+        self.sim_host_reduce += sub.sim_host_reduce;
+        self.sim_overlapped += sub.sim_overlapped;
+        self.sim_intra += sub.sim_intra;
+        self.sim_inter += sub.sim_inter;
+        self.real_kernel += sub.real_kernel;
+        self.phases += sub.phases;
     }
 
     /// Share of exchange time in GPU kernels (paper: 1.6 % for the ASA sum).
@@ -137,22 +173,89 @@ pub trait ExchangeStrategy: Send + Sync {
     ) -> Result<CommReport>;
 }
 
-/// Strategy selection by name (config files / CLI).
+/// Flat strategies — directly selectable, and the inner collective a
+/// [`StrategyKind::Hier`] composition runs across node leaders.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StrategyKind {
+pub enum FlatKind {
     Ar,
     Asa,
     Asa16,
     Ring,
 }
 
-impl StrategyKind {
-    /// The valid names, for error messages and help text.
+impl FlatKind {
+    /// The valid flat names, for error messages and help text.
     pub const NAMES: &'static str = "ar|allreduce|asa|asa16|ring";
 
-    /// Case-insensitive name lookup ("ASA16" from a config file is valid).
-    pub fn parse(s: &str) -> Option<StrategyKind> {
+    pub fn parse(s: &str) -> Option<FlatKind> {
         match s.to_ascii_lowercase().as_str() {
+            "ar" | "allreduce" => Some(FlatKind::Ar),
+            "asa" => Some(FlatKind::Asa),
+            "asa16" => Some(FlatKind::Asa16),
+            "ring" => Some(FlatKind::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FlatKind::Ar => "ar",
+            FlatKind::Asa => "asa",
+            FlatKind::Asa16 => "asa16",
+            FlatKind::Ring => "ring",
+        }
+    }
+
+    pub fn build(self, wire: Wire) -> Box<dyn ExchangeStrategy> {
+        match self {
+            FlatKind::Ar => Box::new(HostAllreduce),
+            FlatKind::Asa => Box::new(Asa),
+            FlatKind::Asa16 => Box::new(Asa16::new(wire)),
+            FlatKind::Ring => Box::new(Ring),
+        }
+    }
+}
+
+/// A flat kind *is* a strategy kind — the correspondence the hier
+/// benchmarks and tests use to compare a composition against its inner.
+impl From<FlatKind> for StrategyKind {
+    fn from(f: FlatKind) -> StrategyKind {
+        match f {
+            FlatKind::Ar => StrategyKind::Ar,
+            FlatKind::Asa => StrategyKind::Asa,
+            FlatKind::Asa16 => StrategyKind::Asa16,
+            FlatKind::Ring => StrategyKind::Ring,
+        }
+    }
+}
+
+/// Strategy selection by name (config files / CLI). `hier:<inner>` composes
+/// the two-level hierarchical exchange over any flat inner (`hier` alone
+/// defaults to `hier:ring`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    Ar,
+    Asa,
+    Asa16,
+    Ring,
+    Hier { inner: FlatKind },
+}
+
+impl StrategyKind {
+    /// The valid names, for error messages and help text.
+    pub const NAMES: &'static str = "ar|allreduce|asa|asa16|ring|hier:<inner>";
+
+    /// Case-insensitive name lookup ("ASA16" or "HIER:Ring" from a config
+    /// file is valid).
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "hier" {
+            return Some(StrategyKind::Hier { inner: FlatKind::Ring });
+        }
+        if let Some(rest) = lower.strip_prefix("hier:") {
+            return FlatKind::parse(rest).map(|inner| StrategyKind::Hier { inner });
+        }
+        match lower.as_str() {
             "ar" | "allreduce" => Some(StrategyKind::Ar),
             "asa" => Some(StrategyKind::Asa),
             "asa16" => Some(StrategyKind::Asa16),
@@ -163,7 +266,18 @@ impl StrategyKind {
 
     /// [`parse`](Self::parse) that fails with an error naming the valid
     /// strategies — what config files and CLI flags surface to the user.
+    /// A bad hier inner (`hier:warp`) names the valid inner set.
     pub fn from_name(s: &str) -> Result<StrategyKind> {
+        if let Some(rest) = s.to_ascii_lowercase().strip_prefix("hier:") {
+            return FlatKind::parse(rest)
+                .map(|inner| StrategyKind::Hier { inner })
+                .ok_or_else(|| {
+                    anyhow!(
+                        "unknown inner strategy '{rest}' for hier (valid: hier:{{{}}})",
+                        FlatKind::NAMES
+                    )
+                });
+        }
         Self::parse(s)
             .ok_or_else(|| anyhow!("unknown exchange strategy '{s}' (valid: {})", Self::NAMES))
     }
@@ -174,7 +288,22 @@ impl StrategyKind {
             StrategyKind::Asa => "asa",
             StrategyKind::Asa16 => "asa16",
             StrategyKind::Ring => "ring",
+            StrategyKind::Hier { inner } => match inner {
+                FlatKind::Ar => "hier:ar",
+                FlatKind::Asa => "hier:asa",
+                FlatKind::Asa16 => "hier:asa16",
+                FlatKind::Ring => "hier:ring",
+            },
         }
+    }
+
+    /// Does this strategy move wire bytes at 16-bit precision? (EASGD uses
+    /// this to pick the elastic exchange's wire format.)
+    pub fn half_wire(self) -> bool {
+        matches!(
+            self,
+            StrategyKind::Asa16 | StrategyKind::Hier { inner: FlatKind::Asa16 }
+        )
     }
 
     pub fn build(self, wire: Wire) -> Box<dyn ExchangeStrategy> {
@@ -183,6 +312,7 @@ impl StrategyKind {
             StrategyKind::Asa => Box::new(Asa),
             StrategyKind::Asa16 => Box::new(Asa16::new(wire)),
             StrategyKind::Ring => Box::new(Ring),
+            StrategyKind::Hier { inner } => Box::new(Hierarchical::new(inner, wire)),
         }
     }
 }
@@ -208,11 +338,30 @@ mod tests {
 
     #[test]
     fn strategy_kind_parse_roundtrip() {
-        for k in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring] {
+        for k in [
+            StrategyKind::Ar,
+            StrategyKind::Asa,
+            StrategyKind::Asa16,
+            StrategyKind::Ring,
+            StrategyKind::Hier { inner: FlatKind::Ar },
+            StrategyKind::Hier { inner: FlatKind::Asa },
+            StrategyKind::Hier { inner: FlatKind::Asa16 },
+            StrategyKind::Hier { inner: FlatKind::Ring },
+        ] {
             assert_eq!(StrategyKind::parse(k.name()), Some(k));
         }
         assert_eq!(StrategyKind::parse("allreduce"), Some(StrategyKind::Ar));
+        assert_eq!(
+            StrategyKind::parse("hier"),
+            Some(StrategyKind::Hier { inner: FlatKind::Ring })
+        );
+        assert_eq!(
+            StrategyKind::parse("hier:allreduce"),
+            Some(StrategyKind::Hier { inner: FlatKind::Ar })
+        );
         assert_eq!(StrategyKind::parse("nope"), None);
+        assert_eq!(StrategyKind::parse("hier:warp"), None);
+        assert_eq!(StrategyKind::parse("hier:hier:ring"), None, "hier does not nest");
     }
 
     #[test]
@@ -220,6 +369,10 @@ mod tests {
         assert_eq!(StrategyKind::parse("ASA16"), Some(StrategyKind::Asa16));
         assert_eq!(StrategyKind::parse("Ring"), Some(StrategyKind::Ring));
         assert_eq!(StrategyKind::parse("AllReduce"), Some(StrategyKind::Ar));
+        assert_eq!(
+            StrategyKind::parse("HIER:Asa16"),
+            Some(StrategyKind::Hier { inner: FlatKind::Asa16 })
+        );
     }
 
     #[test]
@@ -228,6 +381,53 @@ mod tests {
         assert!(err.contains("warp"), "{err}");
         assert!(err.contains("asa16") && err.contains("ring"), "{err}");
         assert_eq!(StrategyKind::from_name("ASA").unwrap(), StrategyKind::Asa);
+        // a bad hier inner names the valid inner set specifically
+        let err = StrategyKind::from_name("hier:warp").unwrap_err().to_string();
+        assert!(err.contains("warp") && err.contains("hier"), "{err}");
+        assert!(err.contains(FlatKind::NAMES), "{err}");
+        assert_eq!(
+            StrategyKind::from_name("hier:ring").unwrap(),
+            StrategyKind::Hier { inner: FlatKind::Ring }
+        );
+    }
+
+    #[test]
+    fn half_wire_matrix() {
+        assert!(StrategyKind::Asa16.half_wire());
+        assert!(StrategyKind::Hier { inner: FlatKind::Asa16 }.half_wire());
+        assert!(!StrategyKind::Asa.half_wire());
+        assert!(!StrategyKind::Hier { inner: FlatKind::Ring }.half_wire());
+    }
+
+    #[test]
+    fn merge_accumulates_all_accounting() {
+        let sub = CommReport {
+            wire_bytes: 10,
+            wire_intra_bytes: 6,
+            wire_inter_bytes: 4,
+            sim_transfer: 1.0,
+            sim_latency: 0.1,
+            sim_kernel: 0.2,
+            sim_host_reduce: 0.3,
+            sim_overlapped: 0.05,
+            sim_intra: 0.7,
+            sim_inter: 0.3,
+            real_kernel: 0.01,
+            phases: 3,
+            ..Default::default()
+        };
+        let mut rep = CommReport::default();
+        rep.merge(&sub);
+        rep.merge(&sub);
+        assert_eq!(rep.wire_bytes, 20);
+        assert_eq!(rep.wire_intra_bytes, 12);
+        assert_eq!(rep.wire_inter_bytes, 8);
+        assert_eq!(rep.phases, 6);
+        assert!((rep.sim_transfer - 2.0).abs() < 1e-12);
+        assert!((rep.sim_intra - 1.4).abs() < 1e-12);
+        assert!((rep.sim_inter - 0.6).abs() < 1e-12);
+        assert!((rep.sim_overlapped - 0.1).abs() < 1e-12);
+        assert!(rep.legs.is_empty(), "merge leaves legs to the caller");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
-use crate::simnet::{phase_cost, Transfer};
+use crate::simnet::{phase_cost, split_traffic, Transfer};
 use crate::util::split_even;
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
@@ -46,14 +46,20 @@ impl ExchangeStrategy for Ring {
         // for all k transfers overstates shared-resource contention). Every
         // rank builds the same global transfer set, keeping clocks identical.
         let (topo, links, cuda) = (ctx.topo, ctx.links, ctx.cuda_aware);
-        let step_cost = |seg_of_rank: &dyn Fn(usize) -> usize| {
-            let transfers: Vec<Transfer> = (0..k)
+        let step_transfers = |seg_of_rank: &dyn Fn(usize) -> usize| -> Vec<Transfer> {
+            (0..k)
                 .map(|r| Transfer {
                     src: r,
                     dst: (r + 1) % k,
                     bytes: 4 * parts[seg_of_rank(r)].1 as u64,
                 })
-                .collect();
+                .collect()
+        };
+        let step_cost = |rep: &mut CommReport, seg_of_rank: &dyn Fn(usize) -> usize| {
+            let transfers = step_transfers(seg_of_rank);
+            let s = split_traffic(topo, &transfers);
+            rep.wire_intra_bytes += s.intra_bytes;
+            rep.wire_inter_bytes += s.inter_bytes;
             phase_cost(topo, links, &transfers, cuda)
         };
 
@@ -70,7 +76,7 @@ impl ExchangeStrategy for Ring {
             let incoming = m.payload.into_f32()?;
             host_add(&mut buf[roff..roff + rlen], &incoming);
             rep.wire_bytes += 4 * slen as u64;
-            let c = step_cost(&|r| (r + k - step) % k);
+            let c = step_cost(&mut rep, &|r| (r + k - step) % k);
             rep.sim_transfer += c.total();
             rep.sim_latency += c.latency;
             // the per-step partial sum is a GPU kernel only when kernels are
@@ -100,7 +106,7 @@ impl ExchangeStrategy for Ring {
             debug_assert_eq!(incoming.len(), rlen);
             buf[roff..roff + rlen].copy_from_slice(&incoming);
             rep.wire_bytes += 4 * slen as u64;
-            let c = step_cost(&|r| (r + 1 + k - step) % k);
+            let c = step_cost(&mut rep, &|r| (r + 1 + k - step) % k);
             rep.sim_transfer += c.total();
             rep.sim_latency += c.latency;
             rep.phases += 1;

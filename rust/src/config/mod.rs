@@ -154,6 +154,11 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
     if let Some(v) = t.get("strategy") {
         cfg.strategy = StrategyKind::from_name(v.as_str()?)?;
     }
+    // `exchange` is the preferred spelling (it also selects `hier:<inner>`
+    // compositions); it wins when both keys are present
+    if let Some(v) = t.get("exchange") {
+        cfg.strategy = StrategyKind::from_name(v.as_str()?)?;
+    }
     if let Some(v) = t.get("wire") {
         cfg.wire = match v.as_str()? {
             "f16" => Wire::F16,
@@ -266,6 +271,10 @@ pub fn easgd_from_file(path: &Path) -> Result<EasgdConfig> {
     if let Some(v) = t.get("pipeline") {
         cfg.pipeline = v.as_bool()?;
     }
+    // wire-format driver for the elastic exchange (asa16-family halves it)
+    if let Some(v) = t.get("exchange") {
+        cfg.exchange = StrategyKind::from_name(v.as_str()?)?;
+    }
     cfg.lr = lr_from(t)?;
     Ok(cfg)
 }
@@ -330,6 +339,32 @@ transport = "platoon-shm"
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn exchange_key_selects_hier_and_wins_over_strategy() {
+        use crate::collectives::FlatKind;
+        let t = parse("[train]\nstrategy = \"asa\"\nexchange = \"hier:asa16\"").unwrap();
+        let cfg = bsp_from_table(&t).unwrap();
+        assert_eq!(cfg.strategy, StrategyKind::Hier { inner: FlatKind::Asa16 });
+        // and alone
+        let t = parse("[train]\nexchange = \"hier:ring\"").unwrap();
+        assert_eq!(
+            bsp_from_table(&t).unwrap().strategy,
+            StrategyKind::Hier { inner: FlatKind::Ring }
+        );
+    }
+
+    #[test]
+    fn easgd_exchange_key_parses_and_rejects_bad_inner() {
+        let p = std::env::temp_dir().join(format!("tmpi_cfg_ex_{}.toml", std::process::id()));
+        std::fs::write(&p, "[easgd]\nworkers = 2\nexchange = \"hier:asa16\"").unwrap();
+        let cfg = easgd_from_file(&p).unwrap();
+        assert!(cfg.exchange.half_wire());
+        std::fs::write(&p, "[easgd]\nexchange = \"hier:warp\"").unwrap();
+        let err = easgd_from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("warp") && err.contains("asa16"), "{err}");
+        let _ = std::fs::remove_file(p);
     }
 
     #[test]

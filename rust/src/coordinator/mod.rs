@@ -77,12 +77,29 @@ impl Session {
         chunks: usize,
         pipeline: bool,
     ) -> Result<CommReport> {
+        let topo = Topology::by_name(topology, k)
+            .ok_or_else(|| anyhow::anyhow!("unknown topology '{topology}'"))?;
+        self.measure_exchange_on(strategy, k, topo, full_bytes, cuda_aware, chunks, pipeline)
+    }
+
+    /// [`measure_exchange_opts`](Self::measure_exchange_opts) against an
+    /// explicit [`Topology`] — the GPUs-per-node ablations probe
+    /// [`Topology::grid`] fabrics that have no preset name.
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_exchange_on(
+        &self,
+        strategy: StrategyKind,
+        k: usize,
+        topo: Topology,
+        full_bytes: u64,
+        cuda_aware: bool,
+        chunks: usize,
+        pipeline: bool,
+    ) -> Result<CommReport> {
         // real buffers are capped; sim time scales linearly to full_bytes
         let probe_elems: usize = 1_000_000.min((full_bytes / 4) as usize).max(1);
         let scale = full_bytes as f64 / (4.0 * probe_elems as f64);
         let chunk_elems = if chunks > 1 { probe_elems.div_ceil(chunks) } else { 0 };
-        let topo = Topology::by_name(topology, k)
-            .ok_or_else(|| anyhow::anyhow!("unknown topology '{topology}'"))?;
         let links = LinkParams::default();
         let rt = self.rt.clone();
 
@@ -127,7 +144,15 @@ impl Session {
         rep.sim_kernel *= scale;
         rep.sim_host_reduce *= scale;
         rep.sim_overlapped *= scale;
+        rep.sim_intra *= scale;
+        rep.sim_inter *= scale;
         rep.wire_bytes = (rep.wire_bytes as f64 * scale) as u64;
+        rep.wire_intra_bytes = (rep.wire_intra_bytes as f64 * scale) as u64;
+        rep.wire_inter_bytes = (rep.wire_inter_bytes as f64 * scale) as u64;
+        for leg in &mut rep.legs {
+            leg.transfer *= scale;
+            leg.latency *= scale;
+        }
         Ok(rep)
     }
 

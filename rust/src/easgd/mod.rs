@@ -27,10 +27,12 @@ use std::thread;
 use anyhow::{anyhow, Result};
 
 use crate::cluster::Topology;
+use crate::collectives::StrategyKind;
 use crate::data::{FeatureDataset, ImageDataset, ImageSpec};
 use crate::metrics::Breakdown;
 use crate::models;
 use crate::mpi::{self, tags, Payload};
+use crate::precision::Wire;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::LrSchedule;
 use crate::simnet::{phase_time, LinkParams, Transfer};
@@ -75,6 +77,13 @@ pub struct EasgdConfig {
     /// stream chunks so the server's elastic update of chunk i−1 overlaps
     /// chunk i's arrival (only meaningful with `chunk_kib > 0`)
     pub pipeline: bool,
+    /// Wire-format driver for the elastic exchange (`exchange = "..."` in
+    /// the TOML, same names as BSP): an `asa16`-family strategy (`asa16`,
+    /// `hier:asa16`) moves w/c as f16 halves — half the priced bytes, real
+    /// rounding on the payload. EASGD's exchange is worker↔server
+    /// point-to-point, so the collective *structure* of the name has no
+    /// effect here; only its wire format does.
+    pub exchange: StrategyKind,
 }
 
 impl EasgdConfig {
@@ -95,6 +104,7 @@ impl EasgdConfig {
             sim_model: None,
             chunk_kib: 0,
             pipeline: true,
+            exchange: StrategyKind::Asa,
         }
     }
 }
@@ -400,11 +410,30 @@ fn worker_main(
 
         // elastic exchange every τ iterations
         if (iter + 1) % cfg.tau == 0 {
-            let wire = exchange_cost(cfg.transport, topo, links, rank, server, bytes) * comm_scale;
+            // asa16-family exchange strategies halve the wire format: w and
+            // c really round-trip through f16, and the priced bytes halve
+            let half = cfg.exchange.half_wire();
+            let wire_bytes = if half { bytes / 2 } else { bytes };
+            let wire =
+                exchange_cost(cfg.transport, topo, links, rank, server, wire_bytes) * comm_scale;
             // send w with our clock; server replies with c + its finish time
-            comm.send(server, tags::EASGD_PUSH, Payload::F32(params.clone()), clock)?;
+            let payload = if half {
+                let mut bits = Vec::new();
+                Wire::F16.pack(&params, &mut bits);
+                Payload::U16(bits)
+            } else {
+                Payload::F32(params.clone())
+            };
+            comm.send(server, tags::EASGD_PUSH, payload, clock)?;
             let m = comm.recv(server, tags::EASGD_PULL)?;
-            let center = m.payload.into_f32()?;
+            let center = match m.payload {
+                Payload::U16(bits) => {
+                    let mut vals = Vec::new();
+                    Wire::F16.unpack(&bits, &mut vals);
+                    vals
+                }
+                other => other.into_f32()?,
+            };
             // total comm = wire + queueing at the server (finish - arrival)
             let finish = m.sent_clock;
             let t_comm = (finish - clock).max(0.0) + wire;
@@ -448,27 +477,44 @@ fn server_main(
     let mut stopped = 0usize;
     let alpha = cfg.alpha as f32;
     // one-way w-down wire time (worker 0's path is representative: every
-    // worker reaches the server over an equivalent leg on both presets)
-    let down_wire = exchange_cost(cfg.transport, topo, links, 0, cfg.workers, bytes) / 2.0;
+    // worker reaches the server over an equivalent leg on both presets);
+    // a 16-bit exchange halves the arriving stream, not the f32 update
+    let wire_bytes = if cfg.exchange.half_wire() { bytes / 2 } else { bytes };
+    let down_wire = exchange_cost(cfg.transport, topo, links, 0, cfg.workers, wire_bytes) / 2.0;
     let handle_cost = server_handle_cost(cfg, links, bytes, down_wire) * comm_scale;
 
     while stopped < cfg.workers {
-        // serve pushes and stops in arrival order
+        // serve pushes and stops in arrival order; the wire format (f32 or
+        // packed f16) only changes how w arrives and how c is replied —
+        // queueing and the elastic update are one code path
         let m = comm.recv_any_of(&[tags::EASGD_PUSH, tags::CTL])?;
-        match m.payload {
+        let (from, sent_clock) = (m.from, m.sent_clock);
+        let (w, half) = match m.payload {
             Payload::Ctl(_) => {
                 stopped += 1;
+                continue;
             }
-            Payload::F32(w) => {
-                // queueing: handling starts when both server and message ready
-                server_clock = server_clock.max(m.sent_clock) + handle_cost;
-                // reply with the center as seen by this worker (pre-update)
-                comm.send(m.from, tags::EASGD_PULL, Payload::F32(center.clone()), server_clock)?;
-                for (c, wi) in center.iter_mut().zip(&w) {
-                    *c += alpha * (wi - *c);
-                }
+            Payload::F32(w) => (w, false),
+            Payload::U16(bits) => {
+                let mut w = Vec::new();
+                Wire::F16.unpack(&bits, &mut w);
+                (w, true)
             }
             _ => return Err(anyhow!("unexpected payload at server")),
+        };
+        // queueing: handling starts when both server and message are ready
+        server_clock = server_clock.max(sent_clock) + handle_cost;
+        // reply with the center as seen by this worker (pre-update)
+        let reply = if half {
+            let mut bits = Vec::new();
+            Wire::F16.pack(&center, &mut bits);
+            Payload::U16(bits)
+        } else {
+            Payload::F32(center.clone())
+        };
+        comm.send(from, tags::EASGD_PULL, reply, server_clock)?;
+        for (c, wi) in center.iter_mut().zip(&w) {
+            *c += alpha * (wi - *c);
         }
     }
     Ok(None)
@@ -496,6 +542,34 @@ mod tests {
         assert!(clamped >= full - tiny_wire, "clamped={clamped} full={full}");
         cfg.pipeline = false;
         assert_eq!(server_handle_cost(&cfg, &links, bytes, 1.0), full);
+    }
+
+    #[test]
+    fn half_wire_exchange_halves_priced_bytes() {
+        let links = LinkParams::default();
+        let topo = Topology::by_name("mosaic", 3).unwrap();
+        let full = exchange_cost(Transport::CudaAwareMpi, &topo, &links, 0, 2, 8 << 20);
+        let half = exchange_cost(Transport::CudaAwareMpi, &topo, &links, 0, 2, 4 << 20);
+        assert!(half < full);
+        // the knob that selects it
+        let mut cfg = EasgdConfig::quick("mlp", 2, 10);
+        assert!(!cfg.exchange.half_wire());
+        cfg.exchange = StrategyKind::from_name("hier:asa16").unwrap();
+        assert!(cfg.exchange.half_wire());
+    }
+
+    #[test]
+    fn f16_payload_roundtrip_matches_wire_model() {
+        // the real packing the worker/server paths use
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut bits = Vec::new();
+        Wire::F16.pack(&xs, &mut bits);
+        assert_eq!(bits.len(), xs.len());
+        let mut back = Vec::new();
+        Wire::F16.unpack(&bits, &mut back);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -42,6 +42,32 @@
 //! is the serially-priced ablation). The EASGD server uses the same idea:
 //! with chunking enabled its elastic update of chunk *i−1* overlaps chunk
 //! *i*'s arrival.
+//!
+//! ## Hierarchical two-level exchange (`hier:<inner>`)
+//!
+//! [`collectives::Hierarchical`] answers the paper's §7 future work: on
+//! copper every flat strategy pushes each of a node's 8 GPUs through the
+//! node's single NIC. `hier` reduces switch → socket → node leader, runs
+//! any flat inner strategy across node leaders only (a
+//! [`mpi::Comm::push_group`] subgroup view over a
+//! [`cluster::Topology::subset`]), then broadcasts back down — cutting
+//! per-node NIC bytes by ~the GPUs-per-node factor
+//! ([`collectives::CommReport::wire_inter_bytes`] vs `wire_intra_bytes`;
+//! `sim_intra`/`sim_inter` split the time per level).
+//!
+//! **Strategy selection.** On mosaic (1 GPU/node) `hier` degenerates to
+//! its inner — use flat ASA/ASA16. On a single copper node there is no NIC
+//! to save — flat ASA wins. On copper at ≥ 2 nodes, flat ring is the best
+//! *flat* choice (neighbour placement), and `hier:*` composed with
+//! [`collectives::ChunkedPipeline`] beats it: each level occupies a
+//! distinct serial fabric resource (switch PCIe up / host RAM + QPI / NIC /
+//! switch PCIe down), so chunks stream through a flow-shop pipeline
+//! ([`simnet::flow_pipeline_time`] over the per-level
+//! [`simnet::Leg`]s in `CommReport::legs`) — chunk *i*'s NIC leg overlaps
+//! chunk *i+1*'s intra-node tree, and the win grows with GPUs per node.
+//! Monolithic (unchunked) `hier` loses to flat ring; the composition is
+//! the point. Select with `exchange = "hier:asa16"` / `--exchange
+//! hier:ring` plus `--chunk-kib`.
 
 pub mod bsp;
 pub mod cluster;

@@ -91,6 +91,10 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
     if let Some(s) = args.get("strategy") {
         cfg.strategy = StrategyKind::from_name(s)?;
     }
+    // preferred spelling; also selects hier:<inner> compositions
+    if let Some(s) = args.get("exchange") {
+        cfg.strategy = StrategyKind::from_name(s)?;
+    }
     if let Some(w) = args.get("wire") {
         cfg.wire = match w {
             "f16" => Wire::F16,
@@ -211,6 +215,9 @@ fn cmd_easgd(args: &Args) -> Result<()> {
             _ => bail!("bad --pipeline (true|false)"),
         };
     }
+    if let Some(s) = args.get("exchange") {
+        cfg.exchange = StrategyKind::from_name(s)?;
+    }
     if cfg.eval_every == 0 {
         cfg.eval_every = (cfg.iters / 5).max(1);
     }
@@ -293,8 +300,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: tmpi <train|easgd|repro|topo|info> [flags]\n\
          \n\
-         tmpi train --model mlp --workers 4 --iters 100 --strategy asa --scheme subgd\n\
+         tmpi train --model mlp --workers 4 --iters 100 --exchange asa --scheme subgd\n\
          tmpi train --model mlp --workers 8 --chunk-kib 256 --pipeline true\n\
+         tmpi train --model mlp --workers 16 --topology copper --exchange hier:asa16\n\
          tmpi train --config examples/configs/alexnet_bsp.toml\n\
          tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\
          tmpi repro <fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all> [--iters n]\n\

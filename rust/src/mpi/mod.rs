@@ -122,9 +122,20 @@ pub struct Comm {
     senders: Vec<Sender<Msg>>,
     rx: Receiver<Msg>,
     /// Out-of-order buffer: messages received while waiting for another
-    /// (from, tag) match — MPI's unexpected-message queue.
+    /// (from, tag) match — MPI's unexpected-message queue. Keys are global
+    /// ranks (group views translate before matching).
     pending: HashMap<(usize, u64), VecDeque<Msg>>,
     barrier: Arc<ClockBarrier>,
+    /// Active subgroup view: `group[local] = global` ([`Comm::push_group`]).
+    group: Option<Vec<usize>>,
+}
+
+/// Saved communicator state returned by [`Comm::push_group`]; hand it back
+/// to [`Comm::pop_group`] to leave the subgroup.
+pub struct GroupFrame {
+    rank: usize,
+    size: usize,
+    group: Option<Vec<usize>>,
 }
 
 /// Create a fully-connected world of `size` ranks.
@@ -147,21 +158,60 @@ pub fn world(size: usize) -> Vec<Comm> {
             rx,
             pending: HashMap::new(),
             barrier: barrier.clone(),
+            group: None,
         })
         .collect()
 }
 
 impl Comm {
+    /// Global rank of a (possibly group-local) rank id.
+    fn to_global(&self, r: usize) -> usize {
+        self.group.as_ref().map_or(r, |m| m[r])
+    }
+
+    /// Restrict this endpoint to the subgroup `ranks` (global ids; their
+    /// order defines the group-local ranks — MPI_Comm_split in spirit).
+    /// While active, `rank`/`size` and every rank argument to
+    /// send/recv/sendrecv are group-local, so an unmodified collective runs
+    /// across the subgroup — this is how `hier` drives its inner strategy
+    /// over node leaders only. Messages still carry global ids on the wire,
+    /// so un-grouped peers interoperate. Restore with [`pop_group`]
+    /// (always, even on error — a stale view corrupts later matching).
+    ///
+    /// [`pop_group`]: Self::pop_group
+    pub fn push_group(&mut self, ranks: &[usize]) -> Result<GroupFrame> {
+        let global = self.to_global(self.rank);
+        let local = ranks
+            .iter()
+            .position(|&r| r == global)
+            .ok_or_else(|| anyhow!("rank {global} is not a member of group {ranks:?}"))?;
+        let frame = GroupFrame { rank: self.rank, size: self.size, group: self.group.take() };
+        self.rank = local;
+        self.size = ranks.len();
+        self.group = Some(ranks.to_vec());
+        Ok(frame)
+    }
+
+    /// Leave the subgroup entered by the matching [`push_group`](Self::push_group).
+    pub fn pop_group(&mut self, frame: GroupFrame) {
+        self.rank = frame.rank;
+        self.size = frame.size;
+        self.group = frame.group;
+    }
+
     /// Non-blocking ranked send (MPI_Isend-like; channels buffer).
     pub fn send(&self, to: usize, tag: u64, payload: Payload, clock: f64) -> Result<()> {
+        let to = self.to_global(to);
         self.senders[to]
-            .send(Msg { from: self.rank, tag, payload, sent_clock: clock })
+            .send(Msg { from: self.to_global(self.rank), tag, payload, sent_clock: clock })
             .map_err(|_| anyhow!("rank {to} hung up"))
     }
 
     /// Blocking matched receive: returns the first message from `from` with
-    /// `tag`, buffering non-matching arrivals.
+    /// `tag`, buffering non-matching arrivals. `Msg::from` is always the
+    /// sender's global rank, even under a group view.
     pub fn recv(&mut self, from: usize, tag: u64) -> Result<Msg> {
+        let from = self.to_global(from);
         if let Some(q) = self.pending.get_mut(&(from, tag)) {
             if let Some(m) = q.pop_front() {
                 return Ok(m);
@@ -240,6 +290,10 @@ pub mod tags {
     pub const EASGD_PUSH: u64 = 0x20;
     pub const EASGD_PULL: u64 = 0x21;
     pub const CTL: u64 = 0x30;
+    /// Hier up-tree: +0 switch level, +1 socket level.
+    pub const HIER_UP: u64 = 0x40;
+    /// Hier down-tree: +0 socket level, +1 switch level.
+    pub const HIER_DOWN: u64 = 0x48;
 }
 
 #[cfg(test)]
@@ -317,6 +371,68 @@ mod tests {
                 _ => panic!(),
             }
         }
+    }
+
+    #[test]
+    fn group_view_translates_ranks_both_ways() {
+        // world of 4; ranks 1 and 3 form a subgroup and talk by local id
+        let mut w = world(4);
+        let c3 = w.pop().unwrap();
+        let _c2 = w.pop().unwrap();
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        let t3 = thread::spawn(move || {
+            let mut c3 = c3;
+            let frame = c3.push_group(&[1, 3]).unwrap();
+            assert_eq!((c3.rank, c3.size), (1, 2));
+            // local rank 0 is global rank 1
+            let m = c3.recv(0, 7).unwrap();
+            assert_eq!(m.from, 1, "Msg::from stays global");
+            c3.send(0, 8, Payload::Ctl("ok".into()), 0.0).unwrap();
+            c3.pop_group(frame);
+            assert_eq!((c3.rank, c3.size), (3, 4));
+        });
+        let t1 = thread::spawn(move || {
+            let mut c1 = c1;
+            let frame = c1.push_group(&[1, 3]).unwrap();
+            assert_eq!((c1.rank, c1.size), (0, 2));
+            c1.send(1, 7, Payload::F32(vec![1.0]), 0.0).unwrap();
+            let m = c1.recv(1, 8).unwrap();
+            assert_eq!(m.from, 3);
+            c1.pop_group(frame);
+        });
+        t1.join().unwrap();
+        t3.join().unwrap();
+        // rank 0 was never in the group; its endpoint is unaffected
+        assert_eq!((c0.rank, c0.size), (0, 4));
+        assert!(c0.group.is_none());
+    }
+
+    #[test]
+    fn push_group_rejects_non_members() {
+        let mut w = world(3);
+        let mut c2 = w.pop().unwrap();
+        let err = c2.push_group(&[0, 1]).unwrap_err().to_string();
+        assert!(err.contains("rank 2"), "{err}");
+        assert_eq!((c2.rank, c2.size), (2, 3), "failed push must not mutate");
+    }
+
+    #[test]
+    fn grouped_and_ungrouped_traffic_interleaves() {
+        // a grouped endpoint still receives (buffers) world traffic sent
+        // with global ids, and can read it after popping the view
+        let mut w = world(3);
+        let mut c2 = w.pop().unwrap();
+        let c1 = w.pop().unwrap();
+        let c0 = w.pop().unwrap();
+        c0.send(2, 99, Payload::Ctl("world".into()), 0.0).unwrap();
+        let frame = c2.push_group(&[1, 2]).unwrap();
+        c1.send(2, 5, Payload::Ctl("hi".into()), 0.0).unwrap(); // ungrouped: global ids
+        let m = c2.recv(0, 5).unwrap(); // group-local 0 == global 1
+        assert_eq!(m.from, 1);
+        c2.pop_group(frame);
+        let m = c2.recv(0, 99).unwrap();
+        assert_eq!(m.from, 0);
     }
 
     #[test]

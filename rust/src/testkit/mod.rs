@@ -1,18 +1,107 @@
 //! In-tree property-testing harness (proptest is not vendored offline).
 //!
 //! `prop(name, cases, f)` runs `f` against `cases` independent seeded RNGs
-//! and panics with the failing seed on the first counterexample, so failures
-//! reproduce with `check_one(name, seed, f)`.
+//! and panics with the failing seed on the first counterexample.
+//!
+//! **Reproducing a failure:** the panic message names the seed, e.g.
+//! `property 'differential' failed at seed 0x5eed002a: ...`. Re-run just
+//! that case with `check_one("differential", 0x5eed002a, f)` — the seed
+//! fully determines the generated inputs, no sweep needed.
+//!
+//! **Deep sweeps:** the `TMPI_PROP_CASES` env var overrides every `prop`
+//! call's case count (the in-code count is the default), so CI can run
+//! `TMPI_PROP_CASES=500 cargo test` nightly without slowing local runs.
 
+use crate::cluster::Topology;
+use crate::collectives::{
+    ChunkedPipeline, CommReport, ExchangeCtx, ExchangeStrategy, FlatKind, ReduceOp, StrategyKind,
+};
+use crate::mpi;
+use crate::precision::Wire;
+use crate::simnet::LinkParams;
 use crate::util::Rng;
 
-/// Run a property over `cases` random seeds. `f` returns Err(description)
-/// on a counterexample.
+/// Every selectable exchange strategy: the flat kinds and each `hier:*`
+/// composition — the matrix the differential and invariant suites sweep.
+pub fn all_strategy_kinds() -> [StrategyKind; 8] {
+    [
+        StrategyKind::Ar,
+        StrategyKind::Asa,
+        StrategyKind::Asa16,
+        StrategyKind::Ring,
+        StrategyKind::Hier { inner: FlatKind::Ar },
+        StrategyKind::Hier { inner: FlatKind::Asa },
+        StrategyKind::Hier { inner: FlatKind::Asa16 },
+        StrategyKind::Hier { inner: FlatKind::Ring },
+    ]
+}
+
+/// Run a named strategy — optionally wrapped in the chunked pipeline
+/// scheduler — across `bufs.len()` worker threads on `topo` with no
+/// kernels bound. Returns every rank's final buffer and rank 0's report
+/// (rank 0 is always a hier node leader, so its report is complete). The
+/// one exchange-test harness the integration suites share.
+pub fn run_exchange(
+    kind: StrategyKind,
+    chunk_elems: Option<usize>,
+    bufs: Vec<Vec<f32>>,
+    op: ReduceOp,
+    topo: &Topology,
+) -> (Vec<Vec<f32>>, CommReport) {
+    let k = bufs.len();
+    let world = mpi::world(k);
+    let links = LinkParams::default();
+    let handles: Vec<_> = world
+        .into_iter()
+        .zip(bufs)
+        .map(|(mut comm, mut buf)| {
+            let topo = topo.clone();
+            std::thread::spawn(move || {
+                let strat: Box<dyn ExchangeStrategy> = match chunk_elems {
+                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(Wire::F16), c, true)),
+                    None => kind.build(Wire::F16),
+                };
+                let mut ctx = ExchangeCtx {
+                    comm: &mut comm,
+                    topo: &topo,
+                    links: &links,
+                    kernels: None,
+                    cuda_aware: true,
+                    chunk_elems: 0,
+                };
+                let rep = strat.exchange(&mut buf, op, &mut ctx).unwrap();
+                (buf, rep)
+            })
+        })
+        .collect();
+    let mut outs = Vec::new();
+    let mut rep0 = CommReport::default();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (buf, rep) = h.join().unwrap();
+        if i == 0 {
+            rep0 = rep;
+        }
+        outs.push(buf);
+    }
+    (outs, rep0)
+}
+
+/// Case count for a property: the caller's default unless `TMPI_PROP_CASES`
+/// overrides it.
+pub fn prop_cases(default_cases: u64) -> u64 {
+    std::env::var("TMPI_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run a property over `cases` random seeds (`TMPI_PROP_CASES` overrides).
+/// `f` returns Err(description) on a counterexample.
 pub fn prop<F>(name: &str, cases: u64, f: F)
 where
     F: Fn(&mut Rng) -> Result<(), String>,
 {
-    for case in 0..cases {
+    for case in 0..prop_cases(cases) {
         let seed = 0x5EED_0000 + case;
         let mut rng = Rng::new(seed);
         if let Err(msg) = f(&mut rng) {
@@ -71,6 +160,25 @@ mod tests {
     #[should_panic(expected = "property 'always-fails'")]
     fn prop_reports_failures() {
         prop("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn prop_cases_env_override() {
+        // must hold even when the suite itself runs under an external
+        // TMPI_PROP_CASES=... (the nightly deep sweep), so snapshot and
+        // restore. Briefly mutating process env can at worst make a
+        // concurrently-starting prop() run fewer cases, never fail.
+        let saved = std::env::var("TMPI_PROP_CASES").ok();
+        std::env::set_var("TMPI_PROP_CASES", "7");
+        assert_eq!(prop_cases(40), 7);
+        std::env::set_var("TMPI_PROP_CASES", "not-a-number");
+        assert_eq!(prop_cases(40), 40, "unparseable values fall back");
+        match &saved {
+            Some(v) => std::env::set_var("TMPI_PROP_CASES", v),
+            None => std::env::remove_var("TMPI_PROP_CASES"),
+        }
+        let expect = saved.as_deref().and_then(|s| s.parse().ok()).unwrap_or(40);
+        assert_eq!(prop_cases(40), expect);
     }
 
     #[test]

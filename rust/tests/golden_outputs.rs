@@ -1,0 +1,122 @@
+//! Golden-output tests: the exact `tmpi topo` rendering (node leaders
+//! annotated for the hier exchange) and the config-TOML surface for the
+//! `exchange` / `chunk_kib` / `pipeline` knobs, including the error text a
+//! user sees for a bad hier inner.
+
+use theano_mpi::cluster::Topology;
+use theano_mpi::collectives::{FlatKind, StrategyKind};
+use theano_mpi::config;
+
+#[test]
+fn topo_render_copper_golden() {
+    // what `tmpi topo copper` prints for one node (8 workers)
+    let got = Topology::by_name("copper", 8).unwrap().render();
+    let want = "\
+topology copper-1n (8 GPUs, IB Fdr)
+node 0
+  socket 0 (CPU)--PCIe switch--[gpu0* gpu1 gpu2 gpu3]
+  socket 1 (CPU)--PCIe switch--[gpu4 gpu5 gpu6 gpu7]
+(sockets joined by QPI; GPUDirect P2P only within a switch)
+(* = node leader: root of the hier exchange's intra-node reduce tree)
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn topo_render_copper_two_nodes_golden() {
+    let got = Topology::copper(2).render();
+    let want = "\
+topology copper-2n (16 GPUs, IB Fdr)
+node 0
+  socket 0 (CPU)--PCIe switch--[gpu0* gpu1 gpu2 gpu3]
+  socket 1 (CPU)--PCIe switch--[gpu4 gpu5 gpu6 gpu7]
+  |-- IB NIC
+node 1
+  socket 0 (CPU)--PCIe switch--[gpu8* gpu9 gpu10 gpu11]
+  socket 1 (CPU)--PCIe switch--[gpu12 gpu13 gpu14 gpu15]
+  |-- IB NIC
+(sockets joined by QPI; GPUDirect P2P only within a switch)
+(* = node leader: root of the hier exchange's intra-node reduce tree)
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn topo_render_mosaic_golden() {
+    let got = Topology::mosaic(2).render();
+    let want = "\
+topology mosaic-2n (2 GPUs, IB Qdr)
+node 0
+  socket 0 (CPU)--PCIe switch--[gpu0*]
+  |-- IB NIC
+node 1
+  socket 0 (CPU)--PCIe switch--[gpu1*]
+  |-- IB NIC
+(* = node leader: root of the hier exchange's intra-node reduce tree)
+";
+    assert_eq!(got, want);
+}
+
+const HIER_TOML: &str = r#"
+[train]
+model = "alexnet"
+workers = 16
+topology = "copper"
+exchange = "hier:asa16"
+chunk_kib = 256
+pipeline = true
+
+[easgd]
+model = "mlp"
+workers = 4
+exchange = "hier:asa16"
+chunk_kib = 128
+pipeline = false
+"#;
+
+#[test]
+fn config_toml_roundtrip_for_hier_knobs() {
+    let table = config::parse(HIER_TOML).unwrap();
+    let cfg = config::bsp_from_table(&table).unwrap();
+    assert_eq!(cfg.strategy, StrategyKind::Hier { inner: FlatKind::Asa16 });
+    assert_eq!(cfg.strategy.name(), "hier:asa16");
+    assert_eq!(cfg.chunk_kib, 256);
+    assert!(cfg.pipeline);
+    assert_eq!(cfg.topology, "copper");
+
+    let p = std::env::temp_dir().join(format!("tmpi_golden_{}.toml", std::process::id()));
+    std::fs::write(&p, HIER_TOML).unwrap();
+    let ecfg = config::easgd_from_file(&p).unwrap();
+    assert_eq!(ecfg.exchange, StrategyKind::Hier { inner: FlatKind::Asa16 });
+    assert!(ecfg.exchange.half_wire());
+    assert_eq!(ecfg.chunk_kib, 128);
+    assert!(!ecfg.pipeline);
+    let _ = std::fs::remove_file(p);
+}
+
+#[test]
+fn bad_hier_inner_error_is_exact() {
+    // the error text a user sees for `exchange = "hier:warp"`
+    let table = config::parse("[train]\nexchange = \"hier:warp\"").unwrap();
+    let err = config::bsp_from_table(&table).unwrap_err().to_string();
+    assert_eq!(
+        err,
+        "unknown inner strategy 'warp' for hier (valid: hier:{ar|allreduce|asa|asa16|ring})"
+    );
+    // and a plain bad name still lists the full strategy set
+    let table = config::parse("[train]\nexchange = \"warp\"").unwrap();
+    let err = config::bsp_from_table(&table).unwrap_err().to_string();
+    assert_eq!(
+        err,
+        "unknown exchange strategy 'warp' (valid: ar|allreduce|asa|asa16|ring|hier:<inner>)"
+    );
+}
+
+#[test]
+fn strategy_names_roundtrip_through_config_text() {
+    for name in ["ar", "asa", "asa16", "ring", "hier:ar", "hier:asa", "hier:asa16", "hier:ring"] {
+        let toml = format!("[train]\nexchange = \"{name}\"");
+        let cfg = config::bsp_from_table(&config::parse(&toml).unwrap()).unwrap();
+        assert_eq!(cfg.strategy.name(), name, "{name} must round-trip");
+    }
+}

@@ -1,0 +1,149 @@
+//! Simnet pricing invariants: no strategy may price its transfer time
+//! below the physics of its own traffic, and the hierarchical exchange
+//! must actually deliver its NIC-byte reduction.
+//!
+//! Lower bounds are derived from the priced transfer sets themselves
+//! (`CommReport::wire_{intra,inter}_bytes` are global, identical across
+//! ranks):
+//!
+//! * **NIC bound** — every inter-node byte occupies its source node's
+//!   NIC-out at `ib_gbps`; with `n_nodes` NICs working perfectly in
+//!   parallel, `sim_transfer >= inter_bytes / (n_nodes * ib_gbps)`.
+//! * **intra bound** — every intra-node byte loads at least one of the
+//!   per-rank PCIe up/down links or per-node QPI/host-RAM resources, none
+//!   faster than `max(pcie, qpi, host_mem)` GB/s, so with `2k + 2*nodes`
+//!   such resources `sim_transfer >= intra_bytes / (fastest * (2k + 2n))`.
+//!
+//! Both were verified against a Python port of the pricing model before
+//! landing; they are deliberately loose (resource counts are upper bounds)
+//! so they stay true under topology-routing changes while still catching
+//! under-pricing bugs of 10x and up.
+
+use theano_mpi::cluster::Topology;
+use theano_mpi::collectives::{CommReport, FlatKind, ReduceOp, StrategyKind};
+use theano_mpi::simnet::LinkParams;
+use theano_mpi::testkit::{all_strategy_kinds, run_exchange};
+
+fn run_kind(
+    kind: StrategyKind,
+    chunk_elems: Option<usize>,
+    k: usize,
+    n: usize,
+    topo: Topology,
+) -> CommReport {
+    let bufs: Vec<Vec<f32>> =
+        (0..k).map(|r| (0..n).map(|i| ((r * 31 + i) % 1000) as f32 * 1e-3).collect()).collect();
+    run_exchange(kind, chunk_elems, bufs, ReduceOp::Sum, &topo).1
+}
+
+fn assert_lower_bounds(rep: &CommReport, topo: &Topology, k: usize, label: &str) {
+    let links = LinkParams::default();
+    let ib = links.ib_gbps(topo.ib);
+    let inter_bound = rep.wire_inter_bytes as f64 / (topo.n_nodes as f64 * ib * 1e9);
+    let fastest = links.pcie_gbps.max(links.qpi_gbps).max(links.host_mem_gbps);
+    let resources = (2 * k + 2 * topo.n_nodes) as f64;
+    let intra_bound = rep.wire_intra_bytes as f64 / (fastest * 1e9 * resources);
+    assert!(
+        rep.sim_transfer + 1e-15 >= inter_bound,
+        "{label}: sim_transfer {} prices below the NIC bound {} ({} inter bytes over {} NICs)",
+        rep.sim_transfer,
+        inter_bound,
+        rep.wire_inter_bytes,
+        topo.n_nodes
+    );
+    assert!(
+        rep.sim_transfer + 1e-15 >= intra_bound,
+        "{label}: sim_transfer {} prices below the intra bound {}",
+        rep.sim_transfer,
+        intra_bound
+    );
+}
+
+#[test]
+fn no_strategy_prices_below_its_traffic_bounds() {
+    let n = 40_000;
+    for (topo, k) in [
+        (Topology::mosaic(5), 5usize),
+        (Topology::copper(2), 16),
+        (Topology::copper(1), 8),
+    ] {
+        for kind in all_strategy_kinds() {
+            let rep = run_kind(kind, None, k, n, topo.clone());
+            assert_lower_bounds(&rep, &topo, k, &format!("{} on {}", kind.name(), topo.name));
+            // chunking moves the same bytes; the bound holds per chunk and
+            // therefore in sum, and even the overlapped makespan cannot
+            // dip below the NIC machine's serialized load
+            let chunked = run_kind(kind, Some(n.div_ceil(8)), k, n, topo.clone());
+            assert_eq!(chunked.wire_inter_bytes, rep.wire_inter_bytes, "{}", kind.name());
+            assert_lower_bounds(
+                &chunked,
+                &topo,
+                k,
+                &format!("chunked({}) on {}", kind.name(), topo.name),
+            );
+            let links = LinkParams::default();
+            let ib = links.ib_gbps(topo.ib);
+            let inter_bound =
+                chunked.wire_inter_bytes as f64 / (topo.n_nodes as f64 * ib * 1e9);
+            assert!(
+                chunked.sim_total() + 1e-15 >= inter_bound,
+                "{}: overlapped total {} below NIC bound {}",
+                kind.name(),
+                chunked.sim_total(),
+                inter_bound
+            );
+        }
+    }
+}
+
+#[test]
+fn hier_moves_strictly_fewer_nic_bytes_than_flat_inner_on_copper() {
+    // the tentpole's byte-level claim, per inner strategy, on >= 2 nodes
+    let n = 40_000;
+    for nodes in [2usize, 3] {
+        let k = nodes * 8;
+        let topo = Topology::copper(nodes);
+        for inner in [FlatKind::Ar, FlatKind::Asa, FlatKind::Asa16, FlatKind::Ring] {
+            let flat = run_kind(StrategyKind::from(inner), None, k, n, topo.clone());
+            let hier = run_kind(StrategyKind::Hier { inner }, None, k, n, topo.clone());
+            assert!(
+                hier.wire_inter_bytes < flat.wire_inter_bytes,
+                "copper({nodes}) {}: hier {} !< flat {}",
+                inner.name(),
+                hier.wire_inter_bytes,
+                flat.wire_inter_bytes
+            );
+            assert!(hier.wire_inter_bytes > 0, "leaders still cross the NIC");
+        }
+        // all-pairs flat strategies push ~every GPU's vector through the
+        // NIC; the leader tree cuts that by ~the GPUs-per-node factor
+        let flat_asa = run_kind(StrategyKind::Asa, None, k, n, topo.clone());
+        let hier_asa =
+            run_kind(StrategyKind::Hier { inner: FlatKind::Asa }, None, k, n, topo.clone());
+        let cut = flat_asa.wire_inter_bytes as f64 / hier_asa.wire_inter_bytes as f64;
+        assert!(cut > 7.0, "copper({nodes}): expected ~8x NIC cut vs flat ASA, got {cut}x");
+    }
+}
+
+#[test]
+fn hier_level_split_is_consistent() {
+    let topo = Topology::copper(2);
+    let rep = run_kind(StrategyKind::Hier { inner: FlatKind::Ring }, None, 16, 10_000, topo);
+    assert!(rep.sim_intra > 0.0 && rep.sim_inter > 0.0);
+    assert!((rep.sim_intra + rep.sim_inter - rep.sim_transfer).abs() < 1e-12);
+    // flat strategies don't populate the level split
+    let flat = run_kind(StrategyKind::Ring, None, 16, 10_000, Topology::copper(2));
+    assert_eq!(flat.sim_intra, 0.0);
+    assert_eq!(flat.sim_inter, 0.0);
+    assert!(flat.wire_inter_bytes > 0, "but the byte split is universal");
+}
+
+#[test]
+fn hier_asa16_inner_halves_leader_nic_bytes() {
+    let topo = Topology::copper(2);
+    let h32 = run_kind(StrategyKind::Hier { inner: FlatKind::Asa }, None, 16, 40_000, topo.clone());
+    let h16 =
+        run_kind(StrategyKind::Hier { inner: FlatKind::Asa16 }, None, 16, 40_000, topo);
+    assert_eq!(h32.wire_inter_bytes, 2 * h16.wire_inter_bytes);
+    assert!(h16.sim_inter < h32.sim_inter);
+}
