@@ -7,6 +7,9 @@
 //! bench <name>  mean=1.234ms  p10=1.1ms  p90=1.4ms  n=20
 //! ```
 
+// each bench binary compiles its own copy; not every bench uses every helper
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {

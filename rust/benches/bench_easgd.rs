@@ -1,5 +1,10 @@
-//! Bench: EASGD comm overhead — CUDA-aware MPI vs Platoon-shm (the §4
-//! "42 % lower" comparison) and the τ sweep.
+//! Bench: EASGD comm overhead — the sharded-server contention sweep
+//! (S ∈ {1, 2, 4} at τ=1, k=8 on copper), the CUDA-aware MPI vs
+//! Platoon-shm comparison (the §4 "42 % lower" claim) and the τ sweep.
+//!
+//! The sharded sweep drives the comm-only probe and needs no AOT
+//! artifacts; the trained-run sections skip themselves when the runtime
+//! is unavailable.
 //!
 //! `cargo bench --offline --bench bench_easgd`
 
@@ -8,22 +13,68 @@ mod bench_common;
 use std::sync::Arc;
 
 use bench_common::report;
+use theano_mpi::easgd::shard::measure_sharded;
 use theano_mpi::easgd::{run_easgd, EasgdConfig, Transport};
 use theano_mpi::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::load_default()?);
+/// τ=1, k=8, copper, 1M-f32 center: S=4 must strictly beat S=1 on total
+/// comm overhead with the p95 queue wait collapsing (bands verified against
+/// scripts/verify_easgd_bands.py).
+fn sharded_contention_sweep() -> anyhow::Result<()> {
+    let mut s1 = None;
+    for servers in [1usize, 2, 4] {
+        let mut cfg = EasgdConfig::quick("mlp", 8, 0);
+        cfg.servers = servers;
+        cfg.tau = 1;
+        cfg.topology = "copper".into();
+        let probe = measure_sharded(&cfg, 1_000_000, 4, 2e-3, 1.0)?;
+        report(&format!("easgd/sharded/comm_total/S{servers}"), probe.comm_total, "s");
+        report(&format!("easgd/sharded/queue_p95/S{servers}"), probe.queue_wait_p95, "s");
+        report(
+            &format!("easgd/sharded/shard_busy/S{servers}"),
+            probe.shard_busy.iter().sum::<f64>() / probe.shard_busy.len() as f64,
+            " (busy fraction)",
+        );
+        if servers == 1 {
+            s1 = Some((probe.comm_total, probe.queue_wait_p95));
+        }
+        if servers == 4 {
+            let (t1, p1) = s1.unwrap();
+            assert!(
+                probe.comm_total < t1,
+                "S=4 comm {} must beat S=1 {}",
+                probe.comm_total,
+                t1
+            );
+            assert!(
+                probe.queue_wait_p95 < 0.5 * p1,
+                "S=4 p95 queue wait {} must collapse vs S=1 {}",
+                probe.queue_wait_p95,
+                p1
+            );
+            report("easgd/sharded/comm_speedup_S4_vs_S1", t1 / probe.comm_total, "x");
+            report("easgd/sharded/queue_p95_drop_S4_vs_S1", p1 / probe.queue_wait_p95, "x");
+        }
+    }
+    Ok(())
+}
 
+fn trained_benches(rt: &Arc<Runtime>) -> anyhow::Result<()> {
     let mut per = Vec::new();
     for transport in [Transport::PlatoonShm, Transport::CudaAwareMpi] {
         let mut cfg = EasgdConfig::quick("mlp", 4, 60);
         cfg.transport = transport;
         cfg.topology = "copper".into();
         cfg.sim_model = Some("alexnet".into());
-        let rep = run_easgd(&rt, &cfg)?;
+        let rep = run_easgd(rt, &cfg)?;
         report(
             &format!("easgd/comm_per_exchange/{}", transport.name()),
             rep.comm_per_exchange,
+            "s",
+        );
+        report(
+            &format!("easgd/queue_wait_p95/{}", transport.name()),
+            rep.queue_wait_p95,
             "s",
         );
         per.push(rep.comm_per_exchange);
@@ -34,8 +85,17 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = EasgdConfig::quick("mlp", 4, 60);
         cfg.tau = tau;
         cfg.sim_model = Some("alexnet".into());
-        let rep = run_easgd(&rt, &cfg)?;
+        let rep = run_easgd(rt, &cfg)?;
         report(&format!("easgd/comm_total/tau{tau}"), rep.comm_total, "s");
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    sharded_contention_sweep()?;
+    match Runtime::load_default() {
+        Ok(rt) => trained_benches(&Arc::new(rt))?,
+        Err(e) => println!("skipping trained-run benches (runtime unavailable: {e})"),
     }
     Ok(())
 }

@@ -150,7 +150,6 @@ enum WorkerData {
     Tokens {
         stream: Arc<TokenStream>,
         seq: usize,
-        cursor: usize,
     },
 }
 
@@ -268,15 +267,11 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
     Ok(report)
 }
 
-/// vocab size of an LM model, read from its artifact signature (logit dim).
+/// Vocab size of an LM model. The grad artifact signature carries only
+/// flat shapes, so the vocab comes from the model's configured class
+/// count, defaulting to 2048.
 fn lm_vocab(rt: &Runtime, model: &str) -> Result<usize> {
-    let info = &rt.manifest.models[model];
-    let key = info.key_for_batch(info.batch)?;
-    let art = &rt.manifest.artifacts[&format!("{key}_grad")];
-    // grad signature carries only flat shapes; vocab comes from config via
-    // the model input: fall back to classes, else default 2048
-    let _ = art;
-    Ok(info.classes.unwrap_or(2048))
+    Ok(rt.manifest.models[model].classes.unwrap_or(2048))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -342,7 +337,7 @@ fn worker_main(
             WorkerData::Images { shard, loader, dataset: ds.clone() }
         }
         (None, None, Some(ts)) => {
-            WorkerData::Tokens { stream: ts.clone(), seq: info.input_shape[1], cursor: 0 }
+            WorkerData::Tokens { stream: ts.clone(), seq: info.input_shape[1] }
         }
         _ => unreachable!(),
     };
@@ -358,9 +353,10 @@ fn worker_main(
         let lr = cfg.lr.at(iter) as f32;
 
         // --- load ------------------------------------------------------------
-        let (x, y, load_stall, h2d) = next_batch(&mut data, cfg, info, rank, iter, &mut rng)?;
+        let (x, y, load_stall, h2d) = next_batch(&mut data, cfg, rank, iter, &mut rng)?;
         clock += load_stall + h2d;
         bd.load_stall += load_stall;
+        bd.h2d += h2d;
 
         // --- compute -----------------------------------------------------------
         match cfg.scheme {
@@ -492,11 +488,13 @@ fn worker_main(
 
 /// Charge one exchange to the breakdown, overlap-aware: pipelined time is
 /// hidden kernel time first (the usual case — sums/casts under the wire),
-/// any remainder is wire time hidden under kernels.
+/// any remainder is wire time hidden under kernels. Host reduction (the AR
+/// baseline) charges as transfer-side comm so `Breakdown::total()`
+/// reconciles with the clock advance of `sim_total()`.
 fn charge_comm(bd: &mut Breakdown, rep: &CommReport, scale: f64) {
     let k_hidden = rep.sim_overlapped.min(rep.sim_kernel);
     let t_hidden = (rep.sim_overlapped - k_hidden).min(rep.sim_transfer);
-    bd.comm_transfer += (rep.sim_transfer - t_hidden) * scale;
+    bd.comm_transfer += (rep.sim_transfer - t_hidden + rep.sim_host_reduce) * scale;
     bd.comm_kernel += (rep.sim_kernel - k_hidden) * scale;
 }
 
@@ -517,7 +515,6 @@ fn accumulate(total: &mut CommReport, rep: &CommReport) {
 fn next_batch(
     data: &mut WorkerData,
     cfg: &BspConfig,
-    info: &crate::runtime::ModelInfo,
     rank: usize,
     iter: usize,
     rng: &mut crate::util::Rng,
@@ -565,16 +562,11 @@ fn next_batch(
                 0.0,
             ))
         }
-        WorkerData::Tokens { stream, seq, cursor } => {
-            let (xs, ys) = stream.lm_batch(
-                1000 + (iter * cfg.workers + rank) as u64,
-                *cursor,
-                cfg.batch,
-                *seq,
-            );
-            *cursor = 0; // streams are indexed by iter; cursor unused
+        WorkerData::Tokens { stream, seq } => {
+            // streams are indexed by iteration; no cursor state to thread
+            let (xs, ys) =
+                stream.lm_batch(1000 + (iter * cfg.workers + rank) as u64, 0, cfg.batch, *seq);
             let shape = vec![cfg.batch, *seq];
-            let _ = info;
             Ok((HostTensor::i32(shape.clone(), xs), HostTensor::i32(shape, ys), 0.0, 0.0))
         }
     }

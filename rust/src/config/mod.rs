@@ -275,6 +275,14 @@ pub fn easgd_from_file(path: &Path) -> Result<EasgdConfig> {
     if let Some(v) = t.get("exchange") {
         cfg.exchange = StrategyKind::from_name(v.as_str()?)?;
     }
+    // parameter-server shards (the center variable splits across them);
+    // same message as ShardPlan::new's run-time validation
+    if let Some(v) = t.get("servers") {
+        cfg.servers = v.as_usize()?;
+        if cfg.servers == 0 {
+            bail!("servers must be >= 1 (got 0)");
+        }
+    }
     cfg.lr = lr_from(t)?;
     Ok(cfg)
 }
@@ -387,6 +395,21 @@ transport = "platoon-shm"
         );
         assert!(parse("broken line").is_err());
         assert!(parse("k = @nope").is_err());
+    }
+
+    #[test]
+    fn easgd_servers_key_parses_and_rejects_zero() {
+        let p = std::env::temp_dir().join(format!("tmpi_cfg_srv_{}.toml", std::process::id()));
+        std::fs::write(&p, "[easgd]\nworkers = 8\nservers = 4").unwrap();
+        let cfg = easgd_from_file(&p).unwrap();
+        assert_eq!(cfg.servers, 4);
+        // default stays the single-server paper model
+        std::fs::write(&p, "[easgd]\nworkers = 8").unwrap();
+        assert_eq!(easgd_from_file(&p).unwrap().servers, 1);
+        std::fs::write(&p, "[easgd]\nservers = 0").unwrap();
+        let err = easgd_from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("servers"), "{err}");
+        let _ = std::fs::remove_file(p);
     }
 
     #[test]

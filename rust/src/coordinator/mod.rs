@@ -514,19 +514,32 @@ impl Session {
         let shm = results[0].1.comm_per_exchange;
         let mpi = results[1].1.comm_per_exchange;
         let reduction = (shm - mpi) / shm * 100.0;
-        let mut table =
-            Table::new(&["transport", "comm/exchange (s)", "total comm (s)", "throughput (ex/s)"]);
+        let mut table = Table::new(&[
+            "transport", "comm/exchange (s)", "total comm (s)", "queue p95 (s)",
+            "throughput (ex/s)",
+        ]);
         let mut rows = Vec::new();
         for (t, rep) in &results {
             table.row(vec![
                 t.name().to_string(),
                 format!("{:.4}", rep.comm_per_exchange),
                 format!("{:.3}", rep.comm_total),
+                format!("{:.4}", rep.queue_wait_p95),
                 format!("{:.1}", rep.throughput),
             ]);
-            rows.push(format!("{},{},{}", t.name(), rep.comm_per_exchange, rep.comm_total));
+            rows.push(format!(
+                "{},{},{},{}",
+                t.name(),
+                rep.comm_per_exchange,
+                rep.comm_total,
+                rep.queue_wait_p95
+            ));
         }
-        self.write_csv("easgd_compare.csv", "transport,comm_per_exchange_s,comm_total_s", &rows)?;
+        self.write_csv(
+            "easgd_compare.csv",
+            "transport,comm_per_exchange_s,comm_total_s,queue_wait_p95_s",
+            &rows,
+        )?;
         Ok(format!(
             "EASGD comm overhead at tau=1 (AlexNet-scale exchange, 1 node): \
              CUDA-aware MPI is {reduction:.0}% lower than the Platoon-shm baseline (paper: 42%)\n{}",

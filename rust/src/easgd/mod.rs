@@ -17,9 +17,16 @@
 //!   host-staged exchange (D2H + two host copies through a lock-guarded
 //!   shared segment + H2D), the path the paper beats by 42 % at τ=1.
 //!
-//! The server thread serializes exchanges (real queueing): each request is
-//! handled at `max(server_clock, arrival)` plus a handling cost, so comm
-//! overhead includes genuine contention when τ is small and k large.
+//! The server serializes exchanges (real queueing): each request is
+//! handled at `max(server_clock, arrival)` plus a handling cost — keyed on
+//! the message's *arrival* (`sent + down_wire`), served in deterministic
+//! virtual-arrival order — so comm overhead includes genuine contention
+//! when τ is small and k large. `servers = S` splits the center variable
+//! across S independent shard queues ([`shard`]), the scale-out that
+//! collapses that contention; the per-exchange queue wait and per-shard
+//! busy fraction surface in [`EasgdReport`].
+
+pub mod shard;
 
 use std::sync::Arc;
 use std::thread;
@@ -32,10 +39,11 @@ use crate::data::{FeatureDataset, ImageDataset, ImageSpec};
 use crate::metrics::Breakdown;
 use crate::models;
 use crate::mpi::{self, tags, Payload};
-use crate::precision::Wire;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::LrSchedule;
 use crate::simnet::{phase_time, LinkParams, Transfer};
+
+use shard::{ShardPlan, ShardPrices};
 
 /// How worker↔server bytes move.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,6 +92,10 @@ pub struct EasgdConfig {
     /// point-to-point, so the collective *structure* of the name has no
     /// effect here; only its wire format does.
     pub exchange: StrategyKind,
+    /// Parameter-server shards: the center variable splits into this many
+    /// rank-segment-aligned slices, one server rank (own simulated GPU)
+    /// and one independent request queue per slice.
+    pub servers: usize,
 }
 
 impl EasgdConfig {
@@ -105,6 +117,7 @@ impl EasgdConfig {
             chunk_kib: 0,
             pipeline: true,
             exchange: StrategyKind::Asa,
+            servers: 1,
         }
     }
 }
@@ -115,12 +128,20 @@ pub struct EasgdReport {
     pub iters: usize,
     pub tau: usize,
     pub alpha: f64,
+    /// parameter-server shards the center variable was split across
+    pub servers: usize,
     /// max worker virtual clock
     pub vtime_total: f64,
     /// mean per-worker comm overhead per exchange (sim seconds)
     pub comm_per_exchange: f64,
     /// total comm overhead summed across workers
     pub comm_total: f64,
+    /// mean per-exchange queue wait (binding slice; sim seconds)
+    pub queue_wait_mean: f64,
+    /// p95 per-exchange queue wait across all workers' exchanges
+    pub queue_wait_p95: f64,
+    /// per-shard `busy / clock_end` — how loaded each server queue ran
+    pub shard_busy: Vec<f64>,
     pub breakdown: Breakdown,
     pub throughput: f64,
     pub final_val_err: f64,
@@ -211,8 +232,10 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
     rt.warmup(&arts.train)?;
     rt.warmup(&arts.eval).ok();
 
-    // worker GPUs 0..k-1, server on GPU k (its own node on mosaic)
-    let topo = Topology::by_name(&cfg.topology, cfg.workers + 1)
+    // worker GPUs 0..k-1, shard servers on GPUs k..k+S-1 (each its own
+    // simulated GPU; own nodes on mosaic)
+    let plan = Arc::new(ShardPlan::new(info.param_count, cfg.workers, cfg.servers)?);
+    let topo = Topology::by_name(&cfg.topology, plan.world_size())
         .ok_or_else(|| anyhow!("unknown topology"))?;
     let links = LinkParams::default();
     let comm_scale = match &cfg.sim_model {
@@ -221,9 +244,9 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
         }
         None => 1.0,
     };
+    let prices = Arc::new(ShardPrices::new(&cfg, &topo, &links, &plan, comm_scale));
 
     let init = Arc::new(rt.init_params(&cfg.model)?);
-    let bytes = 4 * info.param_count as u64;
 
     let dataset: Arc<EasgdData> = if is_flat {
         Arc::new(EasgdData::Features(FeatureDataset::new(
@@ -238,27 +261,42 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
         Arc::new(EasgdData::Images(ImageDataset::new(spec)))
     };
 
-    // world: ranks 0..k-1 workers, rank k server
-    let world = mpi::world(cfg.workers + 1);
+    // world: ranks 0..k-1 workers, ranks k..k+S-1 shard servers
+    let world = mpi::world(plan.world_size());
     let mut handles = Vec::new();
     for (rank, comm) in world.into_iter().enumerate() {
-        let rt = rt.clone();
         let cfg = cfg.clone();
-        let topo = topo.clone();
+        let plan = plan.clone();
+        let prices = prices.clone();
         let init = init.clone();
-        let info = info.clone();
-        let arts = models::artifacts_for(&info, &cfg.model, cfg.batch)?;
-        let dataset = dataset.clone();
-        handles.push(thread::spawn(move || {
-            if rank == cfg.workers {
-                server_main(comm, &cfg, &topo, &links, &init, bytes, comm_scale)
-            } else {
-                worker_main(
-                    rank, comm, &rt, &cfg, &topo, &links, &init, &info, &arts, &dataset, bytes,
-                    comm_scale,
-                )
-            }
-        }));
+        if rank >= cfg.workers {
+            handles.push(thread::spawn(move || -> Result<RankOut> {
+                let mut comm = comm;
+                let shard = rank - plan.workers;
+                let (lo, len) = plan.slices[shard];
+                let slice = init[lo..lo + len].to_vec();
+                let out = shard::server_shard_main(
+                    &mut comm,
+                    &plan,
+                    shard,
+                    &prices,
+                    cfg.alpha as f32,
+                    slice,
+                )?;
+                Ok(RankOut::Server(out))
+            }));
+        } else {
+            let rt = rt.clone();
+            let info = info.clone();
+            let arts = models::artifacts_for(&info, &cfg.model, cfg.batch)?;
+            let dataset = dataset.clone();
+            handles.push(thread::spawn(move || -> Result<RankOut> {
+                let out = worker_main(
+                    rank, comm, &rt, &cfg, &plan, &prices, &init, &info, &arts, &dataset,
+                )?;
+                Ok(RankOut::Worker(out))
+            }));
+        }
     }
 
     let mut report = EasgdReport {
@@ -266,26 +304,43 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
         iters: cfg.iters,
         tau: cfg.tau,
         alpha: cfg.alpha,
+        servers: cfg.servers,
+        shard_busy: vec![0.0; cfg.servers],
         ..Default::default()
     };
     let mut exchanges = 0usize;
+    let mut waits: Vec<f64> = Vec::new();
     for h in handles {
-        let r = h.join().map_err(|_| anyhow!("easgd thread panicked"))??;
-        if let Some(w) = r {
-            report.vtime_total = report.vtime_total.max(w.clock);
-            report.comm_total += w.comm_time;
-            exchanges += w.exchanges;
-            report.breakdown.add(&w.breakdown);
-            if !w.curve.is_empty() {
-                report.curve = w.curve;
-                report.final_val_err = report.curve.last().unwrap().2;
+        match h.join().map_err(|_| anyhow!("easgd thread panicked"))?? {
+            RankOut::Worker(w) => {
+                report.vtime_total = report.vtime_total.max(w.clock);
+                report.comm_total += w.comm_time;
+                exchanges += w.exchanges;
+                report.breakdown.add(&w.breakdown);
+                waits.extend(w.queue_waits);
+                if !w.curve.is_empty() {
+                    report.curve = w.curve;
+                    report.final_val_err = report.curve.last().unwrap().2;
+                }
+            }
+            RankOut::Server(s) => {
+                report.shard_busy[s.shard] =
+                    if s.clock_end > 0.0 { s.busy / s.clock_end } else { 0.0 };
             }
         }
     }
     report.comm_per_exchange = report.comm_total / exchanges.max(1) as f64;
+    report.queue_wait_mean = crate::util::mean(&waits);
+    report.queue_wait_p95 = crate::util::quantile(&waits, 0.95);
     report.throughput =
         (cfg.iters * cfg.batch * cfg.workers) as f64 / report.vtime_total.max(1e-12);
     Ok(report)
+}
+
+/// What one rank's thread returns to [`run_easgd`].
+enum RankOut {
+    Worker(WorkerOut),
+    Server(shard::ServerOut),
 }
 
 /// EASGD data source: flat features (MLP) or the image pipeline.
@@ -350,6 +405,8 @@ struct WorkerOut {
     exchanges: usize,
     breakdown: Breakdown,
     curve: Vec<(usize, f64, f64)>,
+    /// binding-slice queue wait of each exchange, in order
+    queue_waits: Vec<f64>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -358,16 +415,13 @@ fn worker_main(
     mut comm: mpi::Comm,
     rt: &Arc<Runtime>,
     cfg: &EasgdConfig,
-    topo: &Topology,
-    links: &LinkParams,
+    plan: &ShardPlan,
+    prices: &ShardPrices,
     init: &Arc<Vec<f32>>,
     info: &crate::runtime::ModelInfo,
     arts: &models::ModelArtifacts,
     dataset: &Arc<EasgdData>,
-    bytes: u64,
-    comm_scale: f64,
-) -> Result<Option<WorkerOut>> {
-    let server = cfg.workers;
+) -> Result<WorkerOut> {
     let mut params = (**init).clone();
     let mut momentum = vec![0.0f32; params.len()];
     let mut clock = 0.0f64;
@@ -375,7 +429,9 @@ fn worker_main(
     let mut comm_time = 0.0;
     let mut exchanges = 0usize;
     let mut curve = Vec::new();
+    let mut queue_waits = Vec::new();
     let alpha = cfg.alpha as f32;
+    let half = cfg.exchange.half_wire();
 
     // per-worker eval (rank 0 records the curve)
     let eval = if rank == 0 && cfg.eval_every > 0 {
@@ -408,43 +464,28 @@ fn worker_main(
         clock += res.exec_time;
         bd.compute += res.exec_time;
 
-        // elastic exchange every τ iterations
+        // elastic exchange every τ iterations: push/pull all S slices
+        // concurrently (asa16-family wire formats really round-trip w and
+        // c through f16 at half the priced bytes); completion is the max
+        // over slice round-trips, and the binding slice's queue wait is
+        // split out of the comm charge
         if (iter + 1) % cfg.tau == 0 {
-            // asa16-family exchange strategies halve the wire format: w and
-            // c really round-trip through f16, and the priced bytes halve
-            let half = cfg.exchange.half_wire();
-            let wire_bytes = if half { bytes / 2 } else { bytes };
-            let wire =
-                exchange_cost(cfg.transport, topo, links, rank, server, wire_bytes) * comm_scale;
-            // send w with our clock; server replies with c + its finish time
-            let payload = if half {
-                let mut bits = Vec::new();
-                Wire::F16.pack(&params, &mut bits);
-                Payload::U16(bits)
-            } else {
-                Payload::F32(params.clone())
-            };
-            comm.send(server, tags::EASGD_PUSH, payload, clock)?;
-            let m = comm.recv(server, tags::EASGD_PULL)?;
-            let center = match m.payload {
-                Payload::U16(bits) => {
-                    let mut vals = Vec::new();
-                    Wire::F16.unpack(&bits, &mut vals);
-                    vals
-                }
-                other => other.into_f32()?,
-            };
-            // total comm = wire + queueing at the server (finish - arrival)
-            let finish = m.sent_clock;
-            let t_comm = (finish - clock).max(0.0) + wire;
-            clock += t_comm;
-            comm_time += t_comm;
-            bd.comm_transfer += t_comm;
+            let t = shard::worker_exchange(
+                &mut comm,
+                rank,
+                plan,
+                prices,
+                half,
+                alpha,
+                &mut params,
+                clock,
+            )?;
+            clock = t.new_clock;
+            comm_time += t.t_comm;
+            bd.comm_transfer += t.t_comm - t.queue_wait;
+            bd.comm_queue += t.queue_wait;
+            queue_waits.push(t.queue_wait);
             exchanges += 1;
-            // elastic pull toward center
-            for (w, c) in params.iter_mut().zip(&center) {
-                *w -= alpha * (*w - c);
-            }
         }
 
         if rank == 0 && cfg.eval_every > 0 && (iter + 1) % cfg.eval_every == 0 {
@@ -458,71 +499,17 @@ fn worker_main(
         }
     }
 
-    // tell the server we're done
-    comm.send(server, tags::CTL, Payload::Ctl("stop".into()), clock)?;
-    Ok(Some(WorkerOut { clock, comm_time, exchanges, breakdown: bd, curve }))
-}
-
-fn server_main(
-    mut comm: mpi::Comm,
-    cfg: &EasgdConfig,
-    topo: &Topology,
-    links: &LinkParams,
-    init: &Arc<Vec<f32>>,
-    bytes: u64,
-    comm_scale: f64,
-) -> Result<Option<WorkerOut>> {
-    let mut center = (**init).clone();
-    let mut server_clock = 0.0f64;
-    let mut stopped = 0usize;
-    let alpha = cfg.alpha as f32;
-    // one-way w-down wire time (worker 0's path is representative: every
-    // worker reaches the server over an equivalent leg on both presets);
-    // a 16-bit exchange halves the arriving stream, not the f32 update
-    let wire_bytes = if cfg.exchange.half_wire() { bytes / 2 } else { bytes };
-    let down_wire = exchange_cost(cfg.transport, topo, links, 0, cfg.workers, wire_bytes) / 2.0;
-    let handle_cost = server_handle_cost(cfg, links, bytes, down_wire) * comm_scale;
-
-    while stopped < cfg.workers {
-        // serve pushes and stops in arrival order; the wire format (f32 or
-        // packed f16) only changes how w arrives and how c is replied —
-        // queueing and the elastic update are one code path
-        let m = comm.recv_any_of(&[tags::EASGD_PUSH, tags::CTL])?;
-        let (from, sent_clock) = (m.from, m.sent_clock);
-        let (w, half) = match m.payload {
-            Payload::Ctl(_) => {
-                stopped += 1;
-                continue;
-            }
-            Payload::F32(w) => (w, false),
-            Payload::U16(bits) => {
-                let mut w = Vec::new();
-                Wire::F16.unpack(&bits, &mut w);
-                (w, true)
-            }
-            _ => return Err(anyhow!("unexpected payload at server")),
-        };
-        // queueing: handling starts when both server and message are ready
-        server_clock = server_clock.max(sent_clock) + handle_cost;
-        // reply with the center as seen by this worker (pre-update)
-        let reply = if half {
-            let mut bits = Vec::new();
-            Wire::F16.pack(&center, &mut bits);
-            Payload::U16(bits)
-        } else {
-            Payload::F32(center.clone())
-        };
-        comm.send(from, tags::EASGD_PULL, reply, server_clock)?;
-        for (c, wi) in center.iter_mut().zip(&w) {
-            *c += alpha * (wi - *c);
-        }
+    // tell every shard server we're done
+    for j in 0..plan.servers {
+        comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), clock)?;
     }
-    Ok(None)
+    Ok(WorkerOut { clock, comm_time, exchanges, breakdown: bd, curve, queue_waits })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::precision::Wire;
 
     #[test]
     fn pipelined_server_handle_cost_shrinks_with_chunks_but_is_wire_clamped() {

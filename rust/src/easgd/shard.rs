@@ -1,0 +1,497 @@
+//! Sharded EASGD parameter server — S independent shard queues.
+//!
+//! The paper's §4 framework serializes every elastic exchange through one
+//! parameter server; at τ=1 and k=8 the server queue dominates comm
+//! overhead. PS-based frameworks scale past this contention by sharding the
+//! center variable across server processes (the regime Shi et al.,
+//! arXiv:1711.05979, model): here the center is split into `servers`
+//! rank-segment-aligned slices (`split_even`, the same MPI_Scatterv
+//! convention the collectives use), one server rank per slice on its own
+//! simulated GPU. A worker pushes its S slices concurrently — with a
+//! round-robin start offset so the k simultaneous *real* sends spread
+//! over the shard channels instead of all copying into shard 0's channel
+//! first; the *virtual* pricing is provably independent of send order
+//! (arrival-ordered serving, see below, and the determinism test) — each
+//! shard runs its own `server_clock` queue with the existing
+//! handling-cost model, and the worker's exchange completes at the max
+//! over its slice round-trips.
+//!
+//! **Arrival-ordered, deterministic queueing.** Each shard serves pushes in
+//! *virtual arrival* order (`arrival = sent_clock + down_wire`), keying the
+//! queue as `server_clock = max(server_clock, arrival) + handle_cost`. Real
+//! thread scheduling must not leak into the virtual clock, so the server is
+//! conservative: it serves the earliest-arrival pending push only once no
+//! headless live worker could still produce an earlier one. A worker's next
+//! arrival is bounded below by `last_finish + up + down` (its previous push
+//! here was replied at `last_finish`, and the reply plus the next push must
+//! cross the wire), so the shard blocks for that worker's message only when
+//! the bound does not exceed the candidate arrival. With `split_even`
+//! slices the bound clears the globally-earliest pending arrival by ~3
+//! wire legs plus a handling cost, which keeps the serve loop deadlock-free
+//! (the proof needs near-equal slices: a worker's outstanding push to
+//! *another* shard prices the same bytes ±1 element).
+//!
+//! Queue-wait observability: a worker derives, per exchange, the wait of
+//! the *binding* slice (the one that completed last) as
+//! `finish − arrival − handle` — both sides compute from one shared
+//! [`ShardPrices`], so no metadata rides the wire.
+
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::Topology;
+use crate::mpi::{self, tags, Comm, Msg, Payload};
+use crate::precision::Wire;
+use crate::simnet::LinkParams;
+use crate::util::split_even;
+
+use super::EasgdConfig;
+
+/// How the center variable maps onto worker and server ranks: ranks
+/// `0..workers` are workers, rank `workers + j` serves slice `j`.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub workers: usize,
+    pub servers: usize,
+    /// (offset, len) of each shard's slice of the flat center vector —
+    /// `split_even(elems, servers)`, remainder on the lowest shards.
+    pub slices: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    pub fn new(elems: usize, workers: usize, servers: usize) -> Result<ShardPlan> {
+        if workers == 0 {
+            bail!("easgd needs at least one worker");
+        }
+        if servers == 0 {
+            bail!("servers must be >= 1 (got 0)");
+        }
+        if servers > elems.max(1) {
+            bail!("servers = {servers} exceeds the {elems}-element center variable");
+        }
+        Ok(ShardPlan { workers, servers, slices: split_even(elems, servers) })
+    }
+
+    /// Workers plus one rank (and one simulated GPU) per shard.
+    pub fn world_size(&self) -> usize {
+        self.workers + self.servers
+    }
+
+    /// Global rank (= simulated GPU id) of shard `j`'s server.
+    pub fn server_rank(&self, shard: usize) -> usize {
+        self.workers + shard
+    }
+}
+
+/// Simulated prices of one elastic exchange, per (shard, worker) pair.
+/// Worker and server threads share one instance so the queue keying and the
+/// worker-derived queue wait agree exactly.
+#[derive(Clone, Debug)]
+pub struct ShardPrices {
+    /// `wire_half[shard][worker]`: scaled one-way wire time of the shard's
+    /// slice on this worker's path (down and up legs are symmetric).
+    pub wire_half: Vec<Vec<f64>>,
+    /// `handle[shard][worker]`: scaled server occupancy per push (elastic
+    /// update, chunk-pipelined under the incoming stream when configured).
+    pub handle: Vec<Vec<f64>>,
+}
+
+impl ShardPrices {
+    pub fn new(
+        cfg: &EasgdConfig,
+        topo: &Topology,
+        links: &LinkParams,
+        plan: &ShardPlan,
+        comm_scale: f64,
+    ) -> ShardPrices {
+        let half = cfg.exchange.half_wire();
+        let mut wire_half = Vec::with_capacity(plan.servers);
+        let mut handle = Vec::with_capacity(plan.servers);
+        for (j, &(_, len)) in plan.slices.iter().enumerate() {
+            // the f16 wire halves what moves, not the f32 elastic update
+            let full_bytes = 4 * len as u64;
+            let wire_bytes = if half { full_bytes / 2 } else { full_bytes };
+            let mut w_row = Vec::with_capacity(plan.workers);
+            let mut h_row = Vec::with_capacity(plan.workers);
+            for w in 0..plan.workers {
+                let rt = super::exchange_cost(
+                    cfg.transport,
+                    topo,
+                    links,
+                    w,
+                    plan.server_rank(j),
+                    wire_bytes,
+                );
+                w_row.push(rt / 2.0 * comm_scale);
+                let handle = super::server_handle_cost(cfg, links, full_bytes, rt / 2.0);
+                h_row.push(handle * comm_scale);
+            }
+            wire_half.push(w_row);
+            handle.push(h_row);
+        }
+        ShardPrices { wire_half, handle }
+    }
+}
+
+/// What one shard server reports when every worker has stopped.
+#[derive(Clone, Debug)]
+pub struct ServerOut {
+    pub shard: usize,
+    /// Final center slice (real values — the data path is exercised).
+    pub center: Vec<f32>,
+    /// Worker ranks in virtual-arrival serve order (the order the serial
+    /// host reference of the differential suite replays).
+    pub served: Vec<usize>,
+    /// Total handling occupancy charged to this shard's queue.
+    pub busy: f64,
+    /// Final shard clock; `busy / clock_end` is the shard's busy fraction.
+    pub clock_end: f64,
+}
+
+/// One worker-side elastic exchange's timing result.
+#[derive(Clone, Copy, Debug)]
+pub struct ExchangeTiming {
+    /// Worker clock after the exchange: max over slice round-trips.
+    pub new_clock: f64,
+    /// `new_clock - clock` — what `comm_per_exchange` aggregates.
+    pub t_comm: f64,
+    /// Queue wait of the binding slice (the round-trip that completed
+    /// last): `finish − arrival − handle`, the wait that actually extended
+    /// this exchange. `t_comm − queue_wait` is pure wire + handling.
+    pub queue_wait: f64,
+}
+
+/// Push all S slices of `params`, pull the S center slices back, apply
+/// the elastic update in place, and price the exchange at the max over
+/// slice round-trips. The round-robin start offset only staggers the
+/// *real* channel copies; virtual arrival times carry the send clock, so
+/// the priced queueing is independent of the physical send order.
+#[allow(clippy::too_many_arguments)]
+pub fn worker_exchange(
+    comm: &mut Comm,
+    rank: usize,
+    plan: &ShardPlan,
+    prices: &ShardPrices,
+    half: bool,
+    alpha: f32,
+    params: &mut [f32],
+    clock: f64,
+) -> Result<ExchangeTiming> {
+    let s = plan.servers;
+    for i in 0..s {
+        let j = (rank + i) % s;
+        let (lo, len) = plan.slices[j];
+        let slice = &params[lo..lo + len];
+        let payload = if half {
+            let mut bits = Vec::new();
+            Wire::F16.pack(slice, &mut bits);
+            Payload::U16(bits)
+        } else {
+            Payload::F32(slice.to_vec())
+        };
+        comm.send(plan.server_rank(j), tags::EASGD_PUSH, payload, clock)?;
+    }
+    let mut new_clock = clock;
+    let mut queue_wait = 0.0;
+    for j in 0..s {
+        let m = comm.recv(plan.server_rank(j), tags::EASGD_PULL)?;
+        let center = match m.payload {
+            Payload::U16(bits) => {
+                let mut vals = Vec::new();
+                Wire::F16.unpack(&bits, &mut vals);
+                vals
+            }
+            other => other.into_f32()?,
+        };
+        let (lo, len) = plan.slices[j];
+        for (w, c) in params[lo..lo + len].iter_mut().zip(&center) {
+            *w -= alpha * (*w - c);
+        }
+        let finish = m.sent_clock;
+        let done = finish + prices.wire_half[j][rank];
+        if done > new_clock {
+            new_clock = done;
+            queue_wait =
+                (finish - (clock + prices.wire_half[j][rank]) - prices.handle[j][rank]).max(0.0);
+        }
+    }
+    Ok(ExchangeTiming { new_clock, t_comm: new_clock - clock, queue_wait })
+}
+
+/// Serve one shard until every worker has sent its stop control. See the
+/// module docs for the conservative arrival-ordered queue discipline.
+pub fn server_shard_main(
+    comm: &mut Comm,
+    plan: &ShardPlan,
+    shard: usize,
+    prices: &ShardPrices,
+    alpha: f32,
+    mut center: Vec<f32>,
+) -> Result<ServerOut> {
+    let k = plan.workers;
+    let mut shard_clock = 0.0f64;
+    let mut busy = 0.0f64;
+    let mut served = Vec::new();
+    // one pending push per worker (workers block on their replies, so at
+    // most one is outstanding), plus the liveness bound per worker
+    let mut heads: Vec<Option<Msg>> = (0..k).map(|_| None).collect();
+    let mut alive = vec![true; k];
+    let mut last_finish = vec![f64::NEG_INFINITY; k];
+    loop {
+        let pick = loop {
+            // earliest pending virtual arrival (ties: lowest worker rank)
+            let mut best: Option<(f64, usize)> = None;
+            for (w, h) in heads.iter().enumerate() {
+                if let Some(m) = h {
+                    let arrival = m.sent_clock + prices.wire_half[shard][w];
+                    let better = match best {
+                        Some((a, _)) => arrival < a,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((arrival, w));
+                    }
+                }
+            }
+            if let Some((arrival, w)) = best {
+                // safe only if no headless live worker can still arrive
+                // earlier (or tie): its next arrival is ≥ last reply time
+                // plus the up and down legs
+                let safe = (0..k).all(|v| {
+                    v == w
+                        || heads[v].is_some()
+                        || !alive[v]
+                        || last_finish[v]
+                            + prices.wire_half[shard][v]
+                            + prices.wire_half[shard][v]
+                            > arrival
+                });
+                if safe {
+                    break Some((arrival, w));
+                }
+            } else if alive.iter().all(|a| !a) {
+                break None;
+            }
+            let m = comm.recv_any_of(&[tags::EASGD_PUSH, tags::CTL])?;
+            let from = m.from;
+            debug_assert!(from < k, "shard server heard from rank {from}");
+            match m.payload {
+                Payload::Ctl(_) => alive[from] = false,
+                _ => heads[from] = Some(m),
+            }
+        };
+        let Some((arrival, w)) = pick else { break };
+        let m = heads[w].take().unwrap();
+        let (wvals, half) = match m.payload {
+            Payload::F32(v) => (v, false),
+            Payload::U16(bits) => {
+                let mut vals = Vec::new();
+                Wire::F16.unpack(&bits, &mut vals);
+                (vals, true)
+            }
+            _ => return Err(anyhow!("unexpected payload at shard server")),
+        };
+        // queueing: handling starts when both shard and message are ready
+        let handle = prices.handle[shard][w];
+        shard_clock = shard_clock.max(arrival) + handle;
+        busy += handle;
+        last_finish[w] = shard_clock;
+        // reply with the center as seen by this worker (pre-update)
+        let reply = if half {
+            let mut bits = Vec::new();
+            Wire::F16.pack(&center, &mut bits);
+            Payload::U16(bits)
+        } else {
+            Payload::F32(center.clone())
+        };
+        comm.send(w, tags::EASGD_PULL, reply, shard_clock)?;
+        for (c, wi) in center.iter_mut().zip(&wvals) {
+            *c += alpha * (wi - *c);
+        }
+        served.push(w);
+    }
+    Ok(ServerOut { shard, center, served, busy, clock_end: shard_clock })
+}
+
+/// Aggregate result of a [`measure_sharded`] probe.
+#[derive(Clone, Debug, Default)]
+pub struct ShardProbe {
+    pub comm_total: f64,
+    pub comm_per_exchange: f64,
+    /// Binding-slice queue wait per exchange, workers in rank order.
+    pub queue_waits: Vec<f64>,
+    pub queue_wait_mean: f64,
+    pub queue_wait_p95: f64,
+    /// Per-shard `busy / clock_end`.
+    pub shard_busy: Vec<f64>,
+    /// Final center slices by shard.
+    pub centers: Vec<Vec<f32>>,
+    /// Per-shard serve order (worker ranks).
+    pub served: Vec<Vec<usize>>,
+    /// Final worker parameter vectors in rank order.
+    pub final_params: Vec<Vec<f32>>,
+    /// Max worker clock.
+    pub vtime: f64,
+}
+
+/// Deterministic synthetic worker parameters for probes and their serial
+/// reference replays.
+pub fn probe_params(rank: usize, elems: usize) -> Vec<f32> {
+    (0..elems).map(|i| ((rank * 31 + i * 7) % 997) as f32 * 1e-3).collect()
+}
+
+/// Deterministic synthetic initial center for probes and replays.
+pub fn probe_center(elems: usize) -> Vec<f32> {
+    (0..elems).map(|i| (i % 13) as f32 * 0.01).collect()
+}
+
+/// Comm-only contention probe: `cfg.workers` workers exchange an
+/// `elems`-element vector against `cfg.servers` shard queues every round,
+/// advancing their clocks by `compute_s` between exchanges — the EASGD
+/// queueing model without a `Runtime` (benches and the differential suite
+/// run this without artifacts). Real buffers move; τ is effectively 1.
+pub fn measure_sharded(
+    cfg: &EasgdConfig,
+    elems: usize,
+    rounds: usize,
+    compute_s: f64,
+    comm_scale: f64,
+) -> Result<ShardProbe> {
+    let plan = Arc::new(ShardPlan::new(elems, cfg.workers, cfg.servers)?);
+    let topo = Topology::by_name(&cfg.topology, plan.world_size())
+        .ok_or_else(|| anyhow!("unknown topology '{}'", cfg.topology))?;
+    let links = LinkParams::default();
+    let prices = Arc::new(ShardPrices::new(cfg, &topo, &links, &plan, comm_scale));
+    let half = cfg.exchange.half_wire();
+    let alpha = cfg.alpha as f32;
+
+    enum Out {
+        Worker { comm_time: f64, waits: Vec<f64>, clock: f64, params: Vec<f32> },
+        Server(ServerOut),
+    }
+
+    let world = mpi::world(plan.world_size());
+    let mut handles = Vec::new();
+    for (rank, comm) in world.into_iter().enumerate() {
+        let plan = plan.clone();
+        let prices = prices.clone();
+        handles.push(thread::spawn(move || -> Result<Out> {
+            let mut comm = comm;
+            if rank >= plan.workers {
+                let shard = rank - plan.workers;
+                let (lo, len) = plan.slices[shard];
+                let init = probe_center(elems)[lo..lo + len].to_vec();
+                let out = server_shard_main(&mut comm, &plan, shard, &prices, alpha, init)?;
+                Ok(Out::Server(out))
+            } else {
+                let mut params = probe_params(rank, elems);
+                let mut clock = 0.0f64;
+                let mut comm_time = 0.0f64;
+                let mut waits = Vec::with_capacity(rounds);
+                for _ in 0..rounds {
+                    clock += compute_s;
+                    let t = worker_exchange(
+                        &mut comm, rank, &plan, &prices, half, alpha, &mut params, clock,
+                    )?;
+                    clock = t.new_clock;
+                    comm_time += t.t_comm;
+                    waits.push(t.queue_wait);
+                }
+                for j in 0..plan.servers {
+                    comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), clock)?;
+                }
+                Ok(Out::Worker { comm_time, waits, clock, params })
+            }
+        }));
+    }
+
+    let mut probe = ShardProbe {
+        shard_busy: vec![0.0; plan.servers],
+        centers: vec![Vec::new(); plan.servers],
+        served: vec![Vec::new(); plan.servers],
+        ..Default::default()
+    };
+    let mut exchanges = 0usize;
+    for h in handles {
+        match h.join().map_err(|_| anyhow!("sharded probe thread panicked"))?? {
+            Out::Worker { comm_time, waits, clock, params } => {
+                probe.comm_total += comm_time;
+                exchanges += waits.len();
+                probe.queue_waits.extend(waits);
+                probe.vtime = probe.vtime.max(clock);
+                probe.final_params.push(params);
+            }
+            Out::Server(s) => {
+                probe.shard_busy[s.shard] =
+                    if s.clock_end > 0.0 { s.busy / s.clock_end } else { 0.0 };
+                probe.centers[s.shard] = s.center;
+                probe.served[s.shard] = s.served;
+            }
+        }
+    }
+    probe.comm_per_exchange = probe.comm_total / exchanges.max(1) as f64;
+    probe.queue_wait_mean = crate::util::mean(&probe.queue_waits);
+    probe.queue_wait_p95 = crate::util::quantile(&probe.queue_waits, 0.95);
+    Ok(probe)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::StrategyKind;
+
+    #[test]
+    fn plan_slices_cover_and_validate() {
+        let p = ShardPlan::new(10, 2, 3).unwrap();
+        assert_eq!(p.slices, vec![(0, 4), (4, 3), (7, 3)]);
+        assert_eq!(p.world_size(), 5);
+        assert_eq!(p.server_rank(2), 4);
+        assert!(ShardPlan::new(10, 0, 1).is_err());
+        let err = ShardPlan::new(10, 4, 0).unwrap_err().to_string();
+        assert!(err.contains("servers"), "{err}");
+        let err = ShardPlan::new(10, 4, 11).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn prices_scale_with_slice_bytes_and_wire_format() {
+        let mut cfg = EasgdConfig::quick("mlp", 4, 1);
+        cfg.servers = 2;
+        cfg.topology = "mosaic".into();
+        let plan = ShardPlan::new(1 << 20, 4, 2).unwrap();
+        let topo = Topology::by_name("mosaic", plan.world_size()).unwrap();
+        let links = LinkParams::default();
+        let f32p = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        cfg.exchange = StrategyKind::Asa16;
+        let f16p = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        for j in 0..2 {
+            for w in 0..4 {
+                assert!(f32p.wire_half[j][w] > 0.0);
+                assert!(f16p.wire_half[j][w] < f32p.wire_half[j][w], "f16 wire must shrink");
+                // the elastic update stays f32 regardless of the wire
+                assert_eq!(f16p.handle[j][w], f32p.handle[j][w]);
+            }
+        }
+        // comm_scale stretches both wire and handling linearly
+        let scaled = ShardPrices::new(&cfg, &topo, &links, &plan, 3.0);
+        assert!((scaled.handle[0][0] - 3.0 * f16p.handle[0][0]).abs() < 1e-15);
+        assert!((scaled.wire_half[0][0] - 3.0 * f16p.wire_half[0][0]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chunk_pipelining_shrinks_handle_per_shard() {
+        let mut cfg = EasgdConfig::quick("mlp", 2, 1);
+        cfg.servers = 2;
+        let plan = ShardPlan::new(2 << 20, 2, 2).unwrap(); // 4 MiB slices
+        let topo = Topology::by_name("mosaic", plan.world_size()).unwrap();
+        let links = LinkParams::default();
+        let mono = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        cfg.chunk_kib = 256;
+        cfg.pipeline = true;
+        let piped = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        assert!(piped.handle[0][0] < mono.handle[0][0]);
+        assert_eq!(piped.wire_half[0][0], mono.wire_half[0][0]);
+    }
+}

@@ -9,7 +9,8 @@
 //!
 //! * **L3 (this crate)** — the coordination contribution: BSP engine,
 //!   CUDA-aware exchange strategies (`collectives`: AR / ASA / ASA16 / Ring),
-//!   asynchronous EASGD (`easgd`), the parallel loading pipeline (`loader`),
+//!   asynchronous EASGD with sharded multi-server parameter queues
+//!   (`easgd`, `easgd::shard`), the parallel loading pipeline (`loader`),
 //!   plus every substrate the paper depends on: an MPI-style message-passing
 //!   layer (`mpi`), the copper/mosaic cluster topologies (`cluster`), and an
 //!   interconnect timing model (`simnet`).
@@ -42,6 +43,18 @@
 //! is the serially-priced ablation). The EASGD server uses the same idea:
 //! with chunking enabled its elastic update of chunk *i−1* overlaps chunk
 //! *i*'s arrival.
+//!
+//! ## Sharded EASGD parameter servers (`servers = S`)
+//!
+//! The §4 async framework's single server queues every elastic exchange;
+//! at τ=1 and k=8 that queue dominates comm overhead. [`easgd::shard`]
+//! splits the center variable into S rank-segment-aligned slices, one
+//! server rank (own simulated GPU, own queue) per slice: workers push/pull
+//! their S slices concurrently and complete at the max slice round-trip.
+//! Each shard serves in deterministic virtual-arrival order, keyed
+//! `max(server_clock, sent + down_wire) + handle_cost`, and the
+//! per-exchange queue wait (mean/p95) plus per-shard busy fraction surface
+//! in [`easgd::EasgdReport`] and [`metrics::Breakdown::comm_queue`].
 //!
 //! ## Hierarchical two-level exchange (`hier:<inner>`)
 //!

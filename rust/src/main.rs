@@ -161,11 +161,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         rep.vtime_total, rep.throughput, rep.final_train_loss, rep.final_val_err
     );
     println!(
-        "breakdown: compute={:.2}s comm={:.2}s (kernel {:.1}%) stall={:.2}s apply={:.2}s",
+        "breakdown: compute={:.2}s comm={:.2}s (kernel {:.1}%) stall={:.2}s h2d={:.2}s apply={:.2}s",
         rep.breakdown.compute,
         rep.breakdown.comm(),
         rep.breakdown.kernel_share_of_comm() * 100.0,
         rep.breakdown.load_stall,
+        rep.breakdown.h2d,
         rep.breakdown.apply
     );
     let rows: Vec<String> = rep
@@ -205,6 +206,12 @@ fn cmd_easgd(args: &Args) -> Result<()> {
             _ => bail!("bad --transport (mpi|shm)"),
         };
     }
+    if let Some(s) = args.usize_("servers")? {
+        cfg.servers = s;
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = t.to_string();
+    }
     if let Some(c) = args.usize_("chunk-kib")? {
         cfg.chunk_kib = c;
     }
@@ -223,9 +230,10 @@ fn cmd_easgd(args: &Args) -> Result<()> {
     }
     let sess = session()?;
     println!(
-        "easgd {} x{} workers, alpha={} tau={} transport={}",
+        "easgd {} x{} workers, {} server shard(s), alpha={} tau={} transport={}",
         cfg.model,
         cfg.workers,
+        cfg.servers,
         cfg.alpha,
         cfg.tau,
         cfg.transport.name()
@@ -234,6 +242,16 @@ fn cmd_easgd(args: &Args) -> Result<()> {
     println!(
         "done: vtime={:.2}s throughput={:.1} ex/s comm/exchange={:.4}s final_val_err={:.3}",
         rep.vtime_total, rep.throughput, rep.comm_per_exchange, rep.final_val_err
+    );
+    println!(
+        "queue: wait mean={:.6}s p95={:.6}s per exchange; shard busy = [{}]",
+        rep.queue_wait_mean,
+        rep.queue_wait_p95,
+        rep.shard_busy
+            .iter()
+            .map(|b| format!("{:.0}%", b * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ")
     );
     Ok(())
 }
@@ -305,6 +323,7 @@ fn usage() -> ! {
          tmpi train --model mlp --workers 16 --topology copper --exchange hier:asa16\n\
          tmpi train --config examples/configs/alexnet_bsp.toml\n\
          tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\
+         tmpi easgd --model mlp --workers 8 --tau 1 --servers 4 --topology copper\n\
          tmpi repro <fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all> [--iters n]\n\
          tmpi topo <copper|mosaic>\n\
          tmpi info"

@@ -12,30 +12,41 @@ use std::time::Instant;
 pub struct Breakdown {
     /// PJRT execution of train/grad steps (real, measured).
     pub compute: f64,
-    /// Simulated wire time of parameter exchange.
+    /// Simulated wire time of parameter exchange (incl. host reduction on
+    /// the AR baseline and EASGD server handling).
     pub comm_transfer: f64,
     /// Simulated GPU kernel time inside exchange (sum / cast).
     pub comm_kernel: f64,
+    /// EASGD: time exchanges sat in a shard server's queue beyond their
+    /// own wire + handling (the contention sharded servers collapse).
+    pub comm_queue: f64,
     /// Time blocked waiting for the parallel loader (overlap miss).
     pub load_stall: f64,
+    /// Simulated H2D staging of input batches (the direct loader path;
+    /// the parallel loader overlaps it in the child).
+    pub h2d: f64,
     /// SUBGD second half: sgd_apply execution (real, measured).
     pub apply: f64,
 }
 
 impl Breakdown {
     pub fn comm(&self) -> f64 {
-        self.comm_transfer + self.comm_kernel
+        self.comm_transfer + self.comm_kernel + self.comm_queue
     }
 
+    /// Sum of every component — reconciles with the virtual clock (exactly
+    /// for a single worker; a lower bound under barrier straggling).
     pub fn total(&self) -> f64 {
-        self.compute + self.comm() + self.load_stall + self.apply
+        self.compute + self.comm() + self.load_stall + self.h2d + self.apply
     }
 
     pub fn add(&mut self, other: &Breakdown) {
         self.compute += other.compute;
         self.comm_transfer += other.comm_transfer;
         self.comm_kernel += other.comm_kernel;
+        self.comm_queue += other.comm_queue;
         self.load_stall += other.load_stall;
+        self.h2d += other.h2d;
         self.apply += other.apply;
     }
 
@@ -125,11 +136,19 @@ mod tests {
             compute: 1.0,
             comm_transfer: 0.5,
             comm_kernel: 0.01,
+            comm_queue: 0.04,
             load_stall: 0.1,
+            h2d: 0.2,
             apply: 0.05,
         };
-        assert!((b.total() - 1.66).abs() < 1e-12);
-        assert!((b.kernel_share_of_comm() - 0.01 / 0.51).abs() < 1e-12);
+        assert!((b.comm() - 0.55).abs() < 1e-12);
+        assert!((b.total() - 1.9).abs() < 1e-12);
+        assert!((b.kernel_share_of_comm() - 0.01 / 0.55).abs() < 1e-12);
+        let mut sum = b;
+        sum.add(&b);
+        assert!((sum.total() - 3.8).abs() < 1e-12);
+        assert!((sum.comm_queue - 0.08).abs() < 1e-12);
+        assert!((sum.h2d - 0.4).abs() < 1e-12);
     }
 
     #[test]

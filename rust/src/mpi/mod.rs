@@ -436,6 +436,37 @@ mod tests {
     }
 
     #[test]
+    fn multi_peer_slice_roundtrip_with_out_of_order_replies() {
+        // the sharded EASGD pattern: a worker pushes slices to two shard
+        // servers and collects replies in shard order, even when the
+        // replies arrive in reversed real order (server 1 only replies
+        // after server 2 signals it already did)
+        let mut w = world(3);
+        let mut s2 = w.pop().unwrap();
+        let mut s1 = w.pop().unwrap();
+        let mut c0 = w.pop().unwrap();
+        let t1 = thread::spawn(move || {
+            let m = s1.recv(0, tags::EASGD_PUSH).unwrap();
+            let _ = s1.recv(2, tags::CTL).unwrap();
+            s1.send(0, tags::EASGD_PULL, m.payload, 1.0).unwrap();
+        });
+        let t2 = thread::spawn(move || {
+            let m = s2.recv(0, tags::EASGD_PUSH).unwrap();
+            s2.send(0, tags::EASGD_PULL, m.payload, 2.0).unwrap();
+            s2.send(1, tags::CTL, Payload::Ctl("sent".into()), 0.0).unwrap();
+        });
+        c0.send(1, tags::EASGD_PUSH, Payload::F32(vec![1.0, 2.0]), 0.0).unwrap();
+        c0.send(2, tags::EASGD_PUSH, Payload::F32(vec![3.0]), 0.0).unwrap();
+        let m1 = c0.recv(1, tags::EASGD_PULL).unwrap(); // buffers server 2's reply
+        let m2 = c0.recv(2, tags::EASGD_PULL).unwrap();
+        assert_eq!(m1.payload.bytes(), 8);
+        assert_eq!(m2.payload.bytes(), 4);
+        assert_eq!((m1.sent_clock, m2.sent_clock), (1.0, 2.0));
+        t1.join().unwrap();
+        t2.join().unwrap();
+    }
+
+    #[test]
     fn recv_any_serves_all_ranks() {
         let mut w = world(3);
         let mut server = w.remove(0);

@@ -1,0 +1,287 @@
+//! Differential + pinned-band suite for the sharded EASGD parameter
+//! server. Runtime-free: everything drives `easgd::shard::measure_sharded`
+//! (real buffers, simulated time), so the suite runs without AOT
+//! artifacts.
+//!
+//! Numeric bands are derived from `scripts/verify_easgd_bands.py`, the
+//! Python port of the pricing model + conservative arrival-ordered queue;
+//! re-run it after touching the model and update the constants here.
+
+use theano_mpi::collectives::StrategyKind;
+use theano_mpi::easgd::shard::{measure_sharded, probe_center, probe_params, ShardPlan};
+use theano_mpi::easgd::EasgdConfig;
+use theano_mpi::precision::Wire;
+
+fn cfg(workers: usize, servers: usize, topo: &str) -> EasgdConfig {
+    let mut c = EasgdConfig::quick("mlp", workers, 0);
+    c.servers = servers;
+    c.topology = topo.to_string();
+    c
+}
+
+/// Serial host reference: replay the per-slice elastic updates in each
+/// shard's recorded (virtual-arrival) serve order, round by round. Returns
+/// (center slices, worker params) to compare bit-exactly against the
+/// threaded run.
+fn replay(
+    k: usize,
+    rounds: usize,
+    elems: usize,
+    servers: usize,
+    half: bool,
+    alpha: f32,
+    served: &[Vec<usize>],
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let plan = ShardPlan::new(elems, k, servers).unwrap();
+    let mut params: Vec<Vec<f32>> = (0..k).map(|r| probe_params(r, elems)).collect();
+    let center_full = probe_center(elems);
+    let mut centers: Vec<Vec<f32>> = plan
+        .slices
+        .iter()
+        .map(|&(lo, len)| center_full[lo..lo + len].to_vec())
+        .collect();
+    let wire = |xs: &[f32]| -> Vec<f32> {
+        if half {
+            let mut bits = Vec::new();
+            Wire::F16.pack(xs, &mut bits);
+            let mut out = Vec::new();
+            Wire::F16.unpack(&bits, &mut out);
+            out
+        } else {
+            xs.to_vec()
+        }
+    };
+    for r in 0..rounds {
+        let mut replies: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); servers]; k];
+        for (j, order) in served.iter().enumerate() {
+            let slot = &order[r * k..(r + 1) * k];
+            let mut sorted = slot.to_vec();
+            sorted.sort_unstable();
+            assert_eq!(
+                sorted,
+                (0..k).collect::<Vec<_>>(),
+                "shard {j} serve order must be round-sliced"
+            );
+            let (lo, len) = plan.slices[j];
+            for &w in slot {
+                let sent = wire(&params[w][lo..lo + len]);
+                replies[w][j] = wire(&centers[j]);
+                for (c, wi) in centers[j].iter_mut().zip(&sent) {
+                    *c += alpha * (wi - *c);
+                }
+            }
+        }
+        for (w, reply) in replies.iter().enumerate() {
+            for (j, center) in reply.iter().enumerate() {
+                let (lo, len) = plan.slices[j];
+                for (p, c) in params[w][lo..lo + len].iter_mut().zip(center) {
+                    *p -= alpha * (*p - c);
+                }
+            }
+        }
+    }
+    (centers, params)
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// servers = 1 keeps the single-server data path bit-identical: the final
+/// center equals a serial host replay in arrival order, for both the f32
+/// and the real f16 wire.
+#[test]
+fn single_server_matches_serial_reference_bit_exact() {
+    for half in [false, true] {
+        let mut c = cfg(3, 1, "mosaic");
+        if half {
+            c.exchange = StrategyKind::Asa16;
+        }
+        let probe = measure_sharded(&c, 10_000, 3, 1e-3, 1.0).unwrap();
+        let (centers, params) = replay(3, 3, 10_000, 1, half, c.alpha as f32, &probe.served);
+        assert_bits_eq(&probe.centers[0], &centers[0], "center");
+        for w in 0..3 {
+            assert_bits_eq(&probe.final_params[w], &params[w], "params");
+        }
+    }
+}
+
+/// S > 1: the concatenated final center matches the serial reference
+/// applying per-slice elastic updates in each shard's arrival order
+/// (ragged slice sizes included).
+#[test]
+fn multi_shard_matches_serial_reference_bit_exact() {
+    for half in [false, true] {
+        let mut c = cfg(4, 3, "copper");
+        if half {
+            c.exchange = StrategyKind::Asa16;
+        }
+        let probe = measure_sharded(&c, 10_001, 3, 1e-3, 1.0).unwrap();
+        let (centers, params) = replay(4, 3, 10_001, 3, half, c.alpha as f32, &probe.served);
+        for j in 0..3 {
+            assert_bits_eq(&probe.centers[j], &centers[j], "center");
+        }
+        for w in 0..4 {
+            assert_bits_eq(&probe.final_params[w], &params[w], "params");
+        }
+    }
+}
+
+/// The serve discipline is deterministic: identical probes give identical
+/// timing, waits and serve orders (real thread scheduling must not leak
+/// into the virtual clock).
+#[test]
+fn probe_is_deterministic_across_runs() {
+    let c = cfg(6, 2, "copper");
+    let a = measure_sharded(&c, 50_000, 3, 5e-4, 1.0).unwrap();
+    let b = measure_sharded(&c, 50_000, 3, 5e-4, 1.0).unwrap();
+    assert_eq!(a.comm_total.to_bits(), b.comm_total.to_bits());
+    assert_eq!(a.queue_waits, b.queue_waits);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.vtime.to_bits(), b.vtime.to_bits());
+}
+
+/// Satellite bugfix pin — the k-worker τ=1 contention band. One exchange
+/// round, zero compute, copper, 1M f32 params: every worker arrives
+/// together, so worker i waits i handling slots; the aggregate is
+/// 8·(down+up) + 36·handle. Band from scripts/verify_easgd_bands.py
+/// (scenario A).
+#[test]
+fn tau1_k8_contention_band_matches_python_model() {
+    let c = cfg(8, 1, "copper");
+    let probe = measure_sharded(&c, 1_000_000, 1, 0.0, 1.0).unwrap();
+    assert!(
+        (probe.comm_total - 0.011675764705882353).abs() < 1e-10,
+        "comm_total {} off the python band",
+        probe.comm_total
+    );
+    assert!(
+        (probe.queue_wait_mean - 1.866666666666665e-4).abs() < 1e-10,
+        "wait mean {}",
+        probe.queue_wait_mean
+    );
+    // p95 (nearest-rank of 8 samples) is the 7-slot wait: 7 × 53.3 µs
+    assert!(
+        (probe.queue_wait_p95 - 3.733333333333332e-4).abs() < 1e-10,
+        "wait p95 {}",
+        probe.queue_wait_p95
+    );
+    // the wait ladder itself: i handling slots for the i-th served
+    let handle = 2.0 * 4_000_000.0 / 150e9;
+    let mut waits = probe.queue_waits.clone();
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (i, w) in waits.iter().enumerate() {
+        assert!((w - i as f64 * handle).abs() < 1e-12, "wait[{i}] = {w}");
+    }
+}
+
+/// Satellite bugfix pin — arrival-time keying. With one uniform
+/// worker→server path, sent-keying plus the old double-charged down leg
+/// cancel exactly; they diverge on heterogeneous paths. k=10 on copper
+/// puts workers 0..7 across the NIC and workers 8..9 on the server's PCIe
+/// switch; the arrival-keyed model prices 0.0249515…, the legacy
+/// sent-keyed model 0.0258049… (scenario B of the python port).
+#[test]
+fn arrival_keyed_queue_band_on_heterogeneous_paths() {
+    let c = cfg(10, 1, "copper");
+    let probe = measure_sharded(&c, 1_000_000, 2, 0.0, 1.0).unwrap();
+    assert!(
+        (probe.comm_total - 0.024951529411764702).abs() < 1e-10,
+        "comm_total {} must match the arrival-keyed band (legacy was 0.02580486…)",
+        probe.comm_total
+    );
+}
+
+/// Tentpole acceptance — S=4 strictly beats S=1 at τ=1, k=8 on copper,
+/// with the p95 queue wait collapsing (scenario C bands).
+#[test]
+fn four_shards_beat_one_at_tau1_k8_on_copper() {
+    let expect = [
+        (1usize, 0.04222305882352944, 2.6666666666666576e-4),
+        (2, 0.02179952941176473, 1.3333333333333288e-4),
+        (4, 0.011587764705882367, 6.666666666666774e-5),
+    ];
+    let mut results = Vec::new();
+    for &(servers, comm, p95) in &expect {
+        let c = cfg(8, servers, "copper");
+        let probe = measure_sharded(&c, 1_000_000, 4, 2e-3, 1.0).unwrap();
+        assert!(
+            (probe.comm_total - comm).abs() < 1e-10,
+            "S={servers}: comm_total {} vs python {comm}",
+            probe.comm_total
+        );
+        assert!(
+            (probe.queue_wait_p95 - p95).abs() < 1e-10,
+            "S={servers}: p95 {} vs python {p95}",
+            probe.queue_wait_p95
+        );
+        results.push(probe);
+    }
+    assert!(results[2].comm_total < results[0].comm_total, "S=4 must beat S=1");
+    assert!(
+        results[2].queue_wait_p95 < 0.5 * results[0].queue_wait_p95,
+        "queue wait must collapse"
+    );
+    // per-shard busy fraction falls as the load spreads (scenario C)
+    assert!((results[0].shard_busy[0] - 0.13276479170464103).abs() < 1e-10);
+    assert!((results[2].shard_busy[0] - 0.045747394910812554).abs() < 1e-10);
+    assert!(results[2].shard_busy.iter().all(|b| *b < results[0].shard_busy[0]));
+}
+
+/// The asa16-family wire halves the priced bytes of the sharded exchange
+/// (scenario D band) while the queue structure is unchanged.
+#[test]
+fn f16_wire_halves_sharded_comm() {
+    let mut c = cfg(8, 1, "copper");
+    c.exchange = StrategyKind::Asa16;
+    let probe = measure_sharded(&c, 1_000_000, 1, 0.0, 1.0).unwrap();
+    assert!(
+        (probe.comm_total - 0.006969882352941175).abs() < 1e-10,
+        "f16 comm_total {}",
+        probe.comm_total
+    );
+    assert!(probe.comm_total < 0.011675764705882353);
+}
+
+/// chunk_kib pipelining composes with sharding: streamed slices hide the
+/// shard's elastic update under the incoming wire, strictly shrinking
+/// total comm when chunks > 1.
+#[test]
+fn chunk_pipelining_composes_with_sharding() {
+    let mut mono = cfg(8, 2, "copper");
+    mono.chunk_kib = 0;
+    let mut piped = cfg(8, 2, "copper");
+    piped.chunk_kib = 256;
+    piped.pipeline = true;
+    let a = measure_sharded(&mono, 1_000_000, 2, 1e-3, 1.0).unwrap();
+    let b = measure_sharded(&piped, 1_000_000, 2, 1e-3, 1.0).unwrap();
+    assert!(
+        b.comm_total < a.comm_total,
+        "pipelined {} must beat monolithic {}",
+        b.comm_total,
+        a.comm_total
+    );
+    // the ablation: chunking without the pipeline prices like monolithic
+    let mut serial = piped.clone();
+    serial.pipeline = false;
+    let c = measure_sharded(&serial, 1_000_000, 2, 1e-3, 1.0).unwrap();
+    assert!((c.comm_total - a.comm_total).abs() < 1e-12);
+}
+
+/// comm_scale stretches the sharded exchange like sim_model does for the
+/// trained runner (wire and handling both scale linearly).
+#[test]
+fn comm_scale_stretches_the_probe() {
+    let c = cfg(4, 2, "mosaic");
+    let base = measure_sharded(&c, 100_000, 1, 0.0, 1.0).unwrap();
+    let big = measure_sharded(&c, 100_000, 1, 0.0, 10.0).unwrap();
+    assert!(
+        (big.comm_total - 10.0 * base.comm_total).abs() < 1e-9 * big.comm_total.max(1.0),
+        "big {} vs 10x base {}",
+        big.comm_total,
+        base.comm_total
+    );
+}

@@ -125,6 +125,32 @@ fn transformer_lm_step_runs_under_bsp() {
 }
 
 #[test]
+fn breakdown_reconciles_with_virtual_clock() {
+    let Some(rt) = rt() else { return };
+    // direct loader path (use_loader = false) charges H2D staging; with a
+    // single worker there is no barrier skew, so the breakdown must
+    // account for every simulated second on the clock
+    let mut cfg = BspConfig::quick("alexnet", 1, 4);
+    cfg.use_loader = false;
+    cfg.lr = LrSchedule::Const { base: 0.01 };
+    let rep = run_bsp(&rt, &cfg).unwrap();
+    assert!(rep.breakdown.h2d > 0.0, "direct path must charge h2d");
+    let total = rep.breakdown.total();
+    assert!(
+        (total - rep.vtime_total).abs() < 1e-9 * total.max(1.0),
+        "breakdown {total} != clock {}",
+        rep.vtime_total
+    );
+    // multi-worker: barrier straggling can only push the clock beyond one
+    // rank's breakdown, never below it
+    let mut cfg = BspConfig::quick("alexnet", 2, 4);
+    cfg.use_loader = false;
+    cfg.lr = LrSchedule::Const { base: 0.01 };
+    let rep = run_bsp(&rt, &cfg).unwrap();
+    assert!(rep.breakdown.total() <= rep.vtime_total + 1e-9);
+}
+
+#[test]
 fn workers_must_fit_topology() {
     let Some(rt) = rt() else { return };
     let mut cfg = BspConfig::quick("mlp", 2, 2);

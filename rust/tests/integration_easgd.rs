@@ -62,6 +62,29 @@ fn larger_tau_reduces_comm_total() {
 }
 
 #[test]
+fn sharded_easgd_trains_and_reports_queue_metrics() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = EasgdConfig::quick("mlp", 4, 30);
+    cfg.servers = 2;
+    cfg.lr = LrSchedule::Const { base: 0.05 };
+    cfg.eval_every = 10;
+    let rep = run_easgd(&rt, &cfg).unwrap();
+    assert_eq!(rep.servers, 2);
+    assert_eq!(rep.shard_busy.len(), 2);
+    assert!(rep.shard_busy.iter().all(|b| (0.0..=1.0).contains(b)), "{:?}", rep.shard_busy);
+    assert!(rep.final_val_err < 0.6, "val_err={}", rep.final_val_err);
+    assert!(rep.comm_per_exchange > 0.0);
+    assert!(rep.queue_wait_mean >= 0.0 && rep.queue_wait_p95 >= 0.0);
+    // the breakdown's comm split reconciles with the aggregated comm time
+    let comm = rep.breakdown.comm_transfer + rep.breakdown.comm_queue;
+    assert!(
+        (comm - rep.comm_total).abs() < 1e-9 * rep.comm_total.max(1.0),
+        "breakdown comm {comm} vs comm_total {}",
+        rep.comm_total
+    );
+}
+
+#[test]
 fn alpha_zero_never_mixes() {
     // α=0: elastic force off; center never moves and workers free-run.
     // The run must still terminate and produce finite results.

@@ -1,0 +1,348 @@
+#!/usr/bin/env python3
+"""Python port of the EASGD sharded-server pricing model.
+
+Stdlib-only reference implementation of the Rust `simnet` pricing and the
+`easgd::shard` conservative arrival-ordered queue (discrete-event form of
+the thread implementation). Every numeric band pinned by the Rust suites
+`rust/tests/easgd_sharded.rs` and `rust/benches/bench_easgd.rs` is derived
+here; run this script after touching the pricing model and update the Rust
+constants if the printed values move.
+
+    python3 scripts/verify_easgd_bands.py
+
+The script exits non-zero if the model's own invariants fail (S=4 not
+beating S=1, queue waits not collapsing, serve order not round-sliced).
+"""
+
+import math
+import sys
+
+# --- LinkParams::default() -------------------------------------------------
+PCIE_GBPS = 12.0
+PCIE_LAT_US = 10.0
+QPI_GBPS = 16.0
+QPI_LAT_US = 1.0
+IB_FDR_GBPS = 6.8
+IB_QDR_GBPS = 4.0
+IB_LAT_US = 1.5
+HOST_MEM_GBPS = 10.0
+HOST_REDUCE_GBPS = 5.0
+GPU_REDUCE_GBPS = 150.0
+
+
+# --- cluster::Topology -----------------------------------------------------
+def copper(nodes):
+    """(node, socket, switch) per GPU: 2 sockets x 4 dies per node."""
+    gpus = []
+    for n in range(nodes):
+        for socket in range(2):
+            for _ in range(4):
+                gpus.append((n, socket, n * 2 + socket))
+    return {"gpus": gpus, "ib": IB_FDR_GBPS}
+
+
+def mosaic(nodes):
+    return {"gpus": [(n, 0, n * 2) for n in range(nodes)], "ib": IB_QDR_GBPS}
+
+
+def by_name(name, workers):
+    if name == "mosaic":
+        return mosaic(max(workers, 1))
+    if name == "copper":
+        return copper(-(-max(workers, 1) // 8))
+    raise ValueError(name)
+
+
+def path(topo, a, b):
+    ga, gb = topo["gpus"][a], topo["gpus"][b]
+    if a == b:
+        return "local"
+    if ga[0] != gb[0]:
+        return "network"
+    if ga[2] == gb[2]:
+        return "p2p"
+    return "qpi"
+
+
+# --- simnet::phase_time (single transfer, cuda_aware=true) -----------------
+def phase_time_single(topo, src, dst, bytes_):
+    if src == dst or bytes_ == 0:
+        return 0.0
+    kind = path(topo, src, dst)
+    if kind == "p2p":
+        bw = bytes_ / (PCIE_GBPS * 1e9)  # up and down are separate resources
+        lat = 2.0 * PCIE_LAT_US
+    elif kind == "qpi":
+        bw = max(
+            bytes_ / (PCIE_GBPS * 1e9),
+            bytes_ / (QPI_GBPS * 1e9),
+            2 * bytes_ / (HOST_MEM_GBPS * 1e9),
+        )
+        lat = 2.0 * PCIE_LAT_US + QPI_LAT_US
+    elif kind == "network":
+        bw = max(
+            bytes_ / (PCIE_GBPS * 1e9),
+            bytes_ / (HOST_MEM_GBPS * 1e9),
+            bytes_ / (topo["ib"] * 1e9),
+        )
+        lat = 2.0 * PCIE_LAT_US + IB_LAT_US
+    else:
+        return 0.0
+    return bw + lat * 1e-6
+
+
+# --- easgd pricing ---------------------------------------------------------
+def exchange_cost(transport, topo, worker_gpu, server_gpu, bytes_):
+    if transport == "mpi":
+        down = phase_time_single(topo, worker_gpu, server_gpu, bytes_)
+        up = phase_time_single(topo, server_gpu, worker_gpu, bytes_)
+        return down + up
+    # platoon-shm
+    pcie = PCIE_LAT_US * 1e-6 + bytes_ / (PCIE_GBPS * 1e9)
+    shm_copy = bytes_ / (HOST_MEM_GBPS * 1e9)
+    return 2.0 * (pcie + 2.0 * shm_copy + pcie)
+
+
+def server_update_cost(transport, bytes_):
+    if transport == "mpi":
+        return 2 * bytes_ / (GPU_REDUCE_GBPS * 1e9)
+    return 2 * bytes_ / (HOST_REDUCE_GBPS * 1e9)
+
+
+def server_handle_cost(transport, chunk_kib, pipeline, bytes_, down_wire):
+    full = server_update_cost(transport, bytes_)
+    if chunk_kib == 0 or not pipeline:
+        return full
+    chunks = max(-(-bytes_ // (chunk_kib * 1024)), 1)
+    hidden = max(min(full - full / chunks, down_wire * (chunks - 1) / chunks), 0.0)
+    return full - hidden
+
+
+def split_even(n, k):
+    base, extra = n // k, n % k
+    out, off = [], 0
+    for i in range(k):
+        ln = base + (1 if i < extra else 0)
+        out.append((off, ln))
+        off += ln
+    return out
+
+
+def shard_prices(transport, topo, k, servers, elems, half, chunk_kib, pipeline, scale):
+    """wire_half[j][w] (scaled one-way) and handle[j][w] (scaled occupancy)."""
+    slices = split_even(elems, servers)
+    wire_half = [[0.0] * k for _ in range(servers)]
+    handle = [[0.0] * k for _ in range(servers)]
+    for j, (_, ln) in enumerate(slices):
+        full_bytes = 4 * ln
+        wire_bytes = full_bytes // 2 if half else full_bytes
+        for w in range(k):
+            rt = exchange_cost(transport, topo, w, k + j, wire_bytes)
+            wire_half[j][w] = rt / 2.0 * scale
+            handle[j][w] = (
+                server_handle_cost(transport, chunk_kib, pipeline, full_bytes, rt / 2.0)
+                * scale
+            )
+    return slices, wire_half, handle
+
+
+# --- the conservative arrival-ordered queue (discrete-event port) ----------
+def simulate(topo_name, transport, k, servers, elems, rounds, compute_s,
+             half=False, chunk_kib=0, pipeline=True, scale=1.0,
+             legacy_sent_keying=False):
+    """Mirror of `easgd::shard::measure_sharded`'s virtual-time behavior.
+
+    Returns per-worker comm totals, queue waits (binding slice), per-shard
+    serve order / busy fraction — everything the Rust suites pin.
+    """
+    topo = by_name(topo_name, k + servers)
+    slices, down, handle = shard_prices(
+        transport, topo, k, servers, elems, half, chunk_kib, pipeline, scale
+    )
+    up = down  # symmetric paths
+    INF = float("inf")
+
+    clock = [0.0] * k
+    rnd = [0] * k
+    waiting = [False] * k
+    alive = [True] * k
+    heads = [[None] * k for _ in range(servers)]  # (arrival, sent C)
+    last_finish = [[-INF] * k for _ in range(servers)]
+    reply = [[None] * servers for _ in range(k)]  # finish time per shard
+    shard_clock = [0.0] * servers
+    busy = [0.0] * servers
+    served = [[] for _ in range(servers)]
+    comm = [0.0] * k
+    waits = [[] for _ in range(k)]
+
+    progress = True
+    while progress:
+        progress = False
+        # workers: send the next round or stop
+        for w in range(k):
+            if not waiting[w] and alive[w]:
+                if rnd[w] < rounds:
+                    clock[w] = clock[w] + compute_s
+                    for j in range(servers):
+                        heads[j][w] = (clock[w] + down[j][w], clock[w])
+                    waiting[w] = True
+                else:
+                    alive[w] = False
+                progress = True
+        # shards: serve every safely-servable head, earliest arrival first
+        for j in range(servers):
+            while True:
+                best = None
+                for w in range(k):
+                    if heads[j][w] is not None and (
+                        best is None or heads[j][w][0] < best[0]
+                    ):
+                        best = (heads[j][w][0], w)
+                if best is None:
+                    break
+                a, w = best
+                safe = True
+                for v in range(k):
+                    if v != w and alive[v] and heads[j][v] is None:
+                        lb = last_finish[j][v] + up[j][v] + down[j][v]
+                        if not lb > a:
+                            safe = False
+                            break
+                if not safe:
+                    break
+                arrival, sent = heads[j][w]
+                heads[j][w] = None
+                key = sent if legacy_sent_keying else arrival
+                shard_clock[j] = max(shard_clock[j], key) + handle[j][w]
+                busy[j] += handle[j][w]
+                last_finish[j][w] = shard_clock[j]
+                reply[w][j] = shard_clock[j]
+                served[j].append(w)
+                progress = True
+        # workers: complete an exchange once every shard replied
+        for w in range(k):
+            if waiting[w] and all(r is not None for r in reply[w]):
+                if legacy_sent_keying:
+                    # pre-fix accounting: t_comm = (finish - C) + down + up
+                    # (queue keyed on sent time, wire charged separately)
+                    assert servers == 1
+                    f = reply[w][0]
+                    new_clock = clock[w] + max(f - clock[w], 0.0) + 2 * down[0][w]
+                    qwait = 0.0
+                else:
+                    new_clock = clock[w]
+                    qwait = 0.0
+                    for j in range(servers):
+                        done = reply[w][j] + up[j][w]
+                        if done > new_clock:
+                            new_clock = done
+                            qwait = max(
+                                reply[w][j] - (clock[w] + down[j][w]) - handle[j][w],
+                                0.0,
+                            )
+                comm[w] += new_clock - clock[w]
+                waits[w].append(qwait)
+                clock[w] = new_clock
+                reply[w] = [None] * servers
+                waiting[w] = False
+                rnd[w] += 1
+                progress = True
+
+    all_waits = [q for w in range(k) for q in waits[w]]
+    total = 0.0
+    for w in range(k):
+        total += comm[w]
+    srt = sorted(all_waits)
+    p95 = srt[round((len(srt) - 1) * 0.95)] if srt else 0.0
+    return {
+        "comm_total": total,
+        "per_exchange": total / max(k * rounds, 1),
+        "waits": all_waits,
+        "wait_mean": sum(all_waits) / max(len(all_waits), 1),
+        "wait_p95": p95,
+        "busy_frac": [
+            busy[j] / shard_clock[j] if shard_clock[j] > 0.0 else 0.0
+            for j in range(servers)
+        ],
+        "served": served,
+        "vtime": max(clock),
+    }
+
+
+def round_sliced(served, k, rounds):
+    """Every k-block of a shard's serve order is a permutation of 0..k."""
+    for order in served:
+        if len(order) != k * rounds:
+            return False
+        for r in range(rounds):
+            if sorted(order[r * k : (r + 1) * k]) != list(range(k)):
+                return False
+    return True
+
+
+def main():
+    ok = True
+
+    def show(name, val):
+        print(f"{name:58s} {val!r}")
+
+    # Scenario A — the tau=1, k=8 contention band (satellite bugfix pin):
+    # one exchange round, zero compute, copper, 1M f32 params, S=1.
+    a = simulate("copper", "mpi", k=8, servers=1, elems=1_000_000, rounds=1,
+                 compute_s=0.0)
+    show("A: k=8 S=1 rounds=1 comm_total", a["comm_total"])
+    show("A: wait_mean", a["wait_mean"])
+    show("A: wait_p95", a["wait_p95"])
+    # closed form: sum_i [down + (i+1)h + up] with equal arrivals
+    topo = copper(2)
+    rt = exchange_cost("mpi", topo, 0, 8, 4_000_000)
+    h = server_update_cost("mpi", 4_000_000)
+    closed = 8 * rt + h * 36
+    show("A: closed-form comm_total", closed)
+    ok &= abs(a["comm_total"] - closed) < 1e-12
+    ok &= abs(a["wait_p95"] - 7 * h) < 1e-12
+
+    # Scenario B — arrival-time keying pin. Legacy accounting keyed the
+    # queue on the *sent* clock and charged the down leg again in t_comm.
+    # With one uniform worker->server path those two errors cancel exactly
+    # (the busy chain is the arrival-keyed chain shifted by `down`); they
+    # diverge as soon as paths are heterogeneous. k=10 on copper: workers
+    # 0..7 reach the server (gpu 10, node 1) over the NIC while workers
+    # 8..9 share its PCIe switch.
+    topo_b = by_name("copper", 11)
+    kinds = {path(topo_b, w, 10) for w in range(10)}
+    ok &= kinds == {"network", "p2p"}
+    b = simulate("copper", "mpi", k=10, servers=1, elems=1_000_000, rounds=2,
+                 compute_s=0.0)
+    b_old = simulate("copper", "mpi", k=10, servers=1, elems=1_000_000, rounds=2,
+                     compute_s=0.0, legacy_sent_keying=True)
+    show("B: k=10 arrival-keyed comm_total", b["comm_total"])
+    show("B: k=10 legacy sent-keyed comm_total", b_old["comm_total"])
+    show("B: keying delta", b["comm_total"] - b_old["comm_total"])
+    ok &= abs(b["comm_total"] - b_old["comm_total"]) > 1e-6
+
+    # Scenario C — the bench sweep: k=8, copper, 4 rounds, 2ms compute,
+    # S in {1, 2, 4}. S=4 must strictly beat S=1 with p95 collapsing.
+    c = {}
+    for s in (1, 2, 4):
+        c[s] = simulate("copper", "mpi", k=8, servers=s, elems=1_000_000,
+                        rounds=4, compute_s=2e-3)
+        show(f"C: S={s} comm_total", c[s]["comm_total"])
+        show(f"C: S={s} wait_p95", c[s]["wait_p95"])
+        show(f"C: S={s} busy_frac[0]", c[s]["busy_frac"][0])
+        ok &= round_sliced(c[s]["served"], 8, 4)
+    ok &= c[4]["comm_total"] < c[1]["comm_total"]
+    ok &= c[4]["wait_p95"] < 0.5 * c[1]["wait_p95"]
+
+    # Scenario D — f16 wire halves the priced bytes (same queue structure).
+    d = simulate("copper", "mpi", k=8, servers=1, elems=1_000_000, rounds=1,
+                 compute_s=0.0, half=True)
+    show("D: k=8 S=1 f16 comm_total", d["comm_total"])
+    ok &= d["comm_total"] < a["comm_total"]
+
+    print("\nbands", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
