@@ -187,6 +187,9 @@ def build_full_scale(manifest: dict):
             "paper_params": registry.PAPER_COUNTS[name],
             "batches": list(info["batches"]),
             "segments": [[nm, sz] for nm, sz in registry.segments(name)],
+            # per-layer param counts in exchange order: the wait-free
+            # backprop bucket boundaries (rust models::full_scale_layer_table)
+            "layers": [sz for _, sz in registry.segments(name)],
         }
         for name, info in registry.FULL_SCALE.items()
     }

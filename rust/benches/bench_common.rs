@@ -6,11 +6,30 @@
 //! ```text
 //! bench <name>  mean=1.234ms  p10=1.1ms  p90=1.4ms  n=20
 //! ```
+//!
+//! ## Machine-readable output (the CI bench-regression gate)
+//!
+//! Every `report()`ed value (and every `bench()` mean, tagged `s_wall`) is
+//! also collected in-process; when `TMPI_BENCH_JSON=<path>` is set,
+//! `write_json()` dumps them as `{"metrics": {name: {value, unit}}}` —
+//! what `.github/workflows/tier1.yml`'s bench-smoke job uploads and
+//! `scripts/bench_gate.py` diffs against the committed baselines. Simulated
+//! (`report`) values are deterministic; wall times (`s_wall`) are not and
+//! the gate ignores them. `TMPI_BENCH_SMOKE=1` asks benches to run their
+//! reduced, artifact-free sweep (see `smoke()`).
 
 // each bench binary compiles its own copy; not every bench uses every helper
 #![allow(dead_code)]
 
+use std::sync::Mutex;
 use std::time::Instant;
+
+static COLLECTED: Mutex<Vec<(String, f64, String)>> = Mutex::new(Vec::new());
+
+/// Reduced-sweep mode for CI smoke runs (`TMPI_BENCH_SMOKE=1`).
+pub fn smoke() -> bool {
+    std::env::var("TMPI_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
 
 pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     for _ in 0..2 {
@@ -31,6 +50,7 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         fmt(p(0.1)),
         fmt(p(0.9))
     );
+    collect(name, mean, "s_wall");
 }
 
 pub fn fmt(s: f64) -> String {
@@ -46,4 +66,46 @@ pub fn fmt(s: f64) -> String {
 /// Report a derived scalar (simulated seconds etc.) in the same format.
 pub fn report(name: &str, value: f64, unit: &str) {
     println!("bench {name}  value={value:.6}{unit}");
+    collect(name, value, unit.trim());
+}
+
+fn collect(name: &str, value: f64, unit: &str) {
+    COLLECTED.lock().unwrap().push((name.to_string(), value, unit.to_string()));
+    // flush after every metric: a tripped bench assertion aborts before
+    // main's final write_json(), and the partial JSON is exactly what the
+    // CI artifact needs to show which metrics moved
+    if std::env::var("TMPI_BENCH_JSON").is_ok() {
+        let _ = write_json_quiet();
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write collected metrics to `$TMPI_BENCH_JSON` (no-op when unset).
+/// Call at the end of a bench main; `collect()` also flushes after every
+/// metric so an aborted run leaves the partial file behind.
+pub fn write_json() -> std::io::Result<()> {
+    let Ok(path) = std::env::var("TMPI_BENCH_JSON") else { return Ok(()) };
+    write_json_quiet()?;
+    println!("bench-json -> {path}");
+    Ok(())
+}
+
+fn write_json_quiet() -> std::io::Result<()> {
+    let Ok(path) = std::env::var("TMPI_BENCH_JSON") else { return Ok(()) };
+    let rows = COLLECTED.lock().unwrap();
+    let mut out = String::from("{\n \"metrics\": {\n");
+    for (i, (name, value, unit)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "  \"{}\": {{\"value\": {}, \"unit\": \"{}\"}}{comma}\n",
+            json_escape(name),
+            if value.is_finite() { format!("{value:.9}") } else { "null".to_string() },
+            json_escape(unit)
+        ));
+    }
+    out.push_str(" }\n}\n");
+    std::fs::write(&path, out)
 }

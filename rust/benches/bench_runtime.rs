@@ -5,8 +5,44 @@
 
 mod bench_common;
 
-use bench_common::{bench, report};
+use std::sync::Arc;
+
+use bench_common::{bench, report, write_json};
+use theano_mpi::bsp::{run_bsp, BspConfig};
+use theano_mpi::collectives::OverlapMode;
 use theano_mpi::runtime::{HostTensor, Runtime};
+
+/// End-to-end wait-free backprop on the runnable proxy: same model, same
+/// seed, exchange priced post-backward vs wait-free. The overlap must be
+/// visible from `tmpi train`'s accounting path (BspReport), not only from
+/// the comm-only probes.
+fn wfbp_e2e(rt: &Arc<Runtime>) -> anyhow::Result<()> {
+    let mut base = BspConfig::quick("mlp", 4, 8);
+    base.topology = "copper".into();
+    base.sim_model = Some("alexnet".into());
+    for overlap in [OverlapMode::Post, OverlapMode::Wfbp] {
+        let mut cfg = base.clone();
+        cfg.overlap = overlap;
+        let rep = run_bsp(rt, &cfg)?;
+        report(&format!("wfbp_e2e/mlp_simalexnet/{}/vtime", overlap.name()), rep.vtime_total, "s");
+        report(
+            &format!("wfbp_e2e/mlp_simalexnet/{}/overlap_fraction", overlap.name()),
+            rep.overlap_fraction,
+            "",
+        );
+        if overlap == OverlapMode::Wfbp {
+            assert!(
+                rep.overlap_fraction > 0.0 && rep.overlap_fraction <= 1.0,
+                "wfbp run must report overlap_fraction in (0,1], got {}",
+                rep.overlap_fraction
+            );
+            assert!(rep.breakdown.comm_hidden > 0.0, "wfbp must hide comm time");
+        } else {
+            assert_eq!(rep.overlap_fraction, 0.0, "post ablation hides nothing");
+        }
+    }
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_default()?;
@@ -64,5 +100,8 @@ fn main() -> anyhow::Result<()> {
     bench("kernels/pack_f16/1M", 5, || {
         k.pack(theano_mpi::precision::Wire::F16, &a).unwrap();
     });
+
+    wfbp_e2e(&Arc::new(rt))?;
+    write_json()?;
     Ok(())
 }

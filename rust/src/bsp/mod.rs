@@ -24,7 +24,9 @@ use std::thread;
 use anyhow::{anyhow, Context, Result};
 
 use crate::cluster::Topology;
-use crate::collectives::{CommReport, ExchangeCtx, ReduceOp, StrategyKind};
+use crate::collectives::{
+    wfbp, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan,
+};
 use crate::data::{FeatureDataset, ImageDataset, ImageSpec, TokenStream};
 use crate::loader::ParallelLoader;
 use crate::metrics::Breakdown;
@@ -70,9 +72,33 @@ pub struct BspConfig {
     /// overlap chunk transfers with the previous chunk's kernels; with
     /// `false` chunks are priced serially (the ablation knob)
     pub pipeline: bool,
+    /// when to exchange gradients relative to the backward pass (SUBGD
+    /// only): whole-vector after the step (`None`), layer buckets after
+    /// the step (`Post`, the ablation), or wait-free as each bucket's
+    /// gradients become ready (`Wfbp`)
+    pub overlap: OverlapMode,
+    /// KiB per WFBP gradient bucket, coalescing layers from the top of the
+    /// network down (0 = one bucket per layer); full-scale KiB when
+    /// `sim_model` is set
+    pub bucket_kib: usize,
 }
 
 impl BspConfig {
+    /// Wait-free/bucketed overlap exchanges *gradients* while the backward
+    /// pass still runs, so it only composes with SUBGD; AWAGD exchanges
+    /// post-update weights, whose backward pass is already over. Checked
+    /// at the top of [`run_bsp`]; pure so config handling can test it.
+    pub fn validate_overlap(&self) -> Result<()> {
+        if self.overlap.bucketed() && self.scheme != Scheme::Subgd {
+            return Err(anyhow!(
+                "overlap={} exchanges gradients during the backward pass and so \
+                 requires scheme=subgd (awagd exchanges post-update weights)",
+                self.overlap.name()
+            ));
+        }
+        Ok(())
+    }
+
     pub fn quick(model: &str, workers: usize, iters: usize) -> BspConfig {
         BspConfig {
             model: model.to_string(),
@@ -95,6 +121,8 @@ impl BspConfig {
             integrity_every: 0,
             chunk_kib: 0,
             pipeline: true,
+            overlap: OverlapMode::None,
+            bucket_kib: 0,
         }
     }
 }
@@ -125,14 +153,23 @@ pub struct BspReport {
     pub comm: CommReport,
     /// examples per virtual second across all workers
     pub throughput: f64,
+    /// share of exchange time hidden under the backward pass by wait-free
+    /// backprop: `comm_hidden / (comm_hidden + visible comm)`; 0.0 when
+    /// `overlap != wfbp` or nothing was exchanged
+    pub overlap_fraction: f64,
     pub final_train_loss: f64,
     pub final_val_err: f64,
 }
 
 impl BspReport {
     /// Virtual seconds to process `n` examples (Table 3's unit: per-5120).
+    /// Degenerate runs (0 iters/batch/workers) processed no examples, so
+    /// any per-example time is 0 — never NaN/inf from a zero denominator.
     pub fn time_per_examples(&self, n: usize) -> f64 {
         let total_examples = (self.iters * self.batch * self.workers) as f64;
+        if total_examples <= 0.0 {
+            return 0.0;
+        }
         self.vtime_total * n as f64 / total_examples
     }
 }
@@ -180,6 +217,22 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
             full / (4.0 * info.param_count as f64)
         }
         None => 1.0,
+    };
+
+    // wait-free backprop: bucket the parameter vector by layer. The layer
+    // table comes from the simulated full-scale model when one is set
+    // (projected onto the proxy vector), else from the proxy's own
+    // segment table.
+    cfg.validate_overlap()?;
+    let wfbp_plan: Option<Arc<WfbpPlan>> = if cfg.overlap.bucketed() {
+        let table: Vec<(String, usize)> = match &cfg.sim_model {
+            Some(fs) => models::full_scale_layer_table(&rt.manifest, fs)?,
+            None => info.segments.iter().map(|(n, _, sz)| (n.clone(), *sz)).collect(),
+        };
+        let bucket_elems = cfg.bucket_kib * 1024 / 4;
+        Some(Arc::new(WfbpPlan::from_layers(&table, bucket_elems).project(info.param_count)))
+    } else {
+        None
     };
 
     // warm up artifacts once (XLA compile outside the timed loop)
@@ -237,13 +290,14 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
         let features = features.clone();
         let stream = stream.clone();
         let data_dir = data_dir.clone();
+        let wfbp_plan = wfbp_plan.clone();
         handles.push(
             thread::Builder::new()
                 .name(format!("bsp-worker-{rank}"))
                 .spawn(move || {
                     worker_main(
                         rank, comm, &rt, &cfg, &topo, &links, &init, &info, &arts, dataset,
-                        features, stream, &data_dir, comm_scale,
+                        features, stream, &data_dir, comm_scale, wfbp_plan.as_deref(),
                     )
                 })
                 .context("spawn worker")?,
@@ -290,12 +344,14 @@ fn worker_main(
     stream: Option<Arc<TokenStream>>,
     data_dir: &PathBuf,
     comm_scale: f64,
+    wfbp_plan: Option<&WfbpPlan>,
 ) -> Result<BspReport> {
     let mut params = (**init).clone();
     let mut momentum = vec![0.0f32; params.len()];
     let mut clock = 0.0f64;
     let mut bd = Breakdown::default();
     let mut comm_total = CommReport::default();
+    let mut serial_comm = 0.0f64; // what post-backward pricing would charge
     let mut curve = Vec::new();
     let mut last_loss = f64::NAN;
     let kernels = rt.kernels();
@@ -422,10 +478,38 @@ fn worker_main(
                     cuda_aware: cfg.cuda_aware,
                     chunk_elems: 0,
                 };
-                let rep = strategy.exchange(&mut grads, ReduceOp::Sum, &mut ctx)?;
-                clock += rep.sim_total() * comm_scale;
-                charge_comm(&mut bd, &rep, comm_scale);
-                accumulate(&mut comm_total, &rep);
+                match wfbp_plan {
+                    Some(plan) => {
+                        // wait-free backprop: the bucketed exchange overlaps
+                        // this rank's backward tail, so the clock pays
+                        // max(backward, joint makespan) - backward instead of
+                        // backward + comm (the backward time is already on
+                        // the clock from the compute charge above)
+                        let backward = res.exec_time * wfbp::BWD_FRACTION;
+                        let out = wfbp::exchange_wfbp(
+                            strategy.as_ref(),
+                            plan,
+                            &mut grads,
+                            ReduceOp::Sum,
+                            &mut ctx,
+                            backward,
+                            comm_scale,
+                            cfg.overlap == OverlapMode::Wfbp,
+                        )?;
+                        clock += out.comm_visible;
+                        bd.comm_hidden += out.comm_hidden;
+                        serial_comm += out.serial_comm;
+                        charge_comm(&mut bd, &out.comm, 1.0); // already scaled
+                        accumulate(&mut comm_total, &out.comm);
+                    }
+                    None => {
+                        let rep = strategy.exchange(&mut grads, ReduceOp::Sum, &mut ctx)?;
+                        clock += rep.sim_total() * comm_scale;
+                        serial_comm += rep.sim_total() * comm_scale;
+                        charge_comm(&mut bd, &rep, comm_scale);
+                        accumulate(&mut comm_total, &rep);
+                    }
+                }
 
                 // --- apply (identical update on every rank; summed grads are
                 // averaged so the effective batch is batch*k at the worker lr,
@@ -472,6 +556,11 @@ fn worker_main(
     }
 
     let final_val_err = curve.last().map(|p| p.val_err).unwrap_or(f64::NAN);
+    let overlap_fraction = if serial_comm > 0.0 {
+        bd.comm_hidden / serial_comm
+    } else {
+        0.0
+    };
     Ok(BspReport {
         curve,
         iters: cfg.iters,
@@ -481,20 +570,23 @@ fn worker_main(
         breakdown: bd,
         comm: comm_total,
         throughput: 0.0, // filled by run_bsp
+        overlap_fraction,
         final_train_loss: last_loss,
         final_val_err,
     })
 }
 
-/// Charge one exchange to the breakdown, overlap-aware: pipelined time is
-/// hidden kernel time first (the usual case — sums/casts under the wire),
-/// any remainder is wire time hidden under kernels. Host reduction (the AR
-/// baseline) charges as transfer-side comm so `Breakdown::total()`
-/// reconciles with the clock advance of `sim_total()`.
+/// Charge one exchange to the breakdown, overlap-aware: pipelined/wait-free
+/// time is hidden kernel time first (the usual case — sums/casts under the
+/// wire), then wire time, then host reduction (WFBP can hide any of the
+/// three under backward compute). Host reduction (the AR baseline) charges
+/// as transfer-side comm so `Breakdown::total()` reconciles with the clock
+/// advance of `sim_total()`.
 fn charge_comm(bd: &mut Breakdown, rep: &CommReport, scale: f64) {
     let k_hidden = rep.sim_overlapped.min(rep.sim_kernel);
     let t_hidden = (rep.sim_overlapped - k_hidden).min(rep.sim_transfer);
-    bd.comm_transfer += (rep.sim_transfer - t_hidden + rep.sim_host_reduce) * scale;
+    let h_hidden = (rep.sim_overlapped - k_hidden - t_hidden).min(rep.sim_host_reduce);
+    bd.comm_transfer += (rep.sim_transfer - t_hidden + rep.sim_host_reduce - h_hidden) * scale;
     bd.comm_kernel += (rep.sim_kernel - k_hidden) * scale;
 }
 
@@ -621,6 +713,55 @@ fn run_eval(
         info.eval_batch as f64
     };
     Ok(1.0 - correct / total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_per_examples_guards_zero_denominators() {
+        // degenerate runs (the NaN/inf regression): no iters, no batch, or
+        // no workers processed zero examples — per-example time is 0.0
+        let degenerate = [(0usize, 32usize, 4usize), (10, 0, 4), (10, 32, 0), (0, 0, 0)];
+        for (iters, batch, workers) in degenerate {
+            let rep =
+                BspReport { iters, batch, workers, vtime_total: 3.0, ..Default::default() };
+            let t = rep.time_per_examples(5120);
+            assert_eq!(t, 0.0, "iters={iters} batch={batch} workers={workers} -> {t}");
+            assert!(t.is_finite());
+        }
+        // and the healthy path still scales linearly
+        let rep = BspReport {
+            iters: 10,
+            batch: 32,
+            workers: 4,
+            vtime_total: 2.0,
+            ..Default::default()
+        };
+        assert!((rep.time_per_examples(1280) - 2.0).abs() < 1e-12);
+        assert!((rep.time_per_examples(640) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_requires_subgd() {
+        // the same validation run_bsp applies before spawning workers
+        let mut cfg = BspConfig::quick("mlp", 2, 1);
+        assert!(cfg.validate_overlap().is_ok(), "default config is valid");
+        cfg.scheme = Scheme::Awagd;
+        assert!(cfg.validate_overlap().is_ok(), "awagd without overlap is valid");
+        for overlap in [OverlapMode::Post, OverlapMode::Wfbp] {
+            cfg.overlap = overlap;
+            cfg.scheme = Scheme::Awagd;
+            let err = cfg.validate_overlap().unwrap_err().to_string();
+            assert!(
+                err.contains(overlap.name()) && err.contains("subgd"),
+                "error must name the mode and the constraint: {err}"
+            );
+            cfg.scheme = Scheme::Subgd;
+            assert!(cfg.validate_overlap().is_ok());
+        }
+    }
 }
 
 /// All ranks compare a parameter checksum; after every exchange the replicas

@@ -27,12 +27,14 @@ mod asa;
 mod chunked;
 mod hier;
 mod ring;
+pub mod wfbp;
 
 pub use allreduce::HostAllreduce;
 pub use asa::{Asa, Asa16};
 pub use chunked::ChunkedPipeline;
 pub use hier::Hierarchical;
 pub use ring::Ring;
+pub use wfbp::{exchange_wfbp, OverlapMode, WfbpOutcome, WfbpPlan};
 
 use anyhow::{anyhow, Result};
 
@@ -146,6 +148,30 @@ impl CommReport {
         self.sim_inter += sub.sim_inter;
         self.real_kernel += sub.real_kernel;
         self.phases += sub.phases;
+    }
+
+    /// Scale every simulated time and byte count by `s` — how probe-sized
+    /// exchanges map onto full-scale models (`Session::measure_exchange*`)
+    /// and how the WFBP scheduler joins probe-domain wire times with
+    /// real-seconds bucket release times.
+    pub fn scale_times(&mut self, s: f64) {
+        if s == 1.0 {
+            return;
+        }
+        self.sim_transfer *= s;
+        self.sim_latency *= s;
+        self.sim_kernel *= s;
+        self.sim_host_reduce *= s;
+        self.sim_overlapped *= s;
+        self.sim_intra *= s;
+        self.sim_inter *= s;
+        self.wire_bytes = (self.wire_bytes as f64 * s) as u64;
+        self.wire_intra_bytes = (self.wire_intra_bytes as f64 * s) as u64;
+        self.wire_inter_bytes = (self.wire_inter_bytes as f64 * s) as u64;
+        for leg in &mut self.legs {
+            leg.transfer *= s;
+            leg.latency *= s;
+        }
     }
 
     /// Share of exchange time in GPU kernels (paper: 1.6 % for the ASA sum).
@@ -428,6 +454,36 @@ mod tests {
         assert!((rep.sim_inter - 0.6).abs() < 1e-12);
         assert!((rep.sim_overlapped - 0.1).abs() < 1e-12);
         assert!(rep.legs.is_empty(), "merge leaves legs to the caller");
+    }
+
+    #[test]
+    fn scale_times_scales_every_time_and_byte_field() {
+        let mut rep = CommReport {
+            wire_bytes: 100,
+            wire_intra_bytes: 60,
+            wire_inter_bytes: 40,
+            sim_transfer: 1.0,
+            sim_latency: 0.1,
+            sim_kernel: 0.2,
+            sim_host_reduce: 0.3,
+            sim_overlapped: 0.05,
+            sim_intra: 0.7,
+            sim_inter: 0.3,
+            legs: vec![Leg { machine: 2, transfer: 0.5, latency: 0.01 }],
+            ..Default::default()
+        };
+        let total = rep.sim_total();
+        rep.scale_times(2.0);
+        assert_eq!(rep.wire_bytes, 200);
+        assert_eq!(rep.wire_intra_bytes, 120);
+        assert_eq!(rep.wire_inter_bytes, 80);
+        assert!((rep.sim_total() - 2.0 * total).abs() < 1e-12);
+        assert!((rep.legs[0].transfer - 1.0).abs() < 1e-12);
+        assert!((rep.legs[0].latency - 0.02).abs() < 1e-12);
+        // identity scale is a no-op fast path
+        let before = rep.sim_transfer;
+        rep.scale_times(1.0);
+        assert_eq!(rep.sim_transfer, before);
     }
 
     #[test]

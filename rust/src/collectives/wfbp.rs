@@ -1,0 +1,518 @@
+//! Wait-free backprop (WFBP): layer-bucketed gradient exchange that
+//! overlaps the backward pass (Poseidon [Zhang et al. 2015], the layer-wise
+//! comm/compute overlap Shi et al. 2017 identify as the scaling lever).
+//!
+//! Every exchange this crate priced before was monolithic *in time*: the
+//! worker finishes the whole backward pass, then exchanges (the chunked
+//! pipeline only overlaps comm with its own kernels). But layer *i*'s
+//! gradients are ready long before layer 0's — backprop visits layers from
+//! the output down — so the top layers' gradients can be on the wire while
+//! the bottom layers are still computing. For fc-heavy models (AlexNet:
+//! ~96 % of parameters in fc6-8, which backprop reaches *first* and which
+//! cost almost no backward compute) nearly the whole exchange hides under
+//! the conv backward tail.
+//!
+//! ## The model
+//!
+//! * **Layer table** — per-layer parameter counts in forward (exchange)
+//!   order, from `manifest.full_scale[..].layers` / `segments`, the proxy
+//!   model's own segment table, or [`crate::models::proxy_layer_split`].
+//! * **Backward cost model** — backprop visits layers last-to-first; layer
+//!   *i*'s backward compute weight is `params_i` for fc layers and
+//!   `params_i ×` [`CONV_COMPUTE_REUSE`] for conv layers (each conv weight
+//!   is re-used at every spatial position; 169 ≈ a 13×13 feature map is the
+//!   documented proxy — the classic "convs: ~90 % of compute, ~5 % of
+//!   params; fc: the reverse" split). [`release_fractions`] turns the
+//!   weights into the fraction of the backward pass after which each
+//!   layer's gradients exist.
+//! * **Buckets** — [`WfbpPlan::from_layers`] coalesces layers, walking from
+//!   the top of the network down, into buckets of at least `bucket_kib`
+//!   (`0` = one bucket per layer). A bucket releases when its *last*
+//!   (input-most) layer's gradients are ready.
+//! * **Timeline** — each bucket's exchange is priced by the inner strategy
+//!   (any of ar|asa|asa16|ring|hier:*, optionally chunk-pipelined) and
+//!   scheduled on the joint compute+comm timeline
+//!   [`crate::simnet::wfbp_timeline`]: the backward "machine" feeds bucket
+//!   release times, the wire machines serve FIFO, and the makespan prices
+//!   bucket *i*'s wire time hiding under layers *i−1..0*'s remaining
+//!   backward compute.
+//!
+//! ## What WFBP does and does not change
+//!
+//! WFBP changes *when* bytes move, never *what* is exchanged: the data path
+//! runs the same inner exchange over the same bucket slices whether the
+//! timeline overlaps (`overlap = "wfbp"`) or prices serially after the
+//! backward pass (`overlap = "post"`, the ablation) — the two are
+//! bit-identical by construction and pinned by `tests/wfbp_overlap.rs`.
+//! With a single bucket the data path and the price both reduce exactly to
+//! today's post-backward exchange.
+
+use anyhow::{anyhow, Result};
+
+use crate::simnet::{wfbp_timeline, FlowJob, Leg, TimedJob, MACHINE_WIRE};
+
+use super::{CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
+
+/// Fraction of a measured fwd+bwd gradient step that is backward compute —
+/// the overlap budget WFBP hides wire time under. The standard 1:2
+/// forward:backward FLOP ratio of dense nets (each backward layer computes
+/// both an input-gradient and a weight-gradient pass).
+pub const BWD_FRACTION: f64 = 2.0 / 3.0;
+
+/// Backward-compute weight multiplier for conv layers: each conv parameter
+/// is re-used at every output spatial position, so per *parameter* a conv
+/// layer costs far more compute than an fc layer. 169 = 13×13, an average
+/// feature-map size — the documented proxy behind "convs hold ~5 % of the
+/// parameters but ~90 % of the compute" (Krizhevsky 2014).
+pub const CONV_COMPUTE_REUSE: f64 = 169.0;
+
+/// When to exchange gradients relative to the backward pass (BSP/SUBGD).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Whole-vector exchange after the step — the pre-WFBP behavior.
+    #[default]
+    None,
+    /// Layer buckets exchanged *after* the backward pass, priced serially —
+    /// the ablation that isolates the wait-free win from the bucketing.
+    Post,
+    /// Wait-free backprop: each bucket's exchange starts the moment its
+    /// gradients are ready, overlapping the remaining backward compute.
+    Wfbp,
+}
+
+impl OverlapMode {
+    /// The valid names, for error messages and help text.
+    pub const NAMES: &'static str = "none|post|wfbp";
+
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(OverlapMode::None),
+            "post" => Some(OverlapMode::Post),
+            "wfbp" => Some(OverlapMode::Wfbp),
+            _ => None,
+        }
+    }
+
+    /// [`parse`](Self::parse) that fails naming the valid modes — what the
+    /// config file and `--overlap` flag surface.
+    pub fn from_name(s: &str) -> Result<OverlapMode> {
+        Self::parse(s)
+            .ok_or_else(|| anyhow!("unknown overlap mode '{s}' (valid: {})", Self::NAMES))
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverlapMode::None => "none",
+            OverlapMode::Post => "post",
+            OverlapMode::Wfbp => "wfbp",
+        }
+    }
+
+    /// Does this mode exchange per-layer buckets (vs the whole vector)?
+    pub fn bucketed(self) -> bool {
+        self != OverlapMode::None
+    }
+}
+
+/// Layer-name classification for the backward cost model: fully-connected
+/// layers (and fc-style classifier heads) get no spatial compute re-use.
+pub fn is_fc_layer(name: &str) -> bool {
+    let lower = name.to_ascii_lowercase();
+    lower.contains("fc") || lower.contains("classifier") || lower.contains("dense")
+}
+
+/// Backward-compute weight of one layer under the documented proxy model.
+pub fn backward_weight(name: &str, params: usize) -> f64 {
+    if is_fc_layer(name) {
+        params as f64
+    } else {
+        params as f64 * CONV_COMPUTE_REUSE
+    }
+}
+
+/// Per-layer gradient-ready times as fractions of the total backward pass.
+///
+/// Backprop visits layers last-to-first; layer *i*'s gradients are ready
+/// once the backward compute of layers `i..L` has run, so
+/// `out[i] = Σ_{j>=i} w_j / Σ w_j`. `out[0] == 1.0` always (the input-most
+/// layer finishes the pass); `out` is non-increasing in `i`.
+pub fn release_fractions(layers: &[(String, usize)]) -> Vec<f64> {
+    let total: f64 = layers.iter().map(|(n, p)| backward_weight(n, *p)).sum();
+    if total <= 0.0 {
+        return vec![1.0; layers.len()];
+    }
+    let mut out = vec![0.0; layers.len()];
+    let mut cum = 0.0;
+    for i in (0..layers.len()).rev() {
+        cum += backward_weight(&layers[i].0, layers[i].1);
+        out[i] = cum / total;
+    }
+    // guard accumulation round-off: layer 0 is by definition the last ready
+    out[0] = 1.0;
+    out
+}
+
+/// One gradient bucket: a contiguous slice of the flat parameter vector
+/// plus the fraction of the backward pass after which it is released.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WfbpBucket {
+    pub off: usize,
+    pub len: usize,
+    /// Release time as a fraction of the backward pass ((0, 1]).
+    pub release_frac: f64,
+}
+
+/// Bucket partition of a model's flat parameter vector, in release
+/// (exchange) order: top-of-network buckets first, ascending
+/// `release_frac`, the final bucket (containing layer 0) at 1.0.
+#[derive(Clone, Debug)]
+pub struct WfbpPlan {
+    pub buckets: Vec<WfbpBucket>,
+    /// Vector length the bucket offsets index into.
+    pub total_elems: usize,
+}
+
+impl WfbpPlan {
+    /// Coalesce `layers` (forward order, `(name, params)`) into buckets of
+    /// at least `bucket_elems` elements, walking from the top of the
+    /// network down (gradient-ready order). `bucket_elems == 0` gives one
+    /// bucket per layer. A bucket's release is its input-most layer's.
+    pub fn from_layers(layers: &[(String, usize)], bucket_elems: usize) -> WfbpPlan {
+        let total_elems: usize = layers.iter().map(|(_, p)| p).sum();
+        if layers.is_empty() || total_elems == 0 {
+            return WfbpPlan { buckets: vec![], total_elems };
+        }
+        let rel = release_fractions(layers);
+        let mut offs = Vec::with_capacity(layers.len());
+        let mut off = 0;
+        for (_, p) in layers {
+            offs.push(off);
+            off += p;
+        }
+        let mut buckets = Vec::new();
+        let mut acc = 0usize;
+        let mut hi_end = total_elems; // exclusive end of the open bucket
+        for i in (0..layers.len()).rev() {
+            acc += layers[i].1;
+            if (acc >= bucket_elems.max(1) || i == 0) && acc > 0 {
+                buckets.push(WfbpBucket {
+                    off: offs[i],
+                    len: hi_end - offs[i],
+                    release_frac: rel[i],
+                });
+                hi_end = offs[i];
+                acc = 0;
+            }
+        }
+        WfbpPlan { buckets, total_elems }
+    }
+
+    /// One bucket spanning the whole vector, released at the end of the
+    /// backward pass — the plan under which WFBP prices exactly as the
+    /// post-backward exchange.
+    pub fn single(n: usize) -> WfbpPlan {
+        WfbpPlan {
+            buckets: vec![WfbpBucket { off: 0, len: n, release_frac: 1.0 }],
+            total_elems: n,
+        }
+    }
+
+    /// Project the plan onto an `n`-element vector, preserving the bucket
+    /// *proportions* and release times — how a full-scale layer table maps
+    /// onto the capped comm probe or a proxy model's parameter vector.
+    /// Boundaries round to the nearest element, stay monotone, and keep
+    /// covering `[0, n)` disjointly; buckets may round to zero length.
+    pub fn project(&self, n: usize) -> WfbpPlan {
+        if self.total_elems == 0 || self.total_elems == n {
+            let mut out = self.clone();
+            out.total_elems = n;
+            if self.total_elems == 0 && n > 0 {
+                return WfbpPlan::single(n);
+            }
+            return out;
+        }
+        let t = self.total_elems as u128;
+        let scale = |x: usize| -> usize { ((x as u128 * n as u128 + t / 2) / t) as usize };
+        let buckets = self
+            .buckets
+            .iter()
+            .map(|b| {
+                let off = scale(b.off);
+                let end = scale(b.off + b.len);
+                WfbpBucket { off, len: end - off, release_frac: b.release_frac }
+            })
+            .collect();
+        WfbpPlan { buckets, total_elems: n }
+    }
+
+    /// Number of non-empty buckets.
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.iter().filter(|b| b.len > 0).count()
+    }
+}
+
+/// Everything one wait-free exchange reports. All times are in the final
+/// (comm-scaled) virtual-clock domain.
+#[derive(Clone, Debug, Default)]
+pub struct WfbpOutcome {
+    /// Merged per-bucket accounting; `sim_total()` equals `comm_visible`.
+    pub comm: CommReport,
+    /// What the post-backward path would charge: Σ bucket exchange times.
+    pub serial_comm: f64,
+    /// Exchange time the worker clock actually pays beyond the backward
+    /// pass: `max(makespan − backward, 0)` under WFBP, `serial_comm` post.
+    pub comm_visible: f64,
+    /// Exchange time hidden under backward compute: `serial − visible`.
+    pub comm_hidden: f64,
+    /// Joint compute+comm makespan from the start of the backward pass.
+    pub makespan: f64,
+    /// `comm_hidden / serial_comm` ∈ [0, 1] (0 when there is no comm).
+    pub overlap_fraction: f64,
+    /// Non-empty buckets exchanged.
+    pub buckets: usize,
+}
+
+/// Run one wait-free (or post-backward, with `overlap = false`) bucketed
+/// exchange of `buf` through `inner`, collectively across `ctx.comm`.
+///
+/// `backward_total` is the backward-pass time (seconds) whose tail the
+/// bucket exchanges overlap; `comm_scale` maps the probe-sized simulated
+/// wire times into the caller's time domain (1.0 when `buf` is full-scale)
+/// — bucket *releases* are already in real seconds, so the two domains
+/// must be joined here rather than by scaling the merged report afterward.
+///
+/// Every rank must call this with the same plan, op and flags; the data
+/// path (which elements each inner exchange reduces, in which order) is
+/// identical for `overlap` true and false.
+#[allow(clippy::too_many_arguments)]
+pub fn exchange_wfbp(
+    inner: &dyn ExchangeStrategy,
+    plan: &WfbpPlan,
+    buf: &mut [f32],
+    op: ReduceOp,
+    ctx: &mut ExchangeCtx<'_, '_>,
+    backward_total: f64,
+    comm_scale: f64,
+    overlap: bool,
+) -> Result<WfbpOutcome> {
+    if plan.total_elems != buf.len() {
+        return Err(anyhow!(
+            "wfbp plan covers {} elems, buffer has {} (project() the plan first)",
+            plan.total_elems,
+            buf.len()
+        ));
+    }
+    let mut rep =
+        CommReport { strategy: format!("wfbp({})", inner.name()), ..Default::default() };
+    let mut jobs: Vec<TimedJob> = Vec::with_capacity(plan.buckets.len());
+    let mut serial = 0.0f64;
+    let mut buckets_run = 0usize;
+    for b in &plan.buckets {
+        if b.len == 0 {
+            // deterministic in the plan: every rank skips the same buckets
+            continue;
+        }
+        let mut sub = inner.exchange(&mut buf[b.off..b.off + b.len], op, ctx)?;
+        sub.scale_times(comm_scale);
+        serial += sub.sim_total();
+        let job = if sub.chunks > 1 {
+            // chunk-pipelined inner: the bucket occupies the wire for its
+            // internal (already overlap-priced) makespan as one block
+            FlowJob {
+                legs: vec![Leg {
+                    machine: MACHINE_WIRE,
+                    transfer: sub.sim_total(),
+                    latency: sub.sim_latency.min(sub.sim_total()),
+                }],
+                kernel: 0.0,
+            }
+        } else if !sub.legs.is_empty() {
+            // hierarchical inner: per-level legs stream through the level
+            // flow-shop across buckets, exactly as the chunked scheduler
+            FlowJob { legs: sub.legs.clone(), kernel: sub.sim_kernel + sub.sim_host_reduce }
+        } else {
+            FlowJob {
+                legs: vec![Leg {
+                    machine: MACHINE_WIRE,
+                    transfer: sub.sim_transfer,
+                    latency: sub.sim_latency,
+                }],
+                kernel: sub.sim_kernel + sub.sim_host_reduce,
+            }
+        };
+        jobs.push(TimedJob { release: b.release_frac * backward_total, job });
+        let chunks = sub.chunks.max(1);
+        sub.legs.clear(); // merge() leaves legs/chunks to the caller
+        rep.merge(&sub);
+        rep.chunks += chunks;
+        buckets_run += 1;
+    }
+
+    let (makespan, comm_visible) = if overlap {
+        let m = wfbp_timeline(&jobs);
+        (m, (m - backward_total).max(0.0))
+    } else {
+        (backward_total + serial, serial)
+    };
+    let comm_hidden = (serial - comm_visible).max(0.0);
+    // after this, rep.sim_total() == comm_visible: the virtual clock charge
+    rep.sim_overlapped += comm_hidden;
+    let overlap_fraction = if serial > 0.0 { comm_hidden / serial } else { 0.0 };
+    Ok(WfbpOutcome {
+        comm: rep,
+        serial_comm: serial,
+        comm_visible,
+        comm_hidden,
+        makespan,
+        overlap_fraction,
+        buckets: buckets_run,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(spec: &[(&str, usize)]) -> Vec<(String, usize)> {
+        spec.iter().map(|(n, p)| (n.to_string(), *p)).collect()
+    }
+
+    /// The AlexNet shape in miniature: conv layers first, fc layers last.
+    fn fc_heavy() -> Vec<(String, usize)> {
+        table(&[("conv1", 100), ("conv2", 300), ("fc6", 4000), ("fc7", 2000), ("fc8", 600)])
+    }
+
+    #[test]
+    fn overlap_mode_parse_roundtrip_and_errors() {
+        for m in [OverlapMode::None, OverlapMode::Post, OverlapMode::Wfbp] {
+            assert_eq!(OverlapMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(OverlapMode::parse("WFBP"), Some(OverlapMode::Wfbp));
+        assert_eq!(OverlapMode::parse("off"), Some(OverlapMode::None));
+        assert_eq!(OverlapMode::parse("sometime"), None);
+        let err = OverlapMode::from_name("later").unwrap_err().to_string();
+        assert!(err.contains("later") && err.contains("wfbp"), "{err}");
+        assert!(!OverlapMode::None.bucketed());
+        assert!(OverlapMode::Post.bucketed() && OverlapMode::Wfbp.bucketed());
+    }
+
+    #[test]
+    fn fc_layers_classified_by_name() {
+        assert!(is_fc_layer("fc6"));
+        assert!(is_fc_layer("loss3/classifier"));
+        assert!(is_fc_layer("Dense_0"));
+        assert!(!is_fc_layer("conv1"));
+        assert!(!is_fc_layer("inception_3a/5x5"));
+        assert!(backward_weight("conv1", 10) > backward_weight("fc6", 10));
+    }
+
+    #[test]
+    fn release_fractions_are_monotone_and_fc_releases_early() {
+        let t = fc_heavy();
+        let rel = release_fractions(&t);
+        assert_eq!(rel.len(), 5);
+        assert_eq!(rel[0], 1.0, "input-most layer finishes the pass");
+        for w in rel.windows(2) {
+            assert!(w[0] >= w[1], "release fracs must be non-increasing: {rel:?}");
+        }
+        // fc8 (top) releases first; the 6600 fc params carry weight 6600
+        // while the 400 conv params carry 400*169 = 67600: all fc grads are
+        // ready within the first ~9% of the backward pass
+        assert!(rel[2] < 0.1, "fc6 release {rel:?}");
+        assert!(rel[1] > 0.9, "conv2 releases late: {rel:?}");
+    }
+
+    #[test]
+    fn uniform_weights_when_no_fc() {
+        let t = table(&[("conv1", 100), ("conv2", 100), ("conv3", 200)]);
+        let rel = release_fractions(&t);
+        assert!((rel[2] - 0.5).abs() < 1e-12);
+        assert!((rel[1] - 0.75).abs() < 1e-12);
+        assert_eq!(rel[0], 1.0);
+    }
+
+    #[test]
+    fn per_layer_buckets_cover_disjointly_in_release_order() {
+        let t = fc_heavy();
+        let plan = WfbpPlan::from_layers(&t, 0);
+        assert_eq!(plan.buckets.len(), 5);
+        assert_eq!(plan.total_elems, 7000);
+        // release order: fc8 (end of vector) first, conv1 last
+        assert_eq!(plan.buckets[0].off, 6400);
+        assert_eq!(plan.buckets[0].len, 600);
+        assert_eq!(plan.buckets[4].off, 0);
+        assert_eq!(plan.buckets[4].len, 100);
+        assert_eq!(plan.buckets[4].release_frac, 1.0);
+        let mut cover: Vec<(usize, usize)> =
+            plan.buckets.iter().map(|b| (b.off, b.len)).collect();
+        cover.sort_unstable();
+        let mut off = 0;
+        for (o, l) in cover {
+            assert_eq!(o, off);
+            off += l;
+        }
+        assert_eq!(off, 7000);
+        for w in plan.buckets.windows(2) {
+            assert!(w[0].release_frac <= w[1].release_frac);
+        }
+    }
+
+    #[test]
+    fn bucket_elems_coalesces_layers() {
+        let t = fc_heavy();
+        // 2500-elem buckets: fc8+fc7 (2600), fc6 (4000), conv2+conv1 (400,
+        // closed by the i==0 rule even though undersized)
+        let plan = WfbpPlan::from_layers(&t, 2500);
+        assert_eq!(plan.buckets.len(), 3);
+        assert_eq!(
+            plan.buckets[0],
+            WfbpBucket { off: 4400, len: 2600, release_frac: release_fractions(&t)[3] }
+        );
+        assert_eq!(plan.buckets[1].off, 400);
+        assert_eq!(plan.buckets[1].len, 4000);
+        assert_eq!(plan.buckets[2].off, 0);
+        assert_eq!(plan.buckets[2].len, 400);
+        assert_eq!(plan.buckets[2].release_frac, 1.0);
+        // one huge bucket degenerates to single()
+        let one = WfbpPlan::from_layers(&t, usize::MAX);
+        assert_eq!(one.buckets.len(), 1);
+        assert_eq!(one.buckets[0], WfbpBucket { off: 0, len: 7000, release_frac: 1.0 });
+    }
+
+    #[test]
+    fn project_preserves_cover_and_proportions() {
+        let t = fc_heavy();
+        let plan = WfbpPlan::from_layers(&t, 0);
+        for n in [7000usize, 1003, 70, 5, 700_000] {
+            let p = plan.project(n);
+            assert_eq!(p.total_elems, n);
+            assert_eq!(p.buckets.len(), plan.buckets.len());
+            let mut cover: Vec<(usize, usize)> =
+                p.buckets.iter().map(|b| (b.off, b.len)).collect();
+            cover.sort_unstable();
+            let mut off = 0;
+            for (o, l) in cover {
+                assert_eq!(o, off, "n={n}");
+                off += l;
+            }
+            assert_eq!(off, n, "n={n}");
+            for (a, b) in plan.buckets.iter().zip(&p.buckets) {
+                assert_eq!(a.release_frac, b.release_frac);
+            }
+        }
+        // identity projection keeps exact boundaries
+        let same = plan.project(7000);
+        assert_eq!(same.buckets, plan.buckets);
+    }
+
+    #[test]
+    fn empty_and_zero_layer_tables() {
+        let empty = WfbpPlan::from_layers(&[], 0);
+        assert_eq!(empty.n_buckets(), 0);
+        let zeros = WfbpPlan::from_layers(&table(&[("a", 0), ("b", 0)]), 0);
+        assert_eq!(zeros.total_elems, 0);
+        assert_eq!(zeros.n_buckets(), 0);
+        // projecting an empty plan onto a real vector falls back to single
+        assert_eq!(empty.project(64).buckets, WfbpPlan::single(64).buckets);
+    }
+}

@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bsp::BspConfig;
-use crate::collectives::StrategyKind;
+use crate::collectives::{OverlapMode, StrategyKind};
 use crate::easgd::{EasgdConfig, Transport};
 use crate::precision::Wire;
 use crate::sgd::{LrSchedule, Scheme};
@@ -199,6 +199,13 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
     if let Some(v) = t.get("pipeline") {
         cfg.pipeline = v.as_bool()?;
     }
+    // wait-free backprop: when to exchange gradients vs the backward pass
+    if let Some(v) = t.get("overlap") {
+        cfg.overlap = OverlapMode::from_name(v.as_str()?)?;
+    }
+    if let Some(v) = t.get("bucket_kib") {
+        cfg.bucket_kib = v.as_usize()?;
+    }
     cfg.lr = lr_from(t)?;
     Ok(cfg)
 }
@@ -373,6 +380,25 @@ transport = "platoon-shm"
         let err = easgd_from_file(&p).unwrap_err().to_string();
         assert!(err.contains("warp") && err.contains("asa16"), "{err}");
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn overlap_and_bucket_kib_keys_parse_and_reject_bad_modes() {
+        let t = parse("[train]\noverlap = \"wfbp\"\nbucket_kib = 4096").unwrap();
+        let cfg = bsp_from_table(&t).unwrap();
+        assert_eq!(cfg.overlap, OverlapMode::Wfbp);
+        assert_eq!(cfg.bucket_kib, 4096);
+        // the serial ablation and the default
+        let t = parse("[train]\noverlap = \"post\"").unwrap();
+        assert_eq!(bsp_from_table(&t).unwrap().overlap, OverlapMode::Post);
+        let t = parse("[train]\nworkers = 2").unwrap();
+        let cfg = bsp_from_table(&t).unwrap();
+        assert_eq!(cfg.overlap, OverlapMode::None);
+        assert_eq!(cfg.bucket_kib, 0);
+        // bad mode names the valid set
+        let t = parse("[train]\noverlap = \"sometimes\"").unwrap();
+        let err = bsp_from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("sometimes") && err.contains("wfbp"), "{err}");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::bsp::{run_bsp, BspConfig, BspReport};
 use crate::cluster::Topology;
-use crate::collectives::{CommReport, ExchangeCtx, ReduceOp, StrategyKind};
+use crate::collectives::{CommReport, ExchangeCtx, ReduceOp, StrategyKind, WfbpOutcome, WfbpPlan};
 use crate::easgd::{run_easgd, EasgdConfig, Transport};
 use crate::metrics::Table;
 use crate::models;
@@ -96,64 +96,16 @@ impl Session {
         chunks: usize,
         pipeline: bool,
     ) -> Result<CommReport> {
-        // real buffers are capped; sim time scales linearly to full_bytes
-        let probe_elems: usize = 1_000_000.min((full_bytes / 4) as usize).max(1);
-        let scale = full_bytes as f64 / (4.0 * probe_elems as f64);
-        let chunk_elems = if chunks > 1 { probe_elems.div_ceil(chunks) } else { 0 };
-        let links = LinkParams::default();
-        let rt = self.rt.clone();
-
-        let world = crate::mpi::world(k);
-        let mut handles = Vec::new();
-        for (rank, mut comm) in world.into_iter().enumerate() {
-            let topo = topo.clone();
-            let rt = rt.clone();
-            handles.push(std::thread::spawn(move || -> Result<CommReport> {
-                let mut buf: Vec<f32> =
-                    (0..probe_elems).map(|i| ((rank * 31 + i) % 1000) as f32 * 1e-3).collect();
-                let kernels = rt.kernels();
-                let strat: Box<dyn crate::collectives::ExchangeStrategy> = if chunk_elems > 0 {
-                    Box::new(crate::collectives::ChunkedPipeline::new(
-                        strategy.build(Wire::F16),
-                        chunk_elems,
-                        pipeline,
-                    ))
-                } else {
-                    strategy.build(Wire::F16)
-                };
-                let mut ctx = ExchangeCtx {
-                    comm: &mut comm,
-                    topo: &topo,
-                    links: &links,
-                    kernels: Some(&kernels),
-                    cuda_aware,
-                    chunk_elems: 0,
-                };
-                strat.exchange(&mut buf, ReduceOp::Sum, &mut ctx)
-            }));
-        }
-        let mut rep = CommReport::default();
-        for (i, h) in handles.into_iter().enumerate() {
-            let r = h.join().map_err(|_| anyhow::anyhow!("exchange worker panicked"))??;
-            if i == 0 {
-                rep = r;
-            }
-        }
-        rep.sim_transfer *= scale;
-        rep.sim_latency *= scale;
-        rep.sim_kernel *= scale;
-        rep.sim_host_reduce *= scale;
-        rep.sim_overlapped *= scale;
-        rep.sim_intra *= scale;
-        rep.sim_inter *= scale;
-        rep.wire_bytes = (rep.wire_bytes as f64 * scale) as u64;
-        rep.wire_intra_bytes = (rep.wire_intra_bytes as f64 * scale) as u64;
-        rep.wire_inter_bytes = (rep.wire_inter_bytes as f64 * scale) as u64;
-        for leg in &mut rep.legs {
-            leg.transfer *= scale;
-            leg.latency *= scale;
-        }
-        Ok(rep)
+        probe_exchange_rt(
+            strategy,
+            k,
+            topo,
+            full_bytes,
+            cuda_aware,
+            chunks,
+            pipeline,
+            Some(self.rt.clone()),
+        )
     }
 
     // -----------------------------------------------------------------------
@@ -588,4 +540,169 @@ impl Session {
             .ok_or_else(|| anyhow::anyhow!("unknown topology '{name}'"))?;
         Ok(t.render())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime-free comm probes — the CI bench-smoke path.
+//
+// Simulated exchange times depend only on the topology model, never on the
+// AOT artifacts, so benches and the bench-regression gate can price
+// exchanges in containers without `artifacts/` (Pallas kernels unbound:
+// the data path falls back to host arithmetic, and `Ring` charges no GPU
+// kernel time — the values are deterministic and identical on every
+// machine, which is what makes the committed baselines comparable).
+
+/// One exchange of a `full_bytes`-sized model across `k` workers, priced
+/// without a runtime. `chunks > 1` engages the chunked pipeline scheduler;
+/// `pipeline = false` is the serially-priced ablation.
+pub fn probe_exchange(
+    strategy: StrategyKind,
+    k: usize,
+    topo: Topology,
+    full_bytes: u64,
+    cuda_aware: bool,
+    chunks: usize,
+    pipeline: bool,
+) -> Result<CommReport> {
+    probe_exchange_rt(strategy, k, topo, full_bytes, cuda_aware, chunks, pipeline, None)
+}
+
+/// Shared probe: real buffers are capped at 1M f32; sim time scales
+/// linearly to `full_bytes`. With a runtime, the Pallas kernels run on the
+/// data path (`Session::measure_exchange*`); without, host fallbacks.
+#[allow(clippy::too_many_arguments)]
+fn probe_exchange_rt(
+    strategy: StrategyKind,
+    k: usize,
+    topo: Topology,
+    full_bytes: u64,
+    cuda_aware: bool,
+    chunks: usize,
+    pipeline: bool,
+    rt: Option<Arc<Runtime>>,
+) -> Result<CommReport> {
+    let probe_elems: usize = 1_000_000.min((full_bytes / 4) as usize).max(1);
+    let scale = full_bytes as f64 / (4.0 * probe_elems as f64);
+    let chunk_elems = if chunks > 1 { probe_elems.div_ceil(chunks) } else { 0 };
+    let links = LinkParams::default();
+
+    let world = crate::mpi::world(k);
+    let mut handles = Vec::new();
+    for (rank, mut comm) in world.into_iter().enumerate() {
+        let topo = topo.clone();
+        let rt = rt.clone();
+        handles.push(std::thread::spawn(move || -> Result<CommReport> {
+            let mut buf: Vec<f32> =
+                (0..probe_elems).map(|i| ((rank * 31 + i) % 1000) as f32 * 1e-3).collect();
+            let kernels = rt.as_ref().map(|r| r.kernels());
+            let strat: Box<dyn crate::collectives::ExchangeStrategy> = if chunk_elems > 0 {
+                Box::new(crate::collectives::ChunkedPipeline::new(
+                    strategy.build(Wire::F16),
+                    chunk_elems,
+                    pipeline,
+                ))
+            } else {
+                strategy.build(Wire::F16)
+            };
+            let mut ctx = ExchangeCtx {
+                comm: &mut comm,
+                topo: &topo,
+                links: &links,
+                kernels: kernels.as_ref(),
+                cuda_aware,
+                chunk_elems: 0,
+            };
+            strat.exchange(&mut buf, ReduceOp::Sum, &mut ctx)
+        }));
+    }
+    let mut rep = CommReport::default();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.join().map_err(|_| anyhow::anyhow!("exchange worker panicked"))??;
+        if i == 0 {
+            rep = r;
+        }
+    }
+    rep.scale_times(scale);
+    Ok(rep)
+}
+
+/// One wait-free (or post-backward, `overlap = false`) bucketed exchange
+/// of a model described by its per-layer `(name, params)` table, priced
+/// without a runtime — the WFBP bench/gate probe.
+///
+/// The bucket plan is built at full scale (`bucket_kib` of real gradient
+/// bytes, 0 = one bucket per layer) and projected onto the capped probe
+/// vector; `backward_total` is the full-scale backward-pass seconds the
+/// exchange may hide under. `chunk_kib > 0` additionally chunk-pipelines
+/// each bucket's exchange.
+#[allow(clippy::too_many_arguments)]
+pub fn probe_wfbp(
+    strategy: StrategyKind,
+    k: usize,
+    topo: Topology,
+    layers: &[(String, usize)],
+    cuda_aware: bool,
+    bucket_kib: usize,
+    chunk_kib: usize,
+    backward_total: f64,
+    overlap: bool,
+) -> Result<WfbpOutcome> {
+    let full_elems: usize = layers.iter().map(|(_, p)| p).sum();
+    let probe_elems: usize = 1_000_000.min(full_elems).max(1);
+    let comm_scale = full_elems.max(1) as f64 / probe_elems as f64;
+    let plan =
+        Arc::new(WfbpPlan::from_layers(layers, bucket_kib * 1024 / 4).project(probe_elems));
+    // a full-scale chunk size maps onto the probe at the same ratio
+    let chunk_elems = if chunk_kib > 0 {
+        (((chunk_kib * 1024 / 4) as f64 / comm_scale).round() as usize).max(1)
+    } else {
+        0
+    };
+    let links = LinkParams::default();
+
+    let world = crate::mpi::world(k);
+    let mut handles = Vec::new();
+    for (rank, mut comm) in world.into_iter().enumerate() {
+        let topo = topo.clone();
+        let plan = plan.clone();
+        handles.push(std::thread::spawn(move || -> Result<WfbpOutcome> {
+            let mut buf: Vec<f32> =
+                (0..probe_elems).map(|i| ((rank * 31 + i) % 1000) as f32 * 1e-3).collect();
+            let inner: Box<dyn crate::collectives::ExchangeStrategy> = if chunk_elems > 0 {
+                Box::new(crate::collectives::ChunkedPipeline::new(
+                    strategy.build(Wire::F16),
+                    chunk_elems,
+                    true,
+                ))
+            } else {
+                strategy.build(Wire::F16)
+            };
+            let mut ctx = ExchangeCtx {
+                comm: &mut comm,
+                topo: &topo,
+                links: &links,
+                kernels: None,
+                cuda_aware,
+                chunk_elems: 0,
+            };
+            crate::collectives::exchange_wfbp(
+                inner.as_ref(),
+                &plan,
+                &mut buf,
+                ReduceOp::Sum,
+                &mut ctx,
+                backward_total,
+                comm_scale,
+                overlap,
+            )
+        }));
+    }
+    let mut out = WfbpOutcome::default();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.join().map_err(|_| anyhow::anyhow!("wfbp worker panicked"))??;
+        if i == 0 {
+            out = r;
+        }
+    }
+    Ok(out)
 }

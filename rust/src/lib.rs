@@ -44,6 +44,29 @@
 //! with chunking enabled its elastic update of chunk *i−1* overlaps chunk
 //! *i*'s arrival.
 //!
+//! ## Wait-free backprop (`overlap = "wfbp"`)
+//!
+//! [`collectives::wfbp`] removes the last serialization the chunked
+//! pipeline left: waiting for the *whole* backward pass before exchanging.
+//! The parameter vector splits into per-layer buckets (the manifest's
+//! full-scale `layers` table, a proxy model's own segments, or
+//! [`models::proxy_layer_split`]; coalesced by `bucket_kib`), a documented
+//! backward cost model (fc layers weigh `params`, conv layers
+//! `params ×` [`collectives::wfbp::CONV_COMPUTE_REUSE`]) turns the
+//! measured grad-step time × [`collectives::wfbp::BWD_FRACTION`] into
+//! per-bucket gradient-ready times, and
+//! [`simnet::wfbp_timeline`] — a release-gated flow shop whose implicit
+//! first machine is the backward pass — prices bucket *i*'s wire time
+//! hiding under layers *i−1..0*'s remaining compute. The BSP worker then
+//! charges `max(backward tail, comm)` instead of `backward + comm`
+//! ([`metrics::Breakdown::comm_hidden`] / `BspReport::overlap_fraction`
+//! report the win; `overlap = "post"` is the serially-priced ablation).
+//! The data path is untouched: any inner strategy (flat, `hier:*`, chunk-
+//! pipelined) runs per bucket, bit-identical to the post-backward
+//! schedule (`tests/wfbp_overlap.rs`). AlexNet is the motivating skew:
+//! ~96 % of its parameters sit in fc6-8, which backprop reaches first at
+//! ~8.5 % of the backward compute — nearly the whole exchange hides.
+//!
 //! ## Sharded EASGD parameter servers (`servers = S`)
 //!
 //! The §4 async framework's single server queues every elastic exchange;

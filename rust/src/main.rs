@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use theano_mpi::bsp::{run_bsp, BspConfig};
-use theano_mpi::collectives::StrategyKind;
+use theano_mpi::collectives::{OverlapMode, StrategyKind};
 use theano_mpi::config;
 use theano_mpi::easgd::{run_easgd, EasgdConfig, Transport};
 use theano_mpi::precision::Wire;
@@ -133,6 +133,12 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
             _ => bail!("bad --pipeline (true|false)"),
         };
     }
+    if let Some(o) = args.get("overlap") {
+        cfg.overlap = OverlapMode::from_name(o)?;
+    }
+    if let Some(b) = args.usize_("bucket-kib")? {
+        cfg.bucket_kib = b;
+    }
     Ok(())
 }
 
@@ -169,6 +175,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         rep.breakdown.h2d,
         rep.breakdown.apply
     );
+    if cfg.overlap.bucketed() {
+        println!(
+            "overlap ({}): comm hidden under backward = {:.2}s, overlap_fraction = {:.1}%",
+            cfg.overlap.name(),
+            rep.breakdown.comm_hidden,
+            rep.overlap_fraction * 100.0
+        );
+    }
     let rows: Vec<String> = rep
         .curve
         .iter()
@@ -320,6 +334,7 @@ fn usage() -> ! {
          \n\
          tmpi train --model mlp --workers 4 --iters 100 --exchange asa --scheme subgd\n\
          tmpi train --model mlp --workers 8 --chunk-kib 256 --pipeline true\n\
+         tmpi train --model alexnet --workers 8 --overlap wfbp --bucket-kib 4096 --topology copper\n\
          tmpi train --model mlp --workers 16 --topology copper --exchange hier:asa16\n\
          tmpi train --config examples/configs/alexnet_bsp.toml\n\
          tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\

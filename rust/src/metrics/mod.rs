@@ -20,6 +20,11 @@ pub struct Breakdown {
     /// EASGD: time exchanges sat in a shard server's queue beyond their
     /// own wire + handling (the contention sharded servers collapse).
     pub comm_queue: f64,
+    /// Exchange time hidden under the backward pass by wait-free backprop
+    /// (`overlap = "wfbp"`). Memo only: the clock never paid it, so it is
+    /// *not* part of [`comm`](Self::comm) or [`total`](Self::total) —
+    /// `comm + comm_hidden` is what the post-backward path would have cost.
+    pub comm_hidden: f64,
     /// Time blocked waiting for the parallel loader (overlap miss).
     pub load_stall: f64,
     /// Simulated H2D staging of input batches (the direct loader path;
@@ -45,6 +50,7 @@ impl Breakdown {
         self.comm_transfer += other.comm_transfer;
         self.comm_kernel += other.comm_kernel;
         self.comm_queue += other.comm_queue;
+        self.comm_hidden += other.comm_hidden;
         self.load_stall += other.load_stall;
         self.h2d += other.h2d;
         self.apply += other.apply;
@@ -137,17 +143,20 @@ mod tests {
             comm_transfer: 0.5,
             comm_kernel: 0.01,
             comm_queue: 0.04,
+            comm_hidden: 0.33,
             load_stall: 0.1,
             h2d: 0.2,
             apply: 0.05,
         };
         assert!((b.comm() - 0.55).abs() < 1e-12);
+        // comm_hidden is a memo of time NOT paid: never in the totals
         assert!((b.total() - 1.9).abs() < 1e-12);
         assert!((b.kernel_share_of_comm() - 0.01 / 0.55).abs() < 1e-12);
         let mut sum = b;
         sum.add(&b);
         assert!((sum.total() - 3.8).abs() < 1e-12);
         assert!((sum.comm_queue - 0.08).abs() < 1e-12);
+        assert!((sum.comm_hidden - 0.66).abs() < 1e-12);
         assert!((sum.h2d - 0.4).abs() < 1e-12);
     }
 

@@ -57,6 +57,154 @@ pub fn full_scale_of(proxy: &str) -> Option<&'static str> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Per-layer parameter tables — the wait-free backprop bucket boundaries.
+//
+// Mirrors python/compile/models/registry.py (the aot.py source of
+// manifest.full_scale); kept in-tree too so the comm-only benches and the
+// WFBP probes run without AOT artifacts. The sums are pinned to the paper's
+// Table 2 counts by `builtin_tables_match_paper_counts`.
+
+fn conv(
+    name: &str,
+    kh: usize,
+    kw: usize,
+    in_c: usize,
+    out_c: usize,
+    groups: usize,
+) -> (String, usize) {
+    (name.to_string(), kh * kw * (in_c / groups) * out_c + out_c)
+}
+
+fn fc(name: &str, n_in: usize, n_out: usize) -> (String, usize) {
+    (name.to_string(), n_in * n_out + n_out)
+}
+
+fn alexnet_layers() -> Vec<(String, usize)> {
+    vec![
+        conv("conv1", 11, 11, 3, 96, 1),
+        conv("conv2", 5, 5, 96, 256, 2),
+        conv("conv3", 3, 3, 256, 384, 1),
+        conv("conv4", 3, 3, 384, 384, 2),
+        conv("conv5", 3, 3, 384, 256, 2),
+        fc("fc6", 9216, 4096),
+        fc("fc7", 4096, 4096),
+        fc("fc8", 4096, 1000),
+    ]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    name: &str,
+    in_c: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    cp: usize,
+) -> Vec<(String, usize)> {
+    vec![
+        conv(&format!("{name}/1x1"), 1, 1, in_c, c1, 1),
+        conv(&format!("{name}/3x3_reduce"), 1, 1, in_c, c3r, 1),
+        conv(&format!("{name}/3x3"), 3, 3, c3r, c3, 1),
+        conv(&format!("{name}/5x5_reduce"), 1, 1, in_c, c5r, 1),
+        conv(&format!("{name}/5x5"), 5, 5, c5r, c5, 1),
+        conv(&format!("{name}/pool_proj"), 1, 1, in_c, cp, 1),
+    ]
+}
+
+fn aux(name: &str, in_c: usize) -> Vec<(String, usize)> {
+    vec![
+        conv(&format!("{name}/conv"), 1, 1, in_c, 128, 1),
+        fc(&format!("{name}/fc"), 128 * 4 * 4, 1024),
+        fc(&format!("{name}/classifier"), 1024, 1000),
+    ]
+}
+
+fn googlenet_layers() -> Vec<(String, usize)> {
+    let mut layers = vec![
+        conv("conv1/7x7_s2", 7, 7, 3, 64, 1),
+        conv("conv2/3x3_reduce", 1, 1, 64, 64, 1),
+        conv("conv2/3x3", 3, 3, 64, 192, 1),
+    ];
+    layers.extend(inception("inception_3a", 192, 64, 96, 128, 16, 32, 32));
+    layers.extend(inception("inception_3b", 256, 128, 128, 192, 32, 96, 64));
+    layers.extend(inception("inception_4a", 480, 192, 96, 208, 16, 48, 64));
+    layers.extend(aux("loss1", 512));
+    layers.extend(inception("inception_4b", 512, 160, 112, 224, 24, 64, 64));
+    layers.extend(inception("inception_4c", 512, 128, 128, 256, 24, 64, 64));
+    layers.extend(inception("inception_4d", 512, 112, 144, 288, 32, 64, 64));
+    layers.extend(aux("loss2", 528));
+    layers.extend(inception("inception_4e", 528, 256, 160, 320, 32, 128, 128));
+    layers.extend(inception("inception_5a", 832, 256, 160, 320, 32, 128, 128));
+    layers.extend(inception("inception_5b", 832, 384, 192, 384, 48, 128, 128));
+    layers.push(fc("loss3/classifier", 1024, 1000));
+    layers
+}
+
+fn vggnet_layers() -> Vec<(String, usize)> {
+    let cfg: [(usize, usize); 13] = [
+        (3, 64), (64, 64),
+        (64, 128), (128, 128),
+        (128, 256), (256, 256), (256, 256),
+        (256, 512), (512, 512), (512, 512),
+        (512, 512), (512, 512), (512, 512),
+    ];
+    let mut layers: Vec<(String, usize)> = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &(i_c, o_c))| conv(&format!("conv{}", i + 1), 3, 3, i_c, o_c, 1))
+        .collect();
+    layers.push(fc("fc6", 25088, 4096));
+    layers.push(fc("fc7", 4096, 4096));
+    layers.push(fc("fc8", 4096, 1000));
+    layers
+}
+
+/// In-tree `(layer, params)` table of a full-scale paper architecture —
+/// what the runtime-free comm benches use when no manifest is present.
+pub fn builtin_full_scale_layers(name: &str) -> Option<Vec<(String, usize)>> {
+    match name {
+        "alexnet" => Some(alexnet_layers()),
+        "googlenet" => Some(googlenet_layers()),
+        "vggnet" => Some(vggnet_layers()),
+        _ => None,
+    }
+}
+
+/// Per-layer `(name, params)` table of a full-scale model from the
+/// manifest: the `layers` counts (falling back to `segments` counts —
+/// they coincide in current manifests) named by the `segments` entries.
+pub fn full_scale_layer_table(manifest: &Manifest, model: &str) -> Result<Vec<(String, usize)>> {
+    let m = manifest
+        .full_scale
+        .get(model)
+        .ok_or_else(|| anyhow!("unknown full-scale model '{model}'"))?;
+    if m.layers.len() == m.segments.len() {
+        Ok(m.segments
+            .iter()
+            .zip(&m.layers)
+            .map(|((name, _), &p)| (name.clone(), p))
+            .collect())
+    } else {
+        Ok(m.layers.iter().enumerate().map(|(i, &p)| (format!("layer{i}"), p)).collect())
+    }
+}
+
+/// The documented proxy split for models without a per-layer breakdown:
+/// `depth` near-equal layers (MPI_Scatterv-style remainder on the lowest
+/// indices). Deliberately uniform — with no architecture information, a
+/// uniform split neither invents fc-heaviness (which would overstate the
+/// wait-free win) nor compute skew.
+pub fn proxy_layer_split(params: usize, depth: usize) -> Vec<(String, usize)> {
+    crate::util::split_even(params, depth.max(1))
+        .into_iter()
+        .enumerate()
+        .map(|(i, (_, len))| (format!("layer{i}"), len))
+        .collect()
+}
+
 /// Artifact names for a model at a per-worker batch size.
 pub struct ModelArtifacts {
     pub train: String,
@@ -98,5 +246,42 @@ mod tests {
     fn full_scale_mapping() {
         assert_eq!(full_scale_of("vgg"), Some("vggnet"));
         assert_eq!(full_scale_of("mlp"), None);
+    }
+
+    #[test]
+    fn builtin_tables_match_paper_counts() {
+        // Table 2, exactly — and therefore python/compile/models/registry.py
+        for (name, want) in
+            [("alexnet", 60_965_224usize), ("googlenet", 13_378_280), ("vggnet", 138_357_544)]
+        {
+            let t = builtin_full_scale_layers(name).unwrap();
+            let sum: usize = t.iter().map(|(_, p)| p).sum();
+            assert_eq!(sum, want, "{name}");
+        }
+        assert!(builtin_full_scale_layers("lenet").is_none());
+        // AlexNet's famous skew: fc6-8 hold ~96% of the parameters
+        let alex = builtin_full_scale_layers("alexnet").unwrap();
+        let fc: usize = alex
+            .iter()
+            .filter(|(n, _)| crate::collectives::wfbp::is_fc_layer(n))
+            .map(|(_, p)| p)
+            .sum();
+        assert!(fc as f64 / 60_965_224.0 > 0.95, "fc share {fc}");
+        assert_eq!(alex.len(), 8);
+        // 3 stem convs + 9 inceptions x 6 + 2 aux heads x 3 + classifier
+        assert_eq!(builtin_full_scale_layers("googlenet").unwrap().len(), 64);
+        assert_eq!(builtin_full_scale_layers("vggnet").unwrap().len(), 16);
+    }
+
+    #[test]
+    fn proxy_split_is_uniform_and_covers() {
+        let t = proxy_layer_split(1003, 8);
+        assert_eq!(t.len(), 8);
+        let sum: usize = t.iter().map(|(_, p)| p).sum();
+        assert_eq!(sum, 1003);
+        let min = t.iter().map(|(_, p)| *p).min().unwrap();
+        let max = t.iter().map(|(_, p)| *p).max().unwrap();
+        assert!(max - min <= 1);
+        assert_eq!(proxy_layer_split(5, 0).len(), 1, "depth 0 clamps to 1");
     }
 }

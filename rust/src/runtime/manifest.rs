@@ -57,6 +57,10 @@ pub struct FullScaleModel {
     pub batches: Vec<usize>,
     /// (layer name, param count) in exchange order.
     pub segments: Vec<(String, usize)>,
+    /// Per-layer parameter counts in exchange order — the wait-free
+    /// backprop bucket boundaries. Emitted by aot.py as `layers`; older
+    /// manifests fall back to the `segments` counts (same granularity).
+    pub layers: Vec<usize>,
 }
 
 #[derive(Clone, Debug)]
@@ -153,6 +157,10 @@ impl Manifest {
                     Ok((s[0].as_str()?.to_string(), s[1].as_usize()?))
                 })
                 .collect::<Result<_>>()?;
+            let layers = match f.opt("layers") {
+                Some(v) => v.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?,
+                None => segments.iter().map(|(_, p)| *p).collect(),
+            };
             full_scale.insert(
                 name.clone(),
                 FullScaleModel {
@@ -166,6 +174,7 @@ impl Manifest {
                         .map(|b| b.as_usize())
                         .collect::<Result<_>>()?,
                     segments,
+                    layers,
                 },
             );
         }
@@ -227,7 +236,20 @@ mod tests {
         assert_eq!(m.models["m"].key_for_batch(4).unwrap(), "m");
         assert!(m.models["m"].key_for_batch(99).is_err());
         assert_eq!(m.full_scale["alexnet"].params, 60_965_224);
+        // no "layers" key: fall back to the segments' per-layer counts
+        assert_eq!(m.full_scale["alexnet"].layers, vec![34944]);
         assert_eq!(m.kernels.sum_stack[&2], "sum_stack_k2");
+    }
+
+    #[test]
+    fn explicit_layers_key_wins_over_segments() {
+        let text = MINI.replace(
+            r#""segments": [["conv1", 34944]]"#,
+            r#""segments": [["conv1", 34944]], "layers": [30000, 4944]"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert_eq!(m.full_scale["alexnet"].layers, vec![30000, 4944]);
+        assert_eq!(m.full_scale["alexnet"].segments.len(), 1);
     }
 
     #[test]

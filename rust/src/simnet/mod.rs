@@ -231,6 +231,68 @@ pub struct FlowJob {
     pub kernel: f64,
 }
 
+/// Machine id of the single wire resource a *flat* strategy's exchange
+/// occupies end-to-end — what the wait-free backprop scheduler prices a
+/// bucket's transfer on when the strategy reports no per-level legs.
+pub const MACHINE_WIRE: usize = 100;
+
+/// One gradient bucket's job on the joint compute+comm timeline: the
+/// backward-compute "machine" releases it at `release` (seconds after the
+/// backward pass starts), and only then may its wire legs begin.
+#[derive(Clone, Debug, Default)]
+pub struct TimedJob {
+    /// Gradient-ready time of the bucket's last (input-most) layer.
+    pub release: f64,
+    pub job: FlowJob,
+}
+
+/// Release-gated flow-shop makespan — the wait-free-backprop timeline.
+///
+/// Identical machine semantics to [`flow_pipeline_time`], with two
+/// differences that model the backward pass feeding the wire:
+///
+/// * a job's first leg cannot start before its `release` time (the bucket's
+///   gradients do not exist yet), and
+/// * the wormhole latency discount applies only while a machine streams
+///   back-to-back: if a bucket finds the machine *idle* (its release came
+///   after the previous bucket drained), the stream restarts and the full
+///   per-message latency is paid again. [`flow_pipeline_time`] never stalls
+///   (all jobs are released at 0), so it keeps the simpler once-per-machine
+///   rule; a `TimedJob` list with all releases at 0 and a single machine
+///   reduces exactly to [`pipeline_time`].
+///
+/// Jobs must be passed in release order (the backward pass emits buckets
+/// top layer first); machines serve FIFO in that order. The returned
+/// makespan is measured from the start of the backward pass, so it is
+/// always `>= release` of the last job.
+pub fn wfbp_timeline(jobs: &[TimedJob]) -> f64 {
+    let mut machine_free: HashMap<usize, f64> = HashMap::new();
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut kernel_free = 0.0f64;
+    let mut last_release = 0.0f64;
+    for tj in jobs {
+        last_release = last_release.max(tj.release);
+        let mut prev_done = tj.release;
+        for leg in &tj.job.legs {
+            let free = machine_free.entry(leg.machine).or_insert(0.0);
+            let start = free.max(prev_done);
+            // pay latency on first use or whenever the stream stalled
+            let t = if seen.insert(leg.machine) || start > *free {
+                leg.transfer
+            } else {
+                (leg.transfer - leg.latency).max(0.0)
+            };
+            prev_done = start + t;
+            *free = prev_done;
+        }
+        kernel_free = kernel_free.max(prev_done) + tj.job.kernel;
+    }
+    machine_free
+        .values()
+        .copied()
+        .fold(kernel_free.max(last_release), f64::max)
+}
+
 /// Flow-shop makespan of a chunk stream: machines are serial, a chunk's
 /// legs run in order, and chunks queue FIFO per machine (greedy, no
 /// reordering). A job list whose legs all name one machine plus trailing
@@ -560,6 +622,106 @@ mod tests {
         let jobs = [mk(0.25), mk(0.25), mk(0.25)];
         // first chunk pays 1.25, later chunks 1.0
         assert!((flow_pipeline_time(&jobs) - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wfbp_all_released_at_zero_matches_pipeline_time() {
+        let stages = [
+            PipelineStage { transfer: 0.3, latency: 0.01, kernel: 0.2 },
+            PipelineStage { transfer: 0.5, latency: 0.01, kernel: 0.1 },
+            PipelineStage { transfer: 0.2, latency: 0.01, kernel: 0.4 },
+        ];
+        let jobs: Vec<TimedJob> = stages
+            .iter()
+            .map(|s| TimedJob {
+                release: 0.0,
+                job: FlowJob {
+                    legs: vec![Leg {
+                        machine: MACHINE_WIRE,
+                        transfer: s.transfer,
+                        latency: s.latency,
+                    }],
+                    kernel: s.kernel,
+                },
+            })
+            .collect();
+        let a = pipeline_time(&stages);
+        let b = wfbp_timeline(&jobs);
+        assert!((a - b).abs() < 1e-15, "pipeline {a} != wfbp {b}");
+    }
+
+    #[test]
+    fn wfbp_single_job_is_release_plus_serial() {
+        let jobs = [TimedJob {
+            release: 2.0,
+            job: FlowJob {
+                legs: vec![Leg { machine: MACHINE_WIRE, transfer: 0.7, latency: 0.1 }],
+                kernel: 0.2,
+            },
+        }];
+        assert!((wfbp_timeline(&jobs) - 2.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wfbp_release_gates_the_wire() {
+        // bucket 0 released early, bucket 1 late: the wire drains and idles
+        // until release 5.0, so the makespan is release-bound, not comm-bound
+        let mk = |release: f64| TimedJob {
+            release,
+            job: FlowJob {
+                legs: vec![Leg { machine: MACHINE_WIRE, transfer: 1.0, latency: 0.25 }],
+                kernel: 0.0,
+            },
+        };
+        let t = wfbp_timeline(&[mk(0.0), mk(5.0)]);
+        // the stalled stream restarts: the second bucket pays latency again
+        assert!((t - 6.0).abs() < 1e-12, "{t}");
+        // back-to-back releases keep the discount
+        let t2 = wfbp_timeline(&[mk(0.0), mk(0.0)]);
+        assert!((t2 - 1.75).abs() < 1e-12, "{t2}");
+    }
+
+    #[test]
+    fn wfbp_busy_wire_queues_fifo() {
+        // releases at 0.0 and 0.1 but each transfer takes 1.0: job 2 waits
+        // for the wire, then streams back-to-back (latency discounted)
+        let mk = |release: f64| TimedJob {
+            release,
+            job: FlowJob {
+                legs: vec![Leg { machine: MACHINE_WIRE, transfer: 1.0, latency: 0.2 }],
+                kernel: 0.3,
+            },
+        };
+        let t = wfbp_timeline(&[mk(0.0), mk(0.1)]);
+        // wire: [0,1.0] then [1.0,1.8]; kernels: [1.0,1.3] then [1.8,2.1]
+        assert!((t - 2.1).abs() < 1e-12, "{t}");
+    }
+
+    #[test]
+    fn wfbp_never_beats_lower_bounds_or_exceeds_serial() {
+        let jobs: Vec<TimedJob> = (0..5)
+            .map(|i| TimedJob {
+                release: 0.2 * i as f64,
+                job: FlowJob {
+                    legs: vec![Leg {
+                        machine: MACHINE_WIRE,
+                        transfer: 0.3 + 0.1 * (i % 2) as f64,
+                        latency: 0.02,
+                    }],
+                    kernel: 0.05,
+                },
+            })
+            .collect();
+        let t = wfbp_timeline(&jobs);
+        let wire: f64 = jobs.iter().map(|j| j.job.legs[0].transfer).sum();
+        let comm: f64 = wire + jobs.iter().map(|j| j.job.kernel).sum::<f64>();
+        let last_release = jobs.last().unwrap().release;
+        assert!(t >= wire - 4.0 * 0.02 - 1e-12, "wire load is a floor: {t}");
+        assert!(t >= last_release, "cannot finish before the last release");
+        // post-backward serial: everything after the last release
+        let serial = last_release + comm;
+        assert!(t <= serial + 1e-12, "{t} > serial {serial}");
+        assert!(t < serial, "early releases must overlap");
     }
 
     #[test]

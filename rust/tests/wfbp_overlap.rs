@@ -1,0 +1,329 @@
+//! Wait-free backprop differential suite: WFBP changes *when* bytes move,
+//! never *what* is exchanged.
+//!
+//! * Data path: for every strategy × op × ragged bucket plan, the wait-free
+//!   schedule produces **bit-identical** parameters to the post-backward
+//!   (serially-priced) schedule — they run the same inner exchanges over
+//!   the same slices. A single-bucket plan must additionally be
+//!   bit-identical to (and priced exactly as) today's whole-vector
+//!   post-backward exchange.
+//! * Pricing invariants: `comm_hidden <= serial_comm`,
+//!   `overlap_fraction ∈ [0, 1]`, and the joint makespan respects the
+//!   max(compute, comm) lower bounds.
+
+use theano_mpi::cluster::Topology;
+use theano_mpi::collectives::{
+    exchange_wfbp, ChunkedPipeline, ExchangeCtx, ExchangeStrategy, ReduceOp, StrategyKind,
+    WfbpOutcome, WfbpPlan,
+};
+use theano_mpi::precision::Wire;
+use theano_mpi::simnet::LinkParams;
+use theano_mpi::testkit::{all_strategy_kinds, run_exchange};
+use theano_mpi::{mpi, models};
+
+/// Run one bucketed exchange across `bufs.len()` threads; rank 0's outcome.
+#[allow(clippy::too_many_arguments)]
+fn run_wfbp(
+    kind: StrategyKind,
+    chunk_elems: Option<usize>,
+    plan: &WfbpPlan,
+    bufs: Vec<Vec<f32>>,
+    op: ReduceOp,
+    topo: &Topology,
+    backward: f64,
+    overlap: bool,
+) -> (Vec<Vec<f32>>, WfbpOutcome) {
+    let k = bufs.len();
+    let world = mpi::world(k);
+    let links = LinkParams::default();
+    let handles: Vec<_> = world
+        .into_iter()
+        .zip(bufs)
+        .map(|(mut comm, mut buf)| {
+            let topo = topo.clone();
+            let plan = plan.clone();
+            std::thread::spawn(move || {
+                let inner: Box<dyn ExchangeStrategy> = match chunk_elems {
+                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(Wire::F16), c, true)),
+                    None => kind.build(Wire::F16),
+                };
+                let mut ctx = ExchangeCtx {
+                    comm: &mut comm,
+                    topo: &topo,
+                    links: &links,
+                    kernels: None,
+                    cuda_aware: true,
+                    chunk_elems: 0,
+                };
+                let out = exchange_wfbp(
+                    inner.as_ref(),
+                    &plan,
+                    &mut buf,
+                    op,
+                    &mut ctx,
+                    backward,
+                    1.0,
+                    overlap,
+                )
+                .unwrap();
+                (buf, out)
+            })
+        })
+        .collect();
+    let mut outs = Vec::new();
+    let mut out0 = WfbpOutcome::default();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (buf, out) = h.join().unwrap();
+        if i == 0 {
+            out0 = out;
+        }
+        outs.push(buf);
+    }
+    (outs, out0)
+}
+
+/// A ragged fc-heavy layer table summing to `n`.
+fn ragged_table(n: usize) -> Vec<(String, usize)> {
+    assert!(n >= 16);
+    let conv1 = n / 16;
+    let conv2 = n / 8 + 1;
+    let fc6 = n / 2 + 3;
+    let fc7 = n / 5;
+    let fc8 = n - conv1 - conv2 - fc6 - fc7;
+    vec![
+        ("conv1".into(), conv1),
+        ("conv2".into(), conv2),
+        ("fc6".into(), fc6),
+        ("fc7".into(), fc7),
+        ("fc8".into(), fc8),
+    ]
+}
+
+fn mk_bufs(k: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|r| (0..n).map(|i| (((r * 131 + i * 17) % 997) as f32 - 498.0) * 1e-3).collect())
+        .collect()
+}
+
+#[test]
+fn wfbp_bit_identical_to_post_for_every_strategy_op_and_plan() {
+    let n = 1003;
+    let table = ragged_table(n);
+    for kind in all_strategy_kinds() {
+        // hier needs a multi-node copper world to exercise every level
+        let (k, topo) = if matches!(kind, StrategyKind::Hier { .. }) {
+            (16, Topology::by_name("copper", 16).unwrap())
+        } else {
+            (4, Topology::mosaic(4))
+        };
+        for op in [ReduceOp::Sum, ReduceOp::Mean] {
+            for bucket_elems in [0usize, 7, 300, 5000] {
+                let plan = WfbpPlan::from_layers(&table, bucket_elems);
+                assert_eq!(plan.total_elems, n);
+                let (wf, out_wf) =
+                    run_wfbp(kind, None, &plan, mk_bufs(k, n), op, &topo, 1e-3, true);
+                let (post, out_post) =
+                    run_wfbp(kind, None, &plan, mk_bufs(k, n), op, &topo, 1e-3, false);
+                for (r, (a, b)) in wf.iter().zip(&post).enumerate() {
+                    assert_eq!(
+                        a,
+                        b,
+                        "{}: rank {r} diverged (op={op:?} bucket_elems={bucket_elems})",
+                        kind.name()
+                    );
+                }
+                // same buckets priced serially: identical serial comm
+                assert!(
+                    (out_wf.serial_comm - out_post.serial_comm).abs() < 1e-12,
+                    "{}: serial comm drifted",
+                    kind.name()
+                );
+                assert_eq!(out_post.comm_hidden, 0.0);
+                assert_eq!(out_post.overlap_fraction, 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn wfbp_with_chunked_inner_is_bit_identical_to_plain_inner() {
+    // ChunkedPipeline is bit-identical per exchange, so composing it under
+    // WFBP must not change a single bit either
+    let n = 2000;
+    let table = ragged_table(n);
+    let plan = WfbpPlan::from_layers(&table, 0);
+    let topo = Topology::mosaic(4);
+    for kind in [StrategyKind::Asa, StrategyKind::Ring, StrategyKind::Ar] {
+        let (plain, _) =
+            run_wfbp(kind, None, &plan, mk_bufs(4, n), ReduceOp::Sum, &topo, 1e-3, true);
+        let (chunked, out) =
+            run_wfbp(kind, Some(97), &plan, mk_bufs(4, n), ReduceOp::Sum, &topo, 1e-3, true);
+        assert_eq!(plain, chunked, "{}", kind.name());
+        assert!(out.comm.chunks > plan.n_buckets(), "chunking engaged");
+    }
+}
+
+#[test]
+fn single_bucket_prices_and_computes_exactly_as_today() {
+    // one bucket == the whole vector released at the end of the backward
+    // pass: data and price must both reduce to the plain exchange
+    let n = 1003;
+    let topo = Topology::mosaic(4);
+    for kind in [StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring, StrategyKind::Ar] {
+        let (mono_bufs, mono_rep) =
+            run_exchange(kind, None, mk_bufs(4, n), ReduceOp::Sum, &topo);
+        let plan = WfbpPlan::single(n);
+        let backward = 0.125;
+        let (wf_bufs, out) =
+            run_wfbp(kind, None, &plan, mk_bufs(4, n), ReduceOp::Sum, &topo, backward, true);
+        assert_eq!(mono_bufs, wf_bufs, "{}", kind.name());
+        assert!(
+            (out.comm_visible - mono_rep.sim_total()).abs() < 1e-12,
+            "{}: single-bucket wfbp {} != monolithic {}",
+            kind.name(),
+            out.comm_visible,
+            mono_rep.sim_total()
+        );
+        assert_eq!(out.buckets, 1);
+        assert!(out.comm_hidden.abs() < 1e-12, "nothing can hide after the pass");
+        assert!(
+            (out.makespan - (backward + mono_rep.sim_total())).abs() < 1e-12,
+            "{}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn pricing_invariants_hold_across_strategies_and_backward_scales() {
+    let n = 100_000;
+    let table = ragged_table(n);
+    let plan = WfbpPlan::from_layers(&table, 0);
+    let topo = Topology::by_name("copper", 8).unwrap();
+    for kind in [StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ar, StrategyKind::Ring] {
+        // backward spanning comm-bound (tiny) to compute-bound (huge)
+        for backward in [0.0, 1e-5, 1e-3, 10.0] {
+            let (_, out) =
+                run_wfbp(kind, None, &plan, mk_bufs(8, n), ReduceOp::Sum, &topo, backward, true);
+            let label = format!("{} backward={backward}", kind.name());
+            assert!(out.comm_hidden >= 0.0, "{label}");
+            assert!(
+                out.comm_hidden <= out.serial_comm + 1e-15,
+                "{label}: hidden {} > serial {}",
+                out.comm_hidden,
+                out.serial_comm
+            );
+            assert!(
+                (0.0..=1.0).contains(&out.overlap_fraction),
+                "{label}: overlap_fraction {}",
+                out.overlap_fraction
+            );
+            // the worker clock pays exactly the visible part
+            assert!(
+                (out.comm.sim_total() - out.comm_visible).abs() < 1e-12,
+                "{label}: report total {} != visible {}",
+                out.comm.sim_total(),
+                out.comm_visible
+            );
+            // max(compute, comm) lower bounds on the joint makespan
+            assert!(out.makespan >= backward - 1e-15, "{label}");
+            let wire_floor = out.comm.sim_transfer - out.comm.sim_latency;
+            assert!(
+                out.makespan + 1e-12 >= wire_floor,
+                "{label}: makespan {} below wire floor {wire_floor}",
+                out.makespan
+            );
+            assert!(
+                out.makespan <= backward + out.serial_comm + 1e-12,
+                "{label}: makespan {} exceeds the no-overlap schedule",
+                out.makespan
+            );
+            // conservation: visible + hidden == serial
+            assert!(
+                (out.comm_visible + out.comm_hidden - out.serial_comm).abs() < 1e-9,
+                "{label}: visible {} + hidden {} != serial {}",
+                out.comm_visible,
+                out.comm_hidden,
+                out.serial_comm
+            );
+        }
+    }
+}
+
+#[test]
+fn wait_free_strictly_beats_post_backward_when_compute_can_hide_it() {
+    // the bench acceptance property in miniature: fc-heavy layer skew on
+    // copper at k=8 with a backward pass comparable to the comm time
+    let n = 200_000;
+    let table = ragged_table(n);
+    let plan = WfbpPlan::from_layers(&table, 0);
+    let topo = Topology::by_name("copper", 8).unwrap();
+    // post comm for this probe is ~1e-4..1e-3 s; give backward the same order
+    let backward = 2e-3;
+    let asa = StrategyKind::Asa;
+    let (_, post) =
+        run_wfbp(asa, None, &plan, mk_bufs(8, n), ReduceOp::Sum, &topo, backward, false);
+    let (_, wf) =
+        run_wfbp(asa, None, &plan, mk_bufs(8, n), ReduceOp::Sum, &topo, backward, true);
+    assert!(
+        wf.comm_visible < post.comm_visible,
+        "wfbp {} !< post {}",
+        wf.comm_visible,
+        post.comm_visible
+    );
+    assert!(wf.overlap_fraction > 0.0);
+    assert!(wf.makespan < post.makespan);
+    // and the end-to-end iteration wins: makespan < backward + serial comm
+    assert!(wf.makespan < backward + post.serial_comm);
+}
+
+#[test]
+fn fc_heavy_skew_hides_more_than_uniform() {
+    // depth-skew monotonicity at equal bytes: AlexNet's real split hides a
+    // strictly larger fraction than a uniform split of the same vector
+    let alex = models::builtin_full_scale_layers("alexnet").unwrap();
+    let total: usize = alex.iter().map(|(_, p)| p).sum();
+    let uniform = models::proxy_layer_split(total, alex.len());
+    let n = 150_000;
+    let plan_fc = WfbpPlan::from_layers(&alex, 0).project(n);
+    let plan_uni = WfbpPlan::from_layers(&uniform, 0).project(n);
+    let topo = Topology::by_name("copper", 8).unwrap();
+    let backward = 5e-3; // comfortably covers this probe's comm time
+    let asa = StrategyKind::Asa;
+    let (_, fc) =
+        run_wfbp(asa, None, &plan_fc, mk_bufs(8, n), ReduceOp::Sum, &topo, backward, true);
+    let (_, uni) =
+        run_wfbp(asa, None, &plan_uni, mk_bufs(8, n), ReduceOp::Sum, &topo, backward, true);
+    assert!(
+        fc.overlap_fraction > uni.overlap_fraction,
+        "fc-heavy {} !> uniform {}",
+        fc.overlap_fraction,
+        uni.overlap_fraction
+    );
+}
+
+#[test]
+fn projected_plans_skip_empty_buckets_consistently() {
+    // projecting a many-layer table onto a tiny vector rounds some buckets
+    // to zero length; every rank must skip the same ones and the data must
+    // still be a correct allreduce
+    let goog = models::builtin_full_scale_layers("googlenet").unwrap();
+    let n = 64; // far fewer elements than layers' worth of buckets
+    let plan = WfbpPlan::from_layers(&goog, 0).project(n);
+    assert!(plan.n_buckets() < plan.buckets.len(), "some buckets must round to zero");
+    let topo = Topology::mosaic(3);
+    let bufs = mk_bufs(3, n);
+    let mut want = vec![0.0f32; n];
+    for b in &bufs {
+        for (o, x) in want.iter_mut().zip(b) {
+            *o += x;
+        }
+    }
+    let (outs, out) =
+        run_wfbp(StrategyKind::Asa, None, &plan, bufs, ReduceOp::Sum, &topo, 1e-3, true);
+    assert_eq!(out.buckets, plan.n_buckets());
+    for (r, o) in outs.iter().enumerate() {
+        theano_mpi::testkit::allclose(o, &want, 1e-5, 1e-5)
+            .unwrap_or_else(|e| panic!("rank {r}: {e}"));
+    }
+}

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff a bench run's JSON against committed baselines.
+
+Usage:
+    python3 scripts/bench_gate.py BENCH_collectives.json bench/baselines/BENCH_collectives.json
+    python3 scripts/bench_gate.py --tolerance 0.10 <current.json> <baseline.json> [...]
+
+Current-run files come from the benches themselves: every `report()`ed
+simulated metric is collected and, with TMPI_BENCH_JSON=<path> set, dumped
+as {"metrics": {name: {"value": v, "unit": u}}}. The committed baselines
+live under bench/baselines/ and additionally carry a "better" direction per
+metric ("lower" for times, "higher" for throughput/overlap ratios).
+
+Gate semantics (per metric present in the baseline):
+  * better=lower  -> FAIL if current > baseline * (1 + tolerance)
+  * better=higher -> FAIL if current < baseline * (1 - tolerance)
+  * missing from the current run -> FAIL (a silently dropped metric is a
+    regression of coverage)
+Metrics in the current run but not in the baseline are listed as NEW and do
+not fail the gate — refresh the baselines deliberately to start tracking
+them (see README "Refreshing bench baselines"). Wall-clock metrics (unit
+"s_wall") are machine-dependent and are never gated.
+
+Exit status: 0 clean, 1 on any regression or missing metric.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if "metrics" not in data or not isinstance(data["metrics"], dict):
+        sys.exit(f"{path}: expected a top-level 'metrics' object")
+    return data["metrics"]
+
+
+def gate(current_path, baseline_path, tolerance):
+    current = load(current_path)
+    baseline = load(baseline_path)
+    failures, checked, new = [], 0, []
+
+    for name, base in sorted(baseline.items()):
+        if base.get("unit") == "s_wall":
+            continue
+        # direction must be explicit: a silently-defaulted direction would
+        # gate higher-is-better metrics (overlap fractions, speedups)
+        # backwards. verify_wfbp_bands.py --write-baselines sets it.
+        better = base.get("better")
+        if better not in ("lower", "higher"):
+            failures.append(
+                f"{name}: baseline must declare \"better\": \"lower\"|\"higher\" "
+                f"(got {better!r}) — regenerate with "
+                f"scripts/verify_wfbp_bands.py --write-baselines"
+            )
+            continue
+        if name not in current:
+            failures.append(f"{name}: missing from the current run (baseline {base['value']})")
+            continue
+        cur = current[name]["value"]
+        ref = base["value"]
+        checked += 1
+        if cur is None:
+            failures.append(f"{name}: current value is null (non-finite)")
+            continue
+        # budget around a zero reference degenerates to an absolute epsilon
+        # (no division: ref can legitimately be 0.0, e.g. a kernel-free win)
+        eps = 1e-12
+        regressed = (
+            cur > ref * (1.0 + tolerance) + eps
+            if better == "lower"
+            else cur < ref * (1.0 - tolerance) - eps
+        )
+        if regressed:
+            pct = f" ({(cur / ref - 1.0) * 100.0:+.1f}%)" if ref else ""
+            failures.append(
+                f"{name}: {cur:.6g} regressed vs {ref:.6g}{pct} "
+                f"(budget {tolerance * 100.0:.0f}%, better={better})"
+            )
+
+    for name, m in sorted(current.items()):
+        if name not in baseline and m.get("unit") != "s_wall":
+            new.append(name)
+
+    tag = f"{current_path} vs {baseline_path}"
+    print(f"bench-gate: {tag}: {checked} metrics checked, {len(new)} new, {len(failures)} failing")
+    for name in new:
+        print(f"  NEW (unbaselined, not gated): {name} = {current[name]['value']}")
+    for f in failures:
+        print(f"  FAIL {f}")
+    return not failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="fractional regression budget (default 0.10 = 10%%)")
+    ap.add_argument("pairs", nargs="+",
+                    help="alternating <current.json> <baseline.json> pairs")
+    args = ap.parse_args()
+    if len(args.pairs) % 2:
+        ap.error("arguments must come in <current.json> <baseline.json> pairs")
+    ok = True
+    for cur, base in zip(args.pairs[::2], args.pairs[1::2]):
+        ok &= gate(cur, base, args.tolerance)
+    print("bench-gate:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,759 @@
+#!/usr/bin/env python3
+"""Python port of the WFBP + collectives pricing model.
+
+Stdlib-only reference implementation of the Rust `simnet` device-level
+phase pricing, the AR/ASA/ASA16/Ring strategy cost structure, the chunked
+pipeline, and the wait-free backprop (WFBP) bucket timeline. Every
+deterministic numeric band asserted by `rust/benches/bench_collectives.rs`
+(smoke set) and `rust/tests/wfbp_overlap.rs`'s pricing checks is re-derived
+here; run this script after touching the pricing model and refresh the
+committed baselines if the printed values move:
+
+    python3 scripts/verify_wfbp_bands.py                  # verify bands
+    python3 scripts/verify_wfbp_bands.py --write-baselines  # + regenerate
+        bench/baselines/BENCH_collectives.json / BENCH_easgd.json
+
+The hierarchical (hier:*) sweeps are full-bench only (not part of the CI
+smoke set) and are not ported here; their bands were verified in PR 2.
+
+The script exits non-zero if any band fails. NOTE: this container carries
+no Rust toolchain — this port is the only numeric verification the bands
+get before the driver's tier-1 runs, so keep it faithful to the Rust
+arithmetic (same model, same operation structure; f64 round-off apart).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# --- simnet::LinkParams::default() -----------------------------------------
+PCIE_GBPS = 12.0
+PCIE_LAT_US = 10.0
+QPI_GBPS = 16.0
+QPI_LAT_US = 1.0
+IB_FDR_GBPS = 6.8
+IB_QDR_GBPS = 4.0
+IB_LAT_US = 1.5
+HOST_MEM_GBPS = 10.0
+HOST_REDUCE_GBPS = 5.0
+GPU_REDUCE_GBPS = 150.0
+GPU_CAST_GBPS = 200.0
+
+# --- collectives::wfbp constants -------------------------------------------
+BWD_FRACTION = 2.0 / 3.0
+CONV_COMPUTE_REUSE = 169.0
+
+PROBE_CAP = 1_000_000
+
+
+# --- cluster::Topology ------------------------------------------------------
+class Topo:
+    def __init__(self, gpus, ib_gbps):
+        self.gpus = gpus  # (node, socket, switch)
+        self.ib = ib_gbps
+
+    def path(self, a, b):
+        if a == b:
+            return "local"
+        ga, gb = self.gpus[a], self.gpus[b]
+        if ga[0] != gb[0]:
+            return "network"
+        if ga[2] == gb[2]:
+            return "p2p"
+        return "qpi"
+
+
+def copper(nodes):
+    gpus = []
+    for n in range(nodes):
+        for socket in range(2):
+            for _ in range(4):
+                gpus.append((n, socket, n * 2 + socket))
+    return Topo(gpus, IB_FDR_GBPS)
+
+
+def mosaic(nodes):
+    return Topo([(n, 0, n * 2) for n in range(nodes)], IB_QDR_GBPS)
+
+
+def by_name(name, workers):
+    if name == "mosaic":
+        return mosaic(max(workers, 1))
+    if name == "copper":
+        return copper(-(-max(workers, 1) // 8))
+    raise ValueError(name)
+
+
+def split_even(n, k):
+    base, extra = n // k, n % k
+    out, off = [], 0
+    for i in range(k):
+        ln = base + (1 if i < extra else 0)
+        out.append((off, ln))
+        off += ln
+    return out
+
+
+# --- simnet::phase_cost (device-level resource map) -------------------------
+def phase_cost(topo, transfers, cuda_aware=True):
+    """transfers: [(src, dst, bytes)] -> (bandwidth_s, latency_s)."""
+    load = {}
+    max_lat = 0.0
+
+    def add(key, b, gbps):
+        load[key] = load.get(key, 0.0) + b / (gbps * 1e9)
+
+    for src, dst, b in transfers:
+        if src == dst or b == 0:
+            continue
+        gs, gd = topo.gpus[src], topo.gpus[dst]
+        lat = 0.0
+        kind = topo.path(src, dst)
+        if kind == "p2p":
+            add(("pu", src), b, PCIE_GBPS)
+            add(("pd", dst), b, PCIE_GBPS)
+            lat += 2.0 * PCIE_LAT_US
+            if not cuda_aware:
+                add(("hm", gs[0]), 2 * b, HOST_MEM_GBPS)
+                lat += 2.0 * PCIE_LAT_US
+        elif kind == "qpi":
+            add(("pu", src), b, PCIE_GBPS)
+            add(("qp", gs[0]), b, QPI_GBPS)
+            add(("hm", gs[0]), 2 * b, HOST_MEM_GBPS)
+            add(("pd", dst), b, PCIE_GBPS)
+            lat += 2.0 * PCIE_LAT_US + QPI_LAT_US
+        elif kind == "network":
+            add(("pu", src), b, PCIE_GBPS)
+            add(("hm", gs[0]), b, HOST_MEM_GBPS)
+            add(("no", gs[0]), b, topo.ib)
+            add(("ni", gd[0]), b, topo.ib)
+            add(("hm", gd[0]), b, HOST_MEM_GBPS)
+            add(("pd", dst), b, PCIE_GBPS)
+            lat += 2.0 * PCIE_LAT_US + IB_LAT_US
+        max_lat = max(max_lat, lat * 1e-6)
+    return (max(load.values(), default=0.0), max_lat)
+
+
+def gpu_reduce_time(b):
+    return b / (GPU_REDUCE_GBPS * 1e9)
+
+
+def gpu_cast_time(b):
+    return b / (GPU_CAST_GBPS * 1e9)
+
+
+def host_reduce_time(b):
+    return b / (HOST_REDUCE_GBPS * 1e9)
+
+
+def pcie_time(b):
+    return PCIE_LAT_US * 1e-6 + b / (PCIE_GBPS * 1e9)
+
+
+# --- strategy pricing (rank 0's CommReport, kernels unbound) ---------------
+def rep_zero(name):
+    return {
+        "strategy": name,
+        "wire_bytes": 0.0,
+        "sim_transfer": 0.0,
+        "sim_latency": 0.0,
+        "sim_kernel": 0.0,
+        "sim_host_reduce": 0.0,
+        "sim_overlapped": 0.0,
+        "chunks": 0,
+    }
+
+
+def sim_total(rep):
+    return (
+        rep["sim_transfer"]
+        + rep["sim_kernel"]
+        + rep["sim_host_reduce"]
+        - rep["sim_overlapped"]
+    )
+
+
+def scale_times(rep, s):
+    for key in ("sim_transfer", "sim_latency", "sim_kernel", "sim_host_reduce",
+                "sim_overlapped", "wire_bytes"):
+        rep[key] *= s
+    return rep
+
+
+def price_asa(topo, k, n, half=False, cuda_aware=True):
+    """collectives::asa::asa_exchange, rank 0's report (kernels=None)."""
+    rep = rep_zero("asa16" if half else "asa")
+    if k == 1:
+        return rep
+    parts = split_even(n, k)
+    eb = 2 if half else 4
+    rank = 0
+    # phase 1: alltoall
+    for j in range(k):
+        if j == rank:
+            continue
+        if half:
+            rep["sim_kernel"] += gpu_cast_time(4 * parts[j][1])  # pack seg j
+        rep["wire_bytes"] += eb * parts[j][1]
+    for j in range(k):
+        if j == rank:
+            continue
+        if half:
+            rep["sim_kernel"] += gpu_cast_time(2 * parts[rank][1])  # unpack
+    transfers = [
+        (s, d, eb * parts[d][1]) for s in range(k) for d in range(k) if s != d
+    ]
+    bw, lat = phase_cost(topo, transfers, cuda_aware)
+    rep["sim_transfer"] += bw + lat
+    rep["sim_latency"] += lat
+    # sum on the "GPU" at the largest segment
+    max_len = max(p[1] for p in parts)
+    rep["sim_kernel"] += gpu_reduce_time(4 * k * max_len)
+    # phase 2: allgather
+    my_len = parts[rank][1]
+    for j in range(k):
+        if j == rank:
+            continue
+        if half:
+            rep["sim_kernel"] += gpu_cast_time(4 * my_len)  # pack reduced
+        rep["wire_bytes"] += eb * my_len
+    for j in range(k):
+        if j == rank:
+            continue
+        if half:
+            rep["sim_kernel"] += gpu_cast_time(2 * parts[j][1])  # unpack
+    transfers = [
+        (s, d, eb * parts[s][1]) for s in range(k) for d in range(k) if s != d
+    ]
+    bw, lat = phase_cost(topo, transfers, cuda_aware)
+    rep["sim_transfer"] += bw + lat
+    rep["sim_latency"] += lat
+    return rep
+
+
+def host_phase(topo, transfers):
+    """collectives::allreduce::host_phase: host-resident buffers."""
+    nic_out, nic_in, mem, qpi = {}, {}, {}, {}
+    lat = 0.0
+    for src, dst, b in transfers:
+        if src == dst or b == 0:
+            continue
+        a, d = topo.gpus[src], topo.gpus[dst]
+        gb = b / 1e9
+        if a[0] != d[0]:
+            nic_out[a[0]] = nic_out.get(a[0], 0.0) + gb / topo.ib
+            nic_in[d[0]] = nic_in.get(d[0], 0.0) + gb / topo.ib
+            mem[a[0]] = mem.get(a[0], 0.0) + gb / HOST_MEM_GBPS
+            mem[d[0]] = mem.get(d[0], 0.0) + gb / HOST_MEM_GBPS
+            lat = max(lat, IB_LAT_US * 1e-6)
+        elif a[1] != d[1]:
+            qpi[a[0]] = qpi.get(a[0], 0.0) + gb / QPI_GBPS
+            lat = max(lat, QPI_LAT_US * 1e-6)
+        else:
+            mem[a[0]] = mem.get(a[0], 0.0) + gb / HOST_MEM_GBPS
+    mx = lambda d: max(d.values(), default=0.0)  # noqa: E731
+    return (max(mx(nic_out), mx(nic_in), mx(mem), mx(qpi)), lat)
+
+
+def price_ar(topo, k, n, cuda_aware=True):
+    """collectives::allreduce (power-of-two k only — the bench sweeps)."""
+    assert k & (k - 1) == 0, "port covers power-of-two worlds"
+    rep = rep_zero("ar")
+    if k == 1:
+        return rep
+    bytes_ = 4 * n
+    rep["sim_transfer"] += pcie_time(bytes_)
+    rep["sim_latency"] += PCIE_LAT_US * 1e-6
+    dist = 1
+    while dist < k:
+        transfers = [(r, r ^ dist, bytes_) for r in range(k)]
+        bw, lat = host_phase(topo, transfers)
+        rep["sim_transfer"] += bw + lat
+        rep["sim_latency"] += lat
+        rep["sim_host_reduce"] += host_reduce_time(bytes_)
+        rep["wire_bytes"] += bytes_
+        dist <<= 1
+    rep["sim_transfer"] += pcie_time(bytes_)
+    rep["sim_latency"] += PCIE_LAT_US * 1e-6
+    return rep
+
+
+def price_ring(topo, k, n, cuda_aware=True):
+    """collectives::ring (kernels unbound: no GPU kernel charge)."""
+    rep = rep_zero("ring")
+    if k == 1:
+        return rep
+    parts = split_even(n, k)
+    for phase_seg in (lambda r, step: (r + k - step) % k,
+                      lambda r, step: (r + 1 + k - step) % k):
+        for step in range(k - 1):
+            transfers = [
+                (r, (r + 1) % k, 4 * parts[phase_seg(r, step)][1]) for r in range(k)
+            ]
+            bw, lat = phase_cost(topo, transfers, cuda_aware)
+            rep["sim_transfer"] += bw + lat
+            rep["sim_latency"] += lat
+    # rank 0 sends one segment per step in both phases
+    rank = 0
+    send = 0.0
+    for step in range(k - 1):
+        send += 4 * parts[(rank + k - step) % k][1]
+        send += 4 * parts[(rank + 1 + k - step) % k][1]
+    rep["wire_bytes"] += send
+    return rep
+
+
+PRICERS = {"ar": price_ar, "asa": price_asa, "asa16": lambda t, k, n, cuda_aware=True: price_asa(t, k, n, half=True, cuda_aware=cuda_aware), "ring": price_ring}
+
+
+# --- simnet::pipeline_time + chunked pipeline ------------------------------
+def pipeline_time(stages):
+    wire_free = 0.0
+    kernel_free = 0.0
+    for i, (transfer, latency, kernel) in enumerate(stages):
+        t = transfer if i == 0 else max(transfer - latency, 0.0)
+        wire_free += t
+        kernel_free = max(kernel_free, wire_free) + kernel
+    return max(kernel_free, wire_free)
+
+
+def price_chunked(strategy, topo, k, n, chunks, pipeline=True, cuda_aware=True):
+    """collectives::chunked::ChunkedPipeline over a flat inner strategy."""
+    chunk_elems = -(-n // chunks) if chunks > 1 else 0
+    if k <= 1 or chunk_elems == 0 or n <= chunk_elems:
+        rep = PRICERS[strategy](topo, k, n, cuda_aware=cuda_aware)
+        rep["chunks"] = 1
+        return rep
+    m = -(-n // chunk_elems)
+    parts = split_even(n, k)
+    slices = [split_even(ln, m) for (_, ln) in parts]
+    rep = rep_zero(f"chunked({strategy})")
+    stages = []
+    for c in range(m):
+        chunk_len = sum(slices[r][c][1] for r in range(k))
+        if chunk_len == 0:
+            continue
+        sub = PRICERS[strategy](topo, k, chunk_len, cuda_aware=cuda_aware)
+        for key in ("wire_bytes", "sim_transfer", "sim_latency", "sim_kernel",
+                    "sim_host_reduce", "sim_overlapped"):
+            rep[key] += sub[key]
+        rep["chunks"] += 1
+        stages.append((sub["sim_transfer"], sub["sim_latency"],
+                       sub["sim_kernel"] + sub["sim_host_reduce"]))
+    if pipeline:
+        serial = sum(t + kern for (t, _, kern) in stages)
+        rep["sim_overlapped"] = max(serial - pipeline_time(stages), 0.0)
+    return rep
+
+
+def probe_exchange(strategy, k, topo, full_elems, chunks=0, pipeline=False,
+                   cuda_aware=True):
+    """coordinator::probe_exchange: capped probe, linear time scaling."""
+    probe = max(min(PROBE_CAP, full_elems), 1)
+    scale = full_elems / probe
+    rep = price_chunked(strategy, topo, k, probe, chunks, pipeline, cuda_aware)
+    return scale_times(rep, scale)
+
+
+# --- wait-free backprop ----------------------------------------------------
+def is_fc(name):
+    low = name.lower()
+    return "fc" in low or "classifier" in low or "dense" in low
+
+
+def backward_weight(name, params):
+    return params if is_fc(name) else params * CONV_COMPUTE_REUSE
+
+
+def release_fractions(table):
+    total = sum(backward_weight(n, p) for n, p in table)
+    if total <= 0.0:
+        return [1.0] * len(table)
+    out = [0.0] * len(table)
+    cum = 0.0
+    for i in range(len(table) - 1, -1, -1):
+        cum += backward_weight(*table[i])
+        out[i] = cum / total
+    out[0] = 1.0
+    return out
+
+
+def plan_from_layers(table, bucket_elems=0):
+    """collectives::wfbp::WfbpPlan::from_layers -> [(off, len, release)]."""
+    total = sum(p for _, p in table)
+    if not table or total == 0:
+        return [], total
+    rel = release_fractions(table)
+    offs, off = [], 0
+    for _, p in table:
+        offs.append(off)
+        off += p
+    buckets, acc, hi_end = [], 0, total
+    for i in range(len(table) - 1, -1, -1):
+        acc += table[i][1]
+        if (acc >= max(bucket_elems, 1) or i == 0) and acc > 0:
+            buckets.append((offs[i], hi_end - offs[i], rel[i]))
+            hi_end = offs[i]
+            acc = 0
+    return buckets, total
+
+
+def project_plan(buckets, total, n):
+    if total == 0 or total == n:
+        return buckets
+    scale = lambda x: (x * n + total // 2) // total  # noqa: E731
+    return [
+        (scale(o), scale(o + ln) - scale(o), r) for (o, ln, r) in buckets
+    ]
+
+
+def wfbp_timeline(jobs):
+    """simnet::wfbp_timeline for single-wire jobs:
+    jobs = [(release, transfer, latency, kernel)] in release order."""
+    machine_free = None
+    seen = False
+    kernel_free = 0.0
+    last_release = 0.0
+    for release, transfer, latency, kernel in jobs:
+        last_release = max(last_release, release)
+        prev_done = release
+        free = machine_free if machine_free is not None else 0.0
+        start = max(free, prev_done)
+        if not seen or start > free:
+            t = transfer
+        else:
+            t = max(transfer - latency, 0.0)
+        seen = True
+        prev_done = start + t
+        machine_free = prev_done
+        kernel_free = max(kernel_free, prev_done) + kernel
+    floor = max(kernel_free, last_release)
+    return max(floor, machine_free or 0.0)
+
+
+def probe_wfbp(strategy, k, topo, table, backward, overlap, bucket_elems=0,
+               cuda_aware=True):
+    """coordinator::probe_wfbp -> dict mirroring WfbpOutcome."""
+    full = sum(p for _, p in table)
+    probe = max(min(PROBE_CAP, full), 1)
+    comm_scale = max(full, 1) / probe
+    buckets, total = plan_from_layers(table, bucket_elems)
+    buckets = project_plan(buckets, total, probe)
+    serial = 0.0
+    jobs = []
+    n_buckets = 0
+    agg = rep_zero(f"wfbp({strategy})")
+    for off, ln, release_frac in buckets:
+        if ln == 0:
+            continue
+        sub = PRICERS[strategy](topo, k, ln, cuda_aware=cuda_aware)
+        scale_times(sub, comm_scale)
+        serial += sim_total(sub)
+        jobs.append((release_frac * backward, sub["sim_transfer"],
+                     sub["sim_latency"], sub["sim_kernel"] + sub["sim_host_reduce"]))
+        for key in ("wire_bytes", "sim_transfer", "sim_latency", "sim_kernel",
+                    "sim_host_reduce", "sim_overlapped"):
+            agg[key] += sub[key]
+        n_buckets += 1
+    if overlap:
+        makespan = wfbp_timeline(jobs)
+        visible = max(makespan - backward, 0.0)
+    else:
+        makespan = backward + serial
+        visible = serial
+    hidden = max(serial - visible, 0.0)
+    agg["sim_overlapped"] += hidden
+    return {
+        "comm": agg,
+        "serial_comm": serial,
+        "comm_visible": visible,
+        "comm_hidden": hidden,
+        "makespan": makespan,
+        "overlap_fraction": (hidden / serial) if serial > 0.0 else 0.0,
+        "buckets": n_buckets,
+    }
+
+
+# --- models (python/compile/models/registry.py mirror) ----------------------
+def _conv(name, kh, kw, in_c, out_c, groups=1):
+    return (name, kh * kw * (in_c // groups) * out_c + out_c)
+
+
+def _fc(name, n_in, n_out):
+    return (name, n_in * n_out + n_out)
+
+
+def alexnet_layers():
+    return [
+        _conv("conv1", 11, 11, 3, 96),
+        _conv("conv2", 5, 5, 96, 256, groups=2),
+        _conv("conv3", 3, 3, 256, 384),
+        _conv("conv4", 3, 3, 384, 384, groups=2),
+        _conv("conv5", 3, 3, 384, 256, groups=2),
+        _fc("fc6", 9216, 4096),
+        _fc("fc7", 4096, 4096),
+        _fc("fc8", 4096, 1000),
+    ]
+
+
+def _inception(name, in_c, c1, c3r, c3, c5r, c5, cp):
+    return [
+        _conv(f"{name}/1x1", 1, 1, in_c, c1),
+        _conv(f"{name}/3x3_reduce", 1, 1, in_c, c3r),
+        _conv(f"{name}/3x3", 3, 3, c3r, c3),
+        _conv(f"{name}/5x5_reduce", 1, 1, in_c, c5r),
+        _conv(f"{name}/5x5", 5, 5, c5r, c5),
+        _conv(f"{name}/pool_proj", 1, 1, in_c, cp),
+    ]
+
+
+def _aux(name, in_c):
+    return [
+        _conv(f"{name}/conv", 1, 1, in_c, 128),
+        _fc(f"{name}/fc", 128 * 4 * 4, 1024),
+        _fc(f"{name}/classifier", 1024, 1000),
+    ]
+
+
+def googlenet_layers():
+    layers = [
+        _conv("conv1/7x7_s2", 7, 7, 3, 64),
+        _conv("conv2/3x3_reduce", 1, 1, 64, 64),
+        _conv("conv2/3x3", 3, 3, 64, 192),
+    ]
+    layers += _inception("inception_3a", 192, 64, 96, 128, 16, 32, 32)
+    layers += _inception("inception_3b", 256, 128, 128, 192, 32, 96, 64)
+    layers += _inception("inception_4a", 480, 192, 96, 208, 16, 48, 64)
+    layers += _aux("loss1", 512)
+    layers += _inception("inception_4b", 512, 160, 112, 224, 24, 64, 64)
+    layers += _inception("inception_4c", 512, 128, 128, 256, 24, 64, 64)
+    layers += _inception("inception_4d", 512, 112, 144, 288, 32, 64, 64)
+    layers += _aux("loss2", 528)
+    layers += _inception("inception_4e", 528, 256, 160, 320, 32, 128, 128)
+    layers += _inception("inception_5a", 832, 256, 160, 320, 32, 128, 128)
+    layers += _inception("inception_5b", 832, 384, 192, 384, 48, 128, 128)
+    layers.append(_fc("loss3/classifier", 1024, 1000))
+    return layers
+
+
+def vggnet_layers():
+    cfg = [(3, 64), (64, 64), (64, 128), (128, 128), (128, 256), (256, 256),
+           (256, 256), (256, 512), (512, 512), (512, 512), (512, 512),
+           (512, 512), (512, 512)]
+    layers = [_conv(f"conv{i + 1}", 3, 3, i_c, o_c) for i, (i_c, o_c) in enumerate(cfg)]
+    layers += [_fc("fc6", 25088, 4096), _fc("fc7", 4096, 4096), _fc("fc8", 4096, 1000)]
+    return layers
+
+
+TABLES = {
+    "alexnet": alexnet_layers(),
+    "googlenet": googlenet_layers(),
+    "vggnet": vggnet_layers(),
+}
+PAPER_COUNTS = {"alexnet": 60_965_224, "googlenet": 13_378_280, "vggnet": 138_357_544}
+PAPER_TOPO = {"alexnet": "mosaic", "googlenet": "mosaic", "vggnet": "copper"}
+PAPER_TRAIN_5120 = {("alexnet", 128): 31.2, ("alexnet", 32): 36.40,
+                    ("googlenet", 32): 134.9, ("vggnet", 32): 405.2}
+
+
+def paper_backward(model, batch):
+    return PAPER_TRAIN_5120[(model, batch)] * batch / 5120.0 * BWD_FRACTION
+
+
+def uniform_split(params, depth):
+    return [(f"layer{i}", ln) for i, (_, ln) in enumerate(split_even(params, depth))]
+
+
+# --- the bench metric set ---------------------------------------------------
+def collect_metrics():
+    """Recompute every deterministic metric the smoke benches emit,
+    asserting the bench bands along the way. Returns (metrics, failures)."""
+    metrics = {}
+    failures = []
+
+    def put(name, value, better):
+        metrics[name] = {"value": value, "better": better}
+
+    def check(cond, msg):
+        if not cond:
+            failures.append(msg)
+
+    for name, want in PAPER_COUNTS.items():
+        check(sum(p for _, p in TABLES[name]) == want,
+              f"{name}: layer table sums to {sum(p for _, p in TABLES[name])}, want {want}")
+
+    # comm_sim: Fig 3 / Table 3 backbone
+    for model in ("alexnet", "googlenet", "vggnet"):
+        n = PAPER_COUNTS[model]
+        topo = by_name(PAPER_TOPO[model], 8)
+        totals = {}
+        for strat in ("ar", "asa", "asa16", "ring"):
+            rep = probe_exchange(strat, 8, topo, n)
+            totals[strat] = sim_total(rep)
+            put(f"comm_sim/{model}/{strat}", sim_total(rep), "lower")
+        check(totals["asa"] < totals["ar"], f"{model}: ASA must beat AR")
+        check(totals["asa16"] < totals["asa"], f"{model}: ASA16 must beat ASA")
+
+    # worker scaling + CUDA ablation (alexnet)
+    n_alex = PAPER_COUNTS["alexnet"]
+    for k in (2, 4, 8):
+        rep = probe_exchange("asa", k, mosaic(k), n_alex)
+        put(f"comm_sim/alexnet/asa_k{k}", sim_total(rep), "lower")
+    for aware in (True, False):
+        rep = probe_exchange("asa", 8, copper(1), n_alex, cuda_aware=aware)
+        put(f"comm_sim/alexnet/asa_cuda_aware_{str(aware).lower()}",
+            sim_total(rep), "lower")
+    check(metrics["comm_sim/alexnet/asa_cuda_aware_true"]["value"]
+          < metrics["comm_sim/alexnet/asa_cuda_aware_false"]["value"],
+          "cuda-aware must beat host-staged")
+
+    # chunked overlap (smoke subset: alexnet / asa / m8)
+    mono = probe_exchange("asa", 8, copper(1), n_alex)
+    piped = probe_exchange("asa", 8, copper(1), n_alex, chunks=8, pipeline=True)
+    serial = probe_exchange("asa", 8, copper(1), n_alex, chunks=8, pipeline=False)
+    put("overlap/alexnet/asa/m8/win", sim_total(mono) - sim_total(piped), "higher")
+    put("overlap/alexnet/asa/m8/eff_gbps",
+        piped["wire_bytes"] / sim_total(piped) / 1e9, "higher")
+    put("overlap/alexnet/asa/m8/mono_vs_piped",
+        sim_total(mono) / sim_total(piped), "higher")
+    check(sim_total(piped) < sim_total(mono), "alexnet/asa/m8: piped !< mono")
+    check(sim_total(serial) >= sim_total(mono) - 1e-12,
+          "alexnet/asa/m8: serial chunking must not beat monolithic")
+
+    # full-bench overlap matrix (not in smoke JSON, but the asserts must hold)
+    for model in ("googlenet", "alexnet", "vggnet"):
+        n = PAPER_COUNTS[model]
+        for strat in ("ar", "asa", "asa16", "ring"):
+            m0 = probe_exchange(strat, 8, copper(1), n)
+            for chunks in (8, 32):
+                p = probe_exchange(strat, 8, copper(1), n, chunks=chunks, pipeline=True)
+                s = probe_exchange(strat, 8, copper(1), n, chunks=chunks, pipeline=False)
+                if strat == "ring":
+                    check(sim_total(p) <= sim_total(m0) + 1e-12,
+                          f"{model}/ring/m{chunks}: piped > mono")
+                else:
+                    check(sim_total(p) < sim_total(m0),
+                          f"{model}/{strat}/m{chunks}: piped !< mono")
+                check(sim_total(s) >= sim_total(m0) - 1e-12,
+                      f"{model}/{strat}/m{chunks}: serial beats mono")
+
+    # WFBP sweep
+    for model, batch in (("alexnet", 128), ("vggnet", 32)):
+        table = TABLES[model]
+        backward = paper_backward(model, batch)
+        for topo_name in ("copper", "mosaic"):
+            for k in (4, 8):
+                topo = by_name(topo_name, k)
+                post = probe_wfbp("asa", k, topo, table, backward, overlap=False)
+                wf = probe_wfbp("asa", k, topo, table, backward, overlap=True)
+                tag = f"wfbp/{model}/{topo_name}/k{k}"
+                put(f"{tag}/post_comm", post["comm_visible"], "lower")
+                put(f"{tag}/wfbp_comm", wf["comm_visible"], "lower")
+                put(f"{tag}/overlap_fraction", wf["overlap_fraction"], "higher")
+                check(wf["comm_visible"] < post["comm_visible"],
+                      f"{tag}: wfbp {wf['comm_visible']} !< post {post['comm_visible']}")
+                m0 = probe_exchange("asa", k, topo, sum(p for _, p in table))
+                check(wf["comm_visible"] < sim_total(m0),
+                      f"{tag}: wfbp !< monolithic {sim_total(m0)}")
+                check(0.0 < wf["overlap_fraction"] <= 1.0,
+                      f"{tag}: overlap_fraction {wf['overlap_fraction']}")
+                check(backward <= wf["makespan"] < backward + post["serial_comm"],
+                      f"{tag}: makespan {wf['makespan']} out of band")
+                check(abs(sim_total(wf["comm"]) - wf["comm_visible"]) < 1e-9,
+                      f"{tag}: report total != visible")
+
+    # depth-skew ablation
+    alex = TABLES["alexnet"]
+    backward = paper_backward("alexnet", 128)
+    fc_heavy = probe_wfbp("asa", 8, copper(1), alex, backward, overlap=True)
+    uni = probe_wfbp("asa", 8, copper(1),
+                     uniform_split(sum(p for _, p in alex), len(alex)),
+                     backward, overlap=True)
+    goog = probe_wfbp("asa", 8, copper(1), TABLES["googlenet"],
+                      paper_backward("googlenet", 32), overlap=True)
+    put("wfbp/skew/alexnet_overlap_fraction", fc_heavy["overlap_fraction"], "higher")
+    put("wfbp/skew/uniform_overlap_fraction", uni["overlap_fraction"], "higher")
+    put("wfbp/skew/googlenet_overlap_fraction", goog["overlap_fraction"], "higher")
+    check(fc_heavy["overlap_fraction"] > uni["overlap_fraction"],
+          f"skew: fc-heavy {fc_heavy['overlap_fraction']} !> uniform {uni['overlap_fraction']}")
+
+    # single-bucket degeneracy: wfbp == post == monolithic price
+    one_bucket = probe_wfbp("asa", 8, copper(1), alex, backward, overlap=True,
+                            bucket_elems=1 << 60)
+    mono = probe_exchange("asa", 8, copper(1), sum(p for _, p in alex))
+    check(one_bucket["buckets"] == 1, "single-bucket plan must have 1 bucket")
+    check(abs(one_bucket["comm_visible"] - sim_total(mono)) < 1e-9,
+          f"single bucket: {one_bucket['comm_visible']} != mono {sim_total(mono)}")
+    check(one_bucket["comm_hidden"] < 1e-12, "single bucket hides nothing")
+
+    return metrics, failures
+
+
+def easgd_metrics():
+    """Scenario C of verify_easgd_bands == bench_easgd's sharded sweep."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import verify_easgd_bands as eb
+
+    metrics = {}
+    runs = {}
+    for s in (1, 2, 4):
+        r = eb.simulate("copper", "mpi", k=8, servers=s, elems=1_000_000,
+                        rounds=4, compute_s=2e-3)
+        runs[s] = r
+        metrics[f"easgd/sharded/comm_total/S{s}"] = {
+            "value": r["comm_total"], "better": "lower"}
+        metrics[f"easgd/sharded/queue_p95/S{s}"] = {
+            "value": r["wait_p95"], "better": "lower"}
+        metrics[f"easgd/sharded/shard_busy/S{s}"] = {
+            "value": sum(r["busy_frac"]) / len(r["busy_frac"]), "better": "higher"}
+    metrics["easgd/sharded/comm_speedup_S4_vs_S1"] = {
+        "value": runs[1]["comm_total"] / runs[4]["comm_total"], "better": "higher"}
+    metrics["easgd/sharded/queue_p95_drop_S4_vs_S1"] = {
+        "value": runs[1]["wait_p95"] / runs[4]["wait_p95"], "better": "higher"}
+    ok = runs[4]["comm_total"] < runs[1]["comm_total"] and \
+        runs[4]["wait_p95"] < 0.5 * runs[1]["wait_p95"]
+    return metrics, ([] if ok else ["easgd: S=4 must beat S=1 with p95 collapsing"])
+
+
+def write_baselines(coll, easgd, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    note = ("generated by scripts/verify_wfbp_bands.py --write-baselines; "
+            "values mirror the kernel-free (runtime-less) bench probes")
+    for name, metrics in (("BENCH_collectives.json", coll), ("BENCH_easgd.json", easgd)):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            json.dump({"note": note, "metrics": metrics}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path} ({len(metrics)} metrics)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="regenerate bench/baselines/*.json from this model")
+    ap.add_argument("--baseline-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "bench", "baselines"))
+    args = ap.parse_args()
+
+    coll, failures = collect_metrics()
+    easgd, efail = easgd_metrics()
+    failures += efail
+
+    width = max(len(k) for k in coll)
+    for name in sorted(coll):
+        print(f"{name:{width}s} {coll[name]['value']!r}")
+    for name in sorted(easgd):
+        print(f"{name:{width}s} {easgd[name]['value']!r}")
+
+    if args.write_baselines:
+        write_baselines(coll, easgd, args.baseline_dir)
+
+    print(f"\n{len(coll) + len(easgd)} metrics;", "bands OK" if not failures else "bands FAILED")
+    for f in failures:
+        print(" FAIL", f)
+    return 0 if not failures else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
