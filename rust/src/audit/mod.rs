@@ -1,0 +1,445 @@
+//! Typed charge ledger — the single place virtual time is spent.
+//!
+//! Every correctness bug this repo has shipped was a cost-accounting bug:
+//! a clock advance without a matching `Breakdown` charge, a component
+//! double-charged, or a new field silently missing from a total. The
+//! ledger makes that bug class structural instead of behavioral: engines
+//! (`bsp`, `easgd`, `easgd::shard`) never touch `clock` or `Breakdown`
+//! fields directly — they call [`Ledger::charge`] with a [`ChargeKind`]
+//! and a source tag, and the ledger derives *both* the clock and the
+//! breakdown from the same charge stream, so `breakdown == clock` holds
+//! by construction. `scripts/lint_charges.py` rejects raw clock /
+//! `Breakdown` arithmetic outside this module at CI time.
+//!
+//! Charge-kind taxonomy (what advances the clock):
+//!
+//! | kind            | clock | meaning                                        |
+//! |-----------------|-------|------------------------------------------------|
+//! | `Compute`       | yes   | PJRT train/grad execution (real, measured)     |
+//! | `CommTransfer`  | yes   | simulated wire time of an exchange             |
+//! | `CommKernel`    | yes   | simulated GPU sum/cast kernels in an exchange  |
+//! | `CommQueue`     | yes   | waiting on peers: EASGD shard queue, BSP barrier straggle |
+//! | `HostReduce`    | yes   | host CPU reduction (the AR baseline)           |
+//! | `H2d`           | yes   | simulated H2D staging of input batches         |
+//! | `LoadStall`     | yes   | blocked on the parallel loader                 |
+//! | `Apply`         | yes   | SUBGD `sgd_apply` execution (real, measured)   |
+//! | `CommHidden`    | no    | memo: comm hidden under backward compute       |
+//!
+//! `CommHidden` is the one memo kind: the clock never paid it, so it is
+//! charged through [`Ledger::charge_hidden`], which also records the
+//! serial-comm budget the hidden time must stay under ("hidden time is
+//! bounded by overlapped comm" — [`Ledger::audit`] checks it).
+//!
+//! **Adding a new `ChargeKind`:** add the variant here, map it to a
+//! `Breakdown` field in [`Ledger::slot`] (the exhaustive match makes
+//! forgetting impossible), add the field to `metrics::Breakdown` (its
+//! exhaustive destructuring in `total`/`add`/`components` forces the
+//! totals/printer decision), and extend the taxonomy table above and in
+//! the README.
+//!
+//! Violations are `debug_assert`ed at the charge site in every run
+//! (tests run in debug, so the whole suite exercises them) and recorded
+//! so [`Ledger::audit`] / [`Ledger::finish`] also fail in release-mode
+//! runs that ask.
+
+use crate::metrics::Breakdown;
+
+/// What a charge pays for. See the module-level taxonomy table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChargeKind {
+    Compute,
+    CommTransfer,
+    CommKernel,
+    CommQueue,
+    /// Memo only — never advances the clock; charge via
+    /// [`Ledger::charge_hidden`].
+    CommHidden,
+    HostReduce,
+    H2d,
+    LoadStall,
+    Apply,
+}
+
+impl ChargeKind {
+    /// Does this kind advance the virtual clock? Exhaustive so a new
+    /// kind must decide.
+    pub fn on_clock(self) -> bool {
+        match self {
+            ChargeKind::Compute
+            | ChargeKind::CommTransfer
+            | ChargeKind::CommKernel
+            | ChargeKind::CommQueue
+            | ChargeKind::HostReduce
+            | ChargeKind::H2d
+            | ChargeKind::LoadStall
+            | ChargeKind::Apply => true,
+            ChargeKind::CommHidden => false,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChargeKind::Compute => "compute",
+            ChargeKind::CommTransfer => "comm_transfer",
+            ChargeKind::CommKernel => "comm_kernel",
+            ChargeKind::CommQueue => "comm_queue",
+            ChargeKind::CommHidden => "comm_hidden",
+            ChargeKind::HostReduce => "host_reduce",
+            ChargeKind::H2d => "h2d",
+            ChargeKind::LoadStall => "load_stall",
+            ChargeKind::Apply => "apply",
+        }
+    }
+}
+
+/// Negative-charge tolerance: charges may carry float cancellation noise
+/// (e.g. `new_clock - clock` after a `.max(0.0)` wait split) but never a
+/// genuinely negative duration.
+const NEG_EPS: f64 = 1e-12;
+
+/// A worker's virtual clock and its `Breakdown`, derived from one charge
+/// stream so they cannot disagree.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    clock: f64,
+    bd: Breakdown,
+    /// Serial-comm budget declared alongside hidden-time memos.
+    hidden_budget: f64,
+    /// First recorded violation (also `debug_assert`ed at the site).
+    err: Option<String>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Copy of the derived breakdown.
+    pub fn breakdown(&self) -> Breakdown {
+        self.bd
+    }
+
+    fn note(&mut self, msg: String) {
+        debug_assert!(false, "ledger violation: {msg}");
+        if self.err.is_none() {
+            self.err = Some(msg);
+        }
+    }
+
+    /// The breakdown slot a kind accumulates into. Exhaustive on both
+    /// sides: a new `ChargeKind` or `Breakdown` field fails to compile
+    /// until it is mapped.
+    fn slot(&mut self, kind: ChargeKind) -> &mut f64 {
+        let Breakdown {
+            compute,
+            comm_transfer,
+            comm_kernel,
+            comm_queue,
+            comm_hidden,
+            host_reduce,
+            load_stall,
+            h2d,
+            apply,
+        } = &mut self.bd;
+        match kind {
+            ChargeKind::Compute => compute,
+            ChargeKind::CommTransfer => comm_transfer,
+            ChargeKind::CommKernel => comm_kernel,
+            ChargeKind::CommQueue => comm_queue,
+            ChargeKind::CommHidden => comm_hidden,
+            ChargeKind::HostReduce => host_reduce,
+            ChargeKind::LoadStall => load_stall,
+            ChargeKind::H2d => h2d,
+            ChargeKind::Apply => apply,
+        }
+    }
+
+    /// Charge `secs` of `kind`, advancing the clock when the kind is on
+    /// it. `tag` names the site ("bsp.barrier", "easgd.exchange", …) for
+    /// violation messages.
+    pub fn charge(&mut self, kind: ChargeKind, tag: &'static str, secs: f64) {
+        if !secs.is_finite() || secs < -NEG_EPS {
+            self.note(format!("[{tag}] bad {} charge: {secs}", kind.name()));
+            return;
+        }
+        if kind == ChargeKind::CommHidden {
+            self.note(format!("[{tag}] hidden time must go through charge_hidden"));
+            return;
+        }
+        *self.slot(kind) += secs;
+        self.clock += secs;
+    }
+
+    /// Charge the gap up to an externally reconciled clock (a barrier's
+    /// max, an exchange's completion time) and land on it *exactly* —
+    /// the clock must not drift by re-derived float sums when downstream
+    /// virtual arrivals depend on it bit-for-bit.
+    pub fn advance_to(&mut self, kind: ChargeKind, tag: &'static str, new_clock: f64) {
+        let delta = new_clock - self.clock;
+        if !delta.is_finite() || delta < -NEG_EPS {
+            self.note(format!(
+                "[{tag}] clock would move backwards: {} -> {new_clock}",
+                self.clock
+            ));
+            return;
+        }
+        if kind == ChargeKind::CommHidden {
+            self.note(format!("[{tag}] hidden time must go through charge_hidden"));
+            return;
+        }
+        *self.slot(kind) += delta;
+        self.clock = new_clock;
+    }
+
+    /// Memo `hidden` seconds of comm that overlap already-paid time
+    /// (wait-free backprop). `overlapped_under` is the serial comm the
+    /// hidden time came out of — the audit bound: comm cannot hide more
+    /// time than the exchange would have cost serially.
+    pub fn charge_hidden(&mut self, tag: &'static str, hidden: f64, overlapped_under: f64) {
+        if !hidden.is_finite() || hidden < -NEG_EPS {
+            self.note(format!("[{tag}] bad hidden charge: {hidden}"));
+            return;
+        }
+        if hidden > overlapped_under + NEG_EPS.max(1e-9 * overlapped_under.abs()) {
+            self.note(format!(
+                "[{tag}] hidden {hidden} exceeds its overlap budget {overlapped_under}"
+            ));
+            return;
+        }
+        self.bd.comm_hidden += hidden;
+        self.hidden_budget += overlapped_under;
+    }
+
+    /// Charge one exchange's [`CommReport`](crate::collectives::CommReport),
+    /// overlap-aware: pipelined/wait-free savings (`sim_overlapped`) are
+    /// hidden kernel time first (the usual case — sums/casts under the
+    /// wire), then wire time, then host reduction. The three visible
+    /// charges sum to `sim_total() * scale`, so the clock advances by
+    /// exactly what the strategy priced.
+    pub fn charge_report(
+        &mut self,
+        tag: &'static str,
+        rep: &crate::collectives::CommReport,
+        scale: f64,
+    ) {
+        let k_hidden = rep.sim_overlapped.min(rep.sim_kernel);
+        let t_hidden = (rep.sim_overlapped - k_hidden).min(rep.sim_transfer);
+        let h_hidden = (rep.sim_overlapped - k_hidden - t_hidden).min(rep.sim_host_reduce);
+        self.charge(ChargeKind::CommKernel, tag, (rep.sim_kernel - k_hidden) * scale);
+        self.charge(ChargeKind::CommTransfer, tag, (rep.sim_transfer - t_hidden) * scale);
+        self.charge(ChargeKind::HostReduce, tag, (rep.sim_host_reduce - h_hidden) * scale);
+    }
+
+    /// Check every ledger invariant: breakdown reconciles with the clock,
+    /// no component negative, hidden time within its declared overlap
+    /// budget, and no violation recorded by an earlier charge.
+    pub fn audit(&self) -> Result<(), String> {
+        if let Some(err) = &self.err {
+            return Err(err.clone());
+        }
+        let total = self.bd.total();
+        let tol = 1e-9 * total.abs().max(self.clock.abs()).max(1.0);
+        if (total - self.clock).abs() > tol {
+            return Err(format!("breakdown {total} != clock {}", self.clock));
+        }
+        for (name, v) in self.bd.components() {
+            if !(v >= -NEG_EPS) || !v.is_finite() {
+                return Err(format!("component {name} = {v}"));
+            }
+        }
+        if self.bd.comm_hidden > self.hidden_budget + tol {
+            return Err(format!(
+                "hidden {} exceeds overlapped-comm budget {}",
+                self.bd.comm_hidden, self.hidden_budget
+            ));
+        }
+        Ok(())
+    }
+
+    /// Close the ledger: audit (debug-asserted — every `cargo test` run
+    /// exercises it) and hand back the derived clock and breakdown.
+    pub fn finish(self) -> (f64, Breakdown) {
+        debug_assert!(self.audit().is_ok(), "{:?}", self.audit());
+        (self.clock, self.bd)
+    }
+}
+
+/// A shard server's queue clock: requests serve at
+/// `max(clock, arrival) + handle`, and total occupancy accumulates —
+/// the one self-referential clock update the engines need outside
+/// [`Ledger`], typed so the lint can reject ad-hoc copies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerClock {
+    clock: f64,
+    busy: f64,
+}
+
+impl ServerClock {
+    pub fn new() -> ServerClock {
+        ServerClock::default()
+    }
+
+    /// Serve one request; returns its finish time (the new clock).
+    pub fn serve(&mut self, arrival: f64, handle: f64) -> f64 {
+        debug_assert!(
+            arrival.is_finite() && handle.is_finite() && handle >= 0.0,
+            "bad serve: arrival={arrival} handle={handle}"
+        );
+        self.clock = self.clock.max(arrival) + handle;
+        self.busy += handle;
+        self.clock
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Total handling occupancy — never exceeds the clock when arrivals
+    /// are non-negative.
+    pub fn busy(&self) -> f64 {
+        self.busy
+    }
+
+    pub fn audit(&self) -> Result<(), String> {
+        if self.busy < 0.0 || self.clock < 0.0 {
+            return Err(format!("negative server time: busy={} clock={}", self.busy, self.clock));
+        }
+        if self.busy > self.clock + 1e-9 * self.clock.max(1.0) {
+            return Err(format!("server busy {} exceeds its clock {}", self.busy, self.clock));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CommReport;
+
+    #[test]
+    fn ledger_reconciles_by_construction() {
+        let mut l = Ledger::new();
+        l.charge(ChargeKind::Compute, "t", 1.5);
+        l.charge(ChargeKind::H2d, "t", 0.25);
+        l.charge(ChargeKind::CommTransfer, "t", 0.5);
+        l.charge(ChargeKind::Apply, "t", 0.125);
+        l.audit().unwrap();
+        let (clock, bd) = l.finish();
+        assert!((clock - 2.375).abs() < 1e-12);
+        assert!((bd.total() - clock).abs() < 1e-12);
+        assert!((bd.compute - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_to_lands_exactly() {
+        let mut l = Ledger::new();
+        l.charge(ChargeKind::Compute, "t", 0.1 + 0.2); // 0.30000000000000004
+        let target = 1.0000000000000002f64;
+        l.advance_to(ChargeKind::CommQueue, "t", target);
+        assert_eq!(l.clock().to_bits(), target.to_bits(), "no float drift allowed");
+        l.audit().unwrap();
+        let (_, bd) = l.finish();
+        assert!(bd.comm_queue > 0.69 && bd.comm_queue < 0.71);
+    }
+
+    #[test]
+    fn hidden_is_memo_and_budget_bounded() {
+        let mut l = Ledger::new();
+        l.charge(ChargeKind::CommTransfer, "t", 0.2);
+        l.charge_hidden("t", 0.5, 0.8);
+        assert!((l.clock() - 0.2).abs() < 1e-12, "hidden must not advance the clock");
+        let bd = l.breakdown();
+        assert!((bd.comm_hidden - 0.5).abs() < 1e-12);
+        assert!((bd.total() - 0.2).abs() < 1e-12, "memo stays out of total()");
+        l.audit().unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
+    fn hidden_beyond_budget_is_a_violation() {
+        let mut l = Ledger::new();
+        l.charge_hidden("t", 1.0, 0.5);
+        // release builds record instead of panicking
+        assert!(l.audit().is_err());
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
+    fn negative_charge_is_a_violation() {
+        let mut l = Ledger::new();
+        l.charge(ChargeKind::Compute, "t", -0.5);
+        assert!(l.audit().is_err());
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
+    fn clock_cannot_move_backwards() {
+        let mut l = Ledger::new();
+        l.charge(ChargeKind::Compute, "t", 1.0);
+        l.advance_to(ChargeKind::CommQueue, "t", 0.5);
+        assert!(l.audit().is_err());
+    }
+
+    #[test]
+    fn charge_report_advances_clock_by_sim_total() {
+        let rep = CommReport {
+            sim_transfer: 0.9,
+            sim_kernel: 0.05,
+            sim_host_reduce: 0.3,
+            sim_overlapped: 0.1,
+            ..Default::default()
+        };
+        let mut l = Ledger::new();
+        l.charge_report("t", &rep, 2.0);
+        let want = rep.sim_total() * 2.0;
+        assert!((l.clock() - want).abs() < 1e-12 * want.max(1.0), "{} vs {want}", l.clock());
+        let bd = l.breakdown();
+        // overlap hides kernel time first: 0.05 kernel fully hidden, the
+        // remaining 0.05 of overlap comes off the wire
+        assert!((bd.comm_kernel - 0.0).abs() < 1e-12);
+        assert!((bd.comm_transfer - (0.9 - 0.05) * 2.0).abs() < 1e-12);
+        assert!((bd.host_reduce - 0.6).abs() < 1e-12);
+        l.audit().unwrap();
+    }
+
+    #[test]
+    fn every_kind_maps_to_a_distinct_slot() {
+        let kinds = [
+            ChargeKind::Compute,
+            ChargeKind::CommTransfer,
+            ChargeKind::CommKernel,
+            ChargeKind::CommQueue,
+            ChargeKind::HostReduce,
+            ChargeKind::H2d,
+            ChargeKind::LoadStall,
+            ChargeKind::Apply,
+        ];
+        let mut l = Ledger::new();
+        for (i, k) in kinds.iter().enumerate() {
+            assert!(k.on_clock());
+            l.charge(*k, "t", (i + 1) as f64);
+        }
+        assert!(!ChargeKind::CommHidden.on_clock());
+        let (clock, bd) = l.finish();
+        assert!((clock - 36.0).abs() < 1e-12);
+        let named: Vec<f64> = bd.components().iter().map(|&(_, v)| v).collect();
+        // 8 on-clock slots hold 1..=8, comm_hidden stays 0
+        let mut nonzero: Vec<f64> = named.iter().copied().filter(|v| *v > 0.0).collect();
+        nonzero.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(nonzero, (1..=8).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn server_clock_queues_and_audits() {
+        let mut q = ServerClock::new();
+        assert_eq!(q.serve(1.0, 0.5), 1.5);
+        assert_eq!(q.serve(1.0, 0.5), 2.0, "busy server queues the second request");
+        assert_eq!(q.serve(10.0, 0.25), 10.25, "idle server waits for the arrival");
+        assert!((q.busy() - 1.25).abs() < 1e-12);
+        q.audit().unwrap();
+    }
+}

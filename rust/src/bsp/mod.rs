@@ -23,6 +23,7 @@ use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::audit::{ChargeKind, Ledger};
 use crate::cluster::Topology;
 use crate::collectives::{
     wfbp, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan,
@@ -348,8 +349,10 @@ fn worker_main(
 ) -> Result<BspReport> {
     let mut params = (**init).clone();
     let mut momentum = vec![0.0f32; params.len()];
-    let mut clock = 0.0f64;
-    let mut bd = Breakdown::default();
+    // every virtual-time charge goes through the ledger, which derives the
+    // clock and the Breakdown from one stream (breakdown==clock by
+    // construction; see rust/src/audit)
+    let mut led = Ledger::new();
     let mut comm_total = CommReport::default();
     let mut serial_comm = 0.0f64; // what post-backward pricing would charge
     let mut curve = Vec::new();
@@ -410,9 +413,8 @@ fn worker_main(
 
         // --- load ------------------------------------------------------------
         let (x, y, load_stall, h2d) = next_batch(&mut data, cfg, rank, iter, &mut rng)?;
-        clock += load_stall + h2d;
-        bd.load_stall += load_stall;
-        bd.h2d += h2d;
+        led.charge(ChargeKind::LoadStall, "bsp.load", load_stall);
+        led.charge(ChargeKind::H2d, "bsp.h2d", h2d);
 
         // --- compute -----------------------------------------------------------
         match cfg.scheme {
@@ -432,11 +434,13 @@ fn worker_main(
                 params = outs.next().unwrap().into_f32()?;
                 momentum = outs.next().unwrap().into_f32()?;
                 last_loss = outs.next().unwrap().scalar()? as f64;
-                clock += res.exec_time;
-                bd.compute += res.exec_time;
+                led.charge(ChargeKind::Compute, "bsp.train", res.exec_time);
 
                 // --- barrier + exchange (average weights) ----------------------
-                clock = comm.barrier(clock);
+                // straggle (the gap to the superstep's slowest rank) is peer
+                // waiting: charged to comm_queue so breakdown==clock at k>1
+                let reconciled = comm.barrier(led.clock());
+                led.advance_to(ChargeKind::CommQueue, "bsp.barrier", reconciled);
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
                     topo,
@@ -446,16 +450,13 @@ fn worker_main(
                     chunk_elems: 0,
                 };
                 let rep = strategy.exchange(&mut params, ReduceOp::Mean, &mut ctx)?;
-                let mut t_comm = rep.sim_total() * comm_scale;
-                accumulate(&mut comm_total, &rep);
+                led.charge_report("bsp.exchange", &rep, comm_scale);
+                comm_total.absorb(&rep);
                 if cfg.exchange_momentum {
                     let rep2 = strategy.exchange(&mut momentum, ReduceOp::Mean, &mut ctx)?;
-                    t_comm += rep2.sim_total() * comm_scale;
-                    charge_comm(&mut bd, &rep2, comm_scale);
-                    accumulate(&mut comm_total, &rep2);
+                    led.charge_report("bsp.exchange_momentum", &rep2, comm_scale);
+                    comm_total.absorb(&rep2);
                 }
-                clock += t_comm;
-                charge_comm(&mut bd, &rep, comm_scale);
             }
             Scheme::Subgd => {
                 let res = rt.exec(
@@ -465,11 +466,11 @@ fn worker_main(
                 let mut outs = res.outputs.into_iter();
                 let mut grads = outs.next().unwrap().into_f32()?;
                 last_loss = outs.next().unwrap().scalar()? as f64;
-                clock += res.exec_time;
-                bd.compute += res.exec_time;
+                led.charge(ChargeKind::Compute, "bsp.grad", res.exec_time);
 
                 // --- barrier + exchange (sum gradients) ------------------------
-                clock = comm.barrier(clock);
+                let reconciled = comm.barrier(led.clock());
+                led.advance_to(ChargeKind::CommQueue, "bsp.barrier", reconciled);
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
                     topo,
@@ -496,18 +497,20 @@ fn worker_main(
                             comm_scale,
                             cfg.overlap == OverlapMode::Wfbp,
                         )?;
-                        clock += out.comm_visible;
-                        bd.comm_hidden += out.comm_hidden;
+                        // out.comm.sim_total() == out.comm_visible, so the
+                        // ledger's clock pays exactly the visible time; the
+                        // hidden share is memo'd against the serial cost it
+                        // came out of
+                        led.charge_report("bsp.wfbp", &out.comm, 1.0); // already scaled
+                        led.charge_hidden("bsp.wfbp", out.comm_hidden, out.serial_comm);
                         serial_comm += out.serial_comm;
-                        charge_comm(&mut bd, &out.comm, 1.0); // already scaled
-                        accumulate(&mut comm_total, &out.comm);
+                        comm_total.absorb(&out.comm);
                     }
                     None => {
                         let rep = strategy.exchange(&mut grads, ReduceOp::Sum, &mut ctx)?;
-                        clock += rep.sim_total() * comm_scale;
+                        led.charge_report("bsp.exchange", &rep, comm_scale);
                         serial_comm += rep.sim_total() * comm_scale;
-                        charge_comm(&mut bd, &rep, comm_scale);
-                        accumulate(&mut comm_total, &rep);
+                        comm_total.absorb(&rep);
                     }
                 }
 
@@ -529,8 +532,7 @@ fn worker_main(
                 let mut outs = apply.outputs.into_iter();
                 params = outs.next().unwrap().into_f32()?;
                 momentum = outs.next().unwrap().into_f32()?;
-                clock += apply.exec_time;
-                bd.apply += apply.exec_time;
+                led.charge(ChargeKind::Apply, "bsp.apply", apply.exec_time);
             }
         }
 
@@ -544,18 +546,33 @@ fn worker_main(
         {
             let (ex, ey) = eval_data.as_ref().unwrap();
             let val_err = run_eval(rt, &arts.eval, &params, ex, ey, info)?;
-            curve.push(EvalPoint { iter: iter + 1, vtime: clock, train_loss: last_loss, val_err });
+            curve.push(EvalPoint {
+                iter: iter + 1,
+                vtime: led.clock(),
+                train_loss: last_loss,
+                val_err,
+            });
         }
     }
 
-    // final clock reconciliation
-    clock = comm.barrier(clock);
+    // final clock reconciliation (straggle is peer waiting, like any barrier)
+    let reconciled = comm.barrier(led.clock());
+    led.advance_to(ChargeKind::CommQueue, "bsp.final_barrier", reconciled);
     if let WorkerData::Images { loader: Some(ref mut l), .. } = data {
-        bd.load_stall = l.stall_time;
+        // the per-iteration stall charges already cover the loader's total
+        // (each ready() call accounts its own wait); the child can only
+        // accrue more stall time after the last collect, never less
+        debug_assert!(
+            l.stall_time >= led.breakdown().load_stall - 1e-9,
+            "loader stall accounting regressed: {} < {}",
+            l.stall_time,
+            led.breakdown().load_stall
+        );
         l.stop();
     }
 
     let final_val_err = curve.last().map(|p| p.val_err).unwrap_or(f64::NAN);
+    let (clock, bd) = led.finish();
     let overlap_fraction = if serial_comm > 0.0 {
         bd.comm_hidden / serial_comm
     } else {
@@ -574,33 +591,6 @@ fn worker_main(
         final_train_loss: last_loss,
         final_val_err,
     })
-}
-
-/// Charge one exchange to the breakdown, overlap-aware: pipelined/wait-free
-/// time is hidden kernel time first (the usual case — sums/casts under the
-/// wire), then wire time, then host reduction (WFBP can hide any of the
-/// three under backward compute). Host reduction (the AR baseline) charges
-/// as transfer-side comm so `Breakdown::total()` reconciles with the clock
-/// advance of `sim_total()`.
-fn charge_comm(bd: &mut Breakdown, rep: &CommReport, scale: f64) {
-    let k_hidden = rep.sim_overlapped.min(rep.sim_kernel);
-    let t_hidden = (rep.sim_overlapped - k_hidden).min(rep.sim_transfer);
-    let h_hidden = (rep.sim_overlapped - k_hidden - t_hidden).min(rep.sim_host_reduce);
-    bd.comm_transfer += (rep.sim_transfer - t_hidden + rep.sim_host_reduce - h_hidden) * scale;
-    bd.comm_kernel += (rep.sim_kernel - k_hidden) * scale;
-}
-
-fn accumulate(total: &mut CommReport, rep: &CommReport) {
-    total.strategy = rep.strategy.clone();
-    total.wire_bytes += rep.wire_bytes;
-    total.sim_transfer += rep.sim_transfer;
-    total.sim_latency += rep.sim_latency;
-    total.sim_kernel += rep.sim_kernel;
-    total.sim_host_reduce += rep.sim_host_reduce;
-    total.sim_overlapped += rep.sim_overlapped;
-    total.real_kernel += rep.real_kernel;
-    total.phases += rep.phases;
-    total.chunks += rep.chunks;
 }
 
 /// Produce the next (x, y) batch + (stall, h2d) charges.

@@ -72,8 +72,9 @@ pub struct ExchangeCtx<'a, 'k> {
 }
 
 /// Per-exchange accounting (one rank's view; identical across ranks since
-/// the simulated phases are global).
-#[derive(Clone, Debug, Default)]
+/// the simulated phases are global). `PartialEq` is bit-level — the race
+/// explorer asserts reports identical across delivery schedules.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommReport {
     pub strategy: String,
     /// Bytes this rank moved (sent) across all phases.
@@ -134,20 +135,67 @@ impl CommReport {
     /// Accumulate a sub-exchange's accounting into this report — used by
     /// the chunked scheduler (per chunk) and the hierarchical strategy
     /// (leader-level sub-report). `strategy`, `chunks` and `legs` are the
-    /// caller's to manage.
+    /// caller's to manage. Exhaustive destructuring: a new field must be
+    /// either accumulated or explicitly left to the caller here.
     pub fn merge(&mut self, sub: &CommReport) {
-        self.wire_bytes += sub.wire_bytes;
-        self.wire_intra_bytes += sub.wire_intra_bytes;
-        self.wire_inter_bytes += sub.wire_inter_bytes;
-        self.sim_transfer += sub.sim_transfer;
-        self.sim_latency += sub.sim_latency;
-        self.sim_kernel += sub.sim_kernel;
-        self.sim_host_reduce += sub.sim_host_reduce;
-        self.sim_overlapped += sub.sim_overlapped;
-        self.sim_intra += sub.sim_intra;
-        self.sim_inter += sub.sim_inter;
-        self.real_kernel += sub.real_kernel;
-        self.phases += sub.phases;
+        let CommReport {
+            strategy: _, // caller's to manage
+            wire_bytes,
+            sim_transfer,
+            sim_latency,
+            sim_kernel,
+            sim_host_reduce,
+            sim_overlapped,
+            real_kernel,
+            phases,
+            chunks: _, // caller's to manage
+            wire_intra_bytes,
+            wire_inter_bytes,
+            sim_intra,
+            sim_inter,
+            legs: _, // caller's to manage
+        } = sub;
+        self.wire_bytes += wire_bytes;
+        self.wire_intra_bytes += wire_intra_bytes;
+        self.wire_inter_bytes += wire_inter_bytes;
+        self.sim_transfer += sim_transfer;
+        self.sim_latency += sim_latency;
+        self.sim_kernel += sim_kernel;
+        self.sim_host_reduce += sim_host_reduce;
+        self.sim_overlapped += sim_overlapped;
+        self.sim_intra += sim_intra;
+        self.sim_inter += sim_inter;
+        self.real_kernel += real_kernel;
+        self.phases += phases;
+    }
+
+    /// Accumulate a whole exchange's report into a per-run aggregate (the
+    /// BSP `comm` total): [`merge`](Self::merge) plus the per-exchange
+    /// fields merge leaves to the caller — `chunks` sum, `strategy` takes
+    /// the latest name, `legs` (a single exchange's wire shape) stay
+    /// untouched. This replaces the old ad-hoc accumulator in `bsp`, which
+    /// silently dropped the intra/inter byte and time splits.
+    pub fn absorb(&mut self, sub: &CommReport) {
+        let CommReport {
+            strategy,
+            wire_bytes: _, // summed by merge()
+            sim_transfer: _,
+            sim_latency: _,
+            sim_kernel: _,
+            sim_host_reduce: _,
+            sim_overlapped: _,
+            real_kernel: _,
+            phases: _,
+            chunks,
+            wire_intra_bytes: _,
+            wire_inter_bytes: _,
+            sim_intra: _,
+            sim_inter: _,
+            legs: _, // one exchange's wire shape: meaningless to sum
+        } = sub;
+        self.merge(sub);
+        self.strategy = strategy.clone();
+        self.chunks += chunks;
     }
 
     /// Scale every simulated time and byte count by `s` — how probe-sized
@@ -454,6 +502,34 @@ mod tests {
         assert!((rep.sim_inter - 0.6).abs() < 1e-12);
         assert!((rep.sim_overlapped - 0.1).abs() < 1e-12);
         assert!(rep.legs.is_empty(), "merge leaves legs to the caller");
+    }
+
+    #[test]
+    fn absorb_keeps_intra_inter_split_and_sums_chunks() {
+        let sub = CommReport {
+            strategy: "hier:ring".into(),
+            wire_bytes: 10,
+            wire_intra_bytes: 6,
+            wire_inter_bytes: 4,
+            sim_transfer: 1.0,
+            sim_intra: 0.7,
+            sim_inter: 0.3,
+            phases: 2,
+            chunks: 4,
+            ..Default::default()
+        };
+        let mut agg = CommReport::default();
+        agg.absorb(&sub);
+        agg.absorb(&sub);
+        assert_eq!(agg.strategy, "hier:ring");
+        assert_eq!(agg.chunks, 8, "absorb sums chunks (merge leaves them)");
+        // the regression absorb() exists for: the per-run aggregate must
+        // keep the intra/inter byte and time splits
+        assert_eq!(agg.wire_intra_bytes, 12);
+        assert_eq!(agg.wire_inter_bytes, 8);
+        assert!((agg.sim_intra - 1.4).abs() < 1e-12);
+        assert!((agg.sim_inter - 0.6).abs() < 1e-12);
+        assert_eq!(agg.phases, 4);
     }
 
     #[test]

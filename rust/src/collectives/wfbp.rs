@@ -252,8 +252,9 @@ impl WfbpPlan {
 }
 
 /// Everything one wait-free exchange reports. All times are in the final
-/// (comm-scaled) virtual-clock domain.
-#[derive(Clone, Debug, Default)]
+/// (comm-scaled) virtual-clock domain. `PartialEq` is bit-level, for the
+/// race explorer's schedule-independence asserts.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WfbpOutcome {
     /// Merged per-bucket accounting; `sim_total()` equals `comm_visible`.
     pub comm: CommReport,

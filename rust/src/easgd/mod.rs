@@ -424,8 +424,9 @@ fn worker_main(
 ) -> Result<WorkerOut> {
     let mut params = (**init).clone();
     let mut momentum = vec![0.0f32; params.len()];
-    let mut clock = 0.0f64;
-    let mut bd = Breakdown::default();
+    // all virtual-time charges go through the ledger (breakdown==clock by
+    // construction; see rust/src/audit)
+    let mut led = crate::audit::Ledger::new();
     let mut comm_time = 0.0;
     let mut exchanges = 0usize;
     let mut curve = Vec::new();
@@ -461,8 +462,7 @@ fn worker_main(
         let mut outs = res.outputs.into_iter();
         params = outs.next().unwrap().into_f32()?;
         momentum = outs.next().unwrap().into_f32()?;
-        clock += res.exec_time;
-        bd.compute += res.exec_time;
+        led.charge(crate::audit::ChargeKind::Compute, "easgd.train", res.exec_time);
 
         // elastic exchange every τ iterations: push/pull all S slices
         // concurrently (asa16-family wire formats really round-trip w and
@@ -478,12 +478,14 @@ fn worker_main(
                 half,
                 alpha,
                 &mut params,
-                clock,
+                led.clock(),
             )?;
-            clock = t.new_clock;
+            // queue wait first, then advance_to lands the clock on the
+            // exchange's completion time *exactly* — downstream virtual
+            // arrivals (and their tie-breaks) depend on it bit-for-bit
+            led.charge(crate::audit::ChargeKind::CommQueue, "easgd.queue", t.queue_wait);
+            led.advance_to(crate::audit::ChargeKind::CommTransfer, "easgd.exchange", t.new_clock);
             comm_time += t.t_comm;
-            bd.comm_transfer += t.t_comm - t.queue_wait;
-            bd.comm_queue += t.queue_wait;
             queue_waits.push(t.queue_wait);
             exchanges += 1;
         }
@@ -495,14 +497,15 @@ fn worker_main(
                 vec![HostTensor::f32(vec![params.len()], params.clone()), ex.clone(), ey.clone()],
             )?;
             let correct = r.outputs[1].scalar_i32()? as f64;
-            curve.push((iter + 1, clock, 1.0 - correct / info.eval_batch as f64));
+            curve.push((iter + 1, led.clock(), 1.0 - correct / info.eval_batch as f64));
         }
     }
 
     // tell every shard server we're done
     for j in 0..plan.servers {
-        comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), clock)?;
+        comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), led.clock())?;
     }
+    let (clock, bd) = led.finish();
     Ok(WorkerOut { clock, comm_time, exchanges, breakdown: bd, curve, queue_waits })
 }
 

@@ -163,22 +163,17 @@ pub struct ExchangeTiming {
     pub queue_wait: f64,
 }
 
-/// Push all S slices of `params`, pull the S center slices back, apply
-/// the elastic update in place, and price the exchange at the max over
-/// slice round-trips. The round-robin start offset only staggers the
-/// *real* channel copies; virtual arrival times carry the send clock, so
-/// the priced queueing is independent of the physical send order.
-#[allow(clippy::too_many_arguments)]
-pub fn worker_exchange(
+/// First half of [`worker_exchange`]: send all S slice pushes without
+/// blocking. Public (with [`worker_collect`]) so the race explorer can
+/// interpose a delivery-schedule gate between the sends and the replies.
+pub fn worker_push(
     comm: &mut Comm,
     rank: usize,
     plan: &ShardPlan,
-    prices: &ShardPrices,
     half: bool,
-    alpha: f32,
-    params: &mut [f32],
+    params: &[f32],
     clock: f64,
-) -> Result<ExchangeTiming> {
+) -> Result<()> {
     let s = plan.servers;
     for i in 0..s {
         let j = (rank + i) % s;
@@ -193,6 +188,23 @@ pub fn worker_exchange(
         };
         comm.send(plan.server_rank(j), tags::EASGD_PUSH, payload, clock)?;
     }
+    Ok(())
+}
+
+/// Second half of [`worker_exchange`]: receive every shard's center reply,
+/// apply the elastic update in place, and price the exchange at the max
+/// over slice round-trips.
+#[allow(clippy::too_many_arguments)]
+pub fn worker_collect(
+    comm: &mut Comm,
+    rank: usize,
+    plan: &ShardPlan,
+    prices: &ShardPrices,
+    alpha: f32,
+    params: &mut [f32],
+    clock: f64,
+) -> Result<ExchangeTiming> {
+    let s = plan.servers;
     let mut new_clock = clock;
     let mut queue_wait = 0.0;
     for j in 0..s {
@@ -220,6 +232,26 @@ pub fn worker_exchange(
     Ok(ExchangeTiming { new_clock, t_comm: new_clock - clock, queue_wait })
 }
 
+/// Push all S slices of `params`, pull the S center slices back, apply
+/// the elastic update in place, and price the exchange at the max over
+/// slice round-trips. The round-robin start offset only staggers the
+/// *real* channel copies; virtual arrival times carry the send clock, so
+/// the priced queueing is independent of the physical send order.
+#[allow(clippy::too_many_arguments)]
+pub fn worker_exchange(
+    comm: &mut Comm,
+    rank: usize,
+    plan: &ShardPlan,
+    prices: &ShardPrices,
+    half: bool,
+    alpha: f32,
+    params: &mut [f32],
+    clock: f64,
+) -> Result<ExchangeTiming> {
+    worker_push(comm, rank, plan, half, params, clock)?;
+    worker_collect(comm, rank, plan, prices, alpha, params, clock)
+}
+
 /// Serve one shard until every worker has sent its stop control. See the
 /// module docs for the conservative arrival-ordered queue discipline.
 pub fn server_shard_main(
@@ -231,8 +263,9 @@ pub fn server_shard_main(
     mut center: Vec<f32>,
 ) -> Result<ServerOut> {
     let k = plan.workers;
-    let mut shard_clock = 0.0f64;
-    let mut busy = 0.0f64;
+    // the typed serve-queue clock: max(clock, arrival) + handle per push,
+    // with occupancy tracked for the busy-fraction report
+    let mut queue = crate::audit::ServerClock::new();
     let mut served = Vec::new();
     // one pending push per worker (workers block on their replies, so at
     // most one is outstanding), plus the liveness bound per worker
@@ -294,10 +327,8 @@ pub fn server_shard_main(
             _ => return Err(anyhow!("unexpected payload at shard server")),
         };
         // queueing: handling starts when both shard and message are ready
-        let handle = prices.handle[shard][w];
-        shard_clock = shard_clock.max(arrival) + handle;
-        busy += handle;
-        last_finish[w] = shard_clock;
+        let finish = queue.serve(arrival, prices.handle[shard][w]);
+        last_finish[w] = finish;
         // reply with the center as seen by this worker (pre-update)
         let reply = if half {
             let mut bits = Vec::new();
@@ -306,13 +337,14 @@ pub fn server_shard_main(
         } else {
             Payload::F32(center.clone())
         };
-        comm.send(w, tags::EASGD_PULL, reply, shard_clock)?;
+        comm.send(w, tags::EASGD_PULL, reply, finish)?;
         for (c, wi) in center.iter_mut().zip(&wvals) {
             *c += alpha * (wi - *c);
         }
         served.push(w);
     }
-    Ok(ServerOut { shard, center, served, busy, clock_end: shard_clock })
+    debug_assert!(queue.audit().is_ok(), "{:?}", queue.audit());
+    Ok(ServerOut { shard, center, served, busy: queue.busy(), clock_end: queue.clock() })
 }
 
 /// Aggregate result of a [`measure_sharded`] probe.
@@ -332,6 +364,11 @@ pub struct ShardProbe {
     pub served: Vec<Vec<usize>>,
     /// Final worker parameter vectors in rank order.
     pub final_params: Vec<Vec<f32>>,
+    /// Per-worker virtual clocks in rank order (ledger-derived).
+    pub worker_clocks: Vec<f64>,
+    /// Per-worker time decompositions in rank order — each reconciles with
+    /// its `worker_clocks` entry by construction (`audit::Ledger`).
+    pub breakdowns: Vec<crate::metrics::Breakdown>,
     /// Max worker clock.
     pub vtime: f64,
 }
@@ -368,7 +405,13 @@ pub fn measure_sharded(
     let alpha = cfg.alpha as f32;
 
     enum Out {
-        Worker { comm_time: f64, waits: Vec<f64>, clock: f64, params: Vec<f32> },
+        Worker {
+            comm_time: f64,
+            waits: Vec<f64>,
+            clock: f64,
+            breakdown: crate::metrics::Breakdown,
+            params: Vec<f32>,
+        },
         Server(ServerOut),
     }
 
@@ -386,23 +429,41 @@ pub fn measure_sharded(
                 let out = server_shard_main(&mut comm, &plan, shard, &prices, alpha, init)?;
                 Ok(Out::Server(out))
             } else {
+                use crate::audit::{ChargeKind, Ledger};
                 let mut params = probe_params(rank, elems);
-                let mut clock = 0.0f64;
+                let mut led = Ledger::new();
                 let mut comm_time = 0.0f64;
                 let mut waits = Vec::with_capacity(rounds);
                 for _ in 0..rounds {
-                    clock += compute_s;
+                    led.charge(ChargeKind::Compute, "probe.compute", compute_s);
                     let t = worker_exchange(
-                        &mut comm, rank, &plan, &prices, half, alpha, &mut params, clock,
+                        &mut comm,
+                        rank,
+                        &plan,
+                        &prices,
+                        half,
+                        alpha,
+                        &mut params,
+                        led.clock(),
                     )?;
-                    clock = t.new_clock;
+                    // queue wait split out, then land exactly on the priced
+                    // completion time (virtual arrivals downstream are
+                    // bit-sensitive to this clock)
+                    led.charge(ChargeKind::CommQueue, "probe.queue", t.queue_wait);
+                    led.advance_to(ChargeKind::CommTransfer, "probe.exchange", t.new_clock);
                     comm_time += t.t_comm;
                     waits.push(t.queue_wait);
                 }
                 for j in 0..plan.servers {
-                    comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), clock)?;
+                    comm.send(
+                        plan.server_rank(j),
+                        tags::CTL,
+                        Payload::Ctl("stop".into()),
+                        led.clock(),
+                    )?;
                 }
-                Ok(Out::Worker { comm_time, waits, clock, params })
+                let (clock, breakdown) = led.finish();
+                Ok(Out::Worker { comm_time, waits, clock, breakdown, params })
             }
         }));
     }
@@ -416,11 +477,13 @@ pub fn measure_sharded(
     let mut exchanges = 0usize;
     for h in handles {
         match h.join().map_err(|_| anyhow!("sharded probe thread panicked"))?? {
-            Out::Worker { comm_time, waits, clock, params } => {
+            Out::Worker { comm_time, waits, clock, breakdown, params } => {
                 probe.comm_total += comm_time;
                 exchanges += waits.len();
                 probe.queue_waits.extend(waits);
                 probe.vtime = probe.vtime.max(clock);
+                probe.worker_clocks.push(clock);
+                probe.breakdowns.push(breakdown);
                 probe.final_params.push(params);
             }
             Out::Server(s) => {

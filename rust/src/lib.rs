@@ -104,7 +104,30 @@
 //! Monolithic (unchunked) `hier` loses to flat ring; the composition is
 //! the point. Select with `exchange = "hier:asa16"` / `--exchange
 //! hier:ring` plus `--chunk-kib`.
+//!
+//! ## Charge-conservation audit (`audit::Ledger`)
+//!
+//! Every correctness bug this repo has shipped was a cost-accounting bug,
+//! so virtual time is now spent through exactly one API: engines call
+//! [`audit::Ledger::charge`] with an [`audit::ChargeKind`] (compute,
+//! comm_transfer, comm_kernel, comm_queue, comm_hidden, host_reduce, h2d,
+//! load_stall, apply) and a source tag, and the ledger derives both the
+//! clock and [`metrics::Breakdown`] from the same charge stream —
+//! `breakdown == clock` holds by construction, barrier straggle included
+//! (charged to `comm_queue`). [`audit::Ledger::audit`] additionally checks
+//! sign/monotonicity and that WFBP's hidden time stays within the serial
+//! comm it was hidden under; it is debug-asserted in every run and
+//! hard-asserted in tests. `Breakdown` totals/merge/printers are generated
+//! by exhaustive destructuring, so a new field cannot be silently omitted,
+//! and `scripts/lint_charges.py` (CI `lint` job) rejects raw arithmetic on
+//! clock/`Breakdown`/`CommReport` time fields outside `audit::` — see the
+//! README for the taxonomy table, the recipe for adding a `ChargeKind`,
+//! and the lint-waiver policy. `tests/race_explorer.rs` closes the loop on
+//! the DES side: it drives the sharded-EASGD queue and the WFBP flow shop
+//! through exhaustive delivery schedules and real-time perturbations,
+//! asserting bit-identical centers/params/reports for each.
 
+pub mod audit;
 pub mod bsp;
 pub mod cluster;
 pub mod collectives;

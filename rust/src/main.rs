@@ -166,14 +166,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         "done: vtime={:.2}s throughput={:.1} ex/s final_loss={:.4} final_val_err={:.3}",
         rep.vtime_total, rep.throughput, rep.final_train_loss, rep.final_val_err
     );
+    // components() enumerates every Breakdown field exhaustively, so a new
+    // charge kind shows up here without touching the printer
+    let comps = rep
+        .breakdown
+        .components()
+        .iter()
+        .filter(|&&(name, v)| v > 0.0 && name != "comm_hidden")
+        .map(|&(name, v)| format!("{name}={v:.2}s"))
+        .collect::<Vec<_>>()
+        .join(" ");
     println!(
-        "breakdown: compute={:.2}s comm={:.2}s (kernel {:.1}%) stall={:.2}s h2d={:.2}s apply={:.2}s",
-        rep.breakdown.compute,
+        "breakdown: {comps} | comm={:.2}s (kernel {:.1}%)",
         rep.breakdown.comm(),
-        rep.breakdown.kernel_share_of_comm() * 100.0,
-        rep.breakdown.load_stall,
-        rep.breakdown.h2d,
-        rep.breakdown.apply
+        rep.breakdown.kernel_share_of_comm() * 100.0
     );
     if cfg.overlap.bucketed() {
         println!(

@@ -8,23 +8,32 @@
 use std::time::Instant;
 
 /// Per-worker virtual-time decomposition of a run (seconds).
+///
+/// Fields are only ever charged through [`audit::Ledger`](crate::audit::Ledger)
+/// (enforced by `scripts/lint_charges.py`), and every aggregate here —
+/// [`comm`](Self::comm), [`total`](Self::total), [`add`](Self::add),
+/// [`components`](Self::components) — destructures the struct exhaustively,
+/// so adding a field without deciding where it belongs fails to compile.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Breakdown {
     /// PJRT execution of train/grad steps (real, measured).
     pub compute: f64,
-    /// Simulated wire time of parameter exchange (incl. host reduction on
-    /// the AR baseline and EASGD server handling).
+    /// Simulated wire time of parameter exchange (incl. EASGD server
+    /// handling).
     pub comm_transfer: f64,
     /// Simulated GPU kernel time inside exchange (sum / cast).
     pub comm_kernel: f64,
-    /// EASGD: time exchanges sat in a shard server's queue beyond their
-    /// own wire + handling (the contention sharded servers collapse).
+    /// Time spent waiting on peers: EASGD shard-queue waits beyond an
+    /// exchange's own wire + handling, and BSP barrier straggle.
     pub comm_queue: f64,
     /// Exchange time hidden under the backward pass by wait-free backprop
     /// (`overlap = "wfbp"`). Memo only: the clock never paid it, so it is
     /// *not* part of [`comm`](Self::comm) or [`total`](Self::total) —
     /// `comm + comm_hidden` is what the post-backward path would have cost.
     pub comm_hidden: f64,
+    /// Simulated host CPU reduction time (the AR baseline's butterfly
+    /// summation rounds).
+    pub host_reduce: f64,
     /// Time blocked waiting for the parallel loader (overlap miss).
     pub load_stall: f64,
     /// Simulated H2D staging of input batches (the direct loader path;
@@ -35,25 +44,88 @@ pub struct Breakdown {
 }
 
 impl Breakdown {
+    /// Everything exchange-related the clock paid: wire, kernels, peer
+    /// waits, and host reduction.
     pub fn comm(&self) -> f64 {
-        self.comm_transfer + self.comm_kernel + self.comm_queue
+        let Breakdown {
+            compute: _,
+            comm_transfer,
+            comm_kernel,
+            comm_queue,
+            comm_hidden: _, // memo: the clock never paid it
+            host_reduce,
+            load_stall: _,
+            h2d: _,
+            apply: _,
+        } = *self;
+        comm_transfer + comm_kernel + comm_queue + host_reduce
     }
 
-    /// Sum of every component — reconciles with the virtual clock (exactly
-    /// for a single worker; a lower bound under barrier straggling).
+    /// Sum of every component — reconciles with the virtual clock exactly
+    /// (barrier straggle is charged to `comm_queue` by the ledger).
     pub fn total(&self) -> f64 {
-        self.compute + self.comm() + self.load_stall + self.h2d + self.apply
+        let Breakdown {
+            compute,
+            comm_transfer: _, // via comm()
+            comm_kernel: _,
+            comm_queue: _,
+            comm_hidden: _, // memo: the clock never paid it
+            host_reduce: _,
+            load_stall,
+            h2d,
+            apply,
+        } = *self;
+        compute + self.comm() + load_stall + h2d + apply
     }
 
     pub fn add(&mut self, other: &Breakdown) {
-        self.compute += other.compute;
-        self.comm_transfer += other.comm_transfer;
-        self.comm_kernel += other.comm_kernel;
-        self.comm_queue += other.comm_queue;
-        self.comm_hidden += other.comm_hidden;
-        self.load_stall += other.load_stall;
-        self.h2d += other.h2d;
-        self.apply += other.apply;
+        let Breakdown {
+            compute,
+            comm_transfer,
+            comm_kernel,
+            comm_queue,
+            comm_hidden,
+            host_reduce,
+            load_stall,
+            h2d,
+            apply,
+        } = *other;
+        self.compute += compute;
+        self.comm_transfer += comm_transfer;
+        self.comm_kernel += comm_kernel;
+        self.comm_queue += comm_queue;
+        self.comm_hidden += comm_hidden;
+        self.host_reduce += host_reduce;
+        self.load_stall += load_stall;
+        self.h2d += h2d;
+        self.apply += apply;
+    }
+
+    /// Every component, named — the one source printers and audits iterate
+    /// so a new field shows up everywhere or nowhere compiles.
+    pub fn components(&self) -> [(&'static str, f64); 9] {
+        let Breakdown {
+            compute,
+            comm_transfer,
+            comm_kernel,
+            comm_queue,
+            comm_hidden,
+            host_reduce,
+            load_stall,
+            h2d,
+            apply,
+        } = *self;
+        [
+            ("compute", compute),
+            ("comm_transfer", comm_transfer),
+            ("comm_kernel", comm_kernel),
+            ("comm_queue", comm_queue),
+            ("comm_hidden", comm_hidden),
+            ("host_reduce", host_reduce),
+            ("load_stall", load_stall),
+            ("h2d", h2d),
+            ("apply", apply),
+        ]
     }
 
     /// Fraction of exchange time spent in the GPU kernel (paper §3.2
@@ -144,20 +216,54 @@ mod tests {
             comm_kernel: 0.01,
             comm_queue: 0.04,
             comm_hidden: 0.33,
+            host_reduce: 0.07,
             load_stall: 0.1,
             h2d: 0.2,
             apply: 0.05,
         };
-        assert!((b.comm() - 0.55).abs() < 1e-12);
+        assert!((b.comm() - 0.62).abs() < 1e-12);
         // comm_hidden is a memo of time NOT paid: never in the totals
-        assert!((b.total() - 1.9).abs() < 1e-12);
-        assert!((b.kernel_share_of_comm() - 0.01 / 0.55).abs() < 1e-12);
+        assert!((b.total() - 1.97).abs() < 1e-12);
+        assert!((b.kernel_share_of_comm() - 0.01 / 0.62).abs() < 1e-12);
         let mut sum = b;
         sum.add(&b);
-        assert!((sum.total() - 3.8).abs() < 1e-12);
+        assert!((sum.total() - 3.94).abs() < 1e-12);
         assert!((sum.comm_queue - 0.08).abs() < 1e-12);
         assert!((sum.comm_hidden - 0.66).abs() < 1e-12);
+        assert!((sum.host_reduce - 0.14).abs() < 1e-12);
         assert!((sum.h2d - 0.4).abs() < 1e-12);
+    }
+
+    /// Regression for the piecemeal-added-field hazard: a fully-populated
+    /// `Breakdown` must satisfy `total() == sum of every on-clock field`
+    /// and `components()` must enumerate each field exactly once, so an
+    /// addition that skips `total()`/`add()`/printers cannot land silently.
+    #[test]
+    fn fully_populated_breakdown_reconciles_with_field_sum() {
+        // distinct powers of two: any omission or double-count is visible
+        let b = Breakdown {
+            compute: 1.0,
+            comm_transfer: 2.0,
+            comm_kernel: 4.0,
+            comm_queue: 8.0,
+            comm_hidden: 16.0,
+            host_reduce: 32.0,
+            load_stall: 64.0,
+            h2d: 128.0,
+            apply: 256.0,
+        };
+        let comps = b.components();
+        assert_eq!(comps.len(), 9);
+        let mut names: Vec<&str> = comps.iter().map(|&(n, _)| n).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 9, "components() must enumerate each field once");
+        let sum_all: f64 = comps.iter().map(|&(_, v)| v).sum();
+        assert!((sum_all - 511.0).abs() < 1e-12);
+        // total() == field sum minus the one memo field
+        assert!((b.total() - (sum_all - b.comm_hidden)).abs() < 1e-12);
+        assert!((b.total() - 495.0).abs() < 1e-12);
+        assert!((b.comm() - (2.0 + 4.0 + 8.0 + 32.0)).abs() < 1e-12);
     }
 
     #[test]

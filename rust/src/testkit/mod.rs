@@ -126,6 +126,61 @@ pub fn gauss_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.gauss_f32() * scale).collect()
 }
 
+/// All permutations of `0..n` in lexicographic order (Heap's algorithm is
+/// not stable-ordered; lexicographic keeps failure reports reproducible).
+/// The race explorer enumerates delivery schedules with this — keep `n`
+/// small (n! grows fast; the explorer uses n ≤ 4).
+pub fn permutations(n: usize) -> Vec<Vec<usize>> {
+    fn rec(prefix: &mut Vec<usize>, rest: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if rest.is_empty() {
+            out.push(prefix.clone());
+            return;
+        }
+        for i in 0..rest.len() {
+            let v = rest.remove(i);
+            prefix.push(v);
+            rec(prefix, rest, out);
+            prefix.pop();
+            rest.insert(i, v);
+        }
+    }
+    let mut out = Vec::new();
+    rec(&mut Vec::new(), &mut (0..n).collect(), &mut out);
+    out
+}
+
+/// A schedule gate: threads block until the flattened schedule reaches
+/// their id, forcing a chosen real-time interleaving of otherwise-racy
+/// steps (the race explorer serializes worker *sends* with this while the
+/// virtual-time pricing must stay schedule-independent).
+pub struct Turnstile {
+    schedule: Vec<usize>,
+    pos: std::sync::Mutex<usize>,
+    cv: std::sync::Condvar,
+}
+
+impl Turnstile {
+    pub fn new(schedule: Vec<usize>) -> Turnstile {
+        Turnstile { schedule, pos: std::sync::Mutex::new(0), cv: std::sync::Condvar::new() }
+    }
+
+    /// Block until the next unconsumed schedule slot is `id`, then claim
+    /// it. Ids past the end of the schedule pass freely.
+    pub fn wait_turn(&self, id: usize) {
+        let mut pos = self.pos.lock().unwrap();
+        while *pos < self.schedule.len() && self.schedule[*pos] != id {
+            pos = self.cv.wait(pos).unwrap();
+        }
+    }
+
+    /// Release the claimed slot, waking the next thread in the schedule.
+    pub fn advance(&self) {
+        let mut pos = self.pos.lock().unwrap();
+        *pos += 1;
+        self.cv.notify_all();
+    }
+}
+
 /// Assert two f32 slices are elementwise close; Err with first offender.
 pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
     if a.len() != b.len() {
@@ -179,6 +234,42 @@ mod tests {
         }
         let expect = saved.as_deref().and_then(|s| s.parse().ok()).unwrap_or(40);
         assert_eq!(prop_cases(40), expect);
+    }
+
+    #[test]
+    fn permutations_enumerate_lexicographically() {
+        assert_eq!(permutations(0), vec![Vec::<usize>::new()]);
+        assert_eq!(permutations(1), vec![vec![0]]);
+        let p3 = permutations(3);
+        assert_eq!(p3.len(), 6);
+        assert_eq!(p3[0], vec![0, 1, 2]);
+        assert_eq!(p3[5], vec![2, 1, 0]);
+        let mut sorted = p3.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted, p3, "lexicographic and duplicate-free");
+    }
+
+    #[test]
+    fn turnstile_enforces_its_schedule() {
+        use std::sync::Arc;
+        let gate = Arc::new(Turnstile::new(vec![2, 0, 1]));
+        let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let hs: Vec<_> = (0..3)
+            .map(|id| {
+                let gate = gate.clone();
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    gate.wait_turn(id);
+                    log.lock().unwrap().push(id);
+                    gate.advance();
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(*log.lock().unwrap(), vec![2, 0, 1]);
     }
 
     #[test]

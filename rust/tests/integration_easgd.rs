@@ -85,6 +85,41 @@ fn sharded_easgd_trains_and_reports_queue_metrics() {
 }
 
 #[test]
+fn breakdown_reconciles_across_shard_grid() {
+    let Some(rt) = rt() else { return };
+    // the report's breakdown is the sum over workers (audit::Ledger per
+    // worker), so its comm split must reconcile with the summed comm time
+    // at every shard count and on both cluster topologies
+    for servers in [1usize, 4] {
+        for topo in ["copper", "mosaic"] {
+            let mut cfg = EasgdConfig::quick("mlp", 4, 12);
+            cfg.servers = servers;
+            cfg.topology = topo.into();
+            cfg.lr = LrSchedule::Const { base: 0.05 };
+            let rep = run_easgd(&rt, &cfg).unwrap();
+            let tag = format!("S={servers} topo={topo}");
+            let comm = rep.breakdown.comm_transfer + rep.breakdown.comm_queue;
+            assert!(
+                (comm - rep.comm_total).abs() < 1e-9 * rep.comm_total.max(1.0),
+                "{tag}: breakdown comm {comm} vs comm_total {}",
+                rep.comm_total
+            );
+            // workers charge only compute + exchange time: the summed
+            // breakdown must account for every worker's whole clock, and
+            // the straggler's clock can never exceed the summed total
+            assert!(
+                (rep.breakdown.total() - (rep.breakdown.compute + comm)).abs()
+                    < 1e-9 * rep.breakdown.total().max(1.0),
+                "{tag}: unexpected charge kinds in {:?}",
+                rep.breakdown
+            );
+            assert!(rep.breakdown.total() >= rep.vtime_total - 1e-9, "{tag}");
+            assert!(rep.shard_busy.len() == servers, "{tag}");
+        }
+    }
+}
+
+#[test]
 fn alpha_zero_never_mixes() {
     // α=0: elastic force off; center never moves and workers free-run.
     // The run must still terminate and produce finite results.

@@ -1,0 +1,438 @@
+//! DES schedule race explorer: virtual-time pricing must be independent
+//! of real-world thread scheduling.
+//!
+//! The sharded-EASGD serve queue and the WFBP release-gated flow shop are
+//! discrete-event simulations driven by genuinely concurrent threads, so
+//! the classic failure mode is a race where physical delivery order leaks
+//! into the virtual clock. This suite promotes PR 3's random-schedule
+//! Python check into an in-tree *exhaustive* detector at small scale:
+//!
+//! * every per-round permutation of worker send order, forced with a
+//!   [`Turnstile`] gate between `worker_push` and `worker_collect`
+//!   (k ≤ 3, S ≤ 2 — `(k!)^rounds` schedules);
+//! * every real-sleep perturbation pattern under skewed compute, where
+//!   gating would add artificial dependencies;
+//! * every per-rank stagger pattern entering the WFBP bucketed exchange
+//!   (≤ 4 buckets), which exercises the mpi pending-buffer out-of-order
+//!   matching.
+//!
+//! Each run must be **bit-identical** to the baseline schedule: centers,
+//! final worker params, serve orders, queue waits, clocks, and reports.
+//!
+//! **Repro:** a failure names the schedule/pattern index and its content;
+//! re-run just this suite with `cargo test --test race_explorer`. The
+//! default scale is a tier-1 smoke slice; set `TMPI_RACE_EXHAUSTIVE=1`
+//! (nightly deep-props) for the full k=3 / 3-round / all-pattern sweep.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use theano_mpi::cluster::Topology;
+use theano_mpi::collectives::{
+    exchange_wfbp, ChunkedPipeline, ExchangeCtx, ExchangeStrategy, ReduceOp, StrategyKind,
+    WfbpOutcome, WfbpPlan,
+};
+use theano_mpi::easgd::shard::{self, ShardPlan, ShardPrices};
+use theano_mpi::easgd::EasgdConfig;
+use theano_mpi::mpi::{self, tags, Payload};
+use theano_mpi::simnet::LinkParams;
+use theano_mpi::testkit::{permutations, Turnstile};
+
+fn exhaustive() -> bool {
+    std::env::var("TMPI_RACE_EXHAUSTIVE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Everything one probe run produces, in deterministic (rank) order.
+#[derive(Clone, Debug, PartialEq)]
+struct RunOut {
+    centers: Vec<Vec<f32>>,
+    served: Vec<Vec<usize>>,
+    busy: Vec<f64>,
+    shard_clocks: Vec<f64>,
+    final_params: Vec<Vec<f32>>,
+    worker_clocks: Vec<f64>,
+    queue_waits: Vec<Vec<f64>>,
+}
+
+/// One sharded-EASGD probe run with explicit control over the physical
+/// schedule: `gate` forces the global order of worker pushes (a flattened
+/// per-round permutation schedule), `sleeps[rank]` injects a real delay
+/// between a worker's push and its collect. Virtual pricing must not see
+/// either.
+fn run_probe(
+    k: usize,
+    s: usize,
+    elems: usize,
+    rounds: usize,
+    compute_s: &[f64],
+    gate: Option<Arc<Turnstile>>,
+    sleeps: &[u64],
+) -> RunOut {
+    let mut cfg = EasgdConfig::quick("mlp", k, rounds);
+    cfg.servers = s;
+    cfg.topology = "copper".into();
+    let plan = Arc::new(ShardPlan::new(elems, k, s).unwrap());
+    let topo = Topology::by_name(&cfg.topology, plan.world_size()).unwrap();
+    let links = LinkParams::default();
+    let prices = Arc::new(ShardPrices::new(&cfg, &topo, &links, &plan, 1.0));
+    let alpha = cfg.alpha as f32;
+    let compute_s = compute_s.to_vec();
+    let sleeps = sleeps.to_vec();
+
+    enum Out {
+        Worker { rank: usize, clock: f64, waits: Vec<f64>, params: Vec<f32> },
+        Server(shard::ServerOut),
+    }
+
+    let world = mpi::world(plan.world_size());
+    let mut handles = Vec::new();
+    for (rank, mut comm) in world.into_iter().enumerate() {
+        let plan = plan.clone();
+        let prices = prices.clone();
+        let gate = gate.clone();
+        let compute_s = compute_s.clone();
+        let sleeps = sleeps.clone();
+        handles.push(thread::spawn(move || -> anyhow::Result<Out> {
+            if rank >= plan.workers {
+                let shard_id = rank - plan.workers;
+                let (lo, len) = plan.slices[shard_id];
+                let init = shard::probe_center(plan.slices.iter().map(|&(_, l)| l).sum())
+                    [lo..lo + len]
+                    .to_vec();
+                let out =
+                    shard::server_shard_main(&mut comm, &plan, shard_id, &prices, alpha, init)?;
+                Ok(Out::Server(out))
+            } else {
+                let elems: usize = plan.slices.iter().map(|&(_, l)| l).sum();
+                let mut params = shard::probe_params(rank, elems);
+                let mut clock = 0.0f64;
+                let mut waits = Vec::with_capacity(rounds);
+                for _round in 0..rounds {
+                    clock += compute_s[rank];
+                    if let Some(g) = &gate {
+                        g.wait_turn(rank);
+                    }
+                    shard::worker_push(&mut comm, rank, &plan, false, &params, clock)?;
+                    if let Some(g) = &gate {
+                        g.advance();
+                    }
+                    if sleeps[rank] > 0 {
+                        thread::sleep(Duration::from_micros(sleeps[rank]));
+                    }
+                    let t = shard::worker_collect(
+                        &mut comm, rank, &plan, &prices, alpha, &mut params, clock,
+                    )?;
+                    clock = t.new_clock;
+                    waits.push(t.queue_wait);
+                }
+                for j in 0..plan.servers {
+                    comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), clock)?;
+                }
+                Ok(Out::Worker { rank, clock, waits, params })
+            }
+        }));
+    }
+
+    let mut out = RunOut {
+        centers: vec![Vec::new(); s],
+        served: vec![Vec::new(); s],
+        busy: vec![0.0; s],
+        shard_clocks: vec![0.0; s],
+        final_params: vec![Vec::new(); k],
+        worker_clocks: vec![0.0; k],
+        queue_waits: vec![Vec::new(); k],
+    };
+    for h in handles {
+        match h.join().unwrap().unwrap() {
+            Out::Worker { rank, clock, waits, params } => {
+                out.worker_clocks[rank] = clock;
+                out.queue_waits[rank] = waits;
+                out.final_params[rank] = params;
+            }
+            Out::Server(so) => {
+                out.busy[so.shard] = so.busy;
+                out.shard_clocks[so.shard] = so.clock_end;
+                out.centers[so.shard] = so.center;
+                out.served[so.shard] = so.served;
+            }
+        }
+    }
+    out
+}
+
+/// Flatten one per-round permutation choice into a Turnstile schedule.
+fn flat_schedule(perms_per_round: &[&Vec<usize>]) -> Vec<usize> {
+    perms_per_round.iter().flat_map(|p| p.iter().copied()).collect()
+}
+
+/// Enumerate all `(k!)^rounds` send schedules (index-vector odometer).
+fn all_schedules(k: usize, rounds: usize) -> Vec<Vec<usize>> {
+    let perms = permutations(k);
+    let mut out = Vec::new();
+    let mut idx = vec![0usize; rounds];
+    loop {
+        let chosen: Vec<&Vec<usize>> = idx.iter().map(|&i| &perms[i]).collect();
+        out.push(flat_schedule(&chosen));
+        // odometer increment
+        let mut d = 0;
+        loop {
+            if d == rounds {
+                return out;
+            }
+            idx[d] += 1;
+            if idx[d] < perms.len() {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+/// Exhaustive permutation sweep: with tied compute, every physical send
+/// order must price identically (serve ties break by rank, not by arrival
+/// race). Equal compute keeps the round-robin gate deadlock-free: worker
+/// arrival spread per round is at most `(k-1)·handle`, far below the
+/// `2·wire_half + handle` liveness bound of the conservative queue.
+#[test]
+fn sharded_queue_is_send_schedule_independent() {
+    let elems = 96;
+    let configs: &[(usize, usize, usize)] = if exhaustive() {
+        // (k, S, rounds): full k≤3 / S≤2 grid
+        &[(2, 1, 3), (2, 2, 3), (3, 1, 3), (3, 2, 3)]
+    } else {
+        &[(2, 2, 3), (3, 2, 2)]
+    };
+    for &(k, s, rounds) in configs {
+        let compute = vec![0.0; k];
+        let schedules = all_schedules(k, rounds);
+        let baseline = run_probe(k, s, elems, rounds, &compute, None, &vec![0; k]);
+        for (i, sched) in schedules.iter().enumerate() {
+            let gate = Arc::new(Turnstile::new(sched.clone()));
+            let got = run_probe(k, s, elems, rounds, &compute, Some(gate), &vec![0; k]);
+            assert!(
+                got == baseline,
+                "k={k} S={s} rounds={rounds}: schedule {i}/{} {sched:?} diverged:\n\
+                 got {got:?}\nbaseline {baseline:?}",
+                schedules.len()
+            );
+        }
+    }
+}
+
+/// Perturbation sweep under *skewed* compute (where a global send gate
+/// would itself create artificial cross-worker dependencies): real sleeps
+/// between push and collect reorder physical delivery; the virtual clock
+/// must not move.
+#[test]
+fn sharded_queue_is_perturbation_independent() {
+    let elems = 96;
+    let rounds = 3;
+    let sleep_levels: &[u64] = if exhaustive() { &[0, 300, 900, 1700] } else { &[0, 700, 1500] };
+    for &(k, s) in &[(3usize, 2usize), (2, 1)] {
+        // skewed compute: worker w computes (w+1)·80µs of virtual time
+        let compute: Vec<f64> = (0..k).map(|w| (w + 1) as f64 * 8e-5).collect();
+        let baseline = run_probe(k, s, elems, rounds, &compute, None, &vec![0; k]);
+        // every assignment of a sleep level to each worker
+        let mut pattern = vec![0usize; k];
+        loop {
+            let sleeps: Vec<u64> = pattern.iter().map(|&i| sleep_levels[i]).collect();
+            let got = run_probe(k, s, elems, rounds, &compute, None, &sleeps);
+            assert!(
+                got == baseline,
+                "k={k} S={s}: sleep pattern {sleeps:?}µs diverged:\n\
+                 got {got:?}\nbaseline {baseline:?}"
+            );
+            let mut d = 0;
+            loop {
+                if d == k {
+                    break;
+                }
+                pattern[d] += 1;
+                if pattern[d] < sleep_levels.len() {
+                    break;
+                }
+                pattern[d] = 0;
+                d += 1;
+            }
+            if d == k {
+                break;
+            }
+        }
+    }
+}
+
+/// Run one WFBP bucketed exchange across k threads, each rank entering
+/// after a real stagger sleep. Returns every rank's buffer and outcome.
+fn run_wfbp_staggered(
+    kind: StrategyKind,
+    chunk_elems: Option<usize>,
+    topo: &Topology,
+    plan: &Arc<WfbpPlan>,
+    bufs: Vec<Vec<f32>>,
+    stagger_us: &[u64],
+) -> (Vec<Vec<f32>>, Vec<WfbpOutcome>) {
+    let k = bufs.len();
+    let world = mpi::world(k);
+    let links = LinkParams::default();
+    let handles: Vec<_> = world
+        .into_iter()
+        .zip(bufs)
+        .enumerate()
+        .map(|(rank, (mut comm, mut buf))| {
+            let topo = topo.clone();
+            let plan = plan.clone();
+            let delay = stagger_us[rank];
+            thread::spawn(move || {
+                if delay > 0 {
+                    thread::sleep(Duration::from_micros(delay));
+                }
+                let strat: Box<dyn ExchangeStrategy> = match chunk_elems {
+                    Some(c) => Box::new(ChunkedPipeline::new(
+                        kind.build(theano_mpi::precision::Wire::F16),
+                        c,
+                        true,
+                    )),
+                    None => kind.build(theano_mpi::precision::Wire::F16),
+                };
+                let mut ctx = ExchangeCtx {
+                    comm: &mut comm,
+                    topo: &topo,
+                    links: &links,
+                    kernels: None,
+                    cuda_aware: true,
+                    chunk_elems: 0,
+                };
+                let out = exchange_wfbp(
+                    strat.as_ref(),
+                    &plan,
+                    &mut buf,
+                    ReduceOp::Sum,
+                    &mut ctx,
+                    1e-3, // backward-pass seconds the buckets overlap
+                    1.0,
+                    true,
+                )
+                .unwrap();
+                (buf, out)
+            })
+        })
+        .collect();
+    let mut bufs_out = Vec::new();
+    let mut outcomes = Vec::new();
+    for h in handles {
+        let (b, o) = h.join().unwrap();
+        bufs_out.push(b);
+        outcomes.push(o);
+    }
+    (bufs_out, outcomes)
+}
+
+/// WFBP flow-shop sweep: a fast rank can run several buckets ahead of a
+/// staggered peer (its sub-exchange messages sit in the mpi pending
+/// buffers out of order), yet buffers and reports must be bit-identical
+/// across all stagger patterns.
+#[test]
+fn wfbp_flow_shop_is_stagger_independent() {
+    let k = 3;
+    // 4 buckets: a fc-heavy head and conv tail, AlexNet-shaped in miniature
+    let table: Vec<(String, usize)> = [("conv1", 60), ("conv2", 500), ("fc6", 1200), ("fc7", 800)]
+        .iter()
+        .map(|&(n, p)| (n.to_string(), p))
+        .collect();
+    let plan = Arc::new(WfbpPlan::from_layers(&table, 0));
+    assert_eq!(plan.buckets.len(), 4);
+    let n = plan.total_elems;
+    let bufs: Vec<Vec<f32>> =
+        (0..k).map(|r| (0..n).map(|i| ((r * 13 + i * 7) % 31) as f32 * 0.125).collect()).collect();
+
+    let configs: Vec<(StrategyKind, Option<usize>, &str)> = if exhaustive() {
+        vec![
+            (StrategyKind::Asa, None, "mosaic"),
+            (StrategyKind::Ring, None, "mosaic"),
+            (StrategyKind::Hier { inner: theano_mpi::collectives::FlatKind::Ring }, None, "copper"),
+            (StrategyKind::Asa, Some(128), "copper"),
+        ]
+    } else {
+        vec![(StrategyKind::Asa, None, "mosaic"), (StrategyKind::Asa, Some(128), "copper")]
+    };
+    let patterns: Vec<Vec<u64>> = {
+        let levels: &[u64] = if exhaustive() { &[0, 600, 1400] } else { &[0, 1200] };
+        // every assignment of a stagger level per rank, baseline first
+        let mut pats = vec![vec![0; k]];
+        let mut idx = vec![0usize; k];
+        loop {
+            let mut d = 0;
+            loop {
+                if d == k {
+                    break;
+                }
+                idx[d] += 1;
+                if idx[d] < levels.len() {
+                    break;
+                }
+                idx[d] = 0;
+                d += 1;
+            }
+            if d == k {
+                break;
+            }
+            pats.push(idx.iter().map(|&i| levels[i]).collect());
+        }
+        pats
+    };
+
+    for (kind, chunk, topo_name) in configs {
+        let topo = Topology::by_name(topo_name, k).unwrap();
+        let (base_bufs, base_outs) =
+            run_wfbp_staggered(kind, chunk, &topo, &plan, bufs.clone(), &patterns[0]);
+        // the simulated schedule is global: every rank reports identically
+        for (r, o) in base_outs.iter().enumerate() {
+            assert!(o == &base_outs[0], "{}: rank {r} outcome differs from rank 0", kind.name());
+        }
+        for pat in &patterns[1..] {
+            let (got_bufs, got_outs) =
+                run_wfbp_staggered(kind, chunk, &topo, &plan, bufs.clone(), pat);
+            assert!(
+                got_bufs == base_bufs,
+                "{} chunk={chunk:?} topo={topo_name}: stagger {pat:?}µs changed the data path",
+                kind.name()
+            );
+            assert!(
+                got_outs == base_outs,
+                "{} chunk={chunk:?} topo={topo_name}: stagger {pat:?}µs changed the reports:\n\
+                 got {got_outs:?}\nbaseline {base_outs:?}",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// The ledger-instrumented probe (`measure_sharded`) agrees with the
+/// explorer's hand-rolled harness on the same workload — the production
+/// accounting path and the race harness price one physics.
+#[test]
+fn measure_sharded_matches_explorer_baseline() {
+    let (k, s, elems, rounds) = (3, 2, 96, 3);
+    let mut cfg = EasgdConfig::quick("mlp", k, rounds);
+    cfg.servers = s;
+    cfg.topology = "copper".into();
+    let probe = shard::measure_sharded(&cfg, elems, rounds, 0.0, 1.0).unwrap();
+    let baseline = run_probe(k, s, elems, rounds, &vec![0.0; k], None, &vec![0; k]);
+    assert_eq!(probe.centers, baseline.centers);
+    assert_eq!(probe.final_params, baseline.final_params);
+    assert_eq!(probe.served, baseline.served);
+    assert_eq!(probe.worker_clocks, baseline.worker_clocks);
+    // and the ledger reconciles each worker's breakdown with its clock
+    for (w, bd) in probe.breakdowns.iter().enumerate() {
+        let clock = probe.worker_clocks[w];
+        assert!(
+            (bd.total() - clock).abs() <= 1e-9 * clock.max(1.0),
+            "worker {w}: breakdown {} != clock {clock}",
+            bd.total()
+        );
+        let comm = bd.comm_transfer + bd.comm_queue;
+        assert!(comm > 0.0 && bd.comm_kernel == 0.0 && bd.host_reduce == 0.0);
+    }
+}

@@ -30,11 +30,37 @@ import sys
 
 
 def load(path):
-    with open(path) as f:
-        data = json.load(f)
-    if "metrics" not in data or not isinstance(data["metrics"], dict):
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        sys.exit(f"{path}: cannot read: {e}")
+    except json.JSONDecodeError as e:
+        sys.exit(f"{path}: not valid JSON: {e}")
+    if not isinstance(data, dict) or not isinstance(data.get("metrics"), dict):
         sys.exit(f"{path}: expected a top-level 'metrics' object")
     return data["metrics"]
+
+
+def entry_value(entry):
+    """(value, error) from one metrics entry; never raises. A bench writer
+    bug (entry not an object, no "value", non-numeric value) must surface
+    as a reported finding against that metric, not a traceback that hides
+    every other metric's result."""
+    if not isinstance(entry, dict):
+        return None, f"malformed entry (expected an object, got {type(entry).__name__})"
+    if "value" not in entry:
+        return None, f"malformed entry (no \"value\" key; keys: {sorted(entry)})"
+    v = entry["value"]
+    if v is None:
+        return None, "value is null (non-finite)"
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return None, f"non-numeric value {v!r}"
+    return v, None
+
+
+def entry_unit(entry):
+    return entry.get("unit") if isinstance(entry, dict) else None
 
 
 def gate(current_path, baseline_path, tolerance):
@@ -43,7 +69,11 @@ def gate(current_path, baseline_path, tolerance):
     failures, checked, new = [], 0, []
 
     for name, base in sorted(baseline.items()):
-        if base.get("unit") == "s_wall":
+        if entry_unit(base) == "s_wall":
+            continue
+        ref, err = entry_value(base)
+        if err is not None:
+            failures.append(f"{name}: baseline {err} — fix {baseline_path}")
             continue
         # direction must be explicit: a silently-defaulted direction would
         # gate higher-is-better metrics (overlap fractions, speedups)
@@ -57,14 +87,13 @@ def gate(current_path, baseline_path, tolerance):
             )
             continue
         if name not in current:
-            failures.append(f"{name}: missing from the current run (baseline {base['value']})")
+            failures.append(f"{name}: missing from the current run (baseline {ref})")
             continue
-        cur = current[name]["value"]
-        ref = base["value"]
+        cur, err = entry_value(current[name])
+        if err is not None:
+            failures.append(f"{name}: current {err}")
+            continue
         checked += 1
-        if cur is None:
-            failures.append(f"{name}: current value is null (non-finite)")
-            continue
         # budget around a zero reference degenerates to an absolute epsilon
         # (no division: ref can legitimately be 0.0, e.g. a kernel-free win)
         eps = 1e-12
@@ -81,13 +110,14 @@ def gate(current_path, baseline_path, tolerance):
             )
 
     for name, m in sorted(current.items()):
-        if name not in baseline and m.get("unit") != "s_wall":
+        if name not in baseline and entry_unit(m) != "s_wall":
             new.append(name)
 
     tag = f"{current_path} vs {baseline_path}"
     print(f"bench-gate: {tag}: {checked} metrics checked, {len(new)} new, {len(failures)} failing")
     for name in new:
-        print(f"  NEW (unbaselined, not gated): {name} = {current[name]['value']}")
+        v, err = entry_value(current[name])
+        print(f"  NEW (unbaselined, not gated): {name} = {err if err else v}")
     for f in failures:
         print(f"  FAIL {f}")
     return not failures

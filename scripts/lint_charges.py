@@ -1,0 +1,273 @@
+#!/usr/bin/env python3
+"""Charge-accounting lint: virtual time may only be spent through audit::Ledger.
+
+Every correctness bug this repo has shipped was a cost-accounting bug — a
+clock advanced without its breakdown entry, a Breakdown field dropped in a
+merge, bytes compared against element counts. The Rust type system cannot
+see any of these (they are all `f64 += f64`), so this lint enforces the
+accounting discipline textually:
+
+  CHARGE-CLOCK   arithmetic on a bare clock variable (`*clock`, `vtime`):
+                 compound assignment or a self-referential re-assignment.
+                 Clocks advance only inside `audit::` (Ledger / ServerClock).
+  CHARGE-BD      compound assignment on a `Breakdown` time field. Breakdown
+                 slots are filled only by `audit::Ledger` charges; the one
+                 other owner is `metrics::` itself (its exhaustive `add`).
+  CHARGE-CR      compound assignment on a `CommReport` time field
+                 (`sim_*`, `real_kernel`). `collectives/mod.rs` owns the
+                 report (exhaustive merge/scale); strategy impls that build
+                 reports carry per-file waivers.
+  UNIT-SUFFIX    two identifiers with *different* unit suffixes
+                 ({_bytes,_elems,_s,_us,_gbps,_kib}) immediately joined by
+                 +, -, or a comparison — adding bytes to seconds etc.
+                 Multiplication/division convert units and are exempt.
+  BD-LITERAL     a `Breakdown { .. }` struct literal using the `..` rest
+                 shorthand outside `metrics::`/`audit::` — non-exhaustive
+                 construction silently zeroes fields added later.
+
+Scope: `rust/src/**/*.rs` (unit tests included — they must follow the same
+discipline; integration tests under `rust/tests/` assert *on* the ledger
+and may do arithmetic to build expectations).
+
+Waivers: `scripts/lint_waivers.txt`, one per line:
+
+    RULE-ID<space>path-substring<space or tab># justification (required)
+
+A finding whose rule and path match a waiver is suppressed. Waivers that
+matched nothing are reported as STALE (warning; remove them). Exit status
+is 1 iff any unwaived finding remains.
+
+Stdlib only; run from the repo root: `python3 scripts/lint_charges.py`.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "rust", "src")
+WAIVER_FILE = os.path.join(REPO, "scripts", "lint_waivers.txt")
+
+# Breakdown's simulated-time fields (metrics/mod.rs) — audit::Ledger slots.
+BD_FIELDS = (
+    "compute|comm_transfer|comm_kernel|comm_queue|comm_hidden|"
+    "host_reduce|h2d|load_stall|apply"
+)
+# CommReport's time fields (collectives/mod.rs).
+CR_FIELDS = "sim_transfer|sim_kernel|sim_overlapped|sim_intra|sim_inter|real_kernel"
+
+UNIT_SUFFIXES = ("_bytes", "_elems", "_s", "_us", "_gbps", "_kib")
+
+# directory-level owners: (rule, path substrings where the rule never fires)
+OWNERS = {
+    "CHARGE-CLOCK": ("rust/src/audit/",),
+    "CHARGE-BD": ("rust/src/audit/", "rust/src/metrics/"),
+    "CHARGE-CR": ("rust/src/audit/", "rust/src/collectives/mod.rs"),
+    "UNIT-SUFFIX": (),
+    "BD-LITERAL": ("rust/src/audit/", "rust/src/metrics/"),
+}
+
+# compound assignment on a *bare* clock identifier (field accesses like
+# `st.max_clock` are aggregation over clocks, not a clock being spent —
+# the `(?<![\w.])` guard excludes them)
+RE_CLOCK_COMPOUND = re.compile(r"(?<![\w.])(\w*clock|vtime)\s*[-+*/]=")
+# self-referential re-assignment: `x = <expr mentioning x>`
+RE_CLOCK_ASSIGN = re.compile(r"(?<![\w.])(\w*clock|vtime)\s*=(?![=>])\s*(.+)$")
+RE_BD_COMPOUND = re.compile(r"\.(%s)\s*[-+*/]=" % BD_FIELDS)
+RE_CR_COMPOUND = re.compile(r"(?<![\w.(])(?:\w+\.)?(%s)\s*[-+*/]=" % CR_FIELDS)
+# ident OP ident with both idents unit-suffixed — the operator must be
+# immediately between them so `a_us * 1e-6 + b_s` (converted) passes
+RE_UNIT_PAIR = re.compile(
+    r"([A-Za-z_]\w*)\s*(\+|-|<=|>=|==|<|>)\s*([A-Za-z_]\w*)"
+)
+RE_BD_LITERAL_OPEN = re.compile(r"(?<!\w)Breakdown\s*\{")
+RE_LET_DESTRUCTURE = re.compile(r"\blet\s+Breakdown\s*\{")
+
+RE_LINE_COMMENT = re.compile(r"//.*$")
+RE_STRING = re.compile(r'"(?:[^"\\]|\\.)*"')
+RE_CHAR = re.compile(r"'(?:[^'\\]|\\.)'")
+
+
+def strip_noise(lines):
+    """Blank out string/char literals and // and /* */ comments, keeping
+    line numbers stable. Coarse but sufficient for this codebase (no raw
+    strings or nested block comments in scope)."""
+    out = []
+    in_block = False
+    for line in lines:
+        if in_block:
+            end = line.find("*/")
+            if end < 0:
+                out.append("")
+                continue
+            line = " " * (end + 2) + line[end + 2 :]
+            in_block = False
+        line = RE_STRING.sub('""', line)
+        line = RE_CHAR.sub("' '", line)
+        line = RE_LINE_COMMENT.sub("", line)
+        while True:
+            start = line.find("/*")
+            if start < 0:
+                break
+            end = line.find("*/", start + 2)
+            if end < 0:
+                line = line[:start]
+                in_block = True
+                break
+            line = line[:start] + " " * (end + 2 - start) + line[end + 2 :]
+        out.append(line)
+    return out
+
+
+def unit_suffix(ident):
+    for suf in UNIT_SUFFIXES:
+        if ident.endswith(suf) and len(ident) > len(suf):
+            return suf
+    return None
+
+
+def lint_file(relpath, raw_lines):
+    findings = []
+    lines = strip_noise(raw_lines)
+
+    def hit(rule, lineno, msg):
+        findings.append((rule, relpath, lineno, msg))
+
+    bd_literal_depth = None  # brace depth tracking for an open Breakdown literal
+    depth = 0
+    for i, line in enumerate(lines, start=1):
+        m = RE_CLOCK_COMPOUND.search(line)
+        if m:
+            hit("CHARGE-CLOCK", i, f"compound assignment on `{m.group(1)}` — charge a Ledger instead")
+        else:
+            m = RE_CLOCK_ASSIGN.search(line)
+            if m and re.search(r"(?<![\w.])%s\b" % re.escape(m.group(1)), m.group(2)):
+                hit(
+                    "CHARGE-CLOCK",
+                    i,
+                    f"self-referential update of `{m.group(1)}` — use Ledger::charge/advance_to",
+                )
+        m = RE_BD_COMPOUND.search(line)
+        if m:
+            hit("CHARGE-BD", i, f"raw arithmetic on Breakdown field `{m.group(1)}`")
+        m = RE_CR_COMPOUND.search(line)
+        if m:
+            hit("CHARGE-CR", i, f"raw arithmetic on CommReport time field `{m.group(1)}`")
+        for m in RE_UNIT_PAIR.finditer(line):
+            a, op, b = m.group(1), m.group(2), m.group(3)
+            sa, sb = unit_suffix(a), unit_suffix(b)
+            if sa and sb and sa != sb:
+                hit("UNIT-SUFFIX", i, f"`{a} {op} {b}` mixes {sa} with {sb}")
+        # Breakdown literal exhaustiveness: track `..` inside the braces
+        if bd_literal_depth is None:
+            m = RE_BD_LITERAL_OPEN.search(line)
+            if m and not RE_LET_DESTRUCTURE.search(line):
+                bd_literal_depth = depth  # literal closes when depth returns here
+                tail = line[m.end() :]
+                depth += 1 + tail.count("{") - tail.count("}")
+                if depth <= bd_literal_depth:
+                    if re.search(r"\.\.[^=.]", tail) or tail.rstrip().endswith(".."):
+                        hit("BD-LITERAL", i, "non-exhaustive `Breakdown { .. }` literal")
+                    bd_literal_depth = None
+                elif re.search(r"\.\.[^=.]", tail):
+                    hit("BD-LITERAL", i, "non-exhaustive `Breakdown { .. }` literal")
+                    bd_literal_depth = None
+                continue
+        else:
+            if re.search(r"(?<!\.)\.\.(?![=.\d])", line):
+                hit("BD-LITERAL", i, "non-exhaustive `Breakdown { .. }` literal")
+                bd_literal_depth = None
+            depth += line.count("{") - line.count("}")
+            if bd_literal_depth is not None and depth <= bd_literal_depth:
+                bd_literal_depth = None
+            continue
+        depth += line.count("{") - line.count("}")
+
+    # drop findings the file owns
+    return [
+        f
+        for f in findings
+        if not any(owner in relpath for owner in OWNERS.get(f[0], ()))
+    ]
+
+
+def load_waivers():
+    waivers = []
+    if not os.path.exists(WAIVER_FILE):
+        return waivers
+    with open(WAIVER_FILE, encoding="utf-8") as fh:
+        for n, raw in enumerate(fh, start=1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if "#" not in line:
+                print(
+                    f"lint_charges: {WAIVER_FILE}:{n}: waiver without a "
+                    f"`# justification` comment — refusing it",
+                    file=sys.stderr,
+                )
+                sys.exit(2)
+            body = line.split("#", 1)[0].split()
+            if len(body) != 2:
+                print(
+                    f"lint_charges: {WAIVER_FILE}:{n}: expected "
+                    f"`RULE path # why`, got: {line}",
+                    file=sys.stderr,
+                )
+                sys.exit(2)
+            waivers.append({"rule": body[0], "path": body[1], "line": n, "used": False})
+    return waivers
+
+
+def main():
+    all_findings = []
+    for root, _dirs, files in os.walk(SRC):
+        for name in sorted(files):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(root, name)
+            rel = os.path.relpath(path, REPO).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                all_findings.extend(lint_file(rel, fh.read().splitlines()))
+
+    waivers = load_waivers()
+    unwaived = []
+    for rule, rel, lineno, msg in all_findings:
+        waived = False
+        for w in waivers:
+            if w["rule"] == rule and w["path"] in rel:
+                w["used"] = True
+                waived = True
+                break
+        if not waived:
+            unwaived.append((rule, rel, lineno, msg))
+
+    for rule, rel, lineno, msg in unwaived:
+        print(f"{rel}:{lineno}: [{rule}] {msg}")
+
+    stale = [w for w in waivers if not w["used"]]
+    for w in stale:
+        print(
+            f"lint_charges: WARNING: stale waiver "
+            f"({WAIVER_FILE}:{w['line']}: {w['rule']} {w['path']}) matched nothing — remove it",
+            file=sys.stderr,
+        )
+
+    if unwaived:
+        print(
+            f"lint_charges: {len(unwaived)} finding(s) — spend time through "
+            f"audit::Ledger or add a justified waiver to scripts/lint_waivers.txt",
+            file=sys.stderr,
+        )
+        return 1
+    suffix = f", {len(stale)} stale waiver(s)" if stale else ""
+    print(
+        f"lint_charges: clean ({len(all_findings) - len(unwaived)} waived finding(s){suffix})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Shared pricing-model substrate for the band-verification scripts.
+
+The stdlib-only Python ports of the Rust pricing model
+(`scripts/verify_wfbp_bands.py`, `scripts/verify_easgd_bands.py`) used to
+each carry their own copy of the link-parameter constants, the
+copper/mosaic topologies, and the scatterv split — two copies of numbers
+that must mirror `rust/src/simnet` / `rust/src/cluster` exactly. This
+module is the single copy both import; keep it byte-faithful to the Rust
+defaults (`LinkParams::default()`, `Topology::{copper,mosaic}`,
+`util::split_even`).
+
+Everything model-specific (EASGD queue simulation, strategy pricing, WFBP
+timeline) stays in the owning script — only code that was *duplicated*
+lives here.
+"""
+
+# --- simnet::LinkParams::default() -----------------------------------------
+PCIE_GBPS = 12.0
+PCIE_LAT_US = 10.0
+QPI_GBPS = 16.0
+QPI_LAT_US = 1.0
+IB_FDR_GBPS = 6.8
+IB_QDR_GBPS = 4.0
+IB_LAT_US = 1.5
+HOST_MEM_GBPS = 10.0
+HOST_REDUCE_GBPS = 5.0
+GPU_REDUCE_GBPS = 150.0
+GPU_CAST_GBPS = 200.0
+
+
+# --- cluster::Topology ------------------------------------------------------
+class Topo:
+    """GPU placement table: (node, socket, switch) per GPU + IB tier.
+
+    Supports both attribute access (`topo.gpus`, the wfbp port's idiom)
+    and mapping access (`topo["gpus"]`, the easgd port's legacy dict
+    idiom) so both scripts read it natively.
+    """
+
+    def __init__(self, gpus, ib_gbps):
+        self.gpus = gpus
+        self.ib = ib_gbps
+
+    def __getitem__(self, key):
+        return {"gpus": self.gpus, "ib": self.ib}[key]
+
+    def path(self, a, b):
+        if a == b:
+            return "local"
+        ga, gb = self.gpus[a], self.gpus[b]
+        if ga[0] != gb[0]:
+            return "network"
+        if ga[2] == gb[2]:
+            return "p2p"
+        return "qpi"
+
+
+def path(topo, a, b):
+    """Free-function form of `Topo.path` (the easgd port's idiom)."""
+    return topo.path(a, b)
+
+
+def copper(nodes):
+    """(node, socket, switch) per GPU: 2 sockets x 4 dies per node."""
+    gpus = []
+    for n in range(nodes):
+        for socket in range(2):
+            for _ in range(4):
+                gpus.append((n, socket, n * 2 + socket))
+    return Topo(gpus, IB_FDR_GBPS)
+
+
+def mosaic(nodes):
+    return Topo([(n, 0, n * 2) for n in range(nodes)], IB_QDR_GBPS)
+
+
+def by_name(name, workers):
+    if name == "mosaic":
+        return mosaic(max(workers, 1))
+    if name == "copper":
+        return copper(-(-max(workers, 1) // 8))
+    raise ValueError(name)
+
+
+# --- util::split_even (MPI_Scatterv convention) -----------------------------
+def split_even(n, k):
+    base, extra = n // k, n % k
+    out, off = [], 0
+    for i in range(k):
+        ln = base + (1 if i < extra else 0)
+        out.append((off, ln))
+        off += ln
+    return out

@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Unit tests for scripts/bench_gate.py (stdlib only).
+
+Run from the repo root:
+    python3 -m unittest discover -s scripts -p "test_*.py"
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_gate  # noqa: E402
+
+
+class GateHarness(unittest.TestCase):
+    def run_gate(self, current, baseline, tolerance=0.10):
+        """Write both metric dicts to temp files, run the gate, return
+        (ok, printed output)."""
+        with tempfile.TemporaryDirectory() as d:
+            cur_p = os.path.join(d, "current.json")
+            base_p = os.path.join(d, "baseline.json")
+            with open(cur_p, "w") as f:
+                json.dump({"metrics": current}, f)
+            with open(base_p, "w") as f:
+                json.dump({"metrics": baseline}, f)
+            out = io.StringIO()
+            with contextlib.redirect_stdout(out):
+                ok = bench_gate.gate(cur_p, base_p, tolerance)
+        return ok, out.getvalue()
+
+    @staticmethod
+    def m(value, better="lower", unit=None):
+        e = {"value": value, "better": better}
+        if unit:
+            e["unit"] = unit
+        return e
+
+
+class DirectionAware(GateHarness):
+    def test_lower_is_better_regression_fails(self):
+        ok, out = self.run_gate({"t": self.m(1.2)}, {"t": self.m(1.0, "lower")})
+        self.assertFalse(ok)
+        self.assertIn("regressed", out)
+
+    def test_lower_is_better_improvement_passes(self):
+        ok, _ = self.run_gate({"t": self.m(0.5)}, {"t": self.m(1.0, "lower")})
+        self.assertTrue(ok)
+
+    def test_higher_is_better_regression_fails(self):
+        ok, out = self.run_gate({"f": self.m(0.5)}, {"f": self.m(1.0, "higher")})
+        self.assertFalse(ok)
+        self.assertIn("regressed", out)
+
+    def test_higher_is_better_improvement_passes(self):
+        ok, _ = self.run_gate({"f": self.m(2.0)}, {"f": self.m(1.0, "higher")})
+        self.assertTrue(ok)
+
+    def test_within_tolerance_passes_both_directions(self):
+        ok, _ = self.run_gate(
+            {"t": self.m(1.05), "f": self.m(0.95)},
+            {"t": self.m(1.0, "lower"), "f": self.m(1.0, "higher")},
+        )
+        self.assertTrue(ok)
+
+    def test_missing_direction_fails_not_crashes(self):
+        ok, out = self.run_gate({"t": self.m(1.0)}, {"t": {"value": 1.0}})
+        self.assertFalse(ok)
+        self.assertIn('"better"', out)
+
+    def test_zero_reference_uses_absolute_epsilon(self):
+        ok, _ = self.run_gate({"w": self.m(0.0)}, {"w": self.m(0.0, "lower")})
+        self.assertTrue(ok)
+        ok, out = self.run_gate({"w": self.m(1e-6)}, {"w": self.m(0.0, "lower")})
+        self.assertFalse(ok)
+        self.assertIn("regressed", out)
+
+
+class MissingAndNew(GateHarness):
+    def test_baselined_metric_missing_from_current_fails(self):
+        ok, out = self.run_gate({}, {"t": self.m(1.0, "lower")})
+        self.assertFalse(ok)
+        self.assertIn("missing from the current run", out)
+
+    def test_new_metric_reported_but_not_gated(self):
+        ok, out = self.run_gate(
+            {"t": self.m(1.0), "brand_new": self.m(9.9)}, {"t": self.m(1.0, "lower")}
+        )
+        self.assertTrue(ok)
+        self.assertIn("NEW", out)
+        self.assertIn("brand_new", out)
+
+    def test_wall_clock_never_gated(self):
+        # a 10x wall-clock "regression" must not fail the gate
+        ok, out = self.run_gate(
+            {"wall": self.m(10.0, unit="s_wall")},
+            {"wall": self.m(1.0, "lower", unit="s_wall")},
+        )
+        self.assertTrue(ok)
+        self.assertNotIn("wall", out.split(":", 2)[2] if out.count(":") >= 2 else out)
+
+
+class MalformedEntries(GateHarness):
+    """A bench-writer bug must be reported against its metric, not crash
+    the gate (the pre-hardening gate raised KeyError/TypeError here and
+    every other metric's verdict was lost)."""
+
+    def test_current_entry_without_value_key(self):
+        ok, out = self.run_gate({"t": {"unit": "s"}}, {"t": self.m(1.0, "lower")})
+        self.assertFalse(ok)
+        self.assertIn("malformed entry", out)
+        self.assertIn('"value"', out)
+
+    def test_current_entry_not_an_object(self):
+        ok, out = self.run_gate({"t": 3.14}, {"t": self.m(1.0, "lower")})
+        self.assertFalse(ok)
+        self.assertIn("malformed entry", out)
+
+    def test_current_null_value_reported(self):
+        ok, out = self.run_gate({"t": self.m(None)}, {"t": self.m(1.0, "lower")})
+        self.assertFalse(ok)
+        self.assertIn("null", out)
+
+    def test_current_non_numeric_value_reported(self):
+        ok, out = self.run_gate({"t": self.m("fast")}, {"t": self.m(1.0, "lower")})
+        self.assertFalse(ok)
+        self.assertIn("non-numeric", out)
+
+    def test_malformed_baseline_entry_reported(self):
+        ok, out = self.run_gate({"t": self.m(1.0)}, {"t": "oops"})
+        self.assertFalse(ok)
+        self.assertIn("baseline", out)
+        self.assertIn("malformed entry", out)
+
+    def test_malformed_new_entry_does_not_crash_listing(self):
+        ok, out = self.run_gate(
+            {"t": self.m(1.0), "weird_new": ["not", "an", "object"]},
+            {"t": self.m(1.0, "lower")},
+        )
+        self.assertTrue(ok)
+        self.assertIn("weird_new", out)
+
+    def test_other_metrics_still_gated_alongside_malformed_one(self):
+        ok, out = self.run_gate(
+            {"bad": {"no_value": 1}, "good": self.m(0.9), "slow": self.m(5.0)},
+            {
+                "bad": self.m(1.0, "lower"),
+                "good": self.m(1.0, "lower"),
+                "slow": self.m(1.0, "lower"),
+            },
+        )
+        self.assertFalse(ok)
+        self.assertIn("bad", out)
+        self.assertIn("slow", out)  # the real regression is still caught
+        self.assertIn("2 failing", out)
+
+
+class EntryValueUnit(unittest.TestCase):
+    def test_entry_value_accepts_ints_and_floats(self):
+        self.assertEqual(bench_gate.entry_value({"value": 3})[0], 3)
+        self.assertEqual(bench_gate.entry_value({"value": 3.5})[0], 3.5)
+
+    def test_entry_value_rejects_bool(self):
+        v, err = bench_gate.entry_value({"value": True})
+        self.assertIsNone(v)
+        self.assertIn("non-numeric", err)
+
+    def test_entry_unit_on_malformed_entry(self):
+        self.assertIsNone(bench_gate.entry_unit("not a dict"))
+        self.assertEqual(bench_gate.entry_unit({"unit": "s_wall"}), "s_wall")
+
+
+if __name__ == "__main__":
+    unittest.main()

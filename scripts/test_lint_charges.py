@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Unit tests for scripts/lint_charges.py (stdlib only).
+
+Run from the repo root:
+    python3 -m unittest discover -s scripts -p "test_*.py"
+"""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import lint_charges  # noqa: E402
+
+
+def lint(src, path="rust/src/somewhere/mod.rs"):
+    rules = [f[0] for f in lint_charges.lint_file(path, src.splitlines())]
+    return rules
+
+
+class ChargeClock(unittest.TestCase):
+    def test_compound_assign_on_clock_flagged(self):
+        self.assertEqual(lint("clock += dt;"), ["CHARGE-CLOCK"])
+        self.assertEqual(lint("worker_clock -= x;"), ["CHARGE-CLOCK"])
+        self.assertEqual(lint("vtime *= 2.0;"), ["CHARGE-CLOCK"])
+
+    def test_self_referential_assign_flagged(self):
+        self.assertEqual(lint("clock = clock.max(a) + h;"), ["CHARGE-CLOCK"])
+        self.assertEqual(lint("my_clock = my_clock + dt;"), ["CHARGE-CLOCK"])
+
+    def test_plain_rebinding_allowed(self):
+        self.assertEqual(lint("let mut new_clock = clock;"), [])
+        self.assertEqual(lint("new_clock = done;"), [])
+
+    def test_field_access_clocks_not_flagged(self):
+        # aggregation over clocks (mpi barrier bookkeeping, report maxing)
+        # is not a clock being spent
+        self.assertEqual(lint("st.max_clock = st.max_clock.max(clock);"), [])
+        self.assertEqual(lint("probe.vtime = probe.vtime.max(clock);"), [])
+
+    def test_audit_module_owns_the_rule(self):
+        self.assertEqual(lint("self.clock += secs;", "rust/src/audit/mod.rs"), [])
+        # bare-identifier form is flagged everywhere else
+        self.assertEqual(lint("clock += secs;", "rust/src/bsp/mod.rs"), ["CHARGE-CLOCK"])
+
+    def test_comments_and_strings_ignored(self):
+        self.assertEqual(lint("// clock += dt;"), [])
+        self.assertEqual(lint('let s = "clock += dt";'), [])
+        self.assertEqual(lint("/* vtime *= 2.0 */"), [])
+        self.assertEqual(lint("/*\nvtime *= 2.0;\n*/"), [])
+
+
+class ChargeBreakdown(unittest.TestCase):
+    def test_breakdown_field_arithmetic_flagged(self):
+        self.assertEqual(lint("bd.comm_queue += w;"), ["CHARGE-BD"])
+        self.assertEqual(lint("self.breakdown.load_stall += s;"), ["CHARGE-BD"])
+
+    def test_owners_exempt(self):
+        self.assertEqual(lint("self.compute += compute;", "rust/src/metrics/mod.rs"), [])
+        self.assertEqual(lint("self.bd.comm_hidden += h;", "rust/src/audit/mod.rs"), [])
+
+    def test_non_breakdown_fields_pass(self):
+        self.assertEqual(lint("bd.not_a_time_field += x;"), [])
+
+
+class ChargeCommReport(unittest.TestCase):
+    def test_comm_report_time_arithmetic_flagged(self):
+        self.assertEqual(lint("rep.sim_transfer += c.total();"), ["CHARGE-CR"])
+        self.assertEqual(lint("rep.real_kernel += t;"), ["CHARGE-CR"])
+        self.assertEqual(lint("self.sim_overlapped *= s;"), ["CHARGE-CR"])
+
+    def test_report_owner_exempt(self):
+        self.assertEqual(
+            lint("self.sim_kernel += sim_kernel;", "rust/src/collectives/mod.rs"), []
+        )
+
+    def test_waiver_shape_matches_strategy_files(self):
+        # the committed waivers cover exactly the strategy impls; this pins
+        # that a CHARGE-CR finding in one of them is waivable by path
+        rules = lint("rep.sim_transfer += bw;", "rust/src/collectives/ring.rs")
+        self.assertEqual(rules, ["CHARGE-CR"])
+
+
+class UnitSuffixes(unittest.TestCase):
+    def test_mixed_suffix_addition_flagged(self):
+        self.assertEqual(lint("let x = n_bytes + t_s;"), ["UNIT-SUFFIX"])
+        self.assertEqual(lint("if sz_kib < n_elems {"), ["UNIT-SUFFIX"])
+        self.assertEqual(lint("assert!(lat_us == dur_s);"), ["UNIT-SUFFIX"])
+
+    def test_same_suffix_passes(self):
+        self.assertEqual(lint("let x = a_bytes + b_bytes;"), [])
+
+    def test_conversion_via_multiplication_passes(self):
+        # a '*'/'/' between the identifiers converts units; only an
+        # operator *immediately* joining two suffixed identifiers fires
+        self.assertEqual(lint("let t = lat_us * 1e-6 + dur_s;"), [])
+        self.assertEqual(lint("let r = n_bytes / wire_gbps;"), [])
+
+    def test_bare_suffix_words_not_idents(self):
+        # `_s` alone or suffix-only names carry no unit prefix to mix
+        self.assertEqual(lint("let x = _s + n_bytes;"), [])
+
+
+class BreakdownLiteral(unittest.TestCase):
+    def test_rest_literal_flagged(self):
+        self.assertEqual(
+            lint("let b = Breakdown { compute, ..Default::default() };"), ["BD-LITERAL"]
+        )
+
+    def test_multiline_rest_literal_flagged(self):
+        src = "let b = Breakdown {\n    compute: 1.0,\n    ..base\n};"
+        self.assertEqual(lint(src), ["BD-LITERAL"])
+
+    def test_destructuring_allowed(self):
+        self.assertEqual(lint("let Breakdown { compute, .. } = b;"), [])
+
+    def test_exhaustive_literal_allowed(self):
+        src = (
+            "let b = Breakdown { compute: c, comm_transfer: t, comm_kernel: k,\n"
+            "    comm_queue: q, comm_hidden: h, host_reduce: r, h2d: d,\n"
+            "    load_stall: l, apply: a };"
+        )
+        self.assertEqual(lint(src), [])
+
+    def test_owners_exempt(self):
+        src = "let b = Breakdown { compute, ..Default::default() };"
+        self.assertEqual(lint(src, "rust/src/metrics/mod.rs"), [])
+
+
+class RepoIsClean(unittest.TestCase):
+    def test_tree_lints_clean_with_committed_waivers(self):
+        """The acceptance bar: zero unwaived findings on rust/src, and no
+        clock/Breakdown waivers at all."""
+        findings = []
+        for root, _dirs, files in os.walk(lint_charges.SRC):
+            for name in sorted(files):
+                if not name.endswith(".rs"):
+                    continue
+                p = os.path.join(root, name)
+                rel = os.path.relpath(p, lint_charges.REPO).replace(os.sep, "/")
+                with open(p, encoding="utf-8") as fh:
+                    findings.extend(lint_charges.lint_file(rel, fh.read().splitlines()))
+        waivers = lint_charges.load_waivers()
+        for rule, rel, line, msg in findings:
+            matched = any(w["rule"] == rule and w["path"] in rel for w in waivers)
+            self.assertTrue(matched, f"unwaived: {rel}:{line} [{rule}] {msg}")
+        for w in waivers:
+            self.assertEqual(
+                w["rule"], "CHARGE-CR",
+                "policy: only CommReport-producer waivers are acceptable; "
+                f"found a {w['rule']} waiver for {w['path']}",
+            )
+
+    def test_waiver_without_justification_rejected(self):
+        import tempfile
+
+        with tempfile.NamedTemporaryFile("w", suffix=".txt", delete=False) as f:
+            f.write("CHARGE-CR rust/src/collectives/ring.rs\n")  # no `# why`
+            bad = f.name
+        old = lint_charges.WAIVER_FILE
+        lint_charges.WAIVER_FILE = bad
+        try:
+            with self.assertRaises(SystemExit):
+                lint_charges.load_waivers()
+        finally:
+            lint_charges.WAIVER_FILE = old
+            os.unlink(bad)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -14,54 +14,24 @@ The script exits non-zero if the model's own invariants fail (S=4 not
 beating S=1, queue waits not collapsing, serve order not round-sliced).
 """
 
-import math
+import os
 import sys
 
-# --- LinkParams::default() -------------------------------------------------
-PCIE_GBPS = 12.0
-PCIE_LAT_US = 10.0
-QPI_GBPS = 16.0
-QPI_LAT_US = 1.0
-IB_FDR_GBPS = 6.8
-IB_QDR_GBPS = 4.0
-IB_LAT_US = 1.5
-HOST_MEM_GBPS = 10.0
-HOST_REDUCE_GBPS = 5.0
-GPU_REDUCE_GBPS = 150.0
-
-
-# --- cluster::Topology -----------------------------------------------------
-def copper(nodes):
-    """(node, socket, switch) per GPU: 2 sockets x 4 dies per node."""
-    gpus = []
-    for n in range(nodes):
-        for socket in range(2):
-            for _ in range(4):
-                gpus.append((n, socket, n * 2 + socket))
-    return {"gpus": gpus, "ib": IB_FDR_GBPS}
-
-
-def mosaic(nodes):
-    return {"gpus": [(n, 0, n * 2) for n in range(nodes)], "ib": IB_QDR_GBPS}
-
-
-def by_name(name, workers):
-    if name == "mosaic":
-        return mosaic(max(workers, 1))
-    if name == "copper":
-        return copper(-(-max(workers, 1) // 8))
-    raise ValueError(name)
-
-
-def path(topo, a, b):
-    ga, gb = topo["gpus"][a], topo["gpus"][b]
-    if a == b:
-        return "local"
-    if ga[0] != gb[0]:
-        return "network"
-    if ga[2] == gb[2]:
-        return "p2p"
-    return "qpi"
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from pricing_model import (  # noqa: E402  (shared simnet/cluster constants)
+    GPU_REDUCE_GBPS,
+    HOST_MEM_GBPS,
+    HOST_REDUCE_GBPS,
+    IB_LAT_US,
+    PCIE_GBPS,
+    PCIE_LAT_US,
+    QPI_GBPS,
+    QPI_LAT_US,
+    by_name,
+    copper,
+    path,
+    split_even,
+)
 
 
 # --- simnet::phase_time (single transfer, cuda_aware=true) -----------------
@@ -116,16 +86,6 @@ def server_handle_cost(transport, chunk_kib, pipeline, bytes_, down_wire):
     chunks = max(-(-bytes_ // (chunk_kib * 1024)), 1)
     hidden = max(min(full - full / chunks, down_wire * (chunks - 1) / chunks), 0.0)
     return full - hidden
-
-
-def split_even(n, k):
-    base, extra = n // k, n % k
-    out, off = [], 0
-    for i in range(k):
-        ln = base + (1 if i < extra else 0)
-        out.append((off, ln))
-        off += ln
-    return out
 
 
 def shard_prices(transport, topo, k, servers, elems, half, chunk_kib, pipeline, scale):

@@ -27,72 +27,28 @@ import json
 import os
 import sys
 
-# --- simnet::LinkParams::default() -----------------------------------------
-PCIE_GBPS = 12.0
-PCIE_LAT_US = 10.0
-QPI_GBPS = 16.0
-QPI_LAT_US = 1.0
-IB_FDR_GBPS = 6.8
-IB_QDR_GBPS = 4.0
-IB_LAT_US = 1.5
-HOST_MEM_GBPS = 10.0
-HOST_REDUCE_GBPS = 5.0
-GPU_REDUCE_GBPS = 150.0
-GPU_CAST_GBPS = 200.0
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from pricing_model import (  # noqa: E402  (shared simnet/cluster constants)
+    GPU_CAST_GBPS,
+    GPU_REDUCE_GBPS,
+    HOST_MEM_GBPS,
+    HOST_REDUCE_GBPS,
+    IB_LAT_US,
+    PCIE_GBPS,
+    PCIE_LAT_US,
+    QPI_GBPS,
+    QPI_LAT_US,
+    by_name,
+    copper,
+    mosaic,
+    split_even,
+)
 
 # --- collectives::wfbp constants -------------------------------------------
 BWD_FRACTION = 2.0 / 3.0
 CONV_COMPUTE_REUSE = 169.0
 
 PROBE_CAP = 1_000_000
-
-
-# --- cluster::Topology ------------------------------------------------------
-class Topo:
-    def __init__(self, gpus, ib_gbps):
-        self.gpus = gpus  # (node, socket, switch)
-        self.ib = ib_gbps
-
-    def path(self, a, b):
-        if a == b:
-            return "local"
-        ga, gb = self.gpus[a], self.gpus[b]
-        if ga[0] != gb[0]:
-            return "network"
-        if ga[2] == gb[2]:
-            return "p2p"
-        return "qpi"
-
-
-def copper(nodes):
-    gpus = []
-    for n in range(nodes):
-        for socket in range(2):
-            for _ in range(4):
-                gpus.append((n, socket, n * 2 + socket))
-    return Topo(gpus, IB_FDR_GBPS)
-
-
-def mosaic(nodes):
-    return Topo([(n, 0, n * 2) for n in range(nodes)], IB_QDR_GBPS)
-
-
-def by_name(name, workers):
-    if name == "mosaic":
-        return mosaic(max(workers, 1))
-    if name == "copper":
-        return copper(-(-max(workers, 1) // 8))
-    raise ValueError(name)
-
-
-def split_even(n, k):
-    base, extra = n // k, n % k
-    out, off = [], 0
-    for i in range(k):
-        ln = base + (1 if i < extra else 0)
-        out.append((off, ln))
-        off += ln
-    return out
 
 
 # --- simnet::phase_cost (device-level resource map) -------------------------
