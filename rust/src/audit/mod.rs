@@ -24,11 +24,13 @@
 //! | `LoadStall`     | yes   | blocked on the parallel loader                 |
 //! | `Apply`         | yes   | SUBGD `sgd_apply` execution (real, measured)   |
 //! | `CommHidden`    | no    | memo: comm hidden under backward compute       |
+//! | `LoadHidden`    | no    | memo: loader disk+decode hidden under compute  |
 //!
-//! `CommHidden` is the one memo kind: the clock never paid it, so it is
-//! charged through [`Ledger::charge_hidden`], which also records the
-//! serial-comm budget the hidden time must stay under ("hidden time is
-//! bounded by overlapped comm" — [`Ledger::audit`] checks it).
+//! `CommHidden` and `LoadHidden` are memo kinds: the clock never paid
+//! them, so they are charged through [`Ledger::charge_hidden`] /
+//! [`Ledger::charge_hidden_load`], which also record the serial budget
+//! each hidden memo must stay under ("hidden time is bounded by what the
+//! serial schedule would have paid" — [`Ledger::audit`] checks both).
 //!
 //! **Adding a new `ChargeKind`:** add the variant here, map it to a
 //! `Breakdown` field in [`Ledger::slot`] (the exhaustive match makes
@@ -57,6 +59,9 @@ pub enum ChargeKind {
     HostReduce,
     H2d,
     LoadStall,
+    /// Memo only — never advances the clock; charge via
+    /// [`Ledger::charge_hidden_load`].
+    LoadHidden,
     Apply,
 }
 
@@ -73,7 +78,7 @@ impl ChargeKind {
             | ChargeKind::H2d
             | ChargeKind::LoadStall
             | ChargeKind::Apply => true,
-            ChargeKind::CommHidden => false,
+            ChargeKind::CommHidden | ChargeKind::LoadHidden => false,
         }
     }
 
@@ -87,6 +92,7 @@ impl ChargeKind {
             ChargeKind::HostReduce => "host_reduce",
             ChargeKind::H2d => "h2d",
             ChargeKind::LoadStall => "load_stall",
+            ChargeKind::LoadHidden => "load_hidden",
             ChargeKind::Apply => "apply",
         }
     }
@@ -103,8 +109,10 @@ const NEG_EPS: f64 = 1e-12;
 pub struct Ledger {
     clock: f64,
     bd: Breakdown,
-    /// Serial-comm budget declared alongside hidden-time memos.
+    /// Serial-comm budget declared alongside `CommHidden` memos.
     hidden_budget: f64,
+    /// Serial-load budget declared alongside `LoadHidden` memos.
+    load_hidden_budget: f64,
     /// First recorded violation (also `debug_assert`ed at the site).
     err: Option<String>,
 }
@@ -142,6 +150,7 @@ impl Ledger {
             comm_hidden,
             host_reduce,
             load_stall,
+            load_hidden,
             h2d,
             apply,
         } = &mut self.bd;
@@ -153,6 +162,7 @@ impl Ledger {
             ChargeKind::CommHidden => comm_hidden,
             ChargeKind::HostReduce => host_reduce,
             ChargeKind::LoadStall => load_stall,
+            ChargeKind::LoadHidden => load_hidden,
             ChargeKind::H2d => h2d,
             ChargeKind::Apply => apply,
         }
@@ -166,8 +176,11 @@ impl Ledger {
             self.note(format!("[{tag}] bad {} charge: {secs}", kind.name()));
             return;
         }
-        if kind == ChargeKind::CommHidden {
-            self.note(format!("[{tag}] hidden time must go through charge_hidden"));
+        if !kind.on_clock() {
+            self.note(format!(
+                "[{tag}] memo kind {} must go through charge_hidden/charge_hidden_load",
+                kind.name()
+            ));
             return;
         }
         *self.slot(kind) += secs;
@@ -187,8 +200,11 @@ impl Ledger {
             ));
             return;
         }
-        if kind == ChargeKind::CommHidden {
-            self.note(format!("[{tag}] hidden time must go through charge_hidden"));
+        if !kind.on_clock() {
+            self.note(format!(
+                "[{tag}] memo kind {} must go through charge_hidden/charge_hidden_load",
+                kind.name()
+            ));
             return;
         }
         *self.slot(kind) += delta;
@@ -200,6 +216,21 @@ impl Ledger {
     /// hidden time came out of — the audit bound: comm cannot hide more
     /// time than the exchange would have cost serially.
     pub fn charge_hidden(&mut self, tag: &'static str, hidden: f64, overlapped_under: f64) {
+        self.memo(ChargeKind::CommHidden, tag, hidden, overlapped_under);
+    }
+
+    /// Memo `hidden` seconds of loader disk+decode that the parallel
+    /// loader child overlapped under compute (Alg. 1). `overlapped_under`
+    /// is the load time the direct path would have paid — the audit
+    /// bound: the loader cannot hide more time than the load cost.
+    pub fn charge_hidden_load(&mut self, tag: &'static str, hidden: f64, overlapped_under: f64) {
+        self.memo(ChargeKind::LoadHidden, tag, hidden, overlapped_under);
+    }
+
+    /// Shared memo path: off-clock charge + its serial budget. Exhaustive
+    /// over the memo kinds so a new one must pick a budget slot.
+    fn memo(&mut self, kind: ChargeKind, tag: &'static str, hidden: f64, overlapped_under: f64) {
+        debug_assert!(!kind.on_clock());
         if !hidden.is_finite() || hidden < -NEG_EPS {
             self.note(format!("[{tag}] bad hidden charge: {hidden}"));
             return;
@@ -210,8 +241,12 @@ impl Ledger {
             ));
             return;
         }
-        self.bd.comm_hidden += hidden;
-        self.hidden_budget += overlapped_under;
+        *self.slot(kind) += hidden;
+        match kind {
+            ChargeKind::CommHidden => self.hidden_budget += overlapped_under,
+            ChargeKind::LoadHidden => self.load_hidden_budget += overlapped_under,
+            _ => unreachable!("memo() is only called with memo kinds"),
+        }
     }
 
     /// Charge one exchange's [`CommReport`](crate::collectives::CommReport),
@@ -255,6 +290,12 @@ impl Ledger {
             return Err(format!(
                 "hidden {} exceeds overlapped-comm budget {}",
                 self.bd.comm_hidden, self.hidden_budget
+            ));
+        }
+        if self.bd.load_hidden > self.load_hidden_budget + tol {
+            return Err(format!(
+                "hidden load {} exceeds overlapped-load budget {}",
+                self.bd.load_hidden, self.load_hidden_budget
             ));
         }
         Ok(())
@@ -368,6 +409,36 @@ mod tests {
     }
 
     #[test]
+    fn hidden_load_is_memo_and_budget_bounded() {
+        let mut l = Ledger::new();
+        l.charge(ChargeKind::LoadStall, "t", 0.1);
+        l.charge_hidden_load("t", 0.3, 0.4);
+        assert!((l.clock() - 0.1).abs() < 1e-12, "hidden load must not advance the clock");
+        let bd = l.breakdown();
+        assert!((bd.load_hidden - 0.3).abs() < 1e-12);
+        assert!((bd.total() - 0.1).abs() < 1e-12, "memo stays out of total()");
+        // the two memo budgets are independent: comm budget unused here
+        assert!((bd.comm_hidden - 0.0).abs() < 1e-12);
+        l.audit().unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
+    fn hidden_load_beyond_budget_is_a_violation() {
+        let mut l = Ledger::new();
+        l.charge_hidden_load("t", 1.0, 0.5);
+        assert!(l.audit().is_err());
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
+    fn memo_kind_rejected_by_charge() {
+        let mut l = Ledger::new();
+        l.charge(ChargeKind::LoadHidden, "t", 0.5);
+        assert!(l.audit().is_err());
+    }
+
+    #[test]
     #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
     fn negative_charge_is_a_violation() {
         let mut l = Ledger::new();
@@ -424,10 +495,11 @@ mod tests {
             l.charge(*k, "t", (i + 1) as f64);
         }
         assert!(!ChargeKind::CommHidden.on_clock());
+        assert!(!ChargeKind::LoadHidden.on_clock());
         let (clock, bd) = l.finish();
         assert!((clock - 36.0).abs() < 1e-12);
         let named: Vec<f64> = bd.components().iter().map(|&(_, v)| v).collect();
-        // 8 on-clock slots hold 1..=8, comm_hidden stays 0
+        // 8 on-clock slots hold 1..=8, the memo slots stay 0
         let mut nonzero: Vec<f64> = named.iter().copied().filter(|v| *v > 0.0).collect();
         nonzero.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(nonzero, (1..=8).map(|i| i as f64).collect::<Vec<_>>());

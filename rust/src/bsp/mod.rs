@@ -29,7 +29,7 @@ use crate::collectives::{
     wfbp, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan,
 };
 use crate::data::{FeatureDataset, ImageDataset, ImageSpec, TokenStream};
-use crate::loader::ParallelLoader;
+use crate::loader::{DecodeCache, LoaderConfig, LoaderReport, ParallelLoader};
 use crate::metrics::Breakdown;
 use crate::models;
 use crate::mpi::{self, Comm};
@@ -60,6 +60,12 @@ pub struct BspConfig {
     pub seed: u64,
     /// parallel loader child (Alg. 1) vs direct synchronous loading
     pub use_loader: bool,
+    /// in-flight batch requests kept at the loader child (1 ≡ the seed's
+    /// hardcoded double buffer); must be ≥ 1 when `use_loader` is set
+    pub prefetch_depth: usize,
+    /// decode-cache capacity in MiB (0 = no cache); applies to both the
+    /// parallel child and the direct path
+    pub cache_mib: usize,
     /// scale exchange time to this full-scale model's parameter bytes
     pub sim_model: Option<String>,
     /// where shard batch files are written (default: temp dir)
@@ -116,6 +122,8 @@ impl BspConfig {
             cuda_aware: true,
             seed: 42,
             use_loader: false,
+            prefetch_depth: 2,
+            cache_mib: 0,
             sim_model: None,
             data_dir: None,
             exchange_momentum: false,
@@ -160,6 +168,9 @@ pub struct BspReport {
     pub overlap_fraction: f64,
     pub final_train_loss: f64,
     pub final_val_err: f64,
+    /// input-pipeline summary (Some for image workloads, rank 0's view);
+    /// `prefetch_depth == 0` marks the direct (synchronous) path
+    pub loader: Option<LoaderReport>,
 }
 
 impl BspReport {
@@ -179,6 +190,8 @@ enum WorkerData {
     Images {
         shard: crate::data::ShardFiles,
         loader: Option<ParallelLoader>,
+        /// direct-path decode cache (the parallel child owns its own)
+        cache: Option<DecodeCache>,
         dataset: Arc<ImageDataset>,
     },
     /// flat-feature models (MLP): in-memory batches, no file loader
@@ -202,6 +215,11 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
         .clone();
     if cfg.batch == 0 {
         cfg.batch = info.batch;
+    }
+    if cfg.use_loader && cfg.prefetch_depth == 0 {
+        return Err(anyhow!(
+            "use_loader requires prefetch_depth >= 1 (1 is the classic double buffer)"
+        ));
     }
     let arts = models::artifacts_for(&info, &cfg.model, cfg.batch)?;
     let topo = Topology::by_name(&cfg.topology, cfg.workers)
@@ -373,28 +391,7 @@ fn worker_main(
     // --- data source ---------------------------------------------------------
     let mut data = match (&dataset, &features, &stream) {
         (None, Some(fd), None) => WorkerData::Features { dataset: fd.clone() },
-        (Some(ds), None, None) => {
-            // enough distinct files for the run, cycled (an "epoch" = one pass)
-            let n_files = cfg.iters.min(64).max(1);
-            let shard =
-                ds.write_shard(data_dir, rank, cfg.workers, cfg.batch, n_files)?;
-            let loader = if cfg.use_loader {
-                let l = ParallelLoader::spawn(
-                    shard.spec.clone(),
-                    shard.mean.clone(),
-                    cfg.batch,
-                    *links,
-                    cfg.seed ^ rank as u64,
-                );
-                l.set_mode("train");
-                // prime the double buffer with the first file (Alg. 1 step 7)
-                l.request(shard.files[0].clone());
-                Some(l)
-            } else {
-                None
-            };
-            WorkerData::Images { shard, loader, dataset: ds.clone() }
-        }
+        (Some(ds), None, None) => images_data(ds, data_dir, rank, cfg, links)?,
         (None, None, Some(ts)) => {
             WorkerData::Tokens { stream: ts.clone(), seq: info.input_shape[1] }
         }
@@ -411,10 +408,8 @@ fn worker_main(
     for iter in 0..cfg.iters {
         let lr = cfg.lr.at(iter) as f32;
 
-        // --- load ------------------------------------------------------------
-        let (x, y, load_stall, h2d) = next_batch(&mut data, cfg, rank, iter, &mut rng)?;
-        led.charge(ChargeKind::LoadStall, "bsp.load", load_stall);
-        led.charge(ChargeKind::H2d, "bsp.h2d", h2d);
+        // --- load (charges LoadStall/H2d/LoadHidden on the ledger) -----------
+        let (x, y) = next_batch(&mut data, cfg, rank, iter, &mut rng, links, &mut led)?;
 
         // --- compute -----------------------------------------------------------
         match cfg.scheme {
@@ -558,18 +553,32 @@ fn worker_main(
     // final clock reconciliation (straggle is peer waiting, like any barrier)
     let reconciled = comm.barrier(led.clock());
     led.advance_to(ChargeKind::CommQueue, "bsp.final_barrier", reconciled);
-    if let WorkerData::Images { loader: Some(ref mut l), .. } = data {
-        // the per-iteration stall charges already cover the loader's total
-        // (each ready() call accounts its own wait); the child can only
-        // accrue more stall time after the last collect, never less
-        debug_assert!(
-            l.stall_time >= led.breakdown().load_stall - 1e-9,
-            "loader stall accounting regressed: {} < {}",
-            l.stall_time,
-            led.breakdown().load_stall
-        );
-        l.stop();
-    }
+    let loader_report = match &mut data {
+        WorkerData::Images { loader: Some(l), .. } => {
+            // the per-iteration stall charges already cover the loader's
+            // total (each ready() call accounts its own wait); the child
+            // can only accrue more stall time after the last collect,
+            // never less
+            debug_assert!(
+                l.stall_time >= led.breakdown().load_stall - 1e-9,
+                "loader stall accounting regressed: {} < {}",
+                l.stall_time,
+                led.breakdown().load_stall
+            );
+            let rep = l.report();
+            l.stop();
+            Some(rep)
+        }
+        WorkerData::Images { loader: None, cache, .. } => Some(LoaderReport {
+            batches_loaded: cfg.iters,
+            stall_time: 0.0,
+            load_time: led.breakdown().load_stall,
+            h2d_sim: led.breakdown().h2d,
+            prefetch_depth: 0, // marks the direct (synchronous) path
+            cache: cache.as_ref().map(|c| c.stats()).unwrap_or_default(),
+        }),
+        _ => None,
+    };
 
     let final_val_err = curve.last().map(|p| p.val_err).unwrap_or(f64::NAN);
     let (clock, bd) = led.finish();
@@ -590,48 +599,111 @@ fn worker_main(
         overlap_fraction,
         final_train_loss: last_loss,
         final_val_err,
+        loader: loader_report,
     })
 }
 
-/// Produce the next (x, y) batch + (stall, h2d) charges.
+/// Build the on-disk images data source: a fingerprint-keyed segment
+/// (written once, reused across runs/ranks via `ensure_shard`), plus
+/// either a parallel loader child primed with `prefetch_depth` requests or
+/// a direct-path decode cache.
+fn images_data(
+    ds: &Arc<ImageDataset>,
+    data_dir: &PathBuf,
+    rank: usize,
+    cfg: &BspConfig,
+    links: &LinkParams,
+) -> Result<WorkerData> {
+    // enough distinct files for the run, cycled (an "epoch" = one pass)
+    let n_files = cfg.iters.min(64).max(1);
+    let shard = ds.ensure_shard(data_dir, rank, cfg.workers, cfg.batch, n_files)?;
+    let loader = if cfg.use_loader {
+        let l = ParallelLoader::spawn(
+            shard.spec.clone(),
+            shard.mean.clone(),
+            cfg.batch,
+            *links,
+            cfg.seed ^ rank as u64,
+            LoaderConfig { prefetch_depth: cfg.prefetch_depth, cache_mib: cfg.cache_mib },
+        );
+        l.set_mode("train");
+        // prime Q in-flight requests (Alg. 1 step 7, generalized from the
+        // seed's 1-deep double buffer)
+        for j in 0..cfg.prefetch_depth.min(cfg.iters) {
+            l.request(shard.files[j % shard.files.len()].clone());
+        }
+        Some(l)
+    } else {
+        None
+    };
+    let cache = if !cfg.use_loader && cfg.cache_mib > 0 {
+        Some(DecodeCache::new(cfg.cache_mib))
+    } else {
+        None
+    };
+    Ok(WorkerData::Images { shard, loader, cache, dataset: ds.clone() })
+}
+
+/// Produce the next (x, y) batch, charging the ledger for everything the
+/// load cost: `LoadStall` (time the worker was blocked), `H2d` (PCIe
+/// staging, priced on the run's configured fabric on *both* paths — the
+/// crossing is real either way), and the `LoadHidden` memo for child
+/// disk+decode work that hid under earlier compute (parallel path only).
 fn next_batch(
     data: &mut WorkerData,
     cfg: &BspConfig,
     rank: usize,
     iter: usize,
     rng: &mut crate::util::Rng,
-) -> Result<(HostTensor, HostTensor, f64, f64)> {
+    links: &LinkParams,
+    led: &mut Ledger,
+) -> Result<(HostTensor, HostTensor)> {
     match data {
-        WorkerData::Images { shard, loader, .. } => {
+        WorkerData::Images { shard, loader, cache, .. } => {
             let file_idx = iter % shard.files.len();
             let labels: Vec<i32> =
                 shard.labels[file_idx * shard.batch..(file_idx + 1) * shard.batch].to_vec();
             let y = HostTensor::i32(vec![cfg.batch], labels);
             match loader {
                 Some(l) => {
-                    // Alg. 1 protocol: the request for file i+1 was issued
-                    // before training on file i; collect i, request i+1.
+                    // Alg. 1 protocol, generalized: requests for files
+                    // i..i+Q went out before training on file i — collect
+                    // i, then request i+Q so Q stay in flight.
                     let stall0 = l.stall_time;
                     let b = l.ready()?;
                     let stall = l.stall_time - stall0;
-                    let next_idx = (iter + 1) % shard.files.len();
-                    if iter + 1 < cfg.iters {
-                        l.request(shard.files[next_idx].clone());
+                    let next_req = iter + cfg.prefetch_depth.max(1);
+                    if next_req < cfg.iters {
+                        l.request(shard.files[next_req % shard.files.len()].clone());
                     }
-                    Ok((b.x, y, stall, 0.0)) // h2d overlapped by the child
+                    led.charge(ChargeKind::LoadStall, "bsp.load", stall);
+                    // child work beyond the stall hid under earlier
+                    // compute: a memo, never on the clock. The H2D charge
+                    // is real on this path too — it used to vanish here.
+                    led.charge_hidden_load(
+                        "bsp.load_hidden",
+                        (b.load_time - stall).max(0.0),
+                        b.load_time,
+                    );
+                    led.charge(ChargeKind::H2d, "bsp.h2d", b.h2d_sim);
+                    Ok((b.x, y))
                 }
                 None => {
-                    // direct path: load + preprocess + H2D all on the worker
+                    // direct path: load + preprocess + H2D all on the
+                    // worker's clock, priced on the run's fabric
                     let b = crate::loader::load_one(
                         &shard.spec,
                         &shard.mean,
                         cfg.batch,
-                        &LinkParams::default(),
+                        links,
                         rng,
                         "train",
                         &shard.files[file_idx],
+                        cache.as_mut(),
                     )?;
-                    Ok((b.x, y, b.load_time, b.h2d_sim))
+                    led.charge(ChargeKind::LoadStall, "bsp.load", b.load_time);
+                    led.charge(ChargeKind::H2d, "bsp.h2d", b.h2d_sim);
+                    Ok((b.x, y))
                 }
             }
         }
@@ -640,8 +712,6 @@ fn next_batch(
             Ok((
                 HostTensor::f32(vec![cfg.batch, dataset.dim], xs),
                 HostTensor::i32(vec![cfg.batch], ys),
-                0.0,
-                0.0,
             ))
         }
         WorkerData::Tokens { stream, seq } => {
@@ -649,7 +719,7 @@ fn next_batch(
             let (xs, ys) =
                 stream.lm_batch(1000 + (iter * cfg.workers + rank) as u64, 0, cfg.batch, *seq);
             let shape = vec![cfg.batch, *seq];
-            Ok((HostTensor::i32(shape.clone(), xs), HostTensor::i32(shape, ys), 0.0, 0.0))
+            Ok((HostTensor::i32(shape.clone(), xs), HostTensor::i32(shape, ys)))
         }
     }
 }
@@ -751,6 +821,81 @@ mod tests {
             cfg.scheme = Scheme::Subgd;
             assert!(cfg.validate_overlap().is_ok());
         }
+    }
+
+    #[test]
+    fn direct_path_prices_h2d_on_the_run_fabric() {
+        // ISSUE 7 satellite: the direct path used to price H2D with
+        // LinkParams::default() regardless of the run's fabric
+        let d = Arc::new(ImageDataset::new(ImageSpec::default()));
+        let tmp =
+            std::env::temp_dir().join(format!("tmpi_bsp_h2d_fabric_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let mut cfg = BspConfig::quick("alexnet", 1, 2);
+        cfg.batch = 4;
+        let links = LinkParams { pcie_gbps: 6.0, pcie_lat_us: 25.0, ..LinkParams::default() };
+        let mut data = images_data(&d, &tmp, 0, &cfg, &links).unwrap();
+        let mut rng = crate::util::Rng::new(7);
+        let mut led = Ledger::new();
+        let (x, _y) = next_batch(&mut data, &cfg, 0, 0, &mut rng, &links, &mut led).unwrap();
+        let h2d_bytes = 4 * x.as_f32().unwrap().len() as u64;
+        let got = led.breakdown().h2d;
+        let want = links.pcie_time(h2d_bytes);
+        assert!((got - want).abs() < 1e-15, "priced {got}, fabric says {want}");
+        let default_priced = LinkParams::default().pcie_time(h2d_bytes);
+        assert!(
+            (got - default_priced).abs() > 1e-9,
+            "test fabric must be distinguishable from the default"
+        );
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn parallel_loader_charges_h2d_like_for_like_with_direct() {
+        // ISSUE 7 satellite: the parallel path used to drop simulated H2D
+        // entirely (returned 0.0 as "overlapped")
+        let d = Arc::new(ImageDataset::new(ImageSpec::default()));
+        let tmp =
+            std::env::temp_dir().join(format!("tmpi_bsp_h2d_ll_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let links = LinkParams::default();
+        let mut cfg = BspConfig::quick("alexnet", 1, 3);
+        cfg.batch = 4;
+        cfg.prefetch_depth = 2;
+
+        let mut led_direct = Ledger::new();
+        {
+            let mut data = images_data(&d, &tmp, 0, &cfg, &links).unwrap();
+            let mut rng = crate::util::Rng::new(7);
+            for iter in 0..cfg.iters {
+                next_batch(&mut data, &cfg, 0, iter, &mut rng, &links, &mut led_direct)
+                    .unwrap();
+            }
+        }
+        cfg.use_loader = true;
+        let mut led_par = Ledger::new();
+        {
+            let mut data = images_data(&d, &tmp, 0, &cfg, &links).unwrap();
+            let mut rng = crate::util::Rng::new(7);
+            for iter in 0..cfg.iters {
+                next_batch(&mut data, &cfg, 0, iter, &mut rng, &links, &mut led_par).unwrap();
+            }
+            if let WorkerData::Images { loader: Some(l), .. } = &mut data {
+                l.stop();
+            }
+        }
+        let (bd_d, bd_p) = (led_direct.breakdown(), led_par.breakdown());
+        assert!(bd_p.h2d > 0.0, "parallel path must charge H2D, not drop it");
+        assert!(
+            (bd_p.h2d - bd_d.h2d).abs() < 1e-15,
+            "loader-vs-direct must compare like-for-like: {} vs {}",
+            bd_p.h2d,
+            bd_d.h2d
+        );
+        // the overlap win is a memo on the parallel path only
+        assert!(bd_p.load_hidden >= 0.0);
+        assert_eq!(bd_d.load_hidden, 0.0);
+        let _ = std::fs::remove_dir_all(&tmp);
     }
 }
 

@@ -184,6 +184,12 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
     if let Some(v) = t.get("use_loader") {
         cfg.use_loader = v.as_bool()?;
     }
+    if let Some(v) = t.get("prefetch_depth") {
+        cfg.prefetch_depth = v.as_usize()?;
+    }
+    if let Some(v) = t.get("cache_mib") {
+        cfg.cache_mib = v.as_usize()?;
+    }
     if let Some(v) = t.get("sim_model") {
         cfg.sim_model = Some(v.as_str()?.to_string());
     }
@@ -316,6 +322,9 @@ cuda_aware = true
 sim_model = "alexnet"
 chunk_kib = 4096
 pipeline = true
+use_loader = true
+prefetch_depth = 4
+cache_mib = 64
 
 [easgd]
 model = "mlp"
@@ -347,6 +356,9 @@ transport = "platoon-shm"
         assert_eq!(cfg.sim_model.as_deref(), Some("alexnet"));
         assert_eq!(cfg.chunk_kib, 4096);
         assert!(cfg.pipeline);
+        assert!(cfg.use_loader);
+        assert_eq!(cfg.prefetch_depth, 4);
+        assert_eq!(cfg.cache_mib, 64);
         match cfg.lr {
             LrSchedule::StepDecay { base, every, .. } => {
                 assert!((base - 0.005).abs() < 1e-12);

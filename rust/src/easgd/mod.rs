@@ -261,6 +261,17 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
         Arc::new(EasgdData::Images(ImageDataset::new(spec)))
     };
 
+    // images are staged host->device every iteration (same PCIe pricing as
+    // the BSP loader, on this run's fabric); flat-feature batches are tiny
+    // and in-memory, so they carry no H2D charge
+    let h2d_s = match dataset.as_ref() {
+        EasgdData::Images(d) => {
+            let s = &d.spec;
+            links.pcie_time((cfg.batch * s.channels * s.crop_hw * s.crop_hw * 4) as u64)
+        }
+        EasgdData::Features(_) => 0.0,
+    };
+
     // world: ranks 0..k-1 workers, ranks k..k+S-1 shard servers
     let world = mpi::world(plan.world_size());
     let mut handles = Vec::new();
@@ -293,6 +304,7 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
             handles.push(thread::spawn(move || -> Result<RankOut> {
                 let out = worker_main(
                     rank, comm, &rt, &cfg, &plan, &prices, &init, &info, &arts, &dataset,
+                    h2d_s,
                 )?;
                 Ok(RankOut::Worker(out))
             }));
@@ -421,6 +433,7 @@ fn worker_main(
     info: &crate::runtime::ModelInfo,
     arts: &models::ModelArtifacts,
     dataset: &Arc<EasgdData>,
+    h2d_s: f64,
 ) -> Result<WorkerOut> {
     let mut params = (**init).clone();
     let mut momentum = vec![0.0f32; params.len()];
@@ -446,8 +459,12 @@ fn worker_main(
 
     for iter in 0..cfg.iters {
         let lr = cfg.lr.at(iter) as f32;
-        // in-memory batch (EASGD study focuses on comm, not the loader)
+        // in-memory batch (EASGD study focuses on comm, not the loader) —
+        // but the device staging is still a real PCIe crossing for images
         let (xs, ys, shape) = dataset.train_batch(&mut rng, cfg.batch);
+        if h2d_s > 0.0 {
+            led.charge(crate::audit::ChargeKind::H2d, "easgd.h2d", h2d_s);
+        }
         let res = rt.exec(
             &arts.train,
             vec![

@@ -105,13 +105,38 @@
 //! the point. Select with `exchange = "hier:asa16"` / `--exchange
 //! hier:ring` plus `--chunk-kib`.
 //!
+//! ## Data pipeline at scale (`loader` / `data`)
+//!
+//! The paper's Algorithm 1 (§3.3) — a loader child process per worker that
+//! overlaps disk + decode with training — generalizes here from the seed's
+//! hardcoded double buffer to a **prefetch depth Q**
+//! ([`loader::LoaderConfig::prefetch_depth`], `--prefetch-depth`): the
+//! worker keeps Q batch requests in flight at its [`loader::ParallelLoader`]
+//! child, so slack from cheap batches absorbs decode spikes a 1-deep
+//! pipeline stalls on. [`data::ImageDataset::ensure_shard`] makes the
+//! dataset epoch-scale: segment files are keyed by a (spec, shard)
+//! [`data::fingerprint`], written once (tmp+rename, `MANIFEST` last) and
+//! reused by every later run; [`data::EpochPlan`] addresses millions of
+//! samples by deterministic index ranges without materializing them. A
+//! [`loader::DecodeCache`] (`--cache-mib`) holds raw file bytes under LRU
+//! with hit/miss/evict counters ([`loader::CacheStats`], surfaced in
+//! [`loader::LoaderReport`] / `BspReport::loader`). Accounting is honest on
+//! both paths: H2D staging is charged on-clock ([`audit::ChargeKind::H2d`])
+//! whether or not the child overlapped the load — the PCIe crossing is
+//! real either way — while the hidden disk+decode share is memo'd via
+//! [`audit::Ledger::charge_hidden_load`] into
+//! [`metrics::Breakdown::load_hidden`], bounded by the load it hid under.
+//! The [`loader::sim`] DES twin prices the whole pipeline
+//! (`bench_loader` sweeps depth × cache × k) and is mirrored exactly by
+//! `scripts/pricing_model.py`, which pins every test band.
+//!
 //! ## Charge-conservation audit (`audit::Ledger`)
 //!
 //! Every correctness bug this repo has shipped was a cost-accounting bug,
 //! so virtual time is now spent through exactly one API: engines call
 //! [`audit::Ledger::charge`] with an [`audit::ChargeKind`] (compute,
 //! comm_transfer, comm_kernel, comm_queue, comm_hidden, host_reduce, h2d,
-//! load_stall, apply) and a source tag, and the ledger derives both the
+//! load_stall, load_hidden, apply) and a source tag, and the ledger derives both the
 //! clock and [`metrics::Breakdown`] from the same charge stream —
 //! `breakdown == clock` holds by construction, barrier straggle included
 //! (charged to `comm_queue`). [`audit::Ledger::audit`] additionally checks

@@ -1,20 +1,33 @@
-//! Parallel data loading — the paper's Algorithm 1 (§3.3).
+//! Parallel data loading — the paper's Algorithm 1 (§3.3), production shape.
 //!
 //! Each training worker spawns a **loader child** (the paper uses
 //! `MPI_Spawn` + an intra-communicator; here a thread + channel pair, same
 //! protocol). The child loads a batch file from disk, subtracts the mean
 //! image, crops and mirrors according to the mode, "transfers" to the GPU
 //! (a real HostTensor build + a simulated H2D charge), then waits for the
-//! next filename before flipping the double buffer — so steps 9–13 of
-//! Alg. 1 overlap with the training process's fwd/bwd on the previous
-//! batch.
+//! next filename — so steps 9–13 of Alg. 1 overlap with the training
+//! process's fwd/bwd on earlier batches.
+//!
+//! The seed's hardcoded double buffer generalizes to a **prefetch depth Q**
+//! ([`LoaderConfig::prefetch_depth`]): the worker keeps Q requests in
+//! flight, so slack from cheap batches absorbs decode spikes that a 1-deep
+//! pipeline would stall on. A [`DecodeCache`] (raw file bytes, LRU) lets
+//! repeat epochs skip disk entirely; it caches *stored* bytes, never
+//! decoded tensors, because train-mode crop/mirror is randomized per visit
+//! and caching outputs would freeze the augmentation.
 //!
 //! The worker-side handle measures its own blocked time on `ready()` — the
-//! *load stall*, i.e. the part of loading the overlap failed to hide. The
-//! `direct` mode (no child, synchronous load) is the ablation baseline.
+//! *load stall*, i.e. the part of loading the overlap failed to hide — and
+//! summarizes the run in a [`LoaderReport`]. The `direct` mode (no child,
+//! synchronous load) is the ablation baseline. The [`sim`] submodule is the
+//! runtime-free DES twin of this pipeline, priced through `audit::Ledger`
+//! and mirrored line-for-line by `scripts/pricing_model.py`.
 
-use std::path::PathBuf;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -24,6 +37,134 @@ use crate::data::{crop, ImageSpec};
 use crate::runtime::HostTensor;
 use crate::simnet::LinkParams;
 use crate::util::Rng;
+
+/// Pipeline knobs (CLI: `--prefetch-depth`, `--cache-mib`).
+#[derive(Clone, Copy, Debug)]
+pub struct LoaderConfig {
+    /// Number of in-flight batch requests the worker keeps queued at the
+    /// child. 1 ≡ the seed's double buffer (request i+1 issued right after
+    /// collecting batch i, before computing on it). Must be ≥ 1.
+    pub prefetch_depth: usize,
+    /// Decode-cache capacity in MiB; 0 disables the cache.
+    pub cache_mib: usize,
+}
+
+impl Default for LoaderConfig {
+    fn default() -> Self {
+        LoaderConfig { prefetch_depth: 2, cache_mib: 0 }
+    }
+}
+
+/// Shared hit/miss/evict counters — the child owns the cache, the worker
+/// handle snapshots these for the [`LoaderReport`].
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    resident_bytes: AtomicU64,
+    capacity_bytes: AtomicU64,
+}
+
+impl CacheCounters {
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            capacity_bytes: self.capacity_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time cache metrics (all-zero when the cache is disabled).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub resident_bytes: u64,
+    pub capacity_bytes: u64,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0 when the cache never fielded a fetch.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// LRU cache of **raw stored batch files** keyed by path. Hits skip disk
+/// I/O; decode/augment always reruns (see module docs for why outputs are
+/// never cached). Files larger than the whole capacity bypass the cache.
+pub struct DecodeCache {
+    capacity: u64,
+    resident: u64,
+    map: HashMap<PathBuf, Vec<u8>>,
+    /// LRU order, front = oldest.
+    order: Vec<PathBuf>,
+    counters: Arc<CacheCounters>,
+}
+
+impl DecodeCache {
+    pub fn new(cache_mib: usize) -> DecodeCache {
+        DecodeCache::with_capacity_bytes((cache_mib as u64) << 20)
+    }
+
+    /// Byte-granular capacity (tests; `new` is the MiB-knob front end).
+    pub fn with_capacity_bytes(capacity: u64) -> DecodeCache {
+        let counters = Arc::new(CacheCounters::default());
+        counters.capacity_bytes.store(capacity, Ordering::Relaxed);
+        DecodeCache { capacity, resident: 0, map: HashMap::new(), order: Vec::new(), counters }
+    }
+
+    /// Clone of the shared counter block — grab before moving the cache
+    /// into a loader child.
+    pub fn counters(&self) -> Arc<CacheCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.counters.snapshot()
+    }
+
+    /// Fetch the raw bytes of `file`, from cache or disk. Returns
+    /// `(bytes, hit)`.
+    pub fn fetch(&mut self, file: &Path) -> Result<(Vec<u8>, bool)> {
+        if let Some(bytes) = self.map.get(file) {
+            let out = bytes.clone();
+            if let Some(pos) = self.order.iter().position(|p| p == file) {
+                let p = self.order.remove(pos);
+                self.order.push(p);
+            }
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((out, true));
+        }
+        let bytes = std::fs::read(file).map_err(|e| anyhow!("read {file:?}: {e}"))?;
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        let len = bytes.len() as u64;
+        if len <= self.capacity {
+            while self.resident + len > self.capacity {
+                let oldest = self.order.remove(0);
+                if let Some(old) = self.map.remove(&oldest) {
+                    self.resident -= old.len() as u64;
+                }
+                self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            self.map.insert(file.to_path_buf(), bytes.clone());
+            self.order.push(file.to_path_buf());
+            self.resident += len;
+            self.counters.resident_bytes.store(self.resident, Ordering::Relaxed);
+        }
+        Ok((bytes, false))
+    }
+}
 
 /// Worker -> loader messages (Alg. 1's `recv`).
 enum Ctl {
@@ -41,6 +182,24 @@ pub struct LoadedBatch {
     pub load_time: f64,
     /// simulated H2D time (PCIe) for the preprocessed bytes
     pub h2d_sim: f64,
+    /// whether the raw file bytes came from the decode cache
+    pub cache_hit: bool,
+}
+
+/// End-of-run pipeline summary (surfaced as `BspReport::loader`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoaderReport {
+    /// successfully delivered batches (child `Err`s are not counted)
+    pub batches_loaded: usize,
+    /// real seconds the worker spent blocked in `ready()` on successes
+    pub stall_time: f64,
+    /// total child-side load seconds across successful batches
+    pub load_time: f64,
+    /// total simulated H2D seconds across successful batches
+    pub h2d_sim: f64,
+    /// 0 = direct (synchronous) path, ≥ 1 = parallel child
+    pub prefetch_depth: usize,
+    pub cache: CacheStats,
 }
 
 /// Worker-side handle to its loader child.
@@ -49,20 +208,51 @@ pub struct ParallelLoader {
     rx: Receiver<Result<LoadedBatch>>,
     handle: Option<JoinHandle<()>>,
     /// accumulated time the worker spent blocked waiting on the child
+    /// (successful deliveries only)
     pub stall_time: f64,
     pub batches_loaded: usize,
+    /// total child-side load seconds (successful deliveries only)
+    pub load_time: f64,
+    /// total simulated H2D seconds (successful deliveries only)
+    pub h2d_sim: f64,
+    prefetch_depth: usize,
+    cache_counters: Option<Arc<CacheCounters>>,
 }
 
 impl ParallelLoader {
     /// Spawn the child (Alg. 1 start) with the shard's static context.
-    pub fn spawn(spec: ImageSpec, mean: Vec<f32>, batch: usize, links: LinkParams, seed: u64) -> ParallelLoader {
+    pub fn spawn(
+        spec: ImageSpec,
+        mean: Vec<f32>,
+        batch: usize,
+        links: LinkParams,
+        seed: u64,
+        cfg: LoaderConfig,
+    ) -> ParallelLoader {
         let (tx, crx) = channel::<Ctl>();
         let (ctx_, rx) = channel::<Result<LoadedBatch>>();
+        let (cache, cache_counters) = if cfg.cache_mib > 0 {
+            let c = DecodeCache::new(cfg.cache_mib);
+            let counters = c.counters();
+            (Some(c), Some(counters))
+        } else {
+            (None, None)
+        };
         let handle = std::thread::Builder::new()
             .name("loader-child".into())
-            .spawn(move || child_main(spec, mean, batch, links, seed, crx, ctx_))
+            .spawn(move || child_main(spec, mean, batch, links, seed, cache, crx, ctx_))
             .expect("spawn loader child");
-        ParallelLoader { tx, rx, handle: Some(handle), stall_time: 0.0, batches_loaded: 0 }
+        ParallelLoader {
+            tx,
+            rx,
+            handle: Some(handle),
+            stall_time: 0.0,
+            batches_loaded: 0,
+            load_time: 0.0,
+            h2d_sim: 0.0,
+            prefetch_depth: cfg.prefetch_depth.max(1),
+            cache_counters,
+        }
     }
 
     /// Set the mode (Alg. 1 step 2/6).
@@ -75,14 +265,32 @@ impl ParallelLoader {
         let _ = self.tx.send(Ctl::File(file));
     }
 
-    /// Block until the previously-requested batch is resident ("notify
-    /// training process to proceed", Alg. 1 step 20). Measures the stall.
+    /// Block until the oldest in-flight batch is resident ("notify training
+    /// process to proceed", Alg. 1 step 20). Measures the stall. Only
+    /// successful deliveries count toward `batches_loaded`/`stall_time` —
+    /// an `Err` from the child is the caller's problem, not pipeline work.
     pub fn ready(&mut self) -> Result<LoadedBatch> {
         let t0 = Instant::now();
         let out = self.rx.recv().map_err(|_| anyhow!("loader child died"))?;
-        self.stall_time += t0.elapsed().as_secs_f64();
-        self.batches_loaded += 1;
+        if let Ok(b) = &out {
+            self.stall_time += t0.elapsed().as_secs_f64();
+            self.batches_loaded += 1;
+            self.load_time += b.load_time;
+            self.h2d_sim += b.h2d_sim;
+        }
         out
+    }
+
+    /// Pipeline summary for reporting (see [`LoaderReport`]).
+    pub fn report(&self) -> LoaderReport {
+        LoaderReport {
+            batches_loaded: self.batches_loaded,
+            stall_time: self.stall_time,
+            load_time: self.load_time,
+            h2d_sim: self.h2d_sim,
+            prefetch_depth: self.prefetch_depth,
+            cache: self.cache_counters.as_ref().map(|c| c.snapshot()).unwrap_or_default(),
+        }
     }
 
     pub fn stop(&mut self) {
@@ -99,12 +307,14 @@ impl Drop for ParallelLoader {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn child_main(
     spec: ImageSpec,
     mean: Vec<f32>,
     batch: usize,
     links: LinkParams,
     seed: u64,
+    mut cache: Option<DecodeCache>,
     rx: Receiver<Ctl>,
     tx: Sender<Result<LoadedBatch>>,
 ) {
@@ -119,7 +329,7 @@ fn child_main(
             }
             Ctl::File(f) => f,
         };
-        let out = load_one(&spec, &mean, batch, &links, &mut rng, &mode, &file);
+        let out = load_one(&spec, &mean, batch, &links, &mut rng, &mode, &file, cache.as_mut());
         if tx.send(out).is_err() {
             break;
         }
@@ -127,6 +337,7 @@ fn child_main(
 }
 
 /// Alg. 1 steps 9–12 for one batch file (also used by the direct loader).
+#[allow(clippy::too_many_arguments)]
 pub fn load_one(
     spec: &ImageSpec,
     mean: &[f32],
@@ -135,10 +346,14 @@ pub fn load_one(
     rng: &mut Rng,
     mode: &str,
     file: &PathBuf,
+    cache: Option<&mut DecodeCache>,
 ) -> Result<LoadedBatch> {
     let t0 = Instant::now();
-    // step 9: load file from disk into host memory
-    let bytes = std::fs::read(file).map_err(|e| anyhow!("read {file:?}: {e}"))?;
+    // step 9: load file from disk (or the decode cache) into host memory
+    let (bytes, cache_hit) = match cache {
+        Some(c) => c.fetch(file)?,
+        None => (std::fs::read(file).map_err(|e| anyhow!("read {file:?}: {e}"))?, false),
+    };
     let px = spec.channels * spec.store_hw * spec.store_hw;
     if bytes.len() != batch * px {
         return Err(anyhow!(
@@ -163,11 +378,167 @@ pub fn load_one(
     // build is the real representational work)
     let h2d_bytes = 4 * xs.len() as u64;
     let h2d_sim = links.pcie_time(h2d_bytes);
-    let x = HostTensor::f32(
-        vec![batch, spec.channels, spec.crop_hw, spec.crop_hw],
-        xs,
-    );
-    Ok(LoadedBatch { x, load_time: t0.elapsed().as_secs_f64(), h2d_sim })
+    let x = HostTensor::f32(vec![batch, spec.channels, spec.crop_hw, spec.crop_hw], xs);
+    Ok(LoadedBatch { x, load_time: t0.elapsed().as_secs_f64(), h2d_sim, cache_hit })
+}
+
+/// Runtime-free DES twin of the pipeline: one symmetric worker + its loader
+/// child, priced through [`audit::Ledger`](crate::audit::Ledger) /
+/// [`ServerClock`](crate::audit::ServerClock) so `breakdown == clock` holds
+/// by construction. `scripts/pricing_model.py::sim_loader_pipeline` mirrors
+/// this function float-op for float-op; `bench_loader` sweeps it and
+/// `tests/loader_pipeline.rs` pins its bands against the Python port.
+pub mod sim {
+    use super::CacheStats;
+    use crate::audit::{ChargeKind, Ledger, ServerClock};
+    use crate::metrics::Breakdown;
+    use crate::simnet::LinkParams;
+
+    /// Disk + decode cost model for the simulated child.
+    #[derive(Clone, Copy, Debug)]
+    pub struct DiskParams {
+        /// aggregate disk bandwidth, shared by all k workers' children
+        pub disk_gbps: f64,
+        /// per-file seek/open latency
+        pub disk_lat_us: f64,
+        /// decode/augment throughput per child
+        pub decode_gbps: f64,
+        /// every Nth batch decodes `spike_factor` slower (jpeg-outlier
+        /// stand-in) — the non-uniformity that makes prefetch depth matter
+        pub spike_every: usize,
+        pub spike_factor: f64,
+    }
+
+    impl Default for DiskParams {
+        fn default() -> Self {
+            DiskParams {
+                disk_gbps: 1.0,
+                disk_lat_us: 100.0,
+                decode_gbps: 0.5,
+                spike_every: 8,
+                spike_factor: 8.0,
+            }
+        }
+    }
+
+    /// One sweep point of the pipeline DES.
+    #[derive(Clone, Copy, Debug)]
+    pub struct SimPipelineCfg {
+        /// k — scales the per-child share of `disk_gbps`
+        pub workers: usize,
+        /// 0 = direct (synchronous) path; ≥ 1 = parallel child with Q
+        /// requests in flight
+        pub prefetch_depth: usize,
+        pub cache_mib: usize,
+        /// distinct batch files in the shard (epoch length; iteration i
+        /// reads file i mod n_files)
+        pub n_files: usize,
+        pub iters: usize,
+        /// stored bytes per batch file (disk + decode work)
+        pub batch_bytes: u64,
+        /// bytes staged to the device per batch (post-crop f32)
+        pub h2d_bytes: u64,
+        /// fwd+bwd seconds per iteration on the worker
+        pub compute_s: f64,
+    }
+
+    /// DES result: final virtual clock + its exact decomposition.
+    #[derive(Clone, Copy, Debug)]
+    pub struct SimOutcome {
+        pub vtime: f64,
+        pub bd: Breakdown,
+        pub cache: CacheStats,
+    }
+
+    /// LRU over the cyclic file sequence `i mod n_files`, uniform file
+    /// size — the closed-form twin of [`super::DecodeCache`]. Returns the
+    /// per-iteration hit flags plus final counters.
+    fn sim_cache(cfg: &SimPipelineCfg) -> (Vec<bool>, CacheStats) {
+        let cap = (cfg.cache_mib as u64) << 20;
+        let mut order: Vec<usize> = Vec::new();
+        let mut resident: u64 = 0;
+        let mut st = CacheStats { capacity_bytes: cap, ..CacheStats::default() };
+        let mut hits = Vec::with_capacity(cfg.iters);
+        for i in 0..cfg.iters {
+            let f = i % cfg.n_files;
+            if let Some(pos) = order.iter().position(|&x| x == f) {
+                order.remove(pos);
+                order.push(f);
+                st.hits += 1;
+                hits.push(true);
+            } else {
+                st.misses += 1;
+                hits.push(false);
+                if cfg.batch_bytes <= cap {
+                    while resident + cfg.batch_bytes > cap {
+                        order.remove(0);
+                        resident -= cfg.batch_bytes;
+                        st.evictions += 1;
+                    }
+                    order.push(f);
+                    resident += cfg.batch_bytes;
+                }
+            }
+        }
+        st.resident_bytes = resident;
+        (hits, st)
+    }
+
+    /// Disk + decode seconds for request `i` (hit ⇒ disk is free; decode
+    /// always runs — the cache stores raw bytes, not outputs).
+    fn child_cost(cfg: &SimPipelineCfg, disk: &DiskParams, i: usize, hit: bool) -> f64 {
+        let disk_s = if hit {
+            0.0
+        } else {
+            disk.disk_lat_us * 1e-6
+                + cfg.batch_bytes as f64 / ((disk.disk_gbps / cfg.workers as f64) * 1e9)
+        };
+        let spike = if (i + 1) % disk.spike_every == 0 { disk.spike_factor } else { 1.0 };
+        let decode_s = cfg.batch_bytes as f64 / (disk.decode_gbps * 1e9) * spike;
+        disk_s + decode_s
+    }
+
+    /// Run the DES at one sweep point. Parallel path: prime Q requests at
+    /// t=0; after collecting batch i, request i+Q goes to the child *before*
+    /// computing on i (Q=1 ≡ the seed's double buffer). Direct path
+    /// (`prefetch_depth == 0`): the worker pays the full child cost on its
+    /// own clock as `LoadStall`.
+    pub fn sim_pipeline(cfg: &SimPipelineCfg, disk: &DiskParams, links: &LinkParams) -> SimOutcome {
+        let (hits, cache) = sim_cache(cfg);
+        let h2d_s = links.pcie_time(cfg.h2d_bytes);
+        let mut led = Ledger::new();
+        if cfg.prefetch_depth == 0 {
+            for i in 0..cfg.iters {
+                led.charge(ChargeKind::LoadStall, "loader.sim.direct", child_cost(cfg, disk, i, hits[i]));
+                led.charge(ChargeKind::H2d, "loader.sim.h2d", h2d_s);
+                led.charge(ChargeKind::Compute, "loader.sim.compute", cfg.compute_s);
+            }
+        } else {
+            let q = cfg.prefetch_depth;
+            let mut child = ServerClock::new();
+            let mut finish = vec![0.0; cfg.iters];
+            for j in 0..q.min(cfg.iters) {
+                finish[j] = child.serve(0.0, child_cost(cfg, disk, j, hits[j]));
+            }
+            for i in 0..cfg.iters {
+                let cost_i = child_cost(cfg, disk, i, hits[i]);
+                let stall = (finish[i] - led.clock()).max(0.0);
+                led.advance_to(ChargeKind::LoadStall, "loader.sim.stall", led.clock() + stall);
+                // the rest of the child's work hid under earlier compute
+                led.charge_hidden_load("loader.sim.hidden", (cost_i - stall).max(0.0), cost_i);
+                led.charge(ChargeKind::H2d, "loader.sim.h2d", h2d_s);
+                let nxt = i + q;
+                if nxt < cfg.iters {
+                    finish[nxt] = child.serve(led.clock(), child_cost(cfg, disk, nxt, hits[nxt]));
+                }
+                led.charge(ChargeKind::Compute, "loader.sim.compute", cfg.compute_s);
+            }
+            child.audit().expect("loader sim child clock");
+        }
+        led.audit().expect("loader sim ledger");
+        let (vtime, bd) = led.finish();
+        SimOutcome { vtime, bd, cache }
+    }
 }
 
 #[cfg(test)]
@@ -175,11 +546,13 @@ mod tests {
     use super::*;
     use crate::data::{ImageDataset, ImageSpec};
 
-    fn setup(n_batches: usize) -> (crate::data::ShardFiles, ImageSpec) {
+    /// `tag` must be unique per test: tests run in parallel and each one
+    /// removes its own shard dir at the end.
+    fn setup(tag: &str, n_batches: usize) -> (crate::data::ShardFiles, ImageSpec) {
         let spec = ImageSpec::default();
         let d = ImageDataset::new(spec.clone());
         let tmp = std::env::temp_dir().join(format!(
-            "tmpi_loader_test_{}_{n_batches}",
+            "tmpi_loader_test_{tag}_{}_{n_batches}",
             std::process::id()
         ));
         let sf = d.write_shard(&tmp, 0, 1, 8, n_batches).unwrap();
@@ -188,9 +561,15 @@ mod tests {
 
     #[test]
     fn loads_and_preprocesses_batches_in_order() {
-        let (sf, spec) = setup(3);
-        let mut loader =
-            ParallelLoader::spawn(spec, sf.mean.clone(), sf.batch, LinkParams::default(), 1);
+        let (sf, spec) = setup("order", 3);
+        let mut loader = ParallelLoader::spawn(
+            spec,
+            sf.mean.clone(),
+            sf.batch,
+            LinkParams::default(),
+            1,
+            LoaderConfig::default(),
+        );
         loader.set_mode("train");
         for f in &sf.files {
             loader.request(f.clone());
@@ -203,21 +582,25 @@ mod tests {
             let xs = b.x.as_f32().unwrap();
             assert!(xs.iter().all(|v| v.is_finite()));
         }
+        let rep = loader.report();
+        assert_eq!(rep.batches_loaded, 3);
+        assert!(rep.load_time > 0.0 && rep.h2d_sim > 0.0);
+        assert_eq!(rep.cache, CacheStats::default(), "cache disabled by default");
         loader.stop();
         let _ = std::fs::remove_dir_all(sf.files[0].parent().unwrap());
     }
 
     #[test]
     fn val_mode_is_deterministic_train_mode_augments() {
-        let (sf, spec) = setup(1);
+        let (sf, spec) = setup("valmode", 1);
         let links = LinkParams::default();
         let f = &sf.files[0];
         let mut rng = Rng::new(9);
-        let v1 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "val", f).unwrap();
-        let v2 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "val", f).unwrap();
+        let v1 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "val", f, None).unwrap();
+        let v2 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "val", f, None).unwrap();
         assert_eq!(v1.x.as_f32().unwrap(), v2.x.as_f32().unwrap());
-        let t1 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "train", f).unwrap();
-        let t2 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "train", f).unwrap();
+        let t1 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "train", f, None).unwrap();
+        let t2 = load_one(&spec, &sf.mean, 8, &links, &mut rng, "train", f, None).unwrap();
         assert_ne!(t1.x.as_f32().unwrap(), t2.x.as_f32().unwrap());
         let _ = std::fs::remove_dir_all(f.parent().unwrap());
     }
@@ -231,6 +614,7 @@ mod tests {
             4,
             LinkParams::default(),
             2,
+            LoaderConfig::default(),
         );
         loader.request(PathBuf::from("/nonexistent/batch.bin"));
         let err = match loader.ready() {
@@ -238,6 +622,9 @@ mod tests {
             Ok(_) => panic!("expected load error"),
         };
         assert!(err.contains("read"), "{err}");
+        // the failed delivery is not pipeline work (ISSUE 7 satellite):
+        assert_eq!(loader.batches_loaded, 0);
+        assert_eq!(loader.stall_time, 0.0);
         loader.stop();
     }
 
@@ -245,9 +632,15 @@ mod tests {
     fn double_buffering_overlaps() {
         // request two files up-front; while the worker "trains" (sleeps),
         // the child prefetches, so the second ready() stall is near zero.
-        let (sf, spec) = setup(2);
-        let mut loader =
-            ParallelLoader::spawn(spec, sf.mean.clone(), sf.batch, LinkParams::default(), 3);
+        let (sf, spec) = setup("dbuf", 2);
+        let mut loader = ParallelLoader::spawn(
+            spec,
+            sf.mean.clone(),
+            sf.batch,
+            LinkParams::default(),
+            3,
+            LoaderConfig::default(),
+        );
         loader.request(sf.files[0].clone());
         let _first = loader.ready().unwrap();
         loader.request(sf.files[1].clone());
@@ -259,6 +652,89 @@ mod tests {
             second_stall < 0.03,
             "prefetch failed to hide load: stall={second_stall}s"
         );
+        loader.stop();
+        let _ = std::fs::remove_dir_all(sf.files[0].parent().unwrap());
+    }
+
+    #[test]
+    fn decode_cache_lru_hits_misses_evictions() {
+        let spec = ImageSpec::default();
+        let d = ImageDataset::new(spec.clone());
+        let tmp =
+            std::env::temp_dir().join(format!("tmpi_cache_test_{}", std::process::id()));
+        let sf = d.write_shard(&tmp, 0, 1, 2, 3).unwrap();
+        let file_len = std::fs::metadata(&sf.files[0]).unwrap().len();
+        assert!(2 * file_len <= 1 << 20, "test assumes 2 files fit in 1 MiB");
+        let mut cache = DecodeCache::new(1);
+        // first pass misses, second pass hits
+        for f in sf.files.iter().take(2) {
+            let (_, hit) = cache.fetch(f).unwrap();
+            assert!(!hit);
+        }
+        for f in sf.files.iter().take(2) {
+            let (_, hit) = cache.fetch(f).unwrap();
+            assert!(hit);
+        }
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (2, 2, 0));
+        assert_eq!(st.resident_bytes, 2 * file_len);
+        assert!(st.hit_rate() > 0.49 && st.hit_rate() < 0.51);
+        // bytes from the cache match disk exactly
+        let (cached, hit) = cache.fetch(&sf.files[0]).unwrap();
+        assert!(hit);
+        assert_eq!(cached, std::fs::read(&sf.files[0]).unwrap());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn cache_evicts_lru_not_mru() {
+        let spec = ImageSpec::default();
+        let d = ImageDataset::new(spec.clone());
+        let tmp =
+            std::env::temp_dir().join(format!("tmpi_cache_lru_test_{}", std::process::id()));
+        let sf = d.write_shard(&tmp, 0, 1, 2, 3).unwrap();
+        let file_len = std::fs::metadata(&sf.files[0]).unwrap().len();
+        let mut cache = DecodeCache::with_capacity_bytes(2 * file_len);
+        let (f0, f1, f2) = (&sf.files[0], &sf.files[1], &sf.files[2]);
+        assert!(!cache.fetch(f0).unwrap().1);
+        assert!(!cache.fetch(f1).unwrap().1);
+        // touch f0: it becomes MRU, so f1 is now the eviction candidate
+        assert!(cache.fetch(f0).unwrap().1);
+        assert!(!cache.fetch(f2).unwrap().1); // evicts f1, not f0
+        assert!(cache.fetch(f0).unwrap().1, "f0 was MRU — must survive");
+        assert!(!cache.fetch(f1).unwrap().1, "f1 was LRU — must be gone");
+        let st = cache.stats();
+        assert_eq!(st.evictions, 2); // f1 for f2's entry, then f2 for f1's re-entry
+        assert_eq!(st.resident_bytes, 2 * file_len);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn loader_with_cache_reports_hits() {
+        let (sf, spec) = setup("cachehits", 2);
+        let mut loader = ParallelLoader::spawn(
+            spec,
+            sf.mean.clone(),
+            sf.batch,
+            LinkParams::default(),
+            5,
+            LoaderConfig { prefetch_depth: 1, cache_mib: 8 },
+        );
+        // two epochs over the same two files
+        for f in sf.files.iter().chain(sf.files.iter()) {
+            loader.request(f.clone());
+        }
+        let mut hits = 0;
+        for _ in 0..4 {
+            let b = loader.ready().unwrap();
+            if b.cache_hit {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 2, "second epoch must hit the cache");
+        let rep = loader.report();
+        assert_eq!((rep.cache.hits, rep.cache.misses), (2, 2));
+        assert_eq!(rep.batches_loaded, 4);
         loader.stop();
         let _ = std::fs::remove_dir_all(sf.files[0].parent().unwrap());
     }

@@ -117,6 +117,12 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
     if let Some(l) = args.get("loader") {
         cfg.use_loader = l == "parallel";
     }
+    if let Some(q) = args.usize_("prefetch-depth")? {
+        cfg.prefetch_depth = q;
+    }
+    if let Some(c) = args.usize_("cache-mib")? {
+        cfg.cache_mib = c;
+    }
     if let Some(c) = args.get("cuda-aware") {
         cfg.cuda_aware = c == "true";
     }
@@ -172,7 +178,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         .breakdown
         .components()
         .iter()
-        .filter(|&&(name, v)| v > 0.0 && name != "comm_hidden")
+        .filter(|&&(name, v)| {
+            v > 0.0 && !theano_mpi::metrics::Breakdown::MEMO_FIELDS.contains(&name)
+        })
         .map(|&(name, v)| format!("{name}={v:.2}s"))
         .collect::<Vec<_>>()
         .join(" ");
@@ -188,6 +196,27 @@ fn cmd_train(args: &Args) -> Result<()> {
             rep.breakdown.comm_hidden,
             rep.overlap_fraction * 100.0
         );
+    }
+    if let Some(l) = &rep.loader {
+        let path = if l.prefetch_depth == 0 {
+            "direct".to_string()
+        } else {
+            format!("parallel q={}", l.prefetch_depth)
+        };
+        let mut line = format!(
+            "loader ({path}): {} batches, stall={:.2}s, hidden under compute={:.2}s",
+            l.batches_loaded, rep.breakdown.load_stall, rep.breakdown.load_hidden
+        );
+        if l.cache.capacity_bytes > 0 {
+            line.push_str(&format!(
+                ", cache hit-rate={:.0}% ({} hits/{} misses/{} evictions)",
+                l.cache.hit_rate() * 100.0,
+                l.cache.hits,
+                l.cache.misses,
+                l.cache.evictions
+            ));
+        }
+        println!("{line}");
     }
     let rows: Vec<String> = rep
         .curve
@@ -342,6 +371,7 @@ fn usage() -> ! {
          tmpi train --model mlp --workers 8 --chunk-kib 256 --pipeline true\n\
          tmpi train --model alexnet --workers 8 --overlap wfbp --bucket-kib 4096 --topology copper\n\
          tmpi train --model mlp --workers 16 --topology copper --exchange hier:asa16\n\
+         tmpi train --model alexnet --loader parallel --prefetch-depth 4 --cache-mib 64\n\
          tmpi train --config examples/configs/alexnet_bsp.toml\n\
          tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\
          tmpi easgd --model mlp --workers 8 --tau 1 --servers 4 --topology copper\n\

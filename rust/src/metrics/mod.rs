@@ -36,8 +36,14 @@ pub struct Breakdown {
     pub host_reduce: f64,
     /// Time blocked waiting for the parallel loader (overlap miss).
     pub load_stall: f64,
-    /// Simulated H2D staging of input batches (the direct loader path;
-    /// the parallel loader overlaps it in the child).
+    /// Loader disk+decode time the parallel child hid under compute
+    /// (Alg. 1's overlap win). Memo only: the clock never paid it, so it
+    /// is *not* part of [`total`](Self::total) — `load_stall + load_hidden`
+    /// is what the direct (synchronous) loader would have paid.
+    pub load_hidden: f64,
+    /// Simulated H2D staging of input batches. Charged on *both* loader
+    /// paths — the PCIe crossing is real either way; the parallel child
+    /// only overlaps the disk+decode part (see `load_hidden`).
     pub h2d: f64,
     /// SUBGD second half: sgd_apply execution (real, measured).
     pub apply: f64,
@@ -55,6 +61,7 @@ impl Breakdown {
             comm_hidden: _, // memo: the clock never paid it
             host_reduce,
             load_stall: _,
+            load_hidden: _, // memo: the clock never paid it
             h2d: _,
             apply: _,
         } = *self;
@@ -72,6 +79,7 @@ impl Breakdown {
             comm_hidden: _, // memo: the clock never paid it
             host_reduce: _,
             load_stall,
+            load_hidden: _, // memo: the clock never paid it
             h2d,
             apply,
         } = *self;
@@ -87,6 +95,7 @@ impl Breakdown {
             comm_hidden,
             host_reduce,
             load_stall,
+            load_hidden,
             h2d,
             apply,
         } = *other;
@@ -97,13 +106,14 @@ impl Breakdown {
         self.comm_hidden += comm_hidden;
         self.host_reduce += host_reduce;
         self.load_stall += load_stall;
+        self.load_hidden += load_hidden;
         self.h2d += h2d;
         self.apply += apply;
     }
 
     /// Every component, named — the one source printers and audits iterate
     /// so a new field shows up everywhere or nowhere compiles.
-    pub fn components(&self) -> [(&'static str, f64); 9] {
+    pub fn components(&self) -> [(&'static str, f64); 10] {
         let Breakdown {
             compute,
             comm_transfer,
@@ -112,6 +122,7 @@ impl Breakdown {
             comm_hidden,
             host_reduce,
             load_stall,
+            load_hidden,
             h2d,
             apply,
         } = *self;
@@ -123,10 +134,15 @@ impl Breakdown {
             ("comm_hidden", comm_hidden),
             ("host_reduce", host_reduce),
             ("load_stall", load_stall),
+            ("load_hidden", load_hidden),
             ("h2d", h2d),
             ("apply", apply),
         ]
     }
+
+    /// The memo fields (never on the clock) — printers that report "time
+    /// spent" filter these, overlap reporting reads them explicitly.
+    pub const MEMO_FIELDS: [&'static str; 2] = ["comm_hidden", "load_hidden"];
 
     /// Fraction of exchange time spent in the GPU kernel (paper §3.2
     /// measures 1.6 % for the ASA summation kernel).
@@ -218,11 +234,12 @@ mod tests {
             comm_hidden: 0.33,
             host_reduce: 0.07,
             load_stall: 0.1,
+            load_hidden: 0.11,
             h2d: 0.2,
             apply: 0.05,
         };
         assert!((b.comm() - 0.62).abs() < 1e-12);
-        // comm_hidden is a memo of time NOT paid: never in the totals
+        // comm_hidden / load_hidden are memos of time NOT paid: never in totals
         assert!((b.total() - 1.97).abs() < 1e-12);
         assert!((b.kernel_share_of_comm() - 0.01 / 0.62).abs() < 1e-12);
         let mut sum = b;
@@ -230,6 +247,7 @@ mod tests {
         assert!((sum.total() - 3.94).abs() < 1e-12);
         assert!((sum.comm_queue - 0.08).abs() < 1e-12);
         assert!((sum.comm_hidden - 0.66).abs() < 1e-12);
+        assert!((sum.load_hidden - 0.22).abs() < 1e-12);
         assert!((sum.host_reduce - 0.14).abs() < 1e-12);
         assert!((sum.h2d - 0.4).abs() < 1e-12);
     }
@@ -249,21 +267,25 @@ mod tests {
             comm_hidden: 16.0,
             host_reduce: 32.0,
             load_stall: 64.0,
+            load_hidden: 512.0,
             h2d: 128.0,
             apply: 256.0,
         };
         let comps = b.components();
-        assert_eq!(comps.len(), 9);
+        assert_eq!(comps.len(), 10);
         let mut names: Vec<&str> = comps.iter().map(|&(n, _)| n).collect();
         names.sort();
         names.dedup();
-        assert_eq!(names.len(), 9, "components() must enumerate each field once");
+        assert_eq!(names.len(), 10, "components() must enumerate each field once");
         let sum_all: f64 = comps.iter().map(|&(_, v)| v).sum();
-        assert!((sum_all - 511.0).abs() < 1e-12);
-        // total() == field sum minus the one memo field
-        assert!((b.total() - (sum_all - b.comm_hidden)).abs() < 1e-12);
+        assert!((sum_all - 1023.0).abs() < 1e-12);
+        // total() == field sum minus the memo fields
+        assert!((b.total() - (sum_all - b.comm_hidden - b.load_hidden)).abs() < 1e-12);
         assert!((b.total() - 495.0).abs() < 1e-12);
         assert!((b.comm() - (2.0 + 4.0 + 8.0 + 32.0)).abs() < 1e-12);
+        for m in Breakdown::MEMO_FIELDS {
+            assert!(comps.iter().any(|&(n, _)| n == m), "memo field {m} missing");
+        }
     }
 
     #[test]

@@ -208,6 +208,40 @@ fn breakdown_reconciles_exactly_across_grid() {
 }
 
 #[test]
+fn loader_grid_reconciles_and_charges_h2d() {
+    let Some(rt) = rt() else { return };
+    // the input-pipeline grid: both loader paths x prefetch depth must keep
+    // breakdown==clock exact and charge H2D like-for-like (the parallel
+    // child overlaps disk+decode, never the PCIe crossing)
+    for use_loader in [false, true] {
+        for q in [1usize, 2, 4] {
+            let mut cfg = BspConfig::quick("alexnet", 2, 6);
+            cfg.use_loader = use_loader;
+            cfg.prefetch_depth = q;
+            cfg.lr = LrSchedule::Const { base: 0.01 };
+            let rep = run_bsp(&rt, &cfg).unwrap();
+            let tag = format!("use_loader={use_loader} q={q}");
+            let total = rep.breakdown.total();
+            assert!(
+                (total - rep.vtime_total).abs() < 1e-9 * total.max(1.0),
+                "{tag}: breakdown {total} != clock {}",
+                rep.vtime_total
+            );
+            assert!(rep.breakdown.h2d > 0.0, "{tag}: H2D must be charged on both paths");
+            let lr = rep.loader.expect("image workloads report the input pipeline");
+            assert_eq!(lr.prefetch_depth, if use_loader { q } else { 0 }, "{tag}");
+            assert_eq!(lr.batches_loaded, cfg.iters, "{tag}: every batch collected once");
+            if use_loader {
+                assert!(lr.load_time > 0.0, "{tag}: child must report its work");
+            } else {
+                assert_eq!(rep.breakdown.load_hidden, 0.0, "{tag}: direct path hides nothing");
+                assert!(rep.breakdown.load_stall > 0.0, "{tag}: direct load is all stall");
+            }
+        }
+    }
+}
+
+#[test]
 fn workers_must_fit_topology() {
     let Some(rt) = rt() else { return };
     let mut cfg = BspConfig::quick("mlp", 2, 2);

@@ -1,0 +1,157 @@
+//! Pinned bands for the loader-pipeline DES (`loader::sim`).
+//!
+//! Every constant below is derived by the stdlib Python twin
+//! (`scripts/verify_loader_bands.py`, which imports the shared
+//! `scripts/pricing_model.py` port); the two implementations share float-op
+//! order with `audit::Ledger`, so the pins are effectively bit-exact — the
+//! tolerance only absorbs last-ulp platform drift. If a pin moves, rerun
+//! the script and update both sides deliberately.
+//!
+//! Runtime-free: no PJRT artifacts, no threads — pure DES.
+
+use theano_mpi::loader::sim::{sim_pipeline, DiskParams, SimOutcome, SimPipelineCfg};
+use theano_mpi::simnet::LinkParams;
+
+const N_FILES: usize = 16;
+const ITERS: usize = 64;
+const BATCH_BYTES: u64 = 124_416;
+const H2D_BYTES: u64 = 393_216;
+const COMPUTE_S: f64 = 0.0008;
+
+fn run(workers: usize, prefetch_depth: usize, cache_mib: usize) -> SimOutcome {
+    sim_pipeline(
+        &SimPipelineCfg {
+            workers,
+            prefetch_depth,
+            cache_mib,
+            n_files: N_FILES,
+            iters: ITERS,
+            batch_bytes: BATCH_BYTES,
+            h2d_bytes: H2D_BYTES,
+            compute_s: COMPUTE_S,
+        },
+        &DiskParams::default(),
+        &LinkParams::default(),
+    )
+}
+
+fn pin(got: f64, want: f64, what: &str) {
+    let tol = 1e-12 * want.abs().max(1.0);
+    assert!(
+        (got - want).abs() <= tol,
+        "{what}: {got:.17} drifted from the Python-pinned {want:.17}"
+    );
+}
+
+// scripts/verify_loader_bands.py output, full f64 precision
+const VTIME_K8_Q0_C0: f64 = 0.153_897_983_999_999_77;
+const VTIME_K8_Q1_C0: f64 = 0.103_497_983_999_999_82;
+const VTIME_K8_Q2_C4: f64 = 0.068_373_167_999_999_96;
+const VTIME_K8_Q4_C4: f64 = 0.066_285_839_999_999_98;
+const VTIME_K1_Q4_C0: f64 = 0.054_410_399_999_999_98;
+const STALL_K8_Q1_C0: f64 = 0.049_560_831_999_999_985;
+const STALL_K8_Q2_C4: f64 = 0.014_436_016_000_000_006;
+const HIDDEN_K8_Q2_C4: f64 = 0.032_949_072_000_000_024;
+const H2D_TOTAL: f64 = 0.002_737_152; // 64 × pcie_time(393216) on defaults
+
+#[test]
+fn bands_pinned_against_python_port() {
+    pin(run(8, 0, 0).vtime, VTIME_K8_Q0_C0, "vtime k8 q0 c0");
+    pin(run(8, 1, 0).vtime, VTIME_K8_Q1_C0, "vtime k8 q1 c0");
+    pin(run(8, 2, 4).vtime, VTIME_K8_Q2_C4, "vtime k8 q2 c4");
+    pin(run(8, 4, 4).vtime, VTIME_K8_Q4_C4, "vtime k8 q4 c4");
+    pin(run(1, 4, 0).vtime, VTIME_K1_Q4_C0, "vtime k1 q4 c0");
+    pin(run(8, 1, 0).bd.load_stall, STALL_K8_Q1_C0, "stall k8 q1 c0");
+    let warm = run(8, 2, 4);
+    pin(warm.bd.load_stall, STALL_K8_Q2_C4, "stall k8 q2 c4");
+    pin(warm.bd.load_hidden, HIDDEN_K8_Q2_C4, "hidden k8 q2 c4");
+    for out in [run(8, 0, 0), run(8, 1, 0), warm] {
+        pin(out.bd.h2d, H2D_TOTAL, "h2d total (both paths, like-for-like)");
+    }
+}
+
+#[test]
+fn direct_path_matches_closed_form() {
+    // q=0 cold serializes everything on the worker clock: the DES must
+    // equal the hand-summed cost model (disk + spiky decode + H2D +
+    // compute per iteration, no overlap anywhere)
+    let links = LinkParams::default();
+    let disk = DiskParams::default();
+    let mut want = 0.0;
+    for i in 0..ITERS {
+        let disk_s = disk.disk_lat_us * 1e-6 + BATCH_BYTES as f64 / ((disk.disk_gbps / 8.0) * 1e9);
+        let spike = if (i + 1) % disk.spike_every == 0 { disk.spike_factor } else { 1.0 };
+        let decode_s = BATCH_BYTES as f64 / (disk.decode_gbps * 1e9) * spike;
+        want += disk_s + decode_s;
+        want += links.pcie_time(H2D_BYTES);
+        want += COMPUTE_S;
+    }
+    let got = run(8, 0, 0).vtime;
+    assert!((got - want).abs() <= 1e-9 * want, "direct DES {got} vs closed form {want}");
+}
+
+#[test]
+fn breakdown_reconciles_and_memo_stays_off_clock() {
+    for (q, c) in [(0usize, 0usize), (1, 0), (2, 4), (4, 4)] {
+        let out = run(8, q, c);
+        let tol = 1e-9 * out.vtime.abs().max(1.0);
+        assert!(
+            (out.bd.total() - out.vtime).abs() <= tol,
+            "breakdown != clock at q={q} c={c}: {} vs {}",
+            out.bd.total(),
+            out.vtime
+        );
+        if q == 0 {
+            assert_eq!(out.bd.load_hidden, 0.0, "direct path overlaps nothing");
+        } else {
+            assert!(out.bd.load_hidden > 0.0, "parallel path must memo hidden load");
+        }
+    }
+}
+
+#[test]
+fn vtime_monotone_in_prefetch_depth_and_cache() {
+    for k in [1usize, 8] {
+        for c in [0usize, 4] {
+            let v: Vec<f64> = [0usize, 1, 2, 4].iter().map(|&q| run(k, q, c).vtime).collect();
+            assert!(
+                v.windows(2).all(|w| w[0] >= w[1]),
+                "vtime not monotone in q at k={k} c={c}: {v:?}"
+            );
+        }
+        for q in [0usize, 1, 2, 4] {
+            assert!(
+                run(k, q, 4).vtime <= run(k, q, 0).vtime,
+                "a warm cache must never slow the pipeline (k={k} q={q})"
+            );
+        }
+    }
+}
+
+#[test]
+fn acceptance_depth_two_warm_beats_double_buffer() {
+    let q2_warm = run(8, 2, 4);
+    assert!(q2_warm.vtime < run(8, 1, 0).vtime, "q=2 warm must beat the cold double buffer");
+    assert!(q2_warm.vtime < run(8, 1, 4).vtime, "q=2 warm must beat the warm double buffer");
+    let q4_warm = run(8, 4, 4);
+    assert!(
+        q4_warm.bd.load_stall < 0.5 * run(8, 1, 0).bd.load_stall,
+        "stall must collapse toward zero at q=4 warm"
+    );
+}
+
+#[test]
+fn cache_stats_one_cold_pass_then_hits() {
+    let out = run(8, 2, 4);
+    assert_eq!(out.cache.misses, N_FILES as u64);
+    assert_eq!(out.cache.hits, (ITERS - N_FILES) as u64);
+    assert_eq!(out.cache.evictions, 0);
+    assert_eq!(out.cache.resident_bytes, N_FILES as u64 * BATCH_BYTES);
+    let want_rate = (ITERS - N_FILES) as f64 / ITERS as f64;
+    assert!((out.cache.hit_rate() - want_rate).abs() < 1e-15);
+    // a 0 MiB cache bypasses entirely: all misses, nothing resident
+    let cold = run(8, 2, 0);
+    assert_eq!(cold.cache.hits, 0);
+    assert_eq!(cold.cache.misses, ITERS as u64);
+    assert_eq!(cold.cache.resident_bytes, 0);
+}

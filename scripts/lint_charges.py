@@ -53,7 +53,7 @@ WAIVER_FILE = os.path.join(REPO, "scripts", "lint_waivers.txt")
 # Breakdown's simulated-time fields (metrics/mod.rs) — audit::Ledger slots.
 BD_FIELDS = (
     "compute|comm_transfer|comm_kernel|comm_queue|comm_hidden|"
-    "host_reduce|h2d|load_stall|apply"
+    "host_reduce|h2d|load_stall|load_hidden|apply"
 )
 # CommReport's time fields (collectives/mod.rs).
 CR_FIELDS = "sim_transfer|sim_kernel|sim_overlapped|sim_intra|sim_inter|real_kernel"

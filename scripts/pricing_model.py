@@ -92,3 +92,108 @@ def split_even(n, k):
         out.append((off, ln))
         off += ln
     return out
+
+
+# --- simnet::LinkParams::pcie_time -------------------------------------------
+def pcie_time(nbytes, pcie_gbps=PCIE_GBPS, pcie_lat_us=PCIE_LAT_US):
+    return pcie_lat_us * 1e-6 + nbytes / (pcie_gbps * 1e9)
+
+
+# --- loader::sim::DiskParams::default() -------------------------------------
+DISK_GBPS = 1.0
+DISK_LAT_US = 100.0
+DECODE_GBPS = 0.5
+DECODE_SPIKE_EVERY = 8
+DECODE_SPIKE_FACTOR = 8.0
+
+
+def _sim_cache(cache_mib, n_files, iters, batch_bytes):
+    """LRU over the cyclic file sequence i mod n_files, uniform size —
+    mirrors `loader::sim::sim_cache` exactly. Returns (hit flags, stats)."""
+    cap = cache_mib << 20
+    order, resident = [], 0
+    st = {"hits": 0, "misses": 0, "evictions": 0, "resident_bytes": 0,
+          "capacity_bytes": cap}
+    hits = []
+    for i in range(iters):
+        f = i % n_files
+        if f in order:
+            order.remove(f)
+            order.append(f)
+            st["hits"] += 1
+            hits.append(True)
+        else:
+            st["misses"] += 1
+            hits.append(False)
+            if batch_bytes <= cap:
+                while resident + batch_bytes > cap:
+                    order.pop(0)
+                    resident -= batch_bytes
+                    st["evictions"] += 1
+                order.append(f)
+                resident += batch_bytes
+    st["resident_bytes"] = resident
+    return hits, st
+
+
+def _child_cost(i, hit, workers, batch_bytes,
+                disk_gbps=DISK_GBPS, disk_lat_us=DISK_LAT_US,
+                decode_gbps=DECODE_GBPS, spike_every=DECODE_SPIKE_EVERY,
+                spike_factor=DECODE_SPIKE_FACTOR):
+    """Mirrors `loader::sim::child_cost`: disk (free on hit) + decode
+    (spiky every Nth batch)."""
+    if hit:
+        disk_s = 0.0
+    else:
+        disk_s = disk_lat_us * 1e-6 + batch_bytes / ((disk_gbps / workers) * 1e9)
+    spike = spike_factor if (i + 1) % spike_every == 0 else 1.0
+    decode_s = batch_bytes / (decode_gbps * 1e9) * spike
+    return disk_s + decode_s
+
+
+def sim_loader_pipeline(workers, prefetch_depth, cache_mib, n_files, iters,
+                        batch_bytes, h2d_bytes, compute_s):
+    """Python twin of `loader::sim::sim_pipeline` (same float op order).
+
+    Returns a dict with the final virtual clock and its decomposition:
+    vtime == load_stall + h2d + compute exactly (load_hidden is a memo).
+    prefetch_depth == 0 is the direct (synchronous) path.
+    """
+    hits, cache = _sim_cache(cache_mib, n_files, iters, batch_bytes)
+    h2d_s = pcie_time(h2d_bytes)
+    clk = 0.0
+    bd = {"load_stall": 0.0, "load_hidden": 0.0, "h2d": 0.0, "compute": 0.0}
+    if prefetch_depth == 0:
+        for i in range(iters):
+            cost = _child_cost(i, hits[i], workers, batch_bytes)
+            bd["load_stall"] += cost
+            clk += cost
+            bd["h2d"] += h2d_s
+            clk += h2d_s
+            bd["compute"] += compute_s
+            clk += compute_s
+    else:
+        q = prefetch_depth
+        child = 0.0  # the child ServerClock: max(clock, arrival) + handle
+        finish = [0.0] * iters
+        for j in range(min(q, iters)):
+            child = max(child, 0.0) + _child_cost(j, hits[j], workers, batch_bytes)
+            finish[j] = child
+        for i in range(iters):
+            cost_i = _child_cost(i, hits[i], workers, batch_bytes)
+            stall = max(finish[i] - clk, 0.0)
+            # Ledger::advance_to charges delta = new_clock - clock, which
+            # can differ from `stall` in the last ulp — mirror it exactly
+            new_clk = clk + stall
+            bd["load_stall"] += new_clk - clk
+            clk = new_clk
+            bd["load_hidden"] += max(cost_i - stall, 0.0)
+            bd["h2d"] += h2d_s
+            clk += h2d_s
+            nxt = i + q
+            if nxt < iters:
+                child = max(child, clk) + _child_cost(nxt, hits[nxt], workers, batch_bytes)
+                finish[nxt] = child
+            bd["compute"] += compute_s
+            clk += compute_s
+    return {"vtime": clk, "bd": bd, "cache": cache}
