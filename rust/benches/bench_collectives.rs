@@ -17,8 +17,8 @@ mod bench_common;
 use bench_common::{bench, report, smoke, write_json};
 use theano_mpi::cluster::Topology;
 use theano_mpi::collectives::wfbp::BWD_FRACTION;
-use theano_mpi::collectives::{FlatKind, StrategyKind};
-use theano_mpi::coordinator::{probe_exchange, probe_wfbp};
+use theano_mpi::collectives::{FlatKind, StrategyKind, WireFormat};
+use theano_mpi::coordinator::{probe_exchange, probe_exchange_wire, probe_wfbp};
 use theano_mpi::models;
 use theano_mpi::Session;
 
@@ -307,6 +307,132 @@ fn main() -> anyhow::Result<()> {
             );
             prev_ratio = ratio;
         }
+    }
+
+    // --- gradient-compression wire sweep ------------------------------------
+    // The `wire =` family end-to-end at AlexNet scale (flat ASA, k = 8):
+    // per fabric, simulated exchange time, on-wire GiB, and the compression
+    // ratio. The interconnect model is byte-dominated on both fabrics
+    // (copper funnels 8 GPUs through one node's PCIe lanes, mosaic through
+    // per-node QDR NICs), so a wire wins exactly where it cuts real bytes:
+    // topk:0.01 and onebit cut >= 10x, f16 halves them, and topk:0.5's
+    // 8-byte (index, value) pairs cut nothing — dense f32 must beat it,
+    // since the sparsifiers also pay their encode/decode cast kernels.
+    {
+        let wires = [
+            WireFormat::F32,
+            WireFormat::F16,
+            WireFormat::TopK { p: 0.01 },
+            WireFormat::TopK { p: 0.5 },
+            WireFormat::OneBit,
+        ];
+        for fabric in ["copper", "mosaic"] {
+            let mut reps = Vec::new();
+            for w in wires {
+                let rep = probe_exchange_wire(
+                    StrategyKind::Asa,
+                    w,
+                    8,
+                    topo(fabric, 8),
+                    alex_bytes,
+                    true,
+                    0,
+                    false,
+                    None,
+                )?;
+                report(&format!("wire/{fabric}/{}/sim", w.name()), rep.sim_total(), "s");
+                report(
+                    &format!("wire/{fabric}/{}/gib", w.name()),
+                    rep.wire_bytes as f64 / (1u64 << 30) as f64,
+                    "GiB",
+                );
+                reps.push(rep);
+            }
+            let (dense, f16w, tk01, tk50, onebit) =
+                (&reps[0], &reps[1], &reps[2], &reps[3], &reps[4]);
+            for (name, rep) in [("topk:0.01", tk01), ("onebit", onebit)] {
+                assert!(
+                    rep.wire_bytes * 10 <= dense.wire_bytes,
+                    "{fabric}/{name}: {} bytes not a 10x cut of dense {}",
+                    rep.wire_bytes,
+                    dense.wire_bytes
+                );
+                assert!(
+                    rep.compression_ratio() >= 10.0,
+                    "{fabric}/{name}: ratio {} < 10x",
+                    rep.compression_ratio()
+                );
+                assert!(
+                    rep.sim_total() < dense.sim_total(),
+                    "{fabric}/{name}: byte cut must pay on a byte-bound fabric ({} !< {})",
+                    rep.sim_total(),
+                    dense.sim_total()
+                );
+            }
+            assert!(
+                f16w.sim_total() < dense.sim_total(),
+                "{fabric}: f16 halves the wire; must beat f32 ({} !< {})",
+                f16w.sim_total(),
+                dense.sim_total()
+            );
+            assert_eq!(
+                tk50.wire_bytes, dense.wire_bytes,
+                "{fabric}: topk:0.5's (index, value) pairs are dense-width"
+            );
+            assert!(
+                dense.sim_total() < tk50.sim_total(),
+                "{fabric}: dense f32 must beat a sparsifier that cuts no bytes ({} !< {})",
+                dense.sim_total(),
+                tk50.sim_total()
+            );
+            if fabric == "copper" {
+                // the end-to-end acceptance bar: a compressed wire strictly
+                // beats the native half-precision wire at k = 8 copper
+                let asa16 = probe_exchange(
+                    StrategyKind::Asa16,
+                    8,
+                    topo("copper", 8),
+                    alex_bytes,
+                    true,
+                    0,
+                    false,
+                )?;
+                report(
+                    "wire/copper/topk:0.01_vs_asa16",
+                    asa16.sim_total() / tk01.sim_total(),
+                    "x",
+                );
+                assert!(
+                    tk01.sim_total() < asa16.sim_total(),
+                    "topk:0.01 {} !< asa16 {} at k=8 copper",
+                    tk01.sim_total(),
+                    asa16.sim_total()
+                );
+            }
+        }
+        // sf: the all-fc wire — fc6's outer-product gradient ships as
+        // batch·(in + out) factor elements instead of the in·out matrix
+        let dims = models::builtin_fc_dims("alexnet").unwrap();
+        let (_, din, dout) = dims.iter().find(|d| d.0 == "fc6").cloned().unwrap();
+        let full = 4 * (din * dout) as u64;
+        let hint = 4 * (128 * (din + dout)) as u64; // batch 128
+        let sf = probe_exchange_wire(
+            StrategyKind::Asa,
+            WireFormat::Sf,
+            8,
+            topo("copper", 8),
+            full,
+            true,
+            0,
+            false,
+            Some(hint),
+        )?;
+        report("wire/copper/sf_fc6/ratio", sf.compression_ratio(), "x");
+        assert!(
+            sf.compression_ratio() >= 10.0,
+            "sf must cut fc6's outer-product bytes >= 10x (got {})",
+            sf.compression_ratio()
+        );
     }
 
     // --- real wall time of the exchange machinery (1M f32, 4 workers) ------

@@ -26,14 +26,14 @@ use anyhow::{anyhow, Context, Result};
 use crate::audit::{ChargeKind, Ledger};
 use crate::cluster::Topology;
 use crate::collectives::{
-    wfbp, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan,
+    wfbp, wire, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan,
+    WireFormat,
 };
 use crate::data::{FeatureDataset, ImageDataset, ImageSpec, TokenStream};
 use crate::loader::{DecodeCache, LoaderConfig, LoaderReport, ParallelLoader};
 use crate::metrics::Breakdown;
 use crate::models;
 use crate::mpi::{self, Comm};
-use crate::precision::Wire;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::{LrSchedule, Scheme};
 use crate::simnet::LinkParams;
@@ -48,7 +48,9 @@ pub struct BspConfig {
     pub batch: usize,
     pub scheme: Scheme,
     pub strategy: StrategyKind,
-    pub wire: Wire,
+    /// on-wire format of the exchange (`f32|f16|bf16|topk:<p>|onebit|sf`);
+    /// compressed formats wrap the strategy in the error-feedback codec
+    pub wire: WireFormat,
     pub lr: LrSchedule,
     pub momentum: f64,
     pub iters: usize,
@@ -113,7 +115,7 @@ impl BspConfig {
             batch: 0, // filled from manifest default at run time
             scheme: Scheme::Subgd,
             strategy: StrategyKind::Asa,
-            wire: Wire::F16,
+            wire: WireFormat::F32,
             lr: LrSchedule::Const { base: 0.01 },
             momentum: 0.9,
             iters,
@@ -248,8 +250,22 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
             Some(fs) => models::full_scale_layer_table(&rt.manifest, fs)?,
             None => info.segments.iter().map(|(n, _, sz)| (n.clone(), *sz)).collect(),
         };
-        let bucket_elems = cfg.bucket_kib * 1024 / 4;
-        Some(Arc::new(WfbpPlan::from_layers(&table, bucket_elems).project(info.param_count)))
+        // the bucket budget is *on-wire* KiB: elems come from the active
+        // wire's bytes-per-elem, not a hardcoded 4 (the sizing bugfix)
+        let bucket_elems = wire::elems_per_kib(cfg.bucket_kib, cfg.strategy, cfg.wire);
+        let mut plan = WfbpPlan::from_layers(&table, bucket_elems);
+        if cfg.wire == WireFormat::Sf {
+            // sufficient factors apply to all-fc buckets only; the fc dims
+            // tables tell annotate_sf which those are
+            let dims_model = cfg
+                .sim_model
+                .clone()
+                .or_else(|| models::full_scale_of(&cfg.model).map(str::to_string));
+            if let Some(dims) = dims_model.and_then(|m| models::builtin_fc_dims(&m)) {
+                plan.annotate_sf(&table, &dims, cfg.batch);
+            }
+        }
+        Some(Arc::new(plan.project(info.param_count)))
     } else {
         None
     };
@@ -380,7 +396,8 @@ fn worker_main(
     let strategy: Box<dyn crate::collectives::ExchangeStrategy> = if cfg.chunk_kib > 0 {
         Box::new(crate::collectives::ChunkedPipeline::new(
             cfg.strategy.build(cfg.wire),
-            (cfg.chunk_kib * 1024 / 4).max(1),
+            // on-wire KiB per chunk (the sizing bugfix): wire-width-aware
+            wire::elems_per_kib(cfg.chunk_kib, cfg.strategy, cfg.wire).max(1),
             cfg.pipeline,
         ))
     } else {
@@ -443,11 +460,18 @@ fn worker_main(
                     kernels: Some(&kernels),
                     cuda_aware: cfg.cuda_aware,
                     chunk_elems: 0,
+                    slice_off: 0,
+                    sf_bytes: None,
                 };
                 let rep = strategy.exchange(&mut params, ReduceOp::Mean, &mut ctx)?;
                 led.charge_report("bsp.exchange", &rep, comm_scale);
                 comm_total.absorb(&rep);
                 if cfg.exchange_momentum {
+                    // caveat: a compressed wire's error-feedback residual is
+                    // indexed by vector offset, so this second exchange
+                    // shares the params exchange's residual slots (both run
+                    // at slice_off 0) — harmless for f32/f16/bf16, lossy
+                    // wires are not recommended with exchange_momentum
                     let rep2 = strategy.exchange(&mut momentum, ReduceOp::Mean, &mut ctx)?;
                     led.charge_report("bsp.exchange_momentum", &rep2, comm_scale);
                     comm_total.absorb(&rep2);
@@ -473,6 +497,8 @@ fn worker_main(
                     kernels: Some(&kernels),
                     cuda_aware: cfg.cuda_aware,
                     chunk_elems: 0,
+                    slice_off: 0,
+                    sf_bytes: None,
                 };
                 match wfbp_plan {
                     Some(plan) => {

@@ -214,6 +214,8 @@ pub(crate) mod tests {
                         kernels: None,
                         cuda_aware: true,
                         chunk_elems: 0,
+                        slice_off: 0,
+                        sf_bytes: None,
                     };
                     let rep = strat.exchange(&mut buf, op, &mut ctx).unwrap();
                     (buf, rep)

@@ -74,6 +74,11 @@ fn asa_exchange(
                 }
             }
             rep.wire_bytes += elem_bytes * len as u64;
+            if half.is_some() {
+                // dense-equivalent bytes, so compression_ratio() sees the
+                // native half wire like any codec wire
+                rep.wire_raw_bytes += 4 * len as u64;
+            }
         }
         let (my_off, my_len) = parts[rank];
         // own copy participates in the sum without touching the wire
@@ -155,6 +160,9 @@ fn asa_exchange(
             }
         }
         rep.wire_bytes += elem_bytes * reduced.len() as u64;
+        if half.is_some() {
+            rep.wire_raw_bytes += 4 * reduced.len() as u64;
+        }
     }
     {
         let (off, len) = parts[rank];
@@ -340,6 +348,10 @@ mod tests {
             run_collective(Asa16::new(Wire::F16), k, mk(0), ReduceOp::Sum, Topology::mosaic(k));
         assert_eq!(rep32.wire_bytes, 2 * rep16.wire_bytes);
         assert!(rep16.sim_transfer < rep32.sim_transfer);
+        // the native half wire reports its dense-equivalent bytes too
+        assert_eq!(rep32.wire_raw_bytes, 0, "f32 wire is uncompressed");
+        assert_eq!(rep16.wire_raw_bytes, rep32.wire_bytes);
+        assert!((rep16.compression_ratio() - 2.0).abs() < 1e-12);
     }
 
     #[test]

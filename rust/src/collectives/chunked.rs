@@ -88,7 +88,14 @@ impl ExchangeStrategy for ChunkedPipeline {
         let mut jobs: Vec<FlowJob> = Vec::with_capacity(m);
         let mut legged = true;
         let saved_chunk = ctx.chunk_elems;
+        let saved_off = ctx.slice_off;
         ctx.chunk_elems = self.chunk_elems;
+        // a codec inner keys its error-feedback residual off slice_off; the
+        // chunk gather interleaves rank segments, so a true vector offset
+        // does not exist — a stable synthetic one (cumulative elements of
+        // previous chunks) is deterministic per (n, k, m) and disjoint per
+        // chunk, which is all the residual needs
+        let mut cum_elems = 0usize;
         for c in 0..m {
             let chunk_len: usize = (0..k).map(|r| slices[r][c].1).sum();
             if chunk_len == 0 {
@@ -100,6 +107,8 @@ impl ExchangeStrategy for ChunkedPipeline {
                 let (o, l) = slices[r][c];
                 chunk_buf.extend_from_slice(&buf[o..o + l]);
             }
+            ctx.slice_off = saved_off + cum_elems;
+            cum_elems += chunk_len;
             let sub = self.inner.exchange(&mut chunk_buf, op, ctx)?;
             let mut pos = 0;
             for r in 0..k {
@@ -119,6 +128,7 @@ impl ExchangeStrategy for ChunkedPipeline {
             });
         }
         ctx.chunk_elems = saved_chunk;
+        ctx.slice_off = saved_off;
 
         if self.pipeline {
             let serial: f64 = stages.iter().map(|s| s.transfer + s.kernel).sum();
@@ -142,11 +152,10 @@ mod tests {
     use std::thread;
 
     use super::super::allreduce::tests::run_collective;
-    use super::super::{Asa, FlatKind, StrategyKind};
+    use super::super::{Asa, FlatKind, StrategyKind, WireFormat};
     use super::*;
     use crate::cluster::Topology;
     use crate::mpi;
-    use crate::precision::Wire;
     use crate::simnet::LinkParams;
 
     /// The alignment property the bit-identity argument rests on: gathering
@@ -173,7 +182,7 @@ mod tests {
     }
 
     fn chunked(kind: StrategyKind, chunk_elems: usize, pipeline: bool) -> ChunkedPipeline {
-        ChunkedPipeline::new(kind.build(Wire::F16), chunk_elems, pipeline)
+        ChunkedPipeline::new(kind.build(WireFormat::F32), chunk_elems, pipeline)
     }
 
     /// Run strategy monolithic and chunked on identical inputs; both the
@@ -185,7 +194,7 @@ mod tests {
                 .collect()
         };
         let topo = Topology::mosaic(k);
-        let (mono, _) = run_threads(kind.build(Wire::F16), k, mk(), op, topo.clone());
+        let (mono, _) = run_threads(kind.build(WireFormat::F32), k, mk(), op, topo.clone());
         let (chun, rep) = run_threads(
             Box::new(chunked(kind, chunk_elems, true)),
             k,
@@ -226,6 +235,8 @@ mod tests {
                         kernels: None,
                         cuda_aware: true,
                         chunk_elems: 0,
+                        slice_off: 0,
+                        sf_bytes: None,
                     };
                     let rep = strat.exchange(&mut buf, op, &mut ctx).unwrap();
                     (buf, rep)
@@ -287,7 +298,7 @@ mod tests {
             let topo = Topology::by_name("copper", k).unwrap();
             let mk = || (0..k).map(|r| vec![r as f32 * 0.5; n]).collect::<Vec<_>>();
             let (_, mono) =
-                run_threads(StrategyKind::Asa.build(Wire::F16), k, mk(), ReduceOp::Sum, topo.clone());
+                run_threads(StrategyKind::Asa.build(WireFormat::F32), k, mk(), ReduceOp::Sum, topo.clone());
             let (_, piped) = run_threads(
                 Box::new(chunked(StrategyKind::Asa, n / 8, true)),
                 k,
@@ -365,7 +376,7 @@ mod tests {
         }
         let hier = StrategyKind::Hier { inner: FlatKind::Ring };
         let (outs, piped) = run_threads(
-            Box::new(ChunkedPipeline::new(hier.build(Wire::F16), n / 8, true)),
+            Box::new(ChunkedPipeline::new(hier.build(WireFormat::F32), n / 8, true)),
             k,
             mk(),
             ReduceOp::Sum,
@@ -378,9 +389,9 @@ mod tests {
         assert!(piped.sim_overlapped > 0.0, "no cross-level overlap recorded");
         assert_eq!(piped.chunks, 8);
         let (_, flat_mono) =
-            run_threads(StrategyKind::Ring.build(Wire::F16), k, mk(), ReduceOp::Sum, topo.clone());
+            run_threads(StrategyKind::Ring.build(WireFormat::F32), k, mk(), ReduceOp::Sum, topo.clone());
         let (_, flat_piped) = run_threads(
-            Box::new(ChunkedPipeline::new(StrategyKind::Ring.build(Wire::F16), n / 8, true)),
+            Box::new(ChunkedPipeline::new(StrategyKind::Ring.build(WireFormat::F32), n / 8, true)),
             k,
             mk(),
             ReduceOp::Sum,
@@ -410,7 +421,7 @@ mod tests {
         let bufs: Vec<Vec<f32>> = (0..k).map(|r| vec![r as f32; n]).collect();
         let hier = StrategyKind::Hier { inner: FlatKind::Ring };
         let (_, serial) = run_threads(
-            Box::new(ChunkedPipeline::new(hier.build(Wire::F16), n / 8, false)),
+            Box::new(ChunkedPipeline::new(hier.build(WireFormat::F32), n / 8, false)),
             k,
             bufs,
             ReduceOp::Sum,

@@ -40,7 +40,6 @@
 use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
-use crate::precision::Wire;
 use crate::simnet::{
     phase_cost, split_traffic, Leg, Transfer, MACHINE_HOST, MACHINE_INTER, MACHINE_INTRA_DOWN,
     MACHINE_INTRA_UP,
@@ -48,19 +47,19 @@ use crate::simnet::{
 
 use super::{
     host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, FlatKind, ReduceOp,
-    StrategyKind,
+    StrategyKind, WireFormat,
 };
 
 /// Two-level hierarchical exchange over a flat inner strategy.
 #[derive(Clone)]
 pub struct Hierarchical {
     inner: FlatKind,
-    wire: Wire,
+    fmt: WireFormat,
 }
 
 impl Hierarchical {
-    pub fn new(inner: FlatKind, wire: Wire) -> Hierarchical {
-        Hierarchical { inner, wire }
+    pub fn new(inner: FlatKind, fmt: WireFormat) -> Hierarchical {
+        Hierarchical { inner, fmt }
     }
 
     /// The flat strategy the node leaders run.
@@ -226,8 +225,10 @@ impl ExchangeStrategy for Hierarchical {
                         kernels: ctx.kernels,
                         cuda_aware: ctx.cuda_aware,
                         chunk_elems: ctx.chunk_elems,
+                        slice_off: ctx.slice_off,
+                        sf_bytes: ctx.sf_bytes,
                     };
-                    self.inner.build(self.wire).exchange(buf, ReduceOp::Sum, &mut sub_ctx)
+                    self.inner.build(self.fmt).exchange(buf, ReduceOp::Sum, &mut sub_ctx)
                 };
                 ctx.comm.pop_group(frame);
                 let sub = res?;
@@ -461,7 +462,7 @@ mod tests {
 
     #[test]
     fn hier_builds_from_strategy_kind() {
-        let s = StrategyKind::Hier { inner: FlatKind::Asa16 }.build(Wire::Bf16);
+        let s = StrategyKind::Hier { inner: FlatKind::Asa16 }.build(WireFormat::Bf16);
         assert_eq!(s.name(), "hier:asa16");
     }
 }

@@ -28,6 +28,7 @@ mod chunked;
 mod hier;
 mod ring;
 pub mod wfbp;
+pub mod wire;
 
 pub use allreduce::HostAllreduce;
 pub use asa::{Asa, Asa16};
@@ -35,6 +36,7 @@ pub use chunked::ChunkedPipeline;
 pub use hier::Hierarchical;
 pub use ring::Ring;
 pub use wfbp::{exchange_wfbp, OverlapMode, WfbpOutcome, WfbpPlan};
+pub use wire::{WireCodec, WireFormat};
 
 use anyhow::{anyhow, Result};
 
@@ -69,6 +71,16 @@ pub struct ExchangeCtx<'a, 'k> {
     /// its inner per-chunk calls; no strategy branches on it today — it
     /// exists so tracing/kernels can observe the chunking regime.
     pub chunk_elems: usize,
+    /// Absolute offset of `buf` within the rank's full flat vector. The
+    /// chunked scheduler and the WFBP bucket loop set it on their per-slice
+    /// inner calls so [`wire::WireCodec`] keeps its error-feedback residual
+    /// aligned with the elements actually in `buf`.
+    pub slice_off: usize,
+    /// On-wire bytes of the current slice in sufficient-factor form
+    /// (Poseidon-style `4·B·(n_in+n_out)` for an all-fc WFBP bucket), set
+    /// by the WFBP bucket loop from [`wfbp::WfbpBucket::sf_elems`]. `None`
+    /// makes the `sf` wire fall back to the dense wire.
+    pub sf_bytes: Option<u64>,
 }
 
 /// Per-exchange accounting (one rank's view; identical across ranks since
@@ -79,6 +91,11 @@ pub struct CommReport {
     pub strategy: String,
     /// Bytes this rank moved (sent) across all phases.
     pub wire_bytes: u64,
+    /// Dense f32 bytes this rank *would* have sent had every value shipped
+    /// uncompressed — the numerator of the observable compression ratio.
+    /// 0 means "nothing was compressed" (raw == `wire_bytes`); the asa16
+    /// native half wire and every [`wire::WireCodec`] format set it.
+    pub wire_raw_bytes: u64,
     /// Simulated transfer time (s), latency included.
     pub sim_transfer: f64,
     /// Latency component of `sim_transfer` (per-message terms, s).
@@ -132,6 +149,16 @@ impl CommReport {
         }
     }
 
+    /// Dense-equivalent bytes over actual on-wire bytes (≥ 1 for every
+    /// shipped wire format; 1.0 when nothing was compressed).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_raw_bytes == 0 || self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.wire_raw_bytes as f64 / self.wire_bytes as f64
+        }
+    }
+
     /// Accumulate a sub-exchange's accounting into this report — used by
     /// the chunked scheduler (per chunk) and the hierarchical strategy
     /// (leader-level sub-report). `strategy`, `chunks` and `legs` are the
@@ -141,6 +168,7 @@ impl CommReport {
         let CommReport {
             strategy: _, // caller's to manage
             wire_bytes,
+            wire_raw_bytes,
             sim_transfer,
             sim_latency,
             sim_kernel,
@@ -156,6 +184,7 @@ impl CommReport {
             legs: _, // caller's to manage
         } = sub;
         self.wire_bytes += wire_bytes;
+        self.wire_raw_bytes += wire_raw_bytes;
         self.wire_intra_bytes += wire_intra_bytes;
         self.wire_inter_bytes += wire_inter_bytes;
         self.sim_transfer += sim_transfer;
@@ -179,6 +208,7 @@ impl CommReport {
         let CommReport {
             strategy,
             wire_bytes: _, // summed by merge()
+            wire_raw_bytes: _,
             sim_transfer: _,
             sim_latency: _,
             sim_kernel: _,
@@ -213,9 +243,12 @@ impl CommReport {
         self.sim_overlapped *= s;
         self.sim_intra *= s;
         self.sim_inter *= s;
-        self.wire_bytes = (self.wire_bytes as f64 * s) as u64;
-        self.wire_intra_bytes = (self.wire_intra_bytes as f64 * s) as u64;
-        self.wire_inter_bytes = (self.wire_inter_bytes as f64 * s) as u64;
+        // round, don't truncate: `as u64` floors, silently dropping bytes
+        // under fractional probe→full projection scales
+        self.wire_bytes = (self.wire_bytes as f64 * s).round() as u64;
+        self.wire_raw_bytes = (self.wire_raw_bytes as f64 * s).round() as u64;
+        self.wire_intra_bytes = (self.wire_intra_bytes as f64 * s).round() as u64;
+        self.wire_inter_bytes = (self.wire_inter_bytes as f64 * s).round() as u64;
         for leg in &mut self.legs {
             leg.transfer *= s;
             leg.latency *= s;
@@ -280,11 +313,17 @@ impl FlatKind {
         }
     }
 
-    pub fn build(self, wire: Wire) -> Box<dyn ExchangeStrategy> {
+    /// Build the *native* strategy for this wire format — no codec wrapping
+    /// (that is [`StrategyKind::build`]'s job, at the outermost level only).
+    /// `fmt` selects asa16's 16-bit value wire; a compressed format
+    /// replaces the native half wire entirely (the codec owns the on-wire
+    /// byte account), so asa16 degrades to plain ASA under it.
+    pub fn build(self, fmt: WireFormat) -> Box<dyn ExchangeStrategy> {
         match self {
             FlatKind::Ar => Box::new(HostAllreduce),
             FlatKind::Asa => Box::new(Asa),
-            FlatKind::Asa16 => Box::new(Asa16::new(wire)),
+            FlatKind::Asa16 if fmt.compressed() => Box::new(Asa),
+            FlatKind::Asa16 => Box::new(Asa16::new(fmt.half_or(Wire::F16))),
             FlatKind::Ring => Box::new(Ring),
         }
     }
@@ -380,13 +419,26 @@ impl StrategyKind {
         )
     }
 
-    pub fn build(self, wire: Wire) -> Box<dyn ExchangeStrategy> {
-        match self {
-            StrategyKind::Ar => Box::new(HostAllreduce),
-            StrategyKind::Asa => Box::new(Asa),
-            StrategyKind::Asa16 => Box::new(Asa16::new(wire)),
-            StrategyKind::Ring => Box::new(Ring),
-            StrategyKind::Hier { inner } => Box::new(Hierarchical::new(inner, wire)),
+    /// Build the full exchange for `fmt`: the native strategy, wrapped in
+    /// the [`WireCodec`] error-feedback layer whenever `fmt` asks for a
+    /// wire the strategy cannot ship natively. `WireFormat::F32` always
+    /// returns the bare strategy (bit-identical to the pre-wire behavior);
+    /// f16/bf16 ride asa16's native value wire where available and the
+    /// codec elsewhere; topk/onebit/sf always go through the codec, at the
+    /// outermost level only (chunk/bucket sub-calls see the codec because
+    /// the chunked and WFBP schedulers drive *this* strategy per slice).
+    pub fn build(self, fmt: WireFormat) -> Box<dyn ExchangeStrategy> {
+        let base: Box<dyn ExchangeStrategy> = match self {
+            StrategyKind::Ar => FlatKind::Ar.build(fmt),
+            StrategyKind::Asa => FlatKind::Asa.build(fmt),
+            StrategyKind::Asa16 => FlatKind::Asa16.build(fmt),
+            StrategyKind::Ring => FlatKind::Ring.build(fmt),
+            StrategyKind::Hier { inner } => Box::new(Hierarchical::new(inner, fmt)),
+        };
+        if fmt.needs_codec(self.half_wire()) {
+            Box::new(WireCodec::new(base, fmt))
+        } else {
+            base
         }
     }
 }
@@ -477,6 +529,7 @@ mod tests {
     fn merge_accumulates_all_accounting() {
         let sub = CommReport {
             wire_bytes: 10,
+            wire_raw_bytes: 40,
             wire_intra_bytes: 6,
             wire_inter_bytes: 4,
             sim_transfer: 1.0,
@@ -494,6 +547,7 @@ mod tests {
         rep.merge(&sub);
         rep.merge(&sub);
         assert_eq!(rep.wire_bytes, 20);
+        assert_eq!(rep.wire_raw_bytes, 80);
         assert_eq!(rep.wire_intra_bytes, 12);
         assert_eq!(rep.wire_inter_bytes, 8);
         assert_eq!(rep.phases, 6);
@@ -536,6 +590,7 @@ mod tests {
     fn scale_times_scales_every_time_and_byte_field() {
         let mut rep = CommReport {
             wire_bytes: 100,
+            wire_raw_bytes: 400,
             wire_intra_bytes: 60,
             wire_inter_bytes: 40,
             sim_transfer: 1.0,
@@ -551,6 +606,7 @@ mod tests {
         let total = rep.sim_total();
         rep.scale_times(2.0);
         assert_eq!(rep.wire_bytes, 200);
+        assert_eq!(rep.wire_raw_bytes, 800);
         assert_eq!(rep.wire_intra_bytes, 120);
         assert_eq!(rep.wire_inter_bytes, 80);
         assert!((rep.sim_total() - 2.0 * total).abs() < 1e-12);
@@ -560,6 +616,41 @@ mod tests {
         let before = rep.sim_transfer;
         rep.scale_times(1.0);
         assert_eq!(rep.sim_transfer, before);
+    }
+
+    #[test]
+    fn scale_times_rounds_bytes_instead_of_truncating() {
+        // the probe→full projection regression: `as u64` floored the
+        // scaled byte fields, so a fractional comm_scale silently dropped
+        // bytes (e.g. 61M elems over a 1M probe scales by 60.965224)
+        let mut rep = CommReport {
+            wire_bytes: 999,
+            wire_raw_bytes: 1_998,
+            wire_intra_bytes: 333,
+            wire_inter_bytes: 667,
+            ..Default::default()
+        };
+        rep.scale_times(1.5);
+        assert_eq!(rep.wire_bytes, 1_499, "999*1.5 = 1498.5 rounds up");
+        assert_eq!(rep.wire_raw_bytes, 2_997);
+        assert_eq!(rep.wire_intra_bytes, 500, "333*1.5 = 499.5 rounds up");
+        assert_eq!(rep.wire_inter_bytes, 1_001, "667*1.5 = 1000.5, not 1000");
+        // a probe-shaped fractional scale keeps the relative error at
+        // rounding level, not a whole truncated byte per field
+        let mut probe = CommReport { wire_bytes: 4_000_000, ..Default::default() };
+        let scale = 60_965_224.0 / 1_000_000.0;
+        probe.scale_times(scale);
+        assert_eq!(probe.wire_bytes, 243_860_896);
+    }
+
+    #[test]
+    fn compression_ratio_reads_raw_over_wire() {
+        let none = CommReport { wire_bytes: 100, ..Default::default() };
+        assert_eq!(none.compression_ratio(), 1.0, "raw=0 marks uncompressed");
+        let half = CommReport { wire_bytes: 50, wire_raw_bytes: 100, ..Default::default() };
+        assert_eq!(half.compression_ratio(), 2.0);
+        let empty = CommReport::default();
+        assert_eq!(empty.compression_ratio(), 1.0);
     }
 
     #[test]

@@ -160,6 +160,11 @@ pub struct WfbpBucket {
     pub len: usize,
     /// Release time as a fraction of the backward pass ((0, 1]).
     pub release_frac: f64,
+    /// Sufficient-factor element count for the `sf` wire: `Σ B·(n_in+n_out)`
+    /// over the bucket's layers when *every* layer in the bucket is an fc
+    /// layer with known dims ([`WfbpPlan::annotate_sf`]), else 0 (no hint —
+    /// the sf wire falls back to dense for this bucket).
+    pub sf_elems: usize,
 }
 
 /// Bucket partition of a model's flat parameter vector, in release
@@ -199,6 +204,7 @@ impl WfbpPlan {
                     off: offs[i],
                     len: hi_end - offs[i],
                     release_frac: rel[i],
+                    sf_elems: 0,
                 });
                 hi_end = offs[i];
                 acc = 0;
@@ -212,8 +218,56 @@ impl WfbpPlan {
     /// post-backward exchange.
     pub fn single(n: usize) -> WfbpPlan {
         WfbpPlan {
-            buckets: vec![WfbpBucket { off: 0, len: n, release_frac: 1.0 }],
+            buckets: vec![WfbpBucket { off: 0, len: n, release_frac: 1.0, sf_elems: 0 }],
             total_elems: n,
+        }
+    }
+
+    /// Annotate each bucket with its sufficient-factor element count for
+    /// the `sf` wire (Poseidon): an fc layer's gradient is `Σ_b δ_b·x_bᵀ`,
+    /// so shipping the factors costs `batch·(n_in + n_out)` elements
+    /// instead of the dense `n_in·n_out`. A bucket gets a hint only when
+    /// every layer it covers is an fc layer with an entry in `dims`
+    /// (`(name, n_in, n_out)`); mixed or unknown buckets keep `sf_elems = 0`
+    /// and ride the dense wire. Call at full scale — the same `layers`
+    /// table the plan was built from — *before* [`project`](Self::project),
+    /// which scales the hints along with the boundaries.
+    pub fn annotate_sf(
+        &mut self,
+        layers: &[(String, usize)],
+        dims: &[(String, usize, usize)],
+        batch: usize,
+    ) {
+        let mut offs = Vec::with_capacity(layers.len());
+        let mut off = 0usize;
+        for (_, p) in layers {
+            offs.push(off);
+            off += p;
+        }
+        if off != self.total_elems || batch == 0 {
+            return;
+        }
+        for b in &mut self.buckets {
+            if b.len == 0 {
+                continue;
+            }
+            let mut sf = 0usize;
+            let mut all_fc = true;
+            for (i, (name, p)) in layers.iter().enumerate() {
+                if *p == 0 || offs[i] + p <= b.off || offs[i] >= b.off + b.len {
+                    continue;
+                }
+                match dims.iter().find(|(dn, _, _)| dn == name) {
+                    Some(&(_, n_in, n_out)) if is_fc_layer(name) => {
+                        sf += batch * (n_in + n_out);
+                    }
+                    _ => {
+                        all_fc = false;
+                        break;
+                    }
+                }
+            }
+            b.sf_elems = if all_fc { sf } else { 0 };
         }
     }
 
@@ -239,7 +293,12 @@ impl WfbpPlan {
             .map(|b| {
                 let off = scale(b.off);
                 let end = scale(b.off + b.len);
-                WfbpBucket { off, len: end - off, release_frac: b.release_frac }
+                WfbpBucket {
+                    off,
+                    len: end - off,
+                    release_frac: b.release_frac,
+                    sf_elems: scale(b.sf_elems),
+                }
             })
             .collect();
         WfbpPlan { buckets, total_elems: n }
@@ -308,11 +367,17 @@ pub fn exchange_wfbp(
     let mut jobs: Vec<TimedJob> = Vec::with_capacity(plan.buckets.len());
     let mut serial = 0.0f64;
     let mut buckets_run = 0usize;
+    let saved_off = ctx.slice_off;
+    let saved_sf = ctx.sf_bytes;
     for b in &plan.buckets {
         if b.len == 0 {
             // deterministic in the plan: every rank skips the same buckets
             continue;
         }
+        // a codec inner keys its residual off the bucket's vector offset;
+        // the sf wire prices this bucket at its factor bytes when annotated
+        ctx.slice_off = saved_off + b.off;
+        ctx.sf_bytes = if b.sf_elems > 0 { Some(4 * b.sf_elems as u64) } else { saved_sf };
         let mut sub = inner.exchange(&mut buf[b.off..b.off + b.len], op, ctx)?;
         sub.scale_times(comm_scale);
         serial += sub.sim_total();
@@ -348,6 +413,8 @@ pub fn exchange_wfbp(
         rep.chunks += chunks;
         buckets_run += 1;
     }
+    ctx.slice_off = saved_off;
+    ctx.sf_bytes = saved_sf;
 
     let (makespan, comm_visible) = if overlap {
         let m = wfbp_timeline(&jobs);
@@ -467,7 +534,7 @@ mod tests {
         assert_eq!(plan.buckets.len(), 3);
         assert_eq!(
             plan.buckets[0],
-            WfbpBucket { off: 4400, len: 2600, release_frac: release_fractions(&t)[3] }
+            WfbpBucket { off: 4400, len: 2600, release_frac: release_fractions(&t)[3], sf_elems: 0 }
         );
         assert_eq!(plan.buckets[1].off, 400);
         assert_eq!(plan.buckets[1].len, 4000);
@@ -477,7 +544,10 @@ mod tests {
         // one huge bucket degenerates to single()
         let one = WfbpPlan::from_layers(&t, usize::MAX);
         assert_eq!(one.buckets.len(), 1);
-        assert_eq!(one.buckets[0], WfbpBucket { off: 0, len: 7000, release_frac: 1.0 });
+        assert_eq!(
+            one.buckets[0],
+            WfbpBucket { off: 0, len: 7000, release_frac: 1.0, sf_elems: 0 }
+        );
     }
 
     #[test]
@@ -504,6 +574,61 @@ mod tests {
         // identity projection keeps exact boundaries
         let same = plan.project(7000);
         assert_eq!(same.buckets, plan.buckets);
+    }
+
+    #[test]
+    fn annotate_sf_marks_all_fc_buckets_only() {
+        let t = fc_heavy();
+        // fc dims chosen so n_in*n_out + n_out == the table's param counts
+        let dims = vec![
+            ("fc6".to_string(), 19usize, 200usize),   // 19*200+200 = 4000
+            ("fc7".to_string(), 19, 100),             // 19*100+100 = 2000
+            ("fc8".to_string(), 29, 20),              // 29*20+20 = 600
+        ];
+        let batch = 16;
+        // per-layer buckets: the three fc buckets get hints, convs none
+        let mut plan = WfbpPlan::from_layers(&t, 0);
+        plan.annotate_sf(&t, &dims, batch);
+        assert_eq!(plan.buckets[0].sf_elems, batch * (29 + 20), "fc8");
+        assert_eq!(plan.buckets[1].sf_elems, batch * (19 + 100), "fc7");
+        assert_eq!(plan.buckets[2].sf_elems, batch * (19 + 200), "fc6");
+        assert_eq!(plan.buckets[3].sf_elems, 0, "conv2");
+        assert_eq!(plan.buckets[4].sf_elems, 0, "conv1");
+        // coalesced: the fc8+fc7 bucket sums both layers' factors; the
+        // conv-containing buckets stay dense
+        let mut co = WfbpPlan::from_layers(&t, 2500);
+        co.annotate_sf(&t, &dims, batch);
+        assert_eq!(co.buckets[0].sf_elems, batch * (29 + 20) + batch * (19 + 100));
+        assert_eq!(co.buckets[1].sf_elems, batch * (19 + 200));
+        assert_eq!(co.buckets[2].sf_elems, 0);
+        // an fc layer missing from the dims table disqualifies its bucket
+        let mut partial = WfbpPlan::from_layers(&t, 0);
+        partial.annotate_sf(&t, &dims[..2], batch);
+        assert_eq!(partial.buckets[0].sf_elems, 0, "fc8 has no dims entry");
+        assert_eq!(partial.buckets[1].sf_elems, batch * (19 + 100));
+        // a mismatched layer table is a no-op, not a misalignment
+        let mut wrong = WfbpPlan::from_layers(&t, 0);
+        wrong.annotate_sf(&t[..3], &dims, batch);
+        assert!(wrong.buckets.iter().all(|b| b.sf_elems == 0));
+    }
+
+    #[test]
+    fn project_scales_sf_hints_with_boundaries() {
+        let t = fc_heavy();
+        let dims = vec![
+            ("fc6".to_string(), 19usize, 200usize),
+            ("fc7".to_string(), 19, 100),
+            ("fc8".to_string(), 29, 20),
+        ];
+        let mut plan = WfbpPlan::from_layers(&t, 0);
+        plan.annotate_sf(&t, &dims, 16);
+        let half = plan.project(3500);
+        for (a, b) in plan.buckets.iter().zip(&half.buckets) {
+            let want = ((a.sf_elems as u128 * 3500 + 3500) / 7000) as usize;
+            assert_eq!(b.sf_elems, want);
+        }
+        // identity projection keeps the hints exactly
+        assert_eq!(plan.project(7000).buckets, plan.buckets);
     }
 
     #[test]

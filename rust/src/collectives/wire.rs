@@ -1,0 +1,488 @@
+//! Gradient-compression wire formats with error feedback (`wire = ...`).
+//!
+//! The paper's last contribution is cutting the bytes the exchange moves;
+//! asa16's native 16-bit value wire was this repo's only answer. This
+//! module adds the rest of the family as a *codec layer* any strategy runs
+//! through:
+//!
+//! * `f32` — the identity wire (no codec; bit-identical to the pre-wire
+//!   behavior).
+//! * `f16` / `bf16` — 16-bit value wire. Rides asa16's native pack/unpack
+//!   where the strategy supports it; elsewhere the codec rounds values
+//!   through [`crate::precision::Wire`] and ships 2 bytes/elem.
+//! * `topk:<p>` — ship exactly `⌈p·n⌉` largest-|x| elements as
+//!   (u32 index, f32 value) pairs: `8·⌈p·n⌉` bytes (Shi et al. 2017's
+//!   bandwidth-bound regime; a win for small `p`, a *loss* past p = 0.5
+//!   where the 8-byte pairs outweigh dense f32).
+//! * `onebit` — one sign bit per element plus a single f32 scale
+//!   (`mean |x|`): `⌈n/8⌉ + 4` bytes, the 1-bit SGD wire.
+//! * `sf` — Poseidon-style sufficient factors (Zhang et al. 2015): an fc
+//!   layer's gradient is `Σ_b δ_b·x_bᵀ`, so ranks can ship the factors —
+//!   `B·(n_in + n_out)` values instead of `n_in·n_out`. Values are exact
+//!   (the factors reconstruct the dense gradient), so only the *pricing*
+//!   changes, and only where the WFBP bucket loop provides the factor-size
+//!   hint ([`super::ExchangeCtx::sf_bytes`], set for all-fc buckets);
+//!   everywhere else `sf` falls back to the dense wire.
+//!
+//! ## Error feedback
+//!
+//! Lossy wires are convergence-preserving by construction: each rank keeps
+//! a per-element residual buffer, folds it into the next send
+//! (`send = grad + residual`), and banks what the codec dropped
+//! (`residual' = send − decode(encode(send))`). For value-exact codecs
+//! (topk, sf, f32) `decode(sent) + residual' == send` holds *bitwise*
+//! (each element's decoded value is either the sent value or 0); for
+//! value-rounding codecs (f16/bf16/onebit) the residual is the exact f32
+//! difference by definition. Residual indexing is by absolute offset in
+//! the rank's flat vector ([`super::ExchangeCtx::slice_off`]), so the
+//! chunked pipeline and WFBP buckets hit the same residual elements the
+//! monolithic exchange would.
+//!
+//! ## Pricing
+//!
+//! The codec encodes *before* any transfer, so every wire leg carries the
+//! compressed byte count. [`super::super::simnet::phase_cost`]'s bandwidth
+//! term is exactly linear in a uniform byte scaling, so the codec prices
+//! the inner exchange dense and rescales:
+//! `sim_transfer' = sim_latency + (sim_transfer − sim_latency)·r` with
+//! `r = codec_bytes / (4·n)` — exact, and mirrored verbatim by
+//! `scripts/pricing_model.py`. Encode/decode cost is charged to
+//! `sim_kernel` (the audit ledger's `CommKernel` lane, like asa16's
+//! pack/unpack casts): encode reads grad + residual
+//! (`gpu_cast_time(8n)`), decode writes the dense buffer
+//! (`gpu_cast_time(4n)`). `sf` charges nothing — the factors fall out of
+//! the backward pass. The dense-equivalent bytes land in
+//! [`super::CommReport::wire_raw_bytes`] so the compression ratio is
+//! observable end to end.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::precision::Wire;
+
+use super::{CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp, StrategyKind};
+
+/// Wire-format selection (`wire =` in TOML, `--wire` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WireFormat {
+    /// Dense f32 — the identity wire.
+    F32,
+    /// 16-bit IEEE half value wire.
+    F16,
+    /// bfloat16 value wire.
+    Bf16,
+    /// Top-k sparsification: ship the `⌈p·n⌉` largest-|x| elements.
+    TopK { p: f64 },
+    /// 1-bit sign wire with a single mean-|x| scale.
+    OneBit,
+    /// Poseidon sufficient factors for all-fc WFBP buckets; dense fallback
+    /// elsewhere.
+    Sf,
+}
+
+impl WireFormat {
+    /// The valid names, for error messages and help text.
+    pub const NAMES: &'static str = "f32|f16|bf16|topk:<p>|onebit|sf";
+
+    /// Case-insensitive name lookup; `topk:<p>` takes `0 < p ≤ 1`.
+    pub fn parse(s: &str) -> Option<WireFormat> {
+        let lower = s.to_ascii_lowercase();
+        if let Some(p) = lower.strip_prefix("topk:") {
+            let p: f64 = p.parse().ok()?;
+            if p > 0.0 && p <= 1.0 && p.is_finite() {
+                return Some(WireFormat::TopK { p });
+            }
+            return None;
+        }
+        match lower.as_str() {
+            "f32" => Some(WireFormat::F32),
+            "f16" | "half" => Some(WireFormat::F16),
+            "bf16" => Some(WireFormat::Bf16),
+            "onebit" | "1bit" => Some(WireFormat::OneBit),
+            "sf" => Some(WireFormat::Sf),
+            _ => None,
+        }
+    }
+
+    /// [`parse`](Self::parse) that fails naming the valid formats — what
+    /// config files and `--wire` surface.
+    pub fn from_name(s: &str) -> Result<WireFormat> {
+        Self::parse(s)
+            .ok_or_else(|| anyhow!("unknown wire format '{s}' (valid: {})", Self::NAMES))
+    }
+
+    /// Canonical name (`topk:<p>` prints its fraction).
+    pub fn name(self) -> String {
+        match self {
+            WireFormat::F32 => "f32".to_string(),
+            WireFormat::F16 => "f16".to_string(),
+            WireFormat::Bf16 => "bf16".to_string(),
+            WireFormat::TopK { p } => format!("topk:{p}"),
+            WireFormat::OneBit => "onebit".to_string(),
+            WireFormat::Sf => "sf".to_string(),
+        }
+    }
+
+    /// Formats whose on-wire byte count is data-shaped (not a fixed per-
+    /// element width a native strategy could ship). These always go
+    /// through the codec and replace asa16's native half wire.
+    pub fn compressed(self) -> bool {
+        matches!(self, WireFormat::TopK { .. } | WireFormat::OneBit | WireFormat::Sf)
+    }
+
+    /// The 16-bit value wire this format maps to, or `default` when it is
+    /// not a half-precision format (what asa16's native path packs with).
+    pub fn half_or(self, default: Wire) -> Wire {
+        match self {
+            WireFormat::F16 => Wire::F16,
+            WireFormat::Bf16 => Wire::Bf16,
+            _ => default,
+        }
+    }
+
+    /// Does shipping this format through a strategy whose native wire is
+    /// `native_half` (asa16 / hier:asa16) require the codec layer?
+    pub fn needs_codec(self, native_half: bool) -> bool {
+        match self {
+            WireFormat::F32 => false,
+            WireFormat::F16 | WireFormat::Bf16 => !native_half,
+            _ => true,
+        }
+    }
+}
+
+/// Nominal on-wire bytes per f32 element for *sizing* (chunk/bucket KiB →
+/// element counts), not pricing: topk's true byte count is data-independent
+/// (`8·⌈p·n⌉ ≈ 8p·n`) but sf's depends on the runtime factor hint, so sf
+/// sizes at its dense fallback. Clamped below at one bit per element.
+pub fn wire_bytes_per_elem(strategy: StrategyKind, fmt: WireFormat) -> f64 {
+    let bpe = match fmt {
+        WireFormat::F32 => {
+            if strategy.half_wire() {
+                2.0
+            } else {
+                4.0
+            }
+        }
+        WireFormat::F16 | WireFormat::Bf16 => 2.0,
+        WireFormat::TopK { p } => 8.0 * p,
+        WireFormat::OneBit => 0.125,
+        WireFormat::Sf => 4.0,
+    };
+    bpe.max(0.125)
+}
+
+/// Elements per `kib` KiB of *on-wire* bytes for a strategy × wire — the
+/// one shared sizing rule for `chunk_kib` and `bucket_kib`. The pre-wire
+/// code hardcoded `kib * 1024 / 4` (f32 width) everywhere, so an asa16
+/// chunk of "256 KiB" was only 128 KiB on the wire and the flow-shop
+/// pipeline was priced at the wrong granularity; this computes the element
+/// count from the active wire's width instead. The f32 × full-width path
+/// reproduces `kib * 1024 / 4` exactly (bit-identical bands).
+pub fn elems_per_kib(kib: usize, strategy: StrategyKind, fmt: WireFormat) -> usize {
+    ((kib as f64 * 1024.0) / wire_bytes_per_elem(strategy, fmt)).floor() as usize
+}
+
+/// One codec application: the values the wire delivers (dense, with
+/// whatever the codec dropped zeroed/rounded away) and the bytes one rank
+/// pays to ship them.
+pub struct Encoded {
+    pub decoded: Vec<f32>,
+    pub wire_bytes: u64,
+}
+
+/// `⌈p·n⌉` clamped to `[1, n]` — how many elements `topk:<p>` ships.
+pub fn topk_count(n: usize, p: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    ((p * n as f64).ceil() as usize).clamp(1, n)
+}
+
+/// The indices `topk:<p>` selects: exactly [`topk_count`] of them, largest
+/// |x| first, ties broken toward the lower index (deterministic across
+/// ranks and delivery schedules).
+pub fn topk_indices(xs: &[f32], p: f64) -> Vec<u32> {
+    let m = topk_count(xs.len(), p);
+    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        let fa = xs[a as usize].abs();
+        let fb = xs[b as usize].abs();
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    idx.truncate(m);
+    idx
+}
+
+/// Encode `xs` for the wire. Pure and deterministic in `xs` (and the sf
+/// hint), so every rank and every delivery schedule encodes identically —
+/// the race explorer's schedule-independence rests on this.
+pub fn encode(fmt: WireFormat, xs: &[f32], sf_bytes: Option<u64>) -> Encoded {
+    let n = xs.len();
+    let dense = 4 * n as u64;
+    match fmt {
+        WireFormat::F32 => Encoded { decoded: xs.to_vec(), wire_bytes: dense },
+        WireFormat::F16 | WireFormat::Bf16 => {
+            let w = if fmt == WireFormat::F16 { Wire::F16 } else { Wire::Bf16 };
+            let decoded = xs.iter().map(|&x| w.unpack_one(w.pack_one(x))).collect();
+            Encoded { decoded, wire_bytes: 2 * n as u64 }
+        }
+        WireFormat::TopK { p } => {
+            let mut decoded = vec![0.0f32; n];
+            let idx = topk_indices(xs, p);
+            for &i in &idx {
+                decoded[i as usize] = xs[i as usize];
+            }
+            // (u32 index, f32 value) per shipped element
+            Encoded { decoded, wire_bytes: 8 * idx.len() as u64 }
+        }
+        WireFormat::OneBit => {
+            // f64 accumulation in element order, rounded to f32 once —
+            // bit-reproducible and mirrored by the Python port
+            let scale = if n == 0 {
+                0.0f32
+            } else {
+                (xs.iter().map(|&x| x.abs() as f64).sum::<f64>() / n as f64) as f32
+            };
+            let decoded = xs
+                .iter()
+                .map(|&x| if x.to_bits() >> 31 == 1 { -scale } else { scale })
+                .collect();
+            Encoded { decoded, wire_bytes: n.div_ceil(8) as u64 + 4 }
+        }
+        WireFormat::Sf => {
+            // value-exact: the factors reconstruct the dense gradient, so
+            // only the priced bytes change, and only under a real hint
+            let wire_bytes = match sf_bytes {
+                Some(b) if b < dense => b,
+                _ => dense,
+            };
+            Encoded { decoded: xs.to_vec(), wire_bytes }
+        }
+    }
+}
+
+/// Error-feedback codec wrapper: encodes the (residual-folded) buffer,
+/// hands the decoded values to any inner [`ExchangeStrategy`], and
+/// reprices the inner report at the compressed byte count. Built at the
+/// outermost strategy level by [`StrategyKind::build`]; the chunked
+/// pipeline and WFBP bucket loop drive it per slice, with
+/// [`ExchangeCtx::slice_off`] keeping the residual aligned.
+pub struct WireCodec {
+    inner: Box<dyn ExchangeStrategy>,
+    fmt: WireFormat,
+    /// Per-rank error-feedback residual, indexed by absolute offset in the
+    /// flat vector (each worker thread owns its own strategy instance).
+    residual: Mutex<Vec<f32>>,
+}
+
+impl WireCodec {
+    pub fn new(inner: Box<dyn ExchangeStrategy>, fmt: WireFormat) -> WireCodec {
+        WireCodec { inner, fmt, residual: Mutex::new(Vec::new()) }
+    }
+
+    pub fn fmt(&self) -> WireFormat {
+        self.fmt
+    }
+
+    /// Snapshot of the residual buffer — a test/diagnostic hook for the
+    /// conservation properties (`decode(sent) + residual' == send`).
+    pub fn residual_snapshot(&self) -> Vec<f32> {
+        self.residual.lock().unwrap().clone()
+    }
+}
+
+impl ExchangeStrategy for WireCodec {
+    fn name(&self) -> &'static str {
+        "wire-codec"
+    }
+
+    fn exchange(
+        &self,
+        buf: &mut [f32],
+        op: ReduceOp,
+        ctx: &mut ExchangeCtx<'_, '_>,
+    ) -> Result<CommReport> {
+        let n = buf.len();
+        let off = ctx.slice_off;
+        let sf_hint = if self.fmt == WireFormat::Sf { ctx.sf_bytes } else { None };
+        {
+            // send = grad + residual; bank residual' = send − decoded
+            let mut res = self.residual.lock().unwrap();
+            if res.len() < off + n {
+                res.resize(off + n, 0.0);
+            }
+            for (i, v) in buf.iter_mut().enumerate() {
+                *v += res[off + i];
+            }
+            let enc = encode(self.fmt, buf, sf_hint);
+            for (i, v) in buf.iter_mut().enumerate() {
+                res[off + i] = *v - enc.decoded[i];
+                *v = enc.decoded[i];
+            }
+            drop(res);
+            let mut rep = self.inner.exchange(buf, op, ctx)?;
+            // exact repricing: phase_cost's bandwidth term is linear in a
+            // uniform byte scaling; latency is per-message and stays
+            let r = enc.wire_bytes as f64 / (4.0 * n.max(1) as f64);
+            let raw = rep.wire_bytes;
+            rep.wire_raw_bytes = raw;
+            rep.wire_bytes = (raw as f64 * r).round() as u64;
+            rep.wire_intra_bytes = (rep.wire_intra_bytes as f64 * r).round() as u64;
+            rep.wire_inter_bytes = (rep.wire_inter_bytes as f64 * r).round() as u64;
+            rep.sim_transfer = rep.sim_latency + (rep.sim_transfer - rep.sim_latency) * r;
+            rep.sim_intra *= r;
+            rep.sim_inter *= r;
+            for leg in &mut rep.legs {
+                leg.transfer = leg.latency + (leg.transfer - leg.latency) * r;
+            }
+            // encode reads grad + residual, decode writes the dense buffer;
+            // sf's factors fall out of the backward pass (no codec kernel)
+            if self.fmt != WireFormat::Sf {
+                rep.sim_kernel += ctx.links.gpu_cast_time(8 * n as u64);
+                rep.sim_kernel += ctx.links.gpu_cast_time(4 * n as u64);
+            }
+            rep.strategy = format!("{}/{}", rep.strategy, self.fmt.name());
+            Ok(rep)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_format_parse_roundtrip_and_errors() {
+        for fmt in [
+            WireFormat::F32,
+            WireFormat::F16,
+            WireFormat::Bf16,
+            WireFormat::TopK { p: 0.01 },
+            WireFormat::OneBit,
+            WireFormat::Sf,
+        ] {
+            assert_eq!(WireFormat::parse(&fmt.name()), Some(fmt));
+        }
+        assert_eq!(WireFormat::parse("TOPK:0.5"), Some(WireFormat::TopK { p: 0.5 }));
+        assert_eq!(WireFormat::parse("1bit"), Some(WireFormat::OneBit));
+        assert_eq!(WireFormat::parse("half"), Some(WireFormat::F16));
+        for bad in ["f8", "topk", "topk:0", "topk:1.5", "topk:-0.1", "topk:nan", ""] {
+            assert_eq!(WireFormat::parse(bad), None, "{bad:?} must not parse");
+        }
+        let err = WireFormat::from_name("f8").unwrap_err().to_string();
+        assert!(err.contains("f8") && err.contains("onebit"), "{err}");
+    }
+
+    #[test]
+    fn needs_codec_matrix() {
+        assert!(!WireFormat::F32.needs_codec(false));
+        assert!(!WireFormat::F32.needs_codec(true));
+        assert!(WireFormat::F16.needs_codec(false));
+        assert!(!WireFormat::F16.needs_codec(true), "asa16 ships f16 natively");
+        assert!(!WireFormat::Bf16.needs_codec(true));
+        for fmt in [WireFormat::TopK { p: 0.1 }, WireFormat::OneBit, WireFormat::Sf] {
+            assert!(fmt.needs_codec(false) && fmt.needs_codec(true), "{}", fmt.name());
+            assert!(fmt.compressed());
+        }
+        assert!(!WireFormat::F16.compressed());
+    }
+
+    #[test]
+    fn topk_count_is_ceil_and_clamped() {
+        assert_eq!(topk_count(1000, 0.01), 10);
+        assert_eq!(topk_count(1001, 0.01), 11, "ceil, not round");
+        assert_eq!(topk_count(10, 0.0001), 1, "at least one element");
+        assert_eq!(topk_count(10, 1.0), 10);
+        assert_eq!(topk_count(0, 0.5), 0);
+    }
+
+    #[test]
+    fn topk_selects_largest_magnitudes_with_deterministic_ties() {
+        let xs = [1.0, -3.0, 2.0, -2.0, 0.5];
+        // |x|: 1, 3, 2, 2, 0.5 — top-3 is {1, 2, 3}: the |2.0| tie breaks
+        // toward the lower index (2 before 3)
+        assert_eq!(topk_indices(&xs, 0.6), vec![1, 2, 3]);
+        let enc = encode(WireFormat::TopK { p: 0.6 }, &xs, None);
+        assert_eq!(enc.decoded, vec![0.0, -3.0, 2.0, -2.0, 0.0]);
+        assert_eq!(enc.wire_bytes, 24);
+        // an all-ties vector keeps index order
+        let ties = [7.0f32; 4];
+        assert_eq!(topk_indices(&ties, 0.5), vec![0, 1]);
+    }
+
+    #[test]
+    fn onebit_ships_sign_and_mean_scale() {
+        let xs = [1.0f32, -2.0, 3.0, -4.0];
+        let enc = encode(WireFormat::OneBit, &xs, None);
+        let scale = ((1.0 + 2.0 + 3.0 + 4.0) / 4.0) as f32;
+        assert_eq!(enc.decoded, vec![scale, -scale, scale, -scale]);
+        assert_eq!(enc.wire_bytes, 1 + 4, "4 sign bits pack into 1 byte + f32 scale");
+        let big = encode(WireFormat::OneBit, &[0.5; 17], None);
+        assert_eq!(big.wire_bytes, 3 + 4, "17 bits → 3 bytes");
+        // an all-zero vector round-trips to zero (scale 0, positive signs)
+        let z = encode(WireFormat::OneBit, &[0.0; 8], None);
+        assert!(z.decoded.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sf_uses_hint_only_when_it_wins() {
+        let xs = [1.0f32; 100];
+        let hinted = encode(WireFormat::Sf, &xs, Some(80));
+        assert_eq!(hinted.wire_bytes, 80);
+        assert_eq!(hinted.decoded, xs.to_vec(), "sf is value-exact");
+        let no_hint = encode(WireFormat::Sf, &xs, None);
+        assert_eq!(no_hint.wire_bytes, 400, "dense fallback");
+        let bad_hint = encode(WireFormat::Sf, &xs, Some(500));
+        assert_eq!(bad_hint.wire_bytes, 400, "a hint worse than dense is ignored");
+    }
+
+    #[test]
+    fn value_exact_codecs_conserve_bitwise() {
+        // topk/sf/f32: decoded + residual == send, element-exact in f32
+        let xs: Vec<f32> = (0..97).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.37).collect();
+        for fmt in [WireFormat::TopK { p: 0.13 }, WireFormat::Sf, WireFormat::F32] {
+            let enc = encode(fmt, &xs, None);
+            for (i, (&x, &d)) in xs.iter().zip(&enc.decoded).enumerate() {
+                let residual = x - d;
+                assert_eq!(
+                    (d + residual).to_bits(),
+                    x.to_bits(),
+                    "{} elem {i}: {d} + {residual} != {x}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn elems_per_kib_is_wire_width_aware() {
+        // f32 full-width reproduces the historical integer rule exactly
+        for kib in [1usize, 7, 256, 4096] {
+            assert_eq!(
+                elems_per_kib(kib, StrategyKind::Asa, WireFormat::F32),
+                kib * 1024 / 4
+            );
+        }
+        // asa16's 2-byte wire fits twice the elements per on-wire KiB —
+        // the sizing bug this helper fixes
+        assert_eq!(
+            elems_per_kib(256, StrategyKind::Asa16, WireFormat::F32),
+            256 * 1024 / 2
+        );
+        assert_eq!(
+            elems_per_kib(256, StrategyKind::Hier { inner: super::super::FlatKind::Asa16 }, WireFormat::F32),
+            256 * 1024 / 2
+        );
+        // codec wires size at their own width
+        assert_eq!(elems_per_kib(1, StrategyKind::Asa, WireFormat::F16), 512);
+        assert_eq!(
+            elems_per_kib(1, StrategyKind::Asa, WireFormat::TopK { p: 0.01 }),
+            (1024.0 / 0.125f64).floor() as usize,
+            "topk:0.01 nominal 0.08 B/elem clamps at one bit/elem"
+        );
+        assert_eq!(elems_per_kib(1, StrategyKind::Asa, WireFormat::OneBit), 8192);
+        assert_eq!(elems_per_kib(1, StrategyKind::Asa, WireFormat::Sf), 256);
+    }
+}

@@ -13,9 +13,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bsp::BspConfig;
-use crate::collectives::{OverlapMode, StrategyKind};
+use crate::collectives::{OverlapMode, StrategyKind, WireFormat};
 use crate::easgd::{EasgdConfig, Transport};
-use crate::precision::Wire;
 use crate::sgd::{LrSchedule, Scheme};
 
 /// A parsed config value.
@@ -159,12 +158,10 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
     if let Some(v) = t.get("exchange") {
         cfg.strategy = StrategyKind::from_name(v.as_str()?)?;
     }
+    // gradient wire format: dense (f32|f16|bf16) or compressed
+    // (topk:<p>|onebit|sf); compressed wires carry per-rank error feedback
     if let Some(v) = t.get("wire") {
-        cfg.wire = match v.as_str()? {
-            "f16" => Wire::F16,
-            "bf16" => Wire::Bf16,
-            w => bail!("bad wire '{w}'"),
-        };
+        cfg.wire = WireFormat::from_name(v.as_str()?)?;
     }
     if let Some(v) = t.get("momentum") {
         cfg.momentum = v.as_f64()?;
@@ -288,6 +285,20 @@ pub fn easgd_from_file(path: &Path) -> Result<EasgdConfig> {
     if let Some(v) = t.get("exchange") {
         cfg.exchange = StrategyKind::from_name(v.as_str()?)?;
     }
+    // elastic exchange wire override: dense formats only — the center
+    // pull/push ships full parameters, not gradients, so sparsifying
+    // wires have no error-feedback stream to ride on
+    if let Some(v) = t.get("wire") {
+        let fmt = WireFormat::from_name(v.as_str()?)?;
+        if fmt.compressed() {
+            bail!(
+                "easgd wire '{}' unsupported: elastic exchange ships full \
+                 parameters, not gradients (use f32|f16|bf16)",
+                fmt.name()
+            );
+        }
+        cfg.wire = Some(fmt);
+    }
     // parameter-server shards (the center variable splits across them);
     // same message as ShardPlan::new's run-time validation
     if let Some(v) = t.get("servers") {
@@ -353,6 +364,7 @@ transport = "platoon-shm"
         assert_eq!(cfg.batch, 32);
         assert_eq!(cfg.scheme, Scheme::Subgd);
         assert_eq!(cfg.strategy, StrategyKind::Asa16);
+        assert_eq!(cfg.wire, WireFormat::F16);
         assert_eq!(cfg.sim_model.as_deref(), Some("alexnet"));
         assert_eq!(cfg.chunk_kib, 4096);
         assert!(cfg.pipeline);
@@ -411,6 +423,37 @@ transport = "platoon-shm"
         let t = parse("[train]\noverlap = \"sometimes\"").unwrap();
         let err = bsp_from_table(&t).unwrap_err().to_string();
         assert!(err.contains("sometimes") && err.contains("wfbp"), "{err}");
+    }
+
+    #[test]
+    fn wire_key_parses_compressed_formats_and_rejects_junk() {
+        let t = parse("[train]\nwire = \"topk:0.01\"").unwrap();
+        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::TopK { p: 0.01 });
+        let t = parse("[train]\nwire = \"onebit\"").unwrap();
+        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::OneBit);
+        let t = parse("[train]\nwire = \"sf\"").unwrap();
+        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::Sf);
+        // default stays full-width
+        let t = parse("[train]\nworkers = 2").unwrap();
+        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::F32);
+        // bad name lists the valid family
+        let t = parse("[train]\nwire = \"q4\"").unwrap();
+        let err = bsp_from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("q4") && err.contains("topk"), "{err}");
+    }
+
+    #[test]
+    fn easgd_wire_key_allows_dense_and_rejects_compressed() {
+        let p = std::env::temp_dir().join(format!("tmpi_cfg_wire_{}.toml", std::process::id()));
+        std::fs::write(&p, "[easgd]\nworkers = 2\nwire = \"bf16\"").unwrap();
+        assert_eq!(easgd_from_file(&p).unwrap().wire, Some(WireFormat::Bf16));
+        // unset leaves the strategy-derived default
+        std::fs::write(&p, "[easgd]\nworkers = 2").unwrap();
+        assert_eq!(easgd_from_file(&p).unwrap().wire, None);
+        std::fs::write(&p, "[easgd]\nwire = \"onebit\"").unwrap();
+        let err = easgd_from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("full") && err.contains("parameters"), "{err}");
+        let _ = std::fs::remove_file(p);
     }
 
     #[test]

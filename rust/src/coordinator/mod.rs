@@ -12,11 +12,12 @@ use anyhow::{Context, Result};
 
 use crate::bsp::{run_bsp, BspConfig, BspReport};
 use crate::cluster::Topology;
-use crate::collectives::{CommReport, ExchangeCtx, ReduceOp, StrategyKind, WfbpOutcome, WfbpPlan};
+use crate::collectives::{
+    wire, CommReport, ExchangeCtx, ReduceOp, StrategyKind, WfbpOutcome, WfbpPlan, WireFormat,
+};
 use crate::easgd::{run_easgd, EasgdConfig, Transport};
 use crate::metrics::Table;
 use crate::models;
-use crate::precision::Wire;
 use crate::runtime::Runtime;
 use crate::sgd::{LrSchedule, Scheme};
 use crate::simnet::LinkParams;
@@ -98,12 +99,14 @@ impl Session {
     ) -> Result<CommReport> {
         probe_exchange_rt(
             strategy,
+            WireFormat::F32,
             k,
             topo,
             full_bytes,
             cuda_aware,
             chunks,
             pipeline,
+            None,
             Some(self.rt.clone()),
         )
     }
@@ -564,7 +567,41 @@ pub fn probe_exchange(
     chunks: usize,
     pipeline: bool,
 ) -> Result<CommReport> {
-    probe_exchange_rt(strategy, k, topo, full_bytes, cuda_aware, chunks, pipeline, None)
+    probe_exchange_rt(
+        strategy,
+        WireFormat::F32,
+        k,
+        topo,
+        full_bytes,
+        cuda_aware,
+        chunks,
+        pipeline,
+        None,
+        None,
+    )
+}
+
+/// [`probe_exchange`] with an explicit wire format — the wire-sweep bench
+/// probe. `sf_bytes` is the full-scale sufficient-factor byte hint for the
+/// `sf` wire (`None` or a hint ≥ dense rides the dense fallback); it is
+/// scaled onto the capped probe buffer at the same ratio as the vector, so
+/// the codec's byte ratio — and therefore every repriced band — is exactly
+/// the full-scale one.
+#[allow(clippy::too_many_arguments)]
+pub fn probe_exchange_wire(
+    strategy: StrategyKind,
+    fmt: WireFormat,
+    k: usize,
+    topo: Topology,
+    full_bytes: u64,
+    cuda_aware: bool,
+    chunks: usize,
+    pipeline: bool,
+    sf_bytes: Option<u64>,
+) -> Result<CommReport> {
+    probe_exchange_rt(
+        strategy, fmt, k, topo, full_bytes, cuda_aware, chunks, pipeline, sf_bytes, None,
+    )
 }
 
 /// Shared probe: real buffers are capped at 1M f32; sim time scales
@@ -573,17 +610,21 @@ pub fn probe_exchange(
 #[allow(clippy::too_many_arguments)]
 fn probe_exchange_rt(
     strategy: StrategyKind,
+    fmt: WireFormat,
     k: usize,
     topo: Topology,
     full_bytes: u64,
     cuda_aware: bool,
     chunks: usize,
     pipeline: bool,
+    sf_bytes: Option<u64>,
     rt: Option<Arc<Runtime>>,
 ) -> Result<CommReport> {
     let probe_elems: usize = 1_000_000.min((full_bytes / 4) as usize).max(1);
     let scale = full_bytes as f64 / (4.0 * probe_elems as f64);
     let chunk_elems = if chunks > 1 { probe_elems.div_ceil(chunks) } else { 0 };
+    // the sf hint shrinks with the probe so the byte *ratio* is full-scale
+    let probe_sf = sf_bytes.map(|b| (b as f64 / scale).round() as u64);
     let links = LinkParams::default();
 
     let world = crate::mpi::world(k);
@@ -597,12 +638,12 @@ fn probe_exchange_rt(
             let kernels = rt.as_ref().map(|r| r.kernels());
             let strat: Box<dyn crate::collectives::ExchangeStrategy> = if chunk_elems > 0 {
                 Box::new(crate::collectives::ChunkedPipeline::new(
-                    strategy.build(Wire::F16),
+                    strategy.build(fmt),
                     chunk_elems,
                     pipeline,
                 ))
             } else {
-                strategy.build(Wire::F16)
+                strategy.build(fmt)
             };
             let mut ctx = ExchangeCtx {
                 comm: &mut comm,
@@ -611,6 +652,8 @@ fn probe_exchange_rt(
                 kernels: kernels.as_ref(),
                 cuda_aware,
                 chunk_elems: 0,
+                slice_off: 0,
+                sf_bytes: probe_sf,
             };
             strat.exchange(&mut buf, ReduceOp::Sum, &mut ctx)
         }));
@@ -650,11 +693,16 @@ pub fn probe_wfbp(
     let full_elems: usize = layers.iter().map(|(_, p)| p).sum();
     let probe_elems: usize = 1_000_000.min(full_elems).max(1);
     let comm_scale = full_elems.max(1) as f64 / probe_elems as f64;
-    let plan =
-        Arc::new(WfbpPlan::from_layers(layers, bucket_kib * 1024 / 4).project(probe_elems));
+    // bucket/chunk budgets are on-wire KiB: wire-width-aware sizing (the
+    // probes run the f32 wire, so asa16's native half wire is the only
+    // width that differs here)
+    let bucket_elems = wire::elems_per_kib(bucket_kib, strategy, WireFormat::F32);
+    let plan = Arc::new(WfbpPlan::from_layers(layers, bucket_elems).project(probe_elems));
     // a full-scale chunk size maps onto the probe at the same ratio
     let chunk_elems = if chunk_kib > 0 {
-        (((chunk_kib * 1024 / 4) as f64 / comm_scale).round() as usize).max(1)
+        ((wire::elems_per_kib(chunk_kib, strategy, WireFormat::F32) as f64 / comm_scale)
+            .round() as usize)
+            .max(1)
     } else {
         0
     };
@@ -670,12 +718,12 @@ pub fn probe_wfbp(
                 (0..probe_elems).map(|i| ((rank * 31 + i) % 1000) as f32 * 1e-3).collect();
             let inner: Box<dyn crate::collectives::ExchangeStrategy> = if chunk_elems > 0 {
                 Box::new(crate::collectives::ChunkedPipeline::new(
-                    strategy.build(Wire::F16),
+                    strategy.build(WireFormat::F32),
                     chunk_elems,
                     true,
                 ))
             } else {
-                strategy.build(Wire::F16)
+                strategy.build(WireFormat::F32)
             };
             let mut ctx = ExchangeCtx {
                 comm: &mut comm,
@@ -684,6 +732,8 @@ pub fn probe_wfbp(
                 kernels: None,
                 cuda_aware,
                 chunk_elems: 0,
+                slice_off: 0,
+                sf_bytes: None,
             };
             crate::collectives::exchange_wfbp(
                 inner.as_ref(),

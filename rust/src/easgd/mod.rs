@@ -34,11 +34,12 @@ use std::thread;
 use anyhow::{anyhow, Result};
 
 use crate::cluster::Topology;
-use crate::collectives::StrategyKind;
+use crate::collectives::{StrategyKind, WireFormat};
 use crate::data::{FeatureDataset, ImageDataset, ImageSpec};
 use crate::metrics::Breakdown;
 use crate::models;
 use crate::mpi::{self, tags, Payload};
+use crate::precision::Wire;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::LrSchedule;
 use crate::simnet::{phase_time, LinkParams, Transfer};
@@ -92,6 +93,13 @@ pub struct EasgdConfig {
     /// point-to-point, so the collective *structure* of the name has no
     /// effect here; only its wire format does.
     pub exchange: StrategyKind,
+    /// Explicit elastic wire override (`wire = "f32|f16|bf16"`). `None`
+    /// derives the wire from `exchange` (asa16-family implies f16 — the
+    /// historical behavior). Compressed formats (topk/onebit/sf) are
+    /// rejected at the config/CLI layer: the elastic exchange ships full
+    /// parameters, not gradients, so there is no error-feedback stream for
+    /// a sparsifier to ride on.
+    pub wire: Option<WireFormat>,
     /// Parameter-server shards: the center variable splits into this many
     /// rank-segment-aligned slices, one server rank (own simulated GPU)
     /// and one independent request queue per slice.
@@ -117,7 +125,23 @@ impl EasgdConfig {
             chunk_kib: 0,
             pipeline: true,
             exchange: StrategyKind::Asa,
+            wire: None,
             servers: 1,
+        }
+    }
+
+    /// Resolve the packed wire of the elastic exchange: an explicit dense
+    /// `wire` override wins; otherwise an asa16-family `exchange` implies
+    /// f16. `None` means full-width f32 (no packing).
+    pub fn elastic_wire(&self) -> Option<Wire> {
+        match self.wire {
+            Some(WireFormat::F32) => None,
+            Some(WireFormat::F16) => Some(Wire::F16),
+            Some(WireFormat::Bf16) => Some(Wire::Bf16),
+            // config/CLI reject compressed formats here; treat any that
+            // slip through as full-width rather than corrupt the payload
+            Some(_) => None,
+            None => self.exchange.half_wire().then_some(Wire::F16),
         }
     }
 }
@@ -445,7 +469,6 @@ fn worker_main(
     let mut curve = Vec::new();
     let mut queue_waits = Vec::new();
     let alpha = cfg.alpha as f32;
-    let half = cfg.exchange.half_wire();
 
     // per-worker eval (rank 0 records the curve)
     let eval = if rank == 0 && cfg.eval_every > 0 {
@@ -492,7 +515,6 @@ fn worker_main(
                 rank,
                 plan,
                 prices,
-                half,
                 alpha,
                 &mut params,
                 led.clock(),
@@ -529,7 +551,6 @@ fn worker_main(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::precision::Wire;
 
     #[test]
     fn pipelined_server_handle_cost_shrinks_with_chunks_but_is_wire_clamped() {

@@ -96,6 +96,10 @@ pub struct ShardPrices {
     /// `handle[shard][worker]`: scaled server occupancy per push (elastic
     /// update, chunk-pipelined under the incoming stream when configured).
     pub handle: Vec<Vec<f64>>,
+    /// Packed wire of the exchange (`None` = full-width f32). Shared here
+    /// so worker packing and server unpacking agree without metadata on
+    /// the wire.
+    pub wire: Option<Wire>,
 }
 
 impl ShardPrices {
@@ -106,13 +110,14 @@ impl ShardPrices {
         plan: &ShardPlan,
         comm_scale: f64,
     ) -> ShardPrices {
-        let half = cfg.exchange.half_wire();
+        let wire = cfg.elastic_wire();
         let mut wire_half = Vec::with_capacity(plan.servers);
         let mut handle = Vec::with_capacity(plan.servers);
         for (j, &(_, len)) in plan.slices.iter().enumerate() {
-            // the f16 wire halves what moves, not the f32 elastic update
+            // a packed wire shrinks what moves, not the f32 elastic update
             let full_bytes = 4 * len as u64;
-            let wire_bytes = if half { full_bytes / 2 } else { full_bytes };
+            // both packed wires (f16/bf16) move 2 bytes per element
+            let wire_bytes = if wire.is_some() { 2 * len as u64 } else { full_bytes };
             let mut w_row = Vec::with_capacity(plan.workers);
             let mut h_row = Vec::with_capacity(plan.workers);
             for w in 0..plan.workers {
@@ -131,7 +136,7 @@ impl ShardPrices {
             wire_half.push(w_row);
             handle.push(h_row);
         }
-        ShardPrices { wire_half, handle }
+        ShardPrices { wire_half, handle, wire }
     }
 }
 
@@ -170,7 +175,7 @@ pub fn worker_push(
     comm: &mut Comm,
     rank: usize,
     plan: &ShardPlan,
-    half: bool,
+    wire: Option<Wire>,
     params: &[f32],
     clock: f64,
 ) -> Result<()> {
@@ -179,12 +184,13 @@ pub fn worker_push(
         let j = (rank + i) % s;
         let (lo, len) = plan.slices[j];
         let slice = &params[lo..lo + len];
-        let payload = if half {
-            let mut bits = Vec::new();
-            Wire::F16.pack(slice, &mut bits);
-            Payload::U16(bits)
-        } else {
-            Payload::F32(slice.to_vec())
+        let payload = match wire {
+            Some(w) => {
+                let mut bits = Vec::new();
+                w.pack(slice, &mut bits);
+                Payload::U16(bits)
+            }
+            None => Payload::F32(slice.to_vec()),
         };
         comm.send(plan.server_rank(j), tags::EASGD_PUSH, payload, clock)?;
     }
@@ -212,7 +218,7 @@ pub fn worker_collect(
         let center = match m.payload {
             Payload::U16(bits) => {
                 let mut vals = Vec::new();
-                Wire::F16.unpack(&bits, &mut vals);
+                prices.wire.unwrap_or(Wire::F16).unpack(&bits, &mut vals);
                 vals
             }
             other => other.into_f32()?,
@@ -243,12 +249,11 @@ pub fn worker_exchange(
     rank: usize,
     plan: &ShardPlan,
     prices: &ShardPrices,
-    half: bool,
     alpha: f32,
     params: &mut [f32],
     clock: f64,
 ) -> Result<ExchangeTiming> {
-    worker_push(comm, rank, plan, half, params, clock)?;
+    worker_push(comm, rank, plan, prices.wire, params, clock)?;
     worker_collect(comm, rank, plan, prices, alpha, params, clock)
 }
 
@@ -317,11 +322,12 @@ pub fn server_shard_main(
         };
         let Some((arrival, w)) = pick else { break };
         let m = heads[w].take().unwrap();
-        let (wvals, half) = match m.payload {
+        let wire = prices.wire.unwrap_or(Wire::F16);
+        let (wvals, packed) = match m.payload {
             Payload::F32(v) => (v, false),
             Payload::U16(bits) => {
                 let mut vals = Vec::new();
-                Wire::F16.unpack(&bits, &mut vals);
+                wire.unpack(&bits, &mut vals);
                 (vals, true)
             }
             _ => return Err(anyhow!("unexpected payload at shard server")),
@@ -330,9 +336,9 @@ pub fn server_shard_main(
         let finish = queue.serve(arrival, prices.handle[shard][w]);
         last_finish[w] = finish;
         // reply with the center as seen by this worker (pre-update)
-        let reply = if half {
+        let reply = if packed {
             let mut bits = Vec::new();
-            Wire::F16.pack(&center, &mut bits);
+            wire.pack(&center, &mut bits);
             Payload::U16(bits)
         } else {
             Payload::F32(center.clone())
@@ -401,7 +407,6 @@ pub fn measure_sharded(
         .ok_or_else(|| anyhow!("unknown topology '{}'", cfg.topology))?;
     let links = LinkParams::default();
     let prices = Arc::new(ShardPrices::new(cfg, &topo, &links, &plan, comm_scale));
-    let half = cfg.exchange.half_wire();
     let alpha = cfg.alpha as f32;
 
     enum Out {
@@ -441,7 +446,6 @@ pub fn measure_sharded(
                         rank,
                         &plan,
                         &prices,
-                        half,
                         alpha,
                         &mut params,
                         led.clock(),
@@ -527,8 +531,10 @@ mod tests {
         let topo = Topology::by_name("mosaic", plan.world_size()).unwrap();
         let links = LinkParams::default();
         let f32p = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        assert_eq!(f32p.wire, None);
         cfg.exchange = StrategyKind::Asa16;
         let f16p = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        assert_eq!(f16p.wire, Some(Wire::F16));
         for j in 0..2 {
             for w in 0..4 {
                 assert!(f32p.wire_half[j][w] > 0.0);
@@ -537,6 +543,16 @@ mod tests {
                 assert_eq!(f16p.handle[j][w], f32p.handle[j][w]);
             }
         }
+        // an explicit dense override wins over the strategy-derived default
+        cfg.wire = Some(crate::collectives::WireFormat::F32);
+        let forced = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        assert_eq!(forced.wire, None);
+        assert_eq!(forced.wire_half[0][0], f32p.wire_half[0][0]);
+        cfg.exchange = StrategyKind::Asa;
+        cfg.wire = Some(crate::collectives::WireFormat::Bf16);
+        let bf = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
+        assert_eq!(bf.wire, Some(Wire::Bf16));
+        assert_eq!(bf.wire_half[0][0], f16p.wire_half[0][0]);
         // comm_scale stretches both wire and handling linearly
         let scaled = ShardPrices::new(&cfg, &topo, &links, &plan, 3.0);
         assert!((scaled.handle[0][0] - 3.0 * f16p.handle[0][0]).abs() < 1e-15);

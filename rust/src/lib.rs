@@ -67,6 +67,36 @@
 //! ~96 % of its parameters sit in fc6-8, which backprop reaches first at
 //! ~8.5 % of the backward compute — nearly the whole exchange hides.
 //!
+//! ## Gradient-compression wires (`wire = ...`)
+//!
+//! Orthogonal to the exchange *schedule* is the on-wire *format*:
+//! [`collectives::WireFormat`] (`f32 | f16 | bf16 | topk:<p> | onebit |
+//! sf`, TOML `wire =` / `--wire`). Formats needing a codec are applied by
+//! [`collectives::WireCodec`], a wrapper [`collectives::ExchangeStrategy`]
+//! that composes outermost around any strategy — flat, `hier:*`,
+//! chunk-pipelined, or WFBP-bucketed (the latter two drive it per slice
+//! via `ExchangeCtx::slice_off` so the per-rank **error-feedback
+//! residual** stays aligned: each round sends `grad + residual`, ships
+//! `encode(send)`, and banks `send − decode(encode(send))` into the next
+//! round — compression delays gradient mass, never drops it). `topk:<p>`
+//! ships the `⌈p·n⌉` largest-|x| coordinates as `(u32, f32)` pairs;
+//! `onebit` ships sign bits plus one mean-|x| scale; `sf` (sufficient
+//! factors) applies only to all-fc WFBP buckets — the scheduler passes a
+//! `batch·(in+out)` byte hint, dense fallback anywhere else. The codec
+//! reprices the inner report against real on-wire bytes
+//! ([`collectives::CommReport::wire_bytes`] vs `wire_raw_bytes`,
+//! `compression_ratio()`): bandwidth terms scale by the byte ratio,
+//! per-message latency stays, and the encode/decode passes are charged as
+//! cast kernels (`sf` excepted — its factors fall out of the backward
+//! pass). Byte counts depend only on element count, never values, so every
+//! wire stays bit-identical across delivery schedules
+//! (`tests/prop_wire.rs`). Sizing is wire-width-aware: `--chunk-kib` /
+//! `bucket_kib` budgets are on-wire KiB via
+//! [`collectives::wire::elems_per_kib`], fixing the old hardcoded
+//! f32-width `kib·1024/4` rule that halved `asa16` chunk depth. The
+//! elastic EASGD exchange ships full parameters (no gradient stream for a
+//! sparsifier to ride), so `[easgd] wire` accepts dense formats only.
+//!
 //! ## Sharded EASGD parameter servers (`servers = S`)
 //!
 //! The §4 async framework's single server queues every elastic exchange;

@@ -16,10 +16,9 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use theano_mpi::bsp::{run_bsp, BspConfig};
-use theano_mpi::collectives::{OverlapMode, StrategyKind};
+use theano_mpi::collectives::{OverlapMode, StrategyKind, WireFormat};
 use theano_mpi::config;
 use theano_mpi::easgd::{run_easgd, EasgdConfig, Transport};
-use theano_mpi::precision::Wire;
 use theano_mpi::sgd::{LrSchedule, Scheme};
 use theano_mpi::Session;
 
@@ -96,11 +95,7 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
         cfg.strategy = StrategyKind::from_name(s)?;
     }
     if let Some(w) = args.get("wire") {
-        cfg.wire = match w {
-            "f16" => Wire::F16,
-            "bf16" => Wire::Bf16,
-            _ => bail!("bad --wire"),
-        };
+        cfg.wire = WireFormat::from_name(w)?;
     }
     if let Some(lr) = args.f64_("lr")? {
         cfg.lr = LrSchedule::Const { base: lr };
@@ -274,6 +269,14 @@ fn cmd_easgd(args: &Args) -> Result<()> {
     if let Some(s) = args.get("exchange") {
         cfg.exchange = StrategyKind::from_name(s)?;
     }
+    // dense wires only: the elastic exchange ships full parameters
+    if let Some(w) = args.get("wire") {
+        let fmt = WireFormat::from_name(w)?;
+        if fmt.compressed() {
+            bail!("--wire {}: elastic exchange ships full parameters (use f32|f16|bf16)", fmt.name());
+        }
+        cfg.wire = Some(fmt);
+    }
     if cfg.eval_every == 0 {
         cfg.eval_every = (cfg.iters / 5).max(1);
     }
@@ -371,6 +374,7 @@ fn usage() -> ! {
          tmpi train --model mlp --workers 8 --chunk-kib 256 --pipeline true\n\
          tmpi train --model alexnet --workers 8 --overlap wfbp --bucket-kib 4096 --topology copper\n\
          tmpi train --model mlp --workers 16 --topology copper --exchange hier:asa16\n\
+         tmpi train --model alexnet --workers 8 --wire topk:0.01 --overlap wfbp  # f32|f16|bf16|topk:<p>|onebit|sf\n\
          tmpi train --model alexnet --loader parallel --prefetch-depth 4 --cache-mib 64\n\
          tmpi train --config examples/configs/alexnet_bsp.toml\n\
          tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\

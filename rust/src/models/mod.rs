@@ -173,6 +173,34 @@ pub fn builtin_full_scale_layers(name: &str) -> Option<Vec<(String, usize)>> {
     }
 }
 
+/// `(layer, n_in, n_out)` dims of every fc layer of a full-scale paper
+/// architecture — what the `sf` wire's sufficient-factor sizing
+/// ([`crate::collectives::WfbpPlan::annotate_sf`]) needs: an fc gradient is
+/// `Σ_b δ_b·x_bᵀ`, so its factors cost `batch·(n_in + n_out)` elements. The
+/// names match [`builtin_full_scale_layers`] entry for entry (pinned by
+/// `fc_dims_agree_with_layer_tables`).
+pub fn builtin_fc_dims(name: &str) -> Option<Vec<(String, usize, usize)>> {
+    let fc3 = |a: usize| {
+        vec![
+            ("fc6".to_string(), a, 4096),
+            ("fc7".to_string(), 4096, 4096),
+            ("fc8".to_string(), 4096, 1000),
+        ]
+    };
+    match name {
+        "alexnet" => Some(fc3(9216)),
+        "vggnet" => Some(fc3(25088)),
+        "googlenet" => Some(vec![
+            ("loss1/fc".to_string(), 128 * 4 * 4, 1024),
+            ("loss1/classifier".to_string(), 1024, 1000),
+            ("loss2/fc".to_string(), 128 * 4 * 4, 1024),
+            ("loss2/classifier".to_string(), 1024, 1000),
+            ("loss3/classifier".to_string(), 1024, 1000),
+        ]),
+        _ => None,
+    }
+}
+
 /// Per-layer `(name, params)` table of a full-scale model from the
 /// manifest: the `layers` counts (falling back to `segments` counts —
 /// they coincide in current manifests) named by the `segments` entries.
@@ -271,6 +299,34 @@ mod tests {
         // 3 stem convs + 9 inceptions x 6 + 2 aux heads x 3 + classifier
         assert_eq!(builtin_full_scale_layers("googlenet").unwrap().len(), 64);
         assert_eq!(builtin_full_scale_layers("vggnet").unwrap().len(), 16);
+    }
+
+    #[test]
+    fn fc_dims_agree_with_layer_tables() {
+        for model in ["alexnet", "googlenet", "vggnet"] {
+            let layers = builtin_full_scale_layers(model).unwrap();
+            let dims = builtin_fc_dims(model).unwrap();
+            // every dims entry names an fc layer whose param count is
+            // exactly n_in*n_out + n_out
+            for (name, n_in, n_out) in &dims {
+                assert!(crate::collectives::wfbp::is_fc_layer(name), "{model}/{name}");
+                let (_, p) = layers
+                    .iter()
+                    .find(|(ln, _)| ln == name)
+                    .unwrap_or_else(|| panic!("{model}/{name} not in layer table"));
+                assert_eq!(*p, n_in * n_out + n_out, "{model}/{name}");
+            }
+            // and every fc layer in the table has a dims entry
+            for (name, _) in layers.iter().filter(|(n, _)| {
+                crate::collectives::wfbp::is_fc_layer(n)
+            }) {
+                assert!(
+                    dims.iter().any(|(dn, _, _)| dn == name),
+                    "{model}/{name} missing from builtin_fc_dims"
+                );
+            }
+        }
+        assert!(builtin_fc_dims("lenet").is_none());
     }
 
     #[test]

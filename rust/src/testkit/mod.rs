@@ -15,9 +15,9 @@
 use crate::cluster::Topology;
 use crate::collectives::{
     ChunkedPipeline, CommReport, ExchangeCtx, ExchangeStrategy, FlatKind, ReduceOp, StrategyKind,
+    WireFormat,
 };
 use crate::mpi;
-use crate::precision::Wire;
 use crate::simnet::LinkParams;
 use crate::util::Rng;
 
@@ -48,6 +48,24 @@ pub fn run_exchange(
     op: ReduceOp,
     topo: &Topology,
 ) -> (Vec<Vec<f32>>, CommReport) {
+    // historical default: asa16-family runs its native f16 wire, everything
+    // else stays dense f32 (no codec wrapper)
+    let fmt = if kind.half_wire() { WireFormat::F16 } else { WireFormat::F32 };
+    run_exchange_wire(kind, fmt, chunk_elems, bufs, op, topo)
+}
+
+/// [`run_exchange`] with an explicit wire format — the codec-aware variant
+/// the wire property suites sweep (compressed formats get the
+/// error-feedback `WireCodec` wrapper exactly as `StrategyKind::build`
+/// wires them in production).
+pub fn run_exchange_wire(
+    kind: StrategyKind,
+    fmt: WireFormat,
+    chunk_elems: Option<usize>,
+    bufs: Vec<Vec<f32>>,
+    op: ReduceOp,
+    topo: &Topology,
+) -> (Vec<Vec<f32>>, CommReport) {
     let k = bufs.len();
     let world = mpi::world(k);
     let links = LinkParams::default();
@@ -58,8 +76,8 @@ pub fn run_exchange(
             let topo = topo.clone();
             std::thread::spawn(move || {
                 let strat: Box<dyn ExchangeStrategy> = match chunk_elems {
-                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(Wire::F16), c, true)),
-                    None => kind.build(Wire::F16),
+                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(fmt), c, true)),
+                    None => kind.build(fmt),
                 };
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
@@ -68,6 +86,8 @@ pub fn run_exchange(
                     kernels: None,
                     cuda_aware: true,
                     chunk_elems: 0,
+                    slice_off: 0,
+                    sf_bytes: None,
                 };
                 let rep = strat.exchange(&mut buf, op, &mut ctx).unwrap();
                 (buf, rep)

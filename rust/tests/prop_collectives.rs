@@ -248,6 +248,8 @@ fn prop_sim_times_identical_across_ranks_and_positive() {
                         kernels: None,
                         cuda_aware: true,
                         chunk_elems: 0,
+                        slice_off: 0,
+                        sf_bytes: None,
                     };
                     Asa.exchange(&mut buf, ReduceOp::Sum, &mut ctx).unwrap().sim_total()
                 })

@@ -1,0 +1,418 @@
+//! Wire-codec property suite: the gradient-compression family
+//! (f16/bf16/topk/onebit/sf) must be deterministic, error-feedback-exact,
+//! and schedule-independent through every scheduler that can drive it.
+//!
+//! * top-k selection: exactly `⌈p·n⌉` elements, largest |x| first, ties
+//!   broken toward the lower index — twice over the same input yields the
+//!   same indices (rank determinism is what keeps exchanges coherent).
+//! * onebit: the scale is the sequentially-accumulated f64 mean |x| cast
+//!   to f32 once, and every decoded element is exactly `±scale`.
+//! * error feedback: the `WireCodec` residual bookkeeping is bit-identical
+//!   to the pure-function replay `send = grad + res; res' = send −
+//!   decode(encode(send))` — the conservation law that makes lossy wires
+//!   convergence-preserving.
+//! * delivery schedules: for every wire × {flat, hier, chunked, wfbp},
+//!   staggering rank entry (the race-explorer pattern) must not change a
+//!   single bit of the buffers or the reports.
+//!
+//! Byte-count goldens mirror `scripts/pricing_model.py`'s codec formulas;
+//! the simnet band pinning lives in `scripts/verify_wire_bands.py`.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use theano_mpi::cluster::Topology;
+use theano_mpi::collectives::wire::{encode, topk_count, topk_indices};
+use theano_mpi::collectives::{
+    exchange_wfbp, Asa, ChunkedPipeline, ExchangeCtx, ExchangeStrategy, FlatKind, ReduceOp,
+    StrategyKind, WfbpPlan, WireCodec, WireFormat,
+};
+use theano_mpi::coordinator::{probe_exchange, probe_exchange_wire};
+use theano_mpi::mpi;
+use theano_mpi::simnet::LinkParams;
+use theano_mpi::testkit::{allclose, gauss_vec, prop, run_exchange_wire};
+
+fn lossy_formats() -> [WireFormat; 5] {
+    [
+        WireFormat::F16,
+        WireFormat::Bf16,
+        WireFormat::TopK { p: 0.3 },
+        WireFormat::OneBit,
+        WireFormat::Sf,
+    ]
+}
+
+#[test]
+fn prop_topk_selects_exact_count_of_largest_magnitudes() {
+    prop("topk: exact count, |x| dominance, determinism", 30, |rng| {
+        let n = 1 + rng.below(800);
+        let p = 0.01 + (rng.below(100) as f64) / 100.0;
+        let xs = gauss_vec(rng, n, 2.0);
+        let idx = topk_indices(&xs, p);
+        let m = topk_count(n, p);
+        if m != (p * n as f64).ceil() as usize && m != n && m != 1 {
+            return Err(format!("count {m} is not ceil({p}*{n}) nor a clamp"));
+        }
+        if idx.len() != m {
+            return Err(format!("selected {} != topk_count {m}", idx.len()));
+        }
+        let selected: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        if selected.len() != idx.len() {
+            return Err("duplicate indices selected".into());
+        }
+        let min_sel =
+            idx.iter().map(|&i| xs[i as usize].abs()).fold(f32::INFINITY, f32::min);
+        for (i, &x) in xs.iter().enumerate() {
+            if !selected.contains(&(i as u32)) && x.abs() > min_sel {
+                return Err(format!(
+                    "unselected |xs[{i}]|={} beats selected minimum {min_sel}",
+                    x.abs()
+                ));
+            }
+        }
+        if topk_indices(&xs, p) != idx {
+            return Err("selection is not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_onebit_ships_signs_with_mean_abs_scale() {
+    prop("onebit: decoded == ±(mean |x| as f32)", 30, |rng| {
+        let n = 1 + rng.below(1200);
+        let xs = gauss_vec(rng, n, 3.0);
+        let enc = encode(WireFormat::OneBit, &xs, None);
+        let scale = (xs.iter().map(|&x| x.abs() as f64).sum::<f64>() / n as f64) as f32;
+        for (i, (&x, &d)) in xs.iter().zip(&enc.decoded).enumerate() {
+            let want = if x.to_bits() >> 31 == 1 { -scale } else { scale };
+            if d.to_bits() != want.to_bits() {
+                return Err(format!("elem {i}: decoded {d} != {want} (x={x})"));
+            }
+        }
+        if enc.wire_bytes != n.div_ceil(8) as u64 + 4 {
+            return Err(format!("wire bytes {} != ceil({n}/8)+4", enc.wire_bytes));
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic per-(rank, round) gradient for the error-feedback harness.
+fn round_grad(rank: usize, round: usize, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (((rank * 131 + round * 37 + i * 7) % 223) as f32 - 111.0) * 3e-3)
+        .collect()
+}
+
+#[test]
+fn error_feedback_residual_matches_pure_replay_bitwise() {
+    let k = 2;
+    let n = 257;
+    let rounds = 4;
+    for fmt in lossy_formats() {
+        let world = mpi::world(k);
+        let links = LinkParams::default();
+        let topo = Topology::mosaic(k);
+        let handles: Vec<_> = world
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut comm)| {
+                let topo = topo.clone();
+                thread::spawn(move || {
+                    let codec = WireCodec::new(Box::new(Asa), fmt);
+                    let mut bufs_out = Vec::new();
+                    for round in 0..rounds {
+                        let mut buf = round_grad(rank, round, n);
+                        let mut ctx = ExchangeCtx {
+                            comm: &mut comm,
+                            topo: &topo,
+                            links: &links,
+                            kernels: None,
+                            cuda_aware: true,
+                            chunk_elems: 0,
+                            slice_off: 0,
+                            sf_bytes: None,
+                        };
+                        codec.exchange(&mut buf, ReduceOp::Sum, &mut ctx).unwrap();
+                        bufs_out.push(buf);
+                    }
+                    (codec.residual_snapshot(), bufs_out)
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (snapshot, _) = h.join().unwrap();
+            // pure replay: the residual stream depends only on the grads fed
+            // in (the codec banks it *before* the inner exchange runs)
+            let mut res = vec![0.0f32; n];
+            for round in 0..rounds {
+                let mut send = round_grad(rank, round, n);
+                for (s, r) in send.iter_mut().zip(&res) {
+                    *s += r;
+                }
+                let enc = encode(fmt, &send, None);
+                for i in 0..n {
+                    res[i] = send[i] - enc.decoded[i];
+                }
+            }
+            assert_eq!(snapshot.len(), n, "{}: residual length", fmt.name());
+            for i in 0..n {
+                assert_eq!(
+                    snapshot[i].to_bits(),
+                    res[i].to_bits(),
+                    "{} rank {rank} elem {i}: codec residual {} != replay {}",
+                    fmt.name(),
+                    snapshot[i],
+                    res[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_exchange_agrees_across_ranks_and_with_encoded_reference() {
+    prop("wire exchange vs encoded host reference", 6, |rng| {
+        let k = 2 + rng.below(5);
+        let n = 1 + rng.below(900);
+        let bufs: Vec<Vec<f32>> = (0..k).map(|_| gauss_vec(rng, n, 2.0)).collect();
+        let topo = Topology::mosaic(k);
+        for fmt in lossy_formats() {
+            for kind in [StrategyKind::Asa, StrategyKind::Hier { inner: FlatKind::Asa }] {
+                // a fresh codec has residual 0, so one exchange reduces the
+                // per-rank decode(encode(grad)) values exactly
+                let mut want = vec![0.0f32; n];
+                for b in &bufs {
+                    for (w, d) in want.iter_mut().zip(&encode(fmt, b, None).decoded) {
+                        *w += d;
+                    }
+                }
+                let (outs, rep) =
+                    run_exchange_wire(kind, fmt, None, bufs.clone(), ReduceOp::Sum, &topo);
+                for (r, out) in outs.iter().enumerate().skip(1) {
+                    if out != &outs[0] {
+                        return Err(format!(
+                            "{}/{} k={k} n={n}: rank {r} disagrees with rank 0",
+                            kind.name(),
+                            fmt.name()
+                        ));
+                    }
+                }
+                allclose(&outs[0], &want, 1e-4, 1e-4).map_err(|e| {
+                    format!("{}/{} k={k} n={n}: {e}", kind.name(), fmt.name())
+                })?;
+                if rep.wire_raw_bytes == 0 {
+                    return Err(format!(
+                        "{}/{}: codec must record dense-equivalent bytes",
+                        kind.name(),
+                        fmt.name()
+                    ));
+                }
+                if rep.compression_ratio() < 1.0 - 1e-9 {
+                    return Err(format!(
+                        "{}/{}: compression ratio {} < 1",
+                        kind.name(),
+                        fmt.name(),
+                        rep.compression_ratio()
+                    ));
+                }
+                if !rep.strategy.ends_with(&format!("/{}", fmt.name())) {
+                    return Err(format!(
+                        "report strategy '{}' does not name the wire {}",
+                        rep.strategy,
+                        fmt.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Run one wire exchange (flat, hier, chunked, or wfbp) across k staggered
+/// threads; returns every rank's buffer plus a debug rendering of rank 0's
+/// report/outcome for bit-level comparison.
+fn run_staggered(
+    kind: StrategyKind,
+    fmt: WireFormat,
+    chunk_elems: Option<usize>,
+    wfbp: Option<&Arc<WfbpPlan>>,
+    bufs: Vec<Vec<f32>>,
+    topo: &Topology,
+    stagger_us: &[u64],
+) -> (Vec<Vec<f32>>, String) {
+    let k = bufs.len();
+    let world = mpi::world(k);
+    let links = LinkParams::default();
+    let handles: Vec<_> = world
+        .into_iter()
+        .zip(bufs)
+        .enumerate()
+        .map(|(rank, (mut comm, mut buf))| {
+            let topo = topo.clone();
+            let wfbp = wfbp.cloned();
+            let delay = stagger_us[rank];
+            thread::spawn(move || {
+                if delay > 0 {
+                    thread::sleep(Duration::from_micros(delay));
+                }
+                let strat: Box<dyn ExchangeStrategy> = match chunk_elems {
+                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(fmt), c, true)),
+                    None => kind.build(fmt),
+                };
+                let mut ctx = ExchangeCtx {
+                    comm: &mut comm,
+                    topo: &topo,
+                    links: &links,
+                    kernels: None,
+                    cuda_aware: true,
+                    chunk_elems: 0,
+                    slice_off: 0,
+                    sf_bytes: None,
+                };
+                let rendered = match wfbp {
+                    Some(plan) => {
+                        let out = exchange_wfbp(
+                            strat.as_ref(),
+                            &plan,
+                            &mut buf,
+                            ReduceOp::Sum,
+                            &mut ctx,
+                            1e-3,
+                            1.0,
+                            true,
+                        )
+                        .unwrap();
+                        format!("{out:?}")
+                    }
+                    None => {
+                        let rep = strat.exchange(&mut buf, ReduceOp::Sum, &mut ctx).unwrap();
+                        format!("{rep:?}")
+                    }
+                };
+                (buf, rendered)
+            })
+        })
+        .collect();
+    let mut outs = Vec::new();
+    let mut rendered0 = String::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (buf, rendered) = h.join().unwrap();
+        if i == 0 {
+            rendered0 = rendered;
+        }
+        outs.push(buf);
+    }
+    (outs, rendered0)
+}
+
+#[test]
+fn every_wire_is_delivery_schedule_independent_across_schedulers() {
+    let k = 3;
+    // fc-heavy miniature so the wfbp plan has several buckets
+    let table: Vec<(String, usize)> =
+        [("conv1", 90), ("fc6", 700), ("fc7", 410)].iter().map(|&(s, p)| (s.into(), p)).collect();
+    let plan = Arc::new(WfbpPlan::from_layers(&table, 0));
+    let n = plan.total_elems;
+    let bufs: Vec<Vec<f32>> =
+        (0..k).map(|r| (0..n).map(|i| ((r * 17 + i * 5) % 41) as f32 * 0.0625 - 1.0).collect()).collect();
+    let topo = Topology::by_name("copper", k).unwrap();
+    let patterns: [[u64; 3]; 3] = [[0, 0, 0], [0, 1200, 400], [900, 0, 300]];
+
+    // scheduler matrix: flat, hier, chunked, wfbp
+    let schedulers: [(StrategyKind, Option<usize>, bool); 4] = [
+        (StrategyKind::Asa, None, false),
+        (StrategyKind::Hier { inner: FlatKind::Asa }, None, false),
+        (StrategyKind::Asa, Some(128), false),
+        (StrategyKind::Asa, None, true),
+    ];
+    for fmt in lossy_formats() {
+        for &(kind, chunk, use_wfbp) in &schedulers {
+            let wfbp = if use_wfbp { Some(&plan) } else { None };
+            let (base_bufs, base_rep) =
+                run_staggered(kind, fmt, chunk, wfbp, bufs.clone(), &topo, &patterns[0]);
+            for pat in &patterns[1..] {
+                let (got_bufs, got_rep) =
+                    run_staggered(kind, fmt, chunk, wfbp, bufs.clone(), &topo, pat);
+                assert!(
+                    got_bufs == base_bufs,
+                    "{}/{} chunk={chunk:?} wfbp={use_wfbp}: stagger {pat:?}µs changed the data path",
+                    kind.name(),
+                    fmt.name()
+                );
+                assert_eq!(
+                    got_rep,
+                    base_rep,
+                    "{}/{} chunk={chunk:?} wfbp={use_wfbp}: stagger {pat:?}µs changed the report",
+                    kind.name(),
+                    fmt.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn codec_byte_goldens_match_the_python_port() {
+    // the same closed forms scripts/pricing_model.py prices with
+    let xs: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.173).sin()).collect();
+    assert_eq!(encode(WireFormat::TopK { p: 0.01 }, &xs, None).wire_bytes, 80);
+    assert_eq!(encode(WireFormat::OneBit, &xs, None).wire_bytes, 129);
+    assert_eq!(encode(WireFormat::F16, &xs, None).wire_bytes, 2000);
+    assert_eq!(encode(WireFormat::Bf16, &xs, None).wire_bytes, 2000);
+    assert_eq!(encode(WireFormat::Sf, &xs, Some(640)).wire_bytes, 640);
+    assert_eq!(encode(WireFormat::Sf, &xs, None).wire_bytes, 4000);
+}
+
+#[test]
+fn compressed_probes_cut_wire_bytes_at_alexnet_scale() {
+    // the acceptance floor: topk:0.01 and onebit move >= 10x fewer bytes
+    // than dense f32 on an AlexNet-sized exchange, and the NIC-bound
+    // copper fabric turns that into simulated time
+    let bytes = 4 * 60_965_224u64;
+    let dense = probe_exchange(
+        StrategyKind::Asa,
+        8,
+        Topology::by_name("copper", 8).unwrap(),
+        bytes,
+        true,
+        0,
+        false,
+    )
+    .unwrap();
+    for fmt in [WireFormat::TopK { p: 0.01 }, WireFormat::OneBit] {
+        let rep = probe_exchange_wire(
+            StrategyKind::Asa,
+            fmt,
+            8,
+            Topology::by_name("copper", 8).unwrap(),
+            bytes,
+            true,
+            0,
+            false,
+            None,
+        )
+        .unwrap();
+        assert!(
+            rep.compression_ratio() >= 10.0,
+            "{}: compression ratio {} < 10x",
+            fmt.name(),
+            rep.compression_ratio()
+        );
+        assert!(
+            (rep.wire_bytes as f64) * 10.0 <= dense.wire_bytes as f64,
+            "{}: wire bytes {} not >= 10x under dense {}",
+            fmt.name(),
+            rep.wire_bytes,
+            dense.wire_bytes
+        );
+        assert!(
+            rep.sim_total() < dense.sim_total(),
+            "{}: sim {} !< dense {}",
+            fmt.name(),
+            rep.sim_total(),
+            dense.sim_total()
+        );
+    }
+}

@@ -31,7 +31,7 @@ use std::time::Duration;
 use theano_mpi::cluster::Topology;
 use theano_mpi::collectives::{
     exchange_wfbp, ChunkedPipeline, ExchangeCtx, ExchangeStrategy, ReduceOp, StrategyKind,
-    WfbpOutcome, WfbpPlan,
+    WfbpOutcome, WfbpPlan, WireFormat,
 };
 use theano_mpi::easgd::shard::{self, ShardPlan, ShardPrices};
 use theano_mpi::easgd::EasgdConfig;
@@ -113,7 +113,7 @@ fn run_probe(
                     if let Some(g) = &gate {
                         g.wait_turn(rank);
                     }
-                    shard::worker_push(&mut comm, rank, &plan, false, &params, clock)?;
+                    shard::worker_push(&mut comm, rank, &plan, None, &params, clock)?;
                     if let Some(g) = &gate {
                         g.advance();
                     }
@@ -267,6 +267,7 @@ fn sharded_queue_is_perturbation_independent() {
 /// after a real stagger sleep. Returns every rank's buffer and outcome.
 fn run_wfbp_staggered(
     kind: StrategyKind,
+    fmt: WireFormat,
     chunk_elems: Option<usize>,
     topo: &Topology,
     plan: &Arc<WfbpPlan>,
@@ -288,13 +289,11 @@ fn run_wfbp_staggered(
                 if delay > 0 {
                     thread::sleep(Duration::from_micros(delay));
                 }
+                // fresh strategy per run: a codec wire's error-feedback
+                // residual starts at zero, so runs stay comparable
                 let strat: Box<dyn ExchangeStrategy> = match chunk_elems {
-                    Some(c) => Box::new(ChunkedPipeline::new(
-                        kind.build(theano_mpi::precision::Wire::F16),
-                        c,
-                        true,
-                    )),
-                    None => kind.build(theano_mpi::precision::Wire::F16),
+                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(fmt), c, true)),
+                    None => kind.build(fmt),
                 };
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
@@ -303,6 +302,8 @@ fn run_wfbp_staggered(
                     kernels: None,
                     cuda_aware: true,
                     chunk_elems: 0,
+                    slice_off: 0,
+                    sf_bytes: None,
                 };
                 let out = exchange_wfbp(
                     strat.as_ref(),
@@ -347,15 +348,36 @@ fn wfbp_flow_shop_is_stagger_independent() {
     let bufs: Vec<Vec<f32>> =
         (0..k).map(|r| (0..n).map(|i| ((r * 13 + i * 7) % 31) as f32 * 0.125).collect()).collect();
 
-    let configs: Vec<(StrategyKind, Option<usize>, &str)> = if exhaustive() {
+    // compressed wires ride the same sweep: the codec's error-feedback
+    // residual is per-rank strategy state, so stagger independence also
+    // pins the residual stream bit-for-bit
+    let configs: Vec<(StrategyKind, WireFormat, Option<usize>, &str)> = if exhaustive() {
         vec![
-            (StrategyKind::Asa, None, "mosaic"),
-            (StrategyKind::Ring, None, "mosaic"),
-            (StrategyKind::Hier { inner: theano_mpi::collectives::FlatKind::Ring }, None, "copper"),
-            (StrategyKind::Asa, Some(128), "copper"),
+            (StrategyKind::Asa, WireFormat::F32, None, "mosaic"),
+            (StrategyKind::Ring, WireFormat::F32, None, "mosaic"),
+            (
+                StrategyKind::Hier { inner: theano_mpi::collectives::FlatKind::Ring },
+                WireFormat::F32,
+                None,
+                "copper",
+            ),
+            (StrategyKind::Asa, WireFormat::F32, Some(128), "copper"),
+            (StrategyKind::Asa, WireFormat::OneBit, None, "mosaic"),
+            (StrategyKind::Asa, WireFormat::TopK { p: 0.25 }, Some(128), "copper"),
+            (
+                StrategyKind::Hier { inner: theano_mpi::collectives::FlatKind::Asa },
+                WireFormat::TopK { p: 0.25 },
+                None,
+                "copper",
+            ),
         ]
     } else {
-        vec![(StrategyKind::Asa, None, "mosaic"), (StrategyKind::Asa, Some(128), "copper")]
+        vec![
+            (StrategyKind::Asa, WireFormat::F32, None, "mosaic"),
+            (StrategyKind::Asa, WireFormat::F32, Some(128), "copper"),
+            (StrategyKind::Asa, WireFormat::TopK { p: 0.25 }, None, "mosaic"),
+            (StrategyKind::Asa, WireFormat::OneBit, Some(128), "copper"),
+        ]
     };
     let patterns: Vec<Vec<u64>> = {
         let levels: &[u64] = if exhaustive() { &[0, 600, 1400] } else { &[0, 1200] };
@@ -383,27 +405,29 @@ fn wfbp_flow_shop_is_stagger_independent() {
         pats
     };
 
-    for (kind, chunk, topo_name) in configs {
+    for (kind, fmt, chunk, topo_name) in configs {
         let topo = Topology::by_name(topo_name, k).unwrap();
         let (base_bufs, base_outs) =
-            run_wfbp_staggered(kind, chunk, &topo, &plan, bufs.clone(), &patterns[0]);
+            run_wfbp_staggered(kind, fmt, chunk, &topo, &plan, bufs.clone(), &patterns[0]);
         // the simulated schedule is global: every rank reports identically
         for (r, o) in base_outs.iter().enumerate() {
             assert!(o == &base_outs[0], "{}: rank {r} outcome differs from rank 0", kind.name());
         }
         for pat in &patterns[1..] {
             let (got_bufs, got_outs) =
-                run_wfbp_staggered(kind, chunk, &topo, &plan, bufs.clone(), pat);
+                run_wfbp_staggered(kind, fmt, chunk, &topo, &plan, bufs.clone(), pat);
             assert!(
                 got_bufs == base_bufs,
-                "{} chunk={chunk:?} topo={topo_name}: stagger {pat:?}µs changed the data path",
-                kind.name()
+                "{} wire={} chunk={chunk:?} topo={topo_name}: stagger {pat:?}µs changed the data path",
+                kind.name(),
+                fmt.name()
             );
             assert!(
                 got_outs == base_outs,
-                "{} chunk={chunk:?} topo={topo_name}: stagger {pat:?}µs changed the reports:\n\
+                "{} wire={} chunk={chunk:?} topo={topo_name}: stagger {pat:?}µs changed the reports:\n\
                  got {got_outs:?}\nbaseline {base_outs:?}",
-                kind.name()
+                kind.name(),
+                fmt.name()
             );
         }
     }

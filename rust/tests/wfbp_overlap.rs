@@ -14,9 +14,8 @@
 use theano_mpi::cluster::Topology;
 use theano_mpi::collectives::{
     exchange_wfbp, ChunkedPipeline, ExchangeCtx, ExchangeStrategy, ReduceOp, StrategyKind,
-    WfbpOutcome, WfbpPlan,
+    WfbpOutcome, WfbpPlan, WireFormat,
 };
-use theano_mpi::precision::Wire;
 use theano_mpi::simnet::LinkParams;
 use theano_mpi::testkit::{all_strategy_kinds, run_exchange};
 use theano_mpi::{mpi, models};
@@ -43,9 +42,11 @@ fn run_wfbp(
             let topo = topo.clone();
             let plan = plan.clone();
             std::thread::spawn(move || {
+                // native wire per strategy (asa16-family ships f16 itself)
+                let fmt = if kind.half_wire() { WireFormat::F16 } else { WireFormat::F32 };
                 let inner: Box<dyn ExchangeStrategy> = match chunk_elems {
-                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(Wire::F16), c, true)),
-                    None => kind.build(Wire::F16),
+                    Some(c) => Box::new(ChunkedPipeline::new(kind.build(fmt), c, true)),
+                    None => kind.build(fmt),
                 };
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
@@ -54,6 +55,8 @@ fn run_wfbp(
                     kernels: None,
                     cuda_aware: true,
                     chunk_elems: 0,
+                    slice_off: 0,
+                    sf_bytes: None,
                 };
                 let out = exchange_wfbp(
                     inner.as_ref(),

@@ -15,6 +15,8 @@ timeline) stays in the owning script — only code that was *duplicated*
 lives here.
 """
 
+import math
+
 # --- simnet::LinkParams::default() -----------------------------------------
 PCIE_GBPS = 12.0
 PCIE_LAT_US = 10.0
@@ -97,6 +99,66 @@ def split_even(n, k):
 # --- simnet::LinkParams::pcie_time -------------------------------------------
 def pcie_time(nbytes, pcie_gbps=PCIE_GBPS, pcie_lat_us=PCIE_LAT_US):
     return pcie_lat_us * 1e-6 + nbytes / (pcie_gbps * 1e9)
+
+
+# --- collectives::wire codec byte formulas -----------------------------------
+# Mirrors `rust/src/collectives/wire.rs`: closed-form on-wire byte counts
+# per format (they depend only on n, never on the data), the wire-width
+# sizing helper, and f64 half-away-from-zero rounding (`f64::round`).
+# Formats are the CLI names: "f32" | "f16" | "bf16" | "topk:<p>" |
+# "onebit" | "sf".
+
+def round_half_away(x):
+    """Rust `f64::round`: half away from zero (Python round() is banker's)."""
+    return math.floor(x + 0.5) if x >= 0.0 else math.ceil(x - 0.5)
+
+
+def topk_count(n, p):
+    """`⌈p·n⌉` clamped to [1, n] — how many elements topk:<p> ships."""
+    if n == 0:
+        return 0
+    return min(max(math.ceil(p * n), 1), n)
+
+
+def codec_wire_bytes(fmt, n, sf_bytes=None):
+    """`wire::encode(...).wire_bytes` for an n-element f32 buffer."""
+    if fmt == "f32":
+        return 4 * n
+    if fmt in ("f16", "bf16"):
+        return 2 * n
+    if fmt.startswith("topk:"):
+        # 8 bytes per shipped element: (u32 index, f32 value)
+        return 8 * topk_count(n, float(fmt.split(":", 1)[1]))
+    if fmt == "onebit":
+        # one sign bit per element + one f32 scale
+        return -(-n // 8) + 4
+    if fmt == "sf":
+        dense = 4 * n
+        return sf_bytes if sf_bytes is not None and sf_bytes < dense else dense
+    raise ValueError(fmt)
+
+
+def wire_bytes_per_elem(half_wire, fmt):
+    """`wire::wire_bytes_per_elem` (sizing, not pricing): nominal on-wire
+    bytes per f32 element; `half_wire` is the strategy's native width."""
+    if fmt == "f32":
+        b = 2.0 if half_wire else 4.0
+    elif fmt in ("f16", "bf16"):
+        b = 2.0
+    elif fmt.startswith("topk:"):
+        b = 8.0 * float(fmt.split(":", 1)[1])
+    elif fmt == "onebit":
+        b = 0.125
+    elif fmt == "sf":
+        b = 4.0
+    else:
+        raise ValueError(fmt)
+    return max(b, 0.125)
+
+
+def elems_per_kib(kib, half_wire, fmt):
+    """`wire::elems_per_kib`: elements per KiB of on-wire budget."""
+    return math.floor((kib * 1024.0) / wire_bytes_per_elem(half_wire, fmt))
 
 
 # --- loader::sim::DiskParams::default() -------------------------------------

@@ -112,6 +112,7 @@ def rep_zero(name):
     return {
         "strategy": name,
         "wire_bytes": 0.0,
+        "wire_raw_bytes": 0.0,
         "sim_transfer": 0.0,
         "sim_latency": 0.0,
         "sim_kernel": 0.0,
@@ -132,8 +133,8 @@ def sim_total(rep):
 
 def scale_times(rep, s):
     for key in ("sim_transfer", "sim_latency", "sim_kernel", "sim_host_reduce",
-                "sim_overlapped", "wire_bytes"):
-        rep[key] *= s
+                "sim_overlapped", "wire_bytes", "wire_raw_bytes"):
+        rep[key] = rep.get(key, 0.0) * s
     return rep
 
 
@@ -684,15 +685,19 @@ def write_baselines(coll, easgd, out_dir):
         print(f"wrote {path} ({len(metrics)} metrics)")
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--write-baselines", action="store_true",
-                    help="regenerate bench/baselines/*.json from this model")
-    ap.add_argument("--baseline-dir", default=os.path.join(
-        os.path.dirname(os.path.abspath(__file__)), "..", "bench", "baselines"))
-    args = ap.parse_args()
+def main_with_args(write_baselines_flag=False, baseline_dir=None):
+    if baseline_dir is None:
+        baseline_dir = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "..", "bench", "baselines")
 
     coll, failures = collect_metrics()
+    # the wire-family sweep lives in its own port; merged here so
+    # BENCH_collectives.json carries one consistent metric set (lazy
+    # import: verify_wire_bands imports this module at top level)
+    import verify_wire_bands
+    wire, wfail = verify_wire_bands.collect_wire_metrics()
+    coll.update(wire)
+    failures += wfail
     easgd, efail = easgd_metrics()
     failures += efail
 
@@ -702,13 +707,22 @@ def main():
     for name in sorted(easgd):
         print(f"{name:{width}s} {easgd[name]['value']!r}")
 
-    if args.write_baselines:
-        write_baselines(coll, easgd, args.baseline_dir)
+    if write_baselines_flag:
+        write_baselines(coll, easgd, baseline_dir)
 
     print(f"\n{len(coll) + len(easgd)} metrics;", "bands OK" if not failures else "bands FAILED")
     for f in failures:
         print(" FAIL", f)
     return 0 if not failures else 1
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="regenerate bench/baselines/*.json from this model")
+    ap.add_argument("--baseline-dir", default=None)
+    args = ap.parse_args()
+    return main_with_args(args.write_baselines, args.baseline_dir)
 
 
 if __name__ == "__main__":
