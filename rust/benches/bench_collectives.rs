@@ -128,7 +128,7 @@ fn main() -> anyhow::Result<()> {
                 }
                 if strat == StrategyKind::Ring {
                     assert!(
-                        piped.sim_total() <= mono.sim_total() + 1e-12,
+                        piped.sim_total().0 <= mono.sim_total().0 + 1e-12,
                         "{model}/ring/m{chunks}: pipelined {} > monolithic {}",
                         piped.sim_total(),
                         mono.sim_total()
@@ -143,7 +143,7 @@ fn main() -> anyhow::Result<()> {
                     );
                 }
                 assert!(
-                    serial.sim_total() >= mono.sim_total() - 1e-12,
+                    serial.sim_total().0 >= mono.sim_total().0 - 1e-12,
                     "{model}/{}/m{chunks}: serial chunking must not beat monolithic",
                     strat.name()
                 );
@@ -198,7 +198,7 @@ fn main() -> anyhow::Result<()> {
                     wf.overlap_fraction
                 );
                 assert!(
-                    wf.makespan >= backward && wf.makespan < backward + post.serial_comm,
+                    wf.makespan >= backward && wf.makespan.0 < backward + post.serial_comm.0,
                     "{tag}: makespan {} outside (backward, backward + serial)",
                     wf.makespan
                 );
@@ -270,7 +270,7 @@ fn main() -> anyhow::Result<()> {
             report(&format!("hier/copper{nodes}n/hier_ring_piped"), hier.sim_total(), "s");
             report(
                 &format!("hier/copper{nodes}n/nic_bytes_cut"),
-                flat.wire_inter_bytes as f64 / hier.wire_inter_bytes as f64,
+                flat.wire_inter_bytes.as_f64() / hier.wire_inter_bytes.as_f64(),
                 "x",
             );
             assert!(
@@ -343,7 +343,7 @@ fn main() -> anyhow::Result<()> {
                 report(&format!("wire/{fabric}/{}/sim", w.name()), rep.sim_total(), "s");
                 report(
                     &format!("wire/{fabric}/{}/gib", w.name()),
-                    rep.wire_bytes as f64 / (1u64 << 30) as f64,
+                    rep.wire_bytes.as_f64() / (1u64 << 30) as f64,
                     "GiB",
                 );
                 reps.push(rep);

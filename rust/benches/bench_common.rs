@@ -64,7 +64,10 @@ pub fn fmt(s: f64) -> String {
 }
 
 /// Report a derived scalar (simulated seconds etc.) in the same format.
-pub fn report(name: &str, value: f64, unit: &str) {
+/// Takes `impl Into<f64>` so unit newtypes ([`theano_mpi::units::Secs`]
+/// etc.) report without a manual projection.
+pub fn report(name: &str, value: impl Into<f64>, unit: &str) {
+    let value: f64 = value.into();
     println!("bench {name}  value={value:.6}{unit}");
     collect(name, value, unit.trim());
 }

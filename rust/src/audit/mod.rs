@@ -9,7 +9,9 @@
 //! and a source tag, and the ledger derives *both* the clock and the
 //! breakdown from the same charge stream, so `breakdown == clock` holds
 //! by construction. `scripts/lint_charges.py` rejects raw clock /
-//! `Breakdown` arithmetic outside this module at CI time.
+//! `Breakdown` arithmetic outside this module at CI time, and every
+//! charge carries a [`Secs`] — handing the ledger a microsecond or byte
+//! quantity is a compile error (`crate::units`).
 //!
 //! Charge-kind taxonomy (what advances the clock):
 //!
@@ -45,6 +47,7 @@
 //! runs that ask.
 
 use crate::metrics::Breakdown;
+use crate::units::Secs;
 
 /// What a charge pays for. See the module-level taxonomy table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,12 +110,12 @@ const NEG_EPS: f64 = 1e-12;
 /// stream so they cannot disagree.
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
-    clock: f64,
+    clock: Secs,
     bd: Breakdown,
     /// Serial-comm budget declared alongside `CommHidden` memos.
-    hidden_budget: f64,
+    hidden_budget: Secs,
     /// Serial-load budget declared alongside `LoadHidden` memos.
-    load_hidden_budget: f64,
+    load_hidden_budget: Secs,
     /// First recorded violation (also `debug_assert`ed at the site).
     err: Option<String>,
 }
@@ -122,7 +125,7 @@ impl Ledger {
         Ledger::default()
     }
 
-    pub fn clock(&self) -> f64 {
+    pub fn clock(&self) -> Secs {
         self.clock
     }
 
@@ -141,7 +144,7 @@ impl Ledger {
     /// The breakdown slot a kind accumulates into. Exhaustive on both
     /// sides: a new `ChargeKind` or `Breakdown` field fails to compile
     /// until it is mapped.
-    fn slot(&mut self, kind: ChargeKind) -> &mut f64 {
+    fn slot(&mut self, kind: ChargeKind) -> &mut Secs {
         let Breakdown {
             compute,
             comm_transfer,
@@ -171,7 +174,7 @@ impl Ledger {
     /// Charge `secs` of `kind`, advancing the clock when the kind is on
     /// it. `tag` names the site ("bsp.barrier", "easgd.exchange", …) for
     /// violation messages.
-    pub fn charge(&mut self, kind: ChargeKind, tag: &'static str, secs: f64) {
+    pub fn charge(&mut self, kind: ChargeKind, tag: &'static str, secs: Secs) {
         if !secs.is_finite() || secs < -NEG_EPS {
             self.note(format!("[{tag}] bad {} charge: {secs}", kind.name()));
             return;
@@ -191,7 +194,7 @@ impl Ledger {
     /// max, an exchange's completion time) and land on it *exactly* —
     /// the clock must not drift by re-derived float sums when downstream
     /// virtual arrivals depend on it bit-for-bit.
-    pub fn advance_to(&mut self, kind: ChargeKind, tag: &'static str, new_clock: f64) {
+    pub fn advance_to(&mut self, kind: ChargeKind, tag: &'static str, new_clock: Secs) {
         let delta = new_clock - self.clock;
         if !delta.is_finite() || delta < -NEG_EPS {
             self.note(format!(
@@ -215,7 +218,7 @@ impl Ledger {
     /// (wait-free backprop). `overlapped_under` is the serial comm the
     /// hidden time came out of — the audit bound: comm cannot hide more
     /// time than the exchange would have cost serially.
-    pub fn charge_hidden(&mut self, tag: &'static str, hidden: f64, overlapped_under: f64) {
+    pub fn charge_hidden(&mut self, tag: &'static str, hidden: Secs, overlapped_under: Secs) {
         self.memo(ChargeKind::CommHidden, tag, hidden, overlapped_under);
     }
 
@@ -223,19 +226,19 @@ impl Ledger {
     /// loader child overlapped under compute (Alg. 1). `overlapped_under`
     /// is the load time the direct path would have paid — the audit
     /// bound: the loader cannot hide more time than the load cost.
-    pub fn charge_hidden_load(&mut self, tag: &'static str, hidden: f64, overlapped_under: f64) {
+    pub fn charge_hidden_load(&mut self, tag: &'static str, hidden: Secs, overlapped_under: Secs) {
         self.memo(ChargeKind::LoadHidden, tag, hidden, overlapped_under);
     }
 
     /// Shared memo path: off-clock charge + its serial budget. Exhaustive
     /// over the memo kinds so a new one must pick a budget slot.
-    fn memo(&mut self, kind: ChargeKind, tag: &'static str, hidden: f64, overlapped_under: f64) {
+    fn memo(&mut self, kind: ChargeKind, tag: &'static str, hidden: Secs, overlapped_under: Secs) {
         debug_assert!(!kind.on_clock());
         if !hidden.is_finite() || hidden < -NEG_EPS {
             self.note(format!("[{tag}] bad hidden charge: {hidden}"));
             return;
         }
-        if hidden > overlapped_under + NEG_EPS.max(1e-9 * overlapped_under.abs()) {
+        if hidden.0 > overlapped_under.0 + NEG_EPS.max(1e-9 * overlapped_under.0.abs()) {
             self.note(format!(
                 "[{tag}] hidden {hidden} exceeds its overlap budget {overlapped_under}"
             ));
@@ -303,7 +306,7 @@ impl Ledger {
 
     /// Close the ledger: audit (debug-asserted — every `cargo test` run
     /// exercises it) and hand back the derived clock and breakdown.
-    pub fn finish(self) -> (f64, Breakdown) {
+    pub fn finish(self) -> (Secs, Breakdown) {
         debug_assert!(self.audit().is_ok(), "{:?}", self.audit());
         (self.clock, self.bd)
     }
@@ -315,8 +318,8 @@ impl Ledger {
 /// [`Ledger`], typed so the lint can reject ad-hoc copies.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServerClock {
-    clock: f64,
-    busy: f64,
+    clock: Secs,
+    busy: Secs,
 }
 
 impl ServerClock {
@@ -325,7 +328,7 @@ impl ServerClock {
     }
 
     /// Serve one request; returns its finish time (the new clock).
-    pub fn serve(&mut self, arrival: f64, handle: f64) -> f64 {
+    pub fn serve(&mut self, arrival: Secs, handle: Secs) -> Secs {
         debug_assert!(
             arrival.is_finite() && handle.is_finite() && handle >= 0.0,
             "bad serve: arrival={arrival} handle={handle}"
@@ -335,13 +338,13 @@ impl ServerClock {
         self.clock
     }
 
-    pub fn clock(&self) -> f64 {
+    pub fn clock(&self) -> Secs {
         self.clock
     }
 
     /// Total handling occupancy — never exceeds the clock when arrivals
     /// are non-negative.
-    pub fn busy(&self) -> f64 {
+    pub fn busy(&self) -> Secs {
         self.busy
     }
 
@@ -364,24 +367,24 @@ mod tests {
     #[test]
     fn ledger_reconciles_by_construction() {
         let mut l = Ledger::new();
-        l.charge(ChargeKind::Compute, "t", 1.5);
-        l.charge(ChargeKind::H2d, "t", 0.25);
-        l.charge(ChargeKind::CommTransfer, "t", 0.5);
-        l.charge(ChargeKind::Apply, "t", 0.125);
+        l.charge(ChargeKind::Compute, "t", Secs(1.5));
+        l.charge(ChargeKind::H2d, "t", Secs(0.25));
+        l.charge(ChargeKind::CommTransfer, "t", Secs(0.5));
+        l.charge(ChargeKind::Apply, "t", Secs(0.125));
         l.audit().unwrap();
         let (clock, bd) = l.finish();
-        assert!((clock - 2.375).abs() < 1e-12);
+        assert!((clock - Secs(2.375)).abs() < 1e-12);
         assert!((bd.total() - clock).abs() < 1e-12);
-        assert!((bd.compute - 1.5).abs() < 1e-12);
+        assert!((bd.compute - Secs(1.5)).abs() < 1e-12);
     }
 
     #[test]
     fn advance_to_lands_exactly() {
         let mut l = Ledger::new();
-        l.charge(ChargeKind::Compute, "t", 0.1 + 0.2); // 0.30000000000000004
+        l.charge(ChargeKind::Compute, "t", Secs(0.1 + 0.2)); // 0.30000000000000004
         let target = 1.0000000000000002f64;
-        l.advance_to(ChargeKind::CommQueue, "t", target);
-        assert_eq!(l.clock().to_bits(), target.to_bits(), "no float drift allowed");
+        l.advance_to(ChargeKind::CommQueue, "t", Secs(target));
+        assert_eq!(l.clock().0.to_bits(), target.to_bits(), "no float drift allowed");
         l.audit().unwrap();
         let (_, bd) = l.finish();
         assert!(bd.comm_queue > 0.69 && bd.comm_queue < 0.71);
@@ -390,12 +393,12 @@ mod tests {
     #[test]
     fn hidden_is_memo_and_budget_bounded() {
         let mut l = Ledger::new();
-        l.charge(ChargeKind::CommTransfer, "t", 0.2);
-        l.charge_hidden("t", 0.5, 0.8);
-        assert!((l.clock() - 0.2).abs() < 1e-12, "hidden must not advance the clock");
+        l.charge(ChargeKind::CommTransfer, "t", Secs(0.2));
+        l.charge_hidden("t", Secs(0.5), Secs(0.8));
+        assert!((l.clock() - Secs(0.2)).abs() < 1e-12, "hidden must not advance the clock");
         let bd = l.breakdown();
-        assert!((bd.comm_hidden - 0.5).abs() < 1e-12);
-        assert!((bd.total() - 0.2).abs() < 1e-12, "memo stays out of total()");
+        assert!((bd.comm_hidden - Secs(0.5)).abs() < 1e-12);
+        assert!((bd.total() - Secs(0.2)).abs() < 1e-12, "memo stays out of total()");
         l.audit().unwrap();
     }
 
@@ -403,7 +406,7 @@ mod tests {
     #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
     fn hidden_beyond_budget_is_a_violation() {
         let mut l = Ledger::new();
-        l.charge_hidden("t", 1.0, 0.5);
+        l.charge_hidden("t", Secs(1.0), Secs(0.5));
         // release builds record instead of panicking
         assert!(l.audit().is_err());
     }
@@ -411,14 +414,14 @@ mod tests {
     #[test]
     fn hidden_load_is_memo_and_budget_bounded() {
         let mut l = Ledger::new();
-        l.charge(ChargeKind::LoadStall, "t", 0.1);
-        l.charge_hidden_load("t", 0.3, 0.4);
-        assert!((l.clock() - 0.1).abs() < 1e-12, "hidden load must not advance the clock");
+        l.charge(ChargeKind::LoadStall, "t", Secs(0.1));
+        l.charge_hidden_load("t", Secs(0.3), Secs(0.4));
+        assert!((l.clock() - Secs(0.1)).abs() < 1e-12, "hidden load must not advance the clock");
         let bd = l.breakdown();
-        assert!((bd.load_hidden - 0.3).abs() < 1e-12);
-        assert!((bd.total() - 0.1).abs() < 1e-12, "memo stays out of total()");
+        assert!((bd.load_hidden - Secs(0.3)).abs() < 1e-12);
+        assert!((bd.total() - Secs(0.1)).abs() < 1e-12, "memo stays out of total()");
         // the two memo budgets are independent: comm budget unused here
-        assert!((bd.comm_hidden - 0.0).abs() < 1e-12);
+        assert!((bd.comm_hidden - Secs(0.0)).abs() < 1e-12);
         l.audit().unwrap();
     }
 
@@ -426,7 +429,7 @@ mod tests {
     #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
     fn hidden_load_beyond_budget_is_a_violation() {
         let mut l = Ledger::new();
-        l.charge_hidden_load("t", 1.0, 0.5);
+        l.charge_hidden_load("t", Secs(1.0), Secs(0.5));
         assert!(l.audit().is_err());
     }
 
@@ -434,7 +437,7 @@ mod tests {
     #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
     fn memo_kind_rejected_by_charge() {
         let mut l = Ledger::new();
-        l.charge(ChargeKind::LoadHidden, "t", 0.5);
+        l.charge(ChargeKind::LoadHidden, "t", Secs(0.5));
         assert!(l.audit().is_err());
     }
 
@@ -442,7 +445,7 @@ mod tests {
     #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
     fn negative_charge_is_a_violation() {
         let mut l = Ledger::new();
-        l.charge(ChargeKind::Compute, "t", -0.5);
+        l.charge(ChargeKind::Compute, "t", Secs(-0.5));
         assert!(l.audit().is_err());
     }
 
@@ -450,18 +453,18 @@ mod tests {
     #[cfg_attr(debug_assertions, should_panic(expected = "ledger violation"))]
     fn clock_cannot_move_backwards() {
         let mut l = Ledger::new();
-        l.charge(ChargeKind::Compute, "t", 1.0);
-        l.advance_to(ChargeKind::CommQueue, "t", 0.5);
+        l.charge(ChargeKind::Compute, "t", Secs(1.0));
+        l.advance_to(ChargeKind::CommQueue, "t", Secs(0.5));
         assert!(l.audit().is_err());
     }
 
     #[test]
     fn charge_report_advances_clock_by_sim_total() {
         let rep = CommReport {
-            sim_transfer: 0.9,
-            sim_kernel: 0.05,
-            sim_host_reduce: 0.3,
-            sim_overlapped: 0.1,
+            sim_transfer: Secs(0.9),
+            sim_kernel: Secs(0.05),
+            sim_host_reduce: Secs(0.3),
+            sim_overlapped: Secs(0.1),
             ..Default::default()
         };
         let mut l = Ledger::new();
@@ -471,9 +474,9 @@ mod tests {
         let bd = l.breakdown();
         // overlap hides kernel time first: 0.05 kernel fully hidden, the
         // remaining 0.05 of overlap comes off the wire
-        assert!((bd.comm_kernel - 0.0).abs() < 1e-12);
-        assert!((bd.comm_transfer - (0.9 - 0.05) * 2.0).abs() < 1e-12);
-        assert!((bd.host_reduce - 0.6).abs() < 1e-12);
+        assert!((bd.comm_kernel - Secs(0.0)).abs() < 1e-12);
+        assert!((bd.comm_transfer - Secs((0.9 - 0.05) * 2.0)).abs() < 1e-12);
+        assert!((bd.host_reduce - Secs(0.6)).abs() < 1e-12);
         l.audit().unwrap();
     }
 
@@ -492,15 +495,16 @@ mod tests {
         let mut l = Ledger::new();
         for (i, k) in kinds.iter().enumerate() {
             assert!(k.on_clock());
-            l.charge(*k, "t", (i + 1) as f64);
+            l.charge(*k, "t", Secs((i + 1) as f64));
         }
         assert!(!ChargeKind::CommHidden.on_clock());
         assert!(!ChargeKind::LoadHidden.on_clock());
         let (clock, bd) = l.finish();
-        assert!((clock - 36.0).abs() < 1e-12);
-        let named: Vec<f64> = bd.components().iter().map(|&(_, v)| v).collect();
+        assert!((clock - Secs(36.0)).abs() < 1e-12);
+        let named: Vec<Secs> = bd.components().iter().map(|&(_, v)| v).collect();
         // 8 on-clock slots hold 1..=8, the memo slots stay 0
-        let mut nonzero: Vec<f64> = named.iter().copied().filter(|v| *v > 0.0).collect();
+        let mut nonzero: Vec<f64> =
+            named.iter().copied().filter(|v| *v > 0.0).map(|v| v.0).collect();
         nonzero.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(nonzero, (1..=8).map(|i| i as f64).collect::<Vec<_>>());
     }
@@ -508,10 +512,10 @@ mod tests {
     #[test]
     fn server_clock_queues_and_audits() {
         let mut q = ServerClock::new();
-        assert_eq!(q.serve(1.0, 0.5), 1.5);
-        assert_eq!(q.serve(1.0, 0.5), 2.0, "busy server queues the second request");
-        assert_eq!(q.serve(10.0, 0.25), 10.25, "idle server waits for the arrival");
-        assert!((q.busy() - 1.25).abs() < 1e-12);
+        assert_eq!(q.serve(Secs(1.0), Secs(0.5)), 1.5);
+        assert_eq!(q.serve(Secs(1.0), Secs(0.5)), 2.0, "busy server queues the second request");
+        assert_eq!(q.serve(Secs(10.0), Secs(0.25)), 10.25, "idle server waits for the arrival");
+        assert!((q.busy() - Secs(1.25)).abs() < 1e-12);
         q.audit().unwrap();
     }
 }

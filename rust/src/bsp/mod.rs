@@ -26,8 +26,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::audit::{ChargeKind, Ledger};
 use crate::cluster::Topology;
 use crate::collectives::{
-    wfbp, wire, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan,
-    WireFormat,
+    wfbp, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan, WireFormat,
 };
 use crate::data::{FeatureDataset, ImageDataset, ImageSpec, TokenStream};
 use crate::loader::{DecodeCache, LoaderConfig, LoaderReport, ParallelLoader};
@@ -37,6 +36,7 @@ use crate::mpi::{self, Comm};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::{LrSchedule, Scheme};
 use crate::simnet::LinkParams;
+use crate::units::{Kib, Secs};
 
 /// Full configuration of one BSP training session.
 #[derive(Clone, Debug)]
@@ -143,7 +143,7 @@ impl BspConfig {
 pub struct EvalPoint {
     pub iter: usize,
     /// virtual seconds since training start (train + comm accounting)
-    pub vtime: f64,
+    pub vtime: Secs,
     pub train_loss: f64,
     /// validation error = 1 - accuracy (the paper plots top-k error)
     pub val_err: f64,
@@ -157,7 +157,7 @@ pub struct BspReport {
     pub workers: usize,
     pub batch: usize,
     /// final reconciled virtual clock (seconds)
-    pub vtime_total: f64,
+    pub vtime_total: Secs,
     /// rank-0 time decomposition
     pub breakdown: Breakdown,
     /// sum over iterations of one rank's exchange reports
@@ -184,7 +184,7 @@ impl BspReport {
         if total_examples <= 0.0 {
             return 0.0;
         }
-        self.vtime_total * n as f64 / total_examples
+        self.vtime_total.0 * n as f64 / total_examples
     }
 }
 
@@ -252,7 +252,7 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
         };
         // the bucket budget is *on-wire* KiB: elems come from the active
         // wire's bytes-per-elem, not a hardcoded 4 (the sizing bugfix)
-        let bucket_elems = wire::elems_per_kib(cfg.bucket_kib, cfg.strategy, cfg.wire);
+        let bucket_elems = Kib(cfg.bucket_kib).elems(cfg.strategy, cfg.wire).0;
         let mut plan = WfbpPlan::from_layers(&table, bucket_elems);
         if cfg.wire == WireFormat::Sf {
             // sufficient factors apply to all-fc buckets only; the fc dims
@@ -352,7 +352,7 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
     report.batch = cfg.batch;
     report.iters = cfg.iters;
     report.throughput =
-        (cfg.iters * cfg.batch * cfg.workers) as f64 / report.vtime_total.max(1e-12);
+        (cfg.iters * cfg.batch * cfg.workers) as f64 / report.vtime_total.0.max(1e-12);
     Ok(report)
 }
 
@@ -388,7 +388,7 @@ fn worker_main(
     // construction; see rust/src/audit)
     let mut led = Ledger::new();
     let mut comm_total = CommReport::default();
-    let mut serial_comm = 0.0f64; // what post-backward pricing would charge
+    let mut serial_comm = Secs::ZERO; // what post-backward pricing would charge
     let mut curve = Vec::new();
     let mut last_loss = f64::NAN;
     let kernels = rt.kernels();
@@ -397,7 +397,7 @@ fn worker_main(
         Box::new(crate::collectives::ChunkedPipeline::new(
             cfg.strategy.build(cfg.wire),
             // on-wire KiB per chunk (the sizing bugfix): wire-width-aware
-            wire::elems_per_kib(cfg.chunk_kib, cfg.strategy, cfg.wire).max(1),
+            Kib(cfg.chunk_kib).elems(cfg.strategy, cfg.wire).0.max(1),
             cfg.pipeline,
         ))
     } else {
@@ -446,13 +446,13 @@ fn worker_main(
                 params = outs.next().unwrap().into_f32()?;
                 momentum = outs.next().unwrap().into_f32()?;
                 last_loss = outs.next().unwrap().scalar()? as f64;
-                led.charge(ChargeKind::Compute, "bsp.train", res.exec_time);
+                led.charge(ChargeKind::Compute, "bsp.train", Secs(res.exec_time));
 
                 // --- barrier + exchange (average weights) ----------------------
                 // straggle (the gap to the superstep's slowest rank) is peer
                 // waiting: charged to comm_queue so breakdown==clock at k>1
-                let reconciled = comm.barrier(led.clock());
-                led.advance_to(ChargeKind::CommQueue, "bsp.barrier", reconciled);
+                let reconciled = comm.barrier(led.clock().0);
+                led.advance_to(ChargeKind::CommQueue, "bsp.barrier", Secs(reconciled));
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
                     topo,
@@ -485,11 +485,11 @@ fn worker_main(
                 let mut outs = res.outputs.into_iter();
                 let mut grads = outs.next().unwrap().into_f32()?;
                 last_loss = outs.next().unwrap().scalar()? as f64;
-                led.charge(ChargeKind::Compute, "bsp.grad", res.exec_time);
+                led.charge(ChargeKind::Compute, "bsp.grad", Secs(res.exec_time));
 
                 // --- barrier + exchange (sum gradients) ------------------------
-                let reconciled = comm.barrier(led.clock());
-                led.advance_to(ChargeKind::CommQueue, "bsp.barrier", reconciled);
+                let reconciled = comm.barrier(led.clock().0);
+                led.advance_to(ChargeKind::CommQueue, "bsp.barrier", Secs(reconciled));
                 let mut ctx = ExchangeCtx {
                     comm: &mut comm,
                     topo,
@@ -507,7 +507,7 @@ fn worker_main(
                         // max(backward, joint makespan) - backward instead of
                         // backward + comm (the backward time is already on
                         // the clock from the compute charge above)
-                        let backward = res.exec_time * wfbp::BWD_FRACTION;
+                        let backward = Secs(res.exec_time * wfbp::BWD_FRACTION);
                         let out = wfbp::exchange_wfbp(
                             strategy.as_ref(),
                             plan,
@@ -553,7 +553,7 @@ fn worker_main(
                 let mut outs = apply.outputs.into_iter();
                 params = outs.next().unwrap().into_f32()?;
                 momentum = outs.next().unwrap().into_f32()?;
-                led.charge(ChargeKind::Apply, "bsp.apply", apply.exec_time);
+                led.charge(ChargeKind::Apply, "bsp.apply", Secs(apply.exec_time));
             }
         }
 
@@ -577,8 +577,8 @@ fn worker_main(
     }
 
     // final clock reconciliation (straggle is peer waiting, like any barrier)
-    let reconciled = comm.barrier(led.clock());
-    led.advance_to(ChargeKind::CommQueue, "bsp.final_barrier", reconciled);
+    let reconciled = comm.barrier(led.clock().0);
+    led.advance_to(ChargeKind::CommQueue, "bsp.final_barrier", Secs(reconciled));
     let loader_report = match &mut data {
         WorkerData::Images { loader: Some(l), .. } => {
             // the per-iteration stall charges already cover the loader's
@@ -586,7 +586,7 @@ fn worker_main(
             // can only accrue more stall time after the last collect,
             // never less
             debug_assert!(
-                l.stall_time >= led.breakdown().load_stall - 1e-9,
+                l.stall_time.0 >= led.breakdown().load_stall.0 - 1e-9,
                 "loader stall accounting regressed: {} < {}",
                 l.stall_time,
                 led.breakdown().load_stall
@@ -597,7 +597,7 @@ fn worker_main(
         }
         WorkerData::Images { loader: None, cache, .. } => Some(LoaderReport {
             batches_loaded: cfg.iters,
-            stall_time: 0.0,
+            stall_time: Secs::ZERO,
             load_time: led.breakdown().load_stall,
             h2d_sim: led.breakdown().h2d,
             prefetch_depth: 0, // marks the direct (synchronous) path
@@ -804,6 +804,7 @@ fn run_eval(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::units::{Bytes, GbPerS, Micros};
 
     #[test]
     fn time_per_examples_guards_zero_denominators() {
@@ -811,8 +812,13 @@ mod tests {
         // no workers processed zero examples — per-example time is 0.0
         let degenerate = [(0usize, 32usize, 4usize), (10, 0, 4), (10, 32, 0), (0, 0, 0)];
         for (iters, batch, workers) in degenerate {
-            let rep =
-                BspReport { iters, batch, workers, vtime_total: 3.0, ..Default::default() };
+            let rep = BspReport {
+                iters,
+                batch,
+                workers,
+                vtime_total: Secs(3.0),
+                ..Default::default()
+            };
             let t = rep.time_per_examples(5120);
             assert_eq!(t, 0.0, "iters={iters} batch={batch} workers={workers} -> {t}");
             assert!(t.is_finite());
@@ -822,7 +828,7 @@ mod tests {
             iters: 10,
             batch: 32,
             workers: 4,
-            vtime_total: 2.0,
+            vtime_total: Secs(2.0),
             ..Default::default()
         };
         assert!((rep.time_per_examples(1280) - 2.0).abs() < 1e-12);
@@ -859,16 +865,20 @@ mod tests {
         let _ = std::fs::remove_dir_all(&tmp);
         let mut cfg = BspConfig::quick("alexnet", 1, 2);
         cfg.batch = 4;
-        let links = LinkParams { pcie_gbps: 6.0, pcie_lat_us: 25.0, ..LinkParams::default() };
+        let links = LinkParams {
+            pcie_gbps: GbPerS(6.0),
+            pcie_lat_us: Micros(25.0),
+            ..LinkParams::default()
+        };
         let mut data = images_data(&d, &tmp, 0, &cfg, &links).unwrap();
         let mut rng = crate::util::Rng::new(7);
         let mut led = Ledger::new();
         let (x, _y) = next_batch(&mut data, &cfg, 0, 0, &mut rng, &links, &mut led).unwrap();
         let h2d_bytes = 4 * x.as_f32().unwrap().len() as u64;
         let got = led.breakdown().h2d;
-        let want = links.pcie_time(h2d_bytes);
+        let want = links.pcie_time(Bytes(h2d_bytes));
         assert!((got - want).abs() < 1e-15, "priced {got}, fabric says {want}");
-        let default_priced = LinkParams::default().pcie_time(h2d_bytes);
+        let default_priced = LinkParams::default().pcie_time(Bytes(h2d_bytes));
         assert!(
             (got - default_priced).abs() > 1e-9,
             "test fabric must be distinguishable from the default"

@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
 use crate::simnet::{split_traffic, PhaseCost, Transfer};
+use crate::units::{Bytes, Secs};
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
 
@@ -37,7 +38,7 @@ impl ExchangeStrategy for HostAllreduce {
     ) -> Result<CommReport> {
         let k = ctx.comm.size;
         let rank = ctx.comm.rank;
-        let bytes = 4 * buf.len() as u64;
+        let bytes = Bytes(4 * buf.len() as u64);
         let mut rep = CommReport { strategy: "ar".into(), ..Default::default() };
         if k == 1 {
             return Ok(rep);
@@ -45,7 +46,7 @@ impl ExchangeStrategy for HostAllreduce {
 
         // D2H once per rank (all ranks in parallel: one PCIe crossing each).
         rep.sim_transfer += ctx.links.pcie_time(bytes);
-        rep.sim_latency += ctx.links.pcie_lat_us * 1e-6;
+        rep.sim_latency += ctx.links.pcie_lat_us.to_secs();
 
         // Fold-down for non-power-of-two k: ranks >= p2 send to (r - p2).
         let p2 = k.next_power_of_two() >> usize::from(!k.is_power_of_two());
@@ -71,7 +72,7 @@ impl ExchangeStrategy for HostAllreduce {
             rep.wire_intra_bytes += s.intra_bytes;
             rep.wire_inter_bytes += s.inter_bytes;
             if rank < extra {
-                rep.wire_bytes += 0; // received only
+                rep.wire_bytes += Bytes(0); // received only
             } else if rank >= p2 {
                 rep.wire_bytes += bytes;
             }
@@ -131,7 +132,7 @@ impl ExchangeStrategy for HostAllreduce {
 
         // H2D once per rank.
         rep.sim_transfer += ctx.links.pcie_time(bytes);
-        rep.sim_latency += ctx.links.pcie_lat_us * 1e-6;
+        rep.sim_latency += ctx.links.pcie_lat_us.to_secs();
 
         if op == ReduceOp::Mean {
             host_scale(buf, 1.0 / k as f32);
@@ -155,30 +156,30 @@ fn host_phase(ctx: &ExchangeCtx<'_, '_>, transfers: &[Transfer]) -> PhaseCost {
     let mut mem = vec![0.0f64; ctx.topo.n_nodes];
     let mut qpi = vec![0.0f64; ctx.topo.n_nodes];
     let mut lat: f64 = 0.0;
-    let ib = p.ib_gbps(ctx.topo.ib);
+    let ib = p.ib_gbps(ctx.topo.ib).0;
     for t in transfers {
         if t.src == t.dst || t.bytes == 0 {
             continue;
         }
         let (a, b) = (ctx.topo.gpus[t.src], ctx.topo.gpus[t.dst]);
-        let gb = t.bytes as f64 / 1e9;
+        let gb = t.bytes.as_f64() / 1e9;
         if a.node != b.node {
             nic_out[a.node] += gb / ib;
             nic_in[b.node] += gb / ib;
-            mem[a.node] += gb / p.host_mem_gbps;
-            mem[b.node] += gb / p.host_mem_gbps;
-            lat = lat.max(p.ib_lat_us * 1e-6);
+            mem[a.node] += gb / p.host_mem_gbps.0;
+            mem[b.node] += gb / p.host_mem_gbps.0;
+            lat = lat.max(p.ib_lat_us.0 * 1e-6);
         } else if a.socket != b.socket {
-            qpi[a.node] += gb / p.qpi_gbps;
-            lat = lat.max(p.qpi_lat_us * 1e-6);
+            qpi[a.node] += gb / p.qpi_gbps.0;
+            lat = lat.max(p.qpi_lat_us.0 * 1e-6);
         } else {
-            mem[a.node] += gb / p.host_mem_gbps;
+            mem[a.node] += gb / p.host_mem_gbps.0;
         }
     }
     let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
     PhaseCost {
-        bandwidth: max(&nic_out).max(max(&nic_in)).max(max(&mem)).max(max(&qpi)),
-        latency: lat,
+        bandwidth: Secs(max(&nic_out).max(max(&nic_in)).max(max(&mem)).max(max(&qpi))),
+        latency: Secs(lat),
     }
 }
 

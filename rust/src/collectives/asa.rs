@@ -18,6 +18,7 @@ use anyhow::Result;
 use crate::mpi::{tags, Payload};
 use crate::precision::Wire;
 use crate::simnet::{phase_cost, split_traffic, Transfer};
+use crate::units::{Bytes, Secs};
 use crate::util::split_even;
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
@@ -66,18 +67,18 @@ fn asa_exchange(
             match half {
                 Some(wire) => {
                     let (bits, t) = pack(ctx, wire, seg, &mut rep)?;
-                    rep.real_kernel += t;
+                    rep.real_kernel += Secs(t);
                     ctx.comm.send(j, tags::EXCHANGE, Payload::U16(bits), 0.0)?;
                 }
                 None => {
                     ctx.comm.send(j, tags::EXCHANGE, Payload::F32(seg.to_vec()), 0.0)?;
                 }
             }
-            rep.wire_bytes += elem_bytes * len as u64;
+            rep.wire_bytes += Bytes(elem_bytes * len as u64);
             if half.is_some() {
                 // dense-equivalent bytes, so compression_ratio() sees the
                 // native half wire like any codec wire
-                rep.wire_raw_bytes += 4 * len as u64;
+                rep.wire_raw_bytes += Bytes(4 * len as u64);
             }
         }
         let (my_off, my_len) = parts[rank];
@@ -92,7 +93,7 @@ fn asa_exchange(
                 Some(wire) => {
                     let bits = m.payload.into_u16()?;
                     let (vals, t) = unpack(ctx, wire, &bits, &mut rep)?;
-                    rep.real_kernel += t;
+                    rep.real_kernel += Secs(t);
                     vals
                 }
                 None => m.payload.into_f32()?,
@@ -105,7 +106,8 @@ fn asa_exchange(
     for src in 0..k {
         for dst in 0..k {
             if src != dst {
-                transfers.push(Transfer { src, dst, bytes: elem_bytes * parts[dst].1 as u64 });
+                let bytes = Bytes(elem_bytes * parts[dst].1 as u64);
+                transfers.push(Transfer { src, dst, bytes });
             }
         }
     }
@@ -124,7 +126,7 @@ fn asa_exchange(
     } else if let Some(kn) = ctx.kernels {
         let refs: Vec<&[f32]> = my_parts.iter().map(|v| v.as_slice()).collect();
         let out = kn.sum_parts(&refs)?;
-        rep.real_kernel += out.exec_time;
+        rep.real_kernel += Secs(out.exec_time);
         out.value
     } else {
         let mut acc = my_parts[0].clone();
@@ -138,10 +140,10 @@ fn asa_exchange(
     // until the slowest rank's kernel finishes, and clocks must stay
     // identical across ranks (segments differ by ±1 element).
     let max_len = parts.iter().map(|p| p.1).max().unwrap_or(0);
-    rep.sim_kernel += ctx.links.gpu_reduce_time(4 * (k * max_len) as u64);
+    rep.sim_kernel += ctx.links.gpu_reduce_time(Bytes(4 * (k * max_len) as u64));
     if op == ReduceOp::Mean {
         host_scale(&mut reduced, 1.0 / k as f32);
-        rep.sim_kernel += ctx.links.gpu_reduce_time(4 * max_len as u64) * 0.5;
+        rep.sim_kernel += ctx.links.gpu_reduce_time(Bytes(4 * max_len as u64)) * 0.5;
     }
 
     // --- Phase 2: Allgather — broadcast my reduced segment ------------------
@@ -152,16 +154,16 @@ fn asa_exchange(
         match half {
             Some(wire) => {
                 let (bits, t) = pack(ctx, wire, &reduced, &mut rep)?;
-                rep.real_kernel += t;
+                rep.real_kernel += Secs(t);
                 ctx.comm.send(j, tags::ALLGATHER, Payload::U16(bits), 0.0)?;
             }
             None => {
                 ctx.comm.send(j, tags::ALLGATHER, Payload::F32(reduced.clone()), 0.0)?;
             }
         }
-        rep.wire_bytes += elem_bytes * reduced.len() as u64;
+        rep.wire_bytes += Bytes(elem_bytes * reduced.len() as u64);
         if half.is_some() {
-            rep.wire_raw_bytes += 4 * reduced.len() as u64;
+            rep.wire_raw_bytes += Bytes(4 * reduced.len() as u64);
         }
     }
     {
@@ -178,7 +180,7 @@ fn asa_exchange(
             Some(wire) => {
                 let bits = m.payload.into_u16()?;
                 let (vals, t) = unpack(ctx, wire, &bits, &mut rep)?;
-                rep.real_kernel += t;
+                rep.real_kernel += Secs(t);
                 buf[off..off + len].copy_from_slice(&vals);
             }
             None => {
@@ -190,7 +192,8 @@ fn asa_exchange(
     for src in 0..k {
         for dst in 0..k {
             if src != dst {
-                transfers.push(Transfer { src, dst, bytes: elem_bytes * parts[src].1 as u64 });
+                let bytes = Bytes(elem_bytes * parts[src].1 as u64);
+                transfers.push(Transfer { src, dst, bytes });
             }
         }
     }
@@ -212,7 +215,7 @@ fn pack(
     xs: &[f32],
     rep: &mut CommReport,
 ) -> Result<(Vec<u16>, f64)> {
-    rep.sim_kernel += ctx.links.gpu_cast_time(4 * xs.len() as u64);
+    rep.sim_kernel += ctx.links.gpu_cast_time(Bytes(4 * xs.len() as u64));
     if let Some(kn) = ctx.kernels {
         let out = kn.pack(wire, xs)?;
         Ok((out.value, out.exec_time))
@@ -229,7 +232,7 @@ fn unpack(
     bits: &[u16],
     rep: &mut CommReport,
 ) -> Result<(Vec<f32>, f64)> {
-    rep.sim_kernel += ctx.links.gpu_cast_time(2 * bits.len() as u64);
+    rep.sim_kernel += ctx.links.gpu_cast_time(Bytes(2 * bits.len() as u64));
     if let Some(kn) = ctx.kernels {
         let out = kn.unpack(wire, bits)?;
         Ok((out.value, out.exec_time))

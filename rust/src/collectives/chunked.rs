@@ -25,6 +25,7 @@
 use anyhow::Result;
 
 use crate::simnet::{flow_pipeline_time, pipeline_time, FlowJob, PipelineStage};
+use crate::units::Secs;
 use crate::util::split_even;
 
 use super::{CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
@@ -131,7 +132,7 @@ impl ExchangeStrategy for ChunkedPipeline {
         ctx.slice_off = saved_off;
 
         if self.pipeline {
-            let serial: f64 = stages.iter().map(|s| s.transfer + s.kernel).sum();
+            let serial: Secs = stages.iter().map(|s| s.transfer + s.kernel).sum();
             // a per-level leg breakdown (the hierarchical strategy) engages
             // the multi-machine flow-shop: chunk i's NIC leg overlaps chunk
             // i+1's intra-node tree. Flat inners keep the two-resource
@@ -322,7 +323,7 @@ mod tests {
             );
             // the ablation: chunking without the pipeline must not win
             assert!(
-                serial.sim_total() >= mono.sim_total() - 1e-12,
+                serial.sim_total() >= mono.sim_total() - Secs(1e-12),
                 "k={k}: serial chunking should not beat monolithic"
             );
             assert!(piped.effective_gbps() > mono.effective_gbps(), "k={k}");
@@ -345,7 +346,8 @@ mod tests {
         );
         assert!(rep.sim_overlapped > 0.0);
         assert!(
-            rep.sim_overlapped <= rep.sim_kernel + rep.sim_host_reduce + rep.sim_latency + 1e-12,
+            rep.sim_overlapped
+                <= rep.sim_kernel + rep.sim_host_reduce + rep.sim_latency + Secs(1e-12),
             "overlapped {} > hideable {}",
             rep.sim_overlapped,
             rep.sim_kernel + rep.sim_host_reduce + rep.sim_latency

@@ -44,6 +44,7 @@ use crate::simnet::{
     phase_cost, split_traffic, Leg, Transfer, MACHINE_HOST, MACHINE_INTER, MACHINE_INTRA_DOWN,
     MACHINE_INTRA_UP,
 };
+use crate::units::{Bytes, Secs};
 
 use super::{
     host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, FlatKind, ReduceOp,
@@ -91,7 +92,7 @@ impl Hierarchical {
         rep.legs.push(Leg { machine, transfer: c.total(), latency: c.latency });
         if let Some(elems) = sum_elems {
             if ctx.kernels.is_some() {
-                rep.sim_kernel += ctx.links.gpu_reduce_time(4 * elems as u64);
+                rep.sim_kernel += ctx.links.gpu_reduce_time(Bytes(4 * elems as u64));
             }
         }
     }
@@ -115,7 +116,7 @@ fn reduce_into(
             refs.push(c.as_slice());
         }
         let out = kn.sum_parts(&refs)?;
-        rep.real_kernel += out.exec_time;
+        rep.real_kernel += Secs(out.exec_time);
         buf.copy_from_slice(&out.value);
     } else {
         for c in copies {
@@ -160,7 +161,7 @@ impl ExchangeStrategy for Hierarchical {
         };
 
         // ---- switch level, up: members -> switch leader (P2P) ------------
-        let bytes = 4 * n as u64;
+        let bytes = Bytes(4 * n as u64);
         let level_a: Vec<Transfer> = sw_groups
             .iter()
             .flat_map(|g| {
@@ -409,9 +410,9 @@ mod tests {
         // the paper's motivation: ~8x on copper's 8-GPU nodes for all-pairs
         // flat strategies (every GPU pushed ~the full vector through the NIC)
         assert!(
-            flat_asa.wire_inter_bytes as f64 / h_asa.wire_inter_bytes as f64 > 7.0,
+            flat_asa.wire_inter_bytes.as_f64() / h_asa.wire_inter_bytes.as_f64() > 7.0,
             "expected ~8x NIC cut, got {}x",
-            flat_asa.wire_inter_bytes as f64 / h_asa.wire_inter_bytes as f64
+            flat_asa.wire_inter_bytes.as_f64() / h_asa.wire_inter_bytes.as_f64()
         );
     }
 
@@ -424,7 +425,7 @@ mod tests {
         // 5 legs on copper-2: switch up, socket up, leaders, socket down,
         // switch down
         assert_eq!(rep.legs.len(), 5);
-        let leg_total: f64 = rep.legs.iter().map(|l| l.transfer).sum();
+        let leg_total: Secs = rep.legs.iter().map(|l| l.transfer).sum();
         assert!((leg_total - rep.sim_transfer).abs() < 1e-12);
         // host fallback: no GPU kernel charge (ring-style gating)
         assert_eq!(rep.sim_kernel, 0.0);

@@ -45,6 +45,7 @@ use crate::mpi::Comm;
 use crate::precision::Wire;
 use crate::runtime::Kernels;
 use crate::simnet::{Leg, LinkParams};
+use crate::units::{Bytes, Secs};
 
 /// Reduction applied across ranks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -90,41 +91,41 @@ pub struct ExchangeCtx<'a, 'k> {
 pub struct CommReport {
     pub strategy: String,
     /// Bytes this rank moved (sent) across all phases.
-    pub wire_bytes: u64,
+    pub wire_bytes: Bytes,
     /// Dense f32 bytes this rank *would* have sent had every value shipped
     /// uncompressed — the numerator of the observable compression ratio.
     /// 0 means "nothing was compressed" (raw == `wire_bytes`); the asa16
     /// native half wire and every [`wire::WireCodec`] format set it.
-    pub wire_raw_bytes: u64,
-    /// Simulated transfer time (s), latency included.
-    pub sim_transfer: f64,
-    /// Latency component of `sim_transfer` (per-message terms, s).
-    pub sim_latency: f64,
-    /// Simulated GPU kernel time inside the exchange: sums + casts (s).
-    pub sim_kernel: f64,
-    /// Simulated host CPU reduction time (AR only) (s).
-    pub sim_host_reduce: f64,
-    /// Time hidden by the chunked pipeline's comm/compute overlap (s):
+    pub wire_raw_bytes: Bytes,
+    /// Simulated transfer time, latency included.
+    pub sim_transfer: Secs,
+    /// Latency component of `sim_transfer` (per-message terms).
+    pub sim_latency: Secs,
+    /// Simulated GPU kernel time inside the exchange: sums + casts.
+    pub sim_kernel: Secs,
+    /// Simulated host CPU reduction time (AR only).
+    pub sim_host_reduce: Secs,
+    /// Time hidden by the chunked pipeline's comm/compute overlap:
     /// chunk *i*'s wire transfer runs under chunk *i−1*'s kernels.
     /// Zero for monolithic exchanges.
-    pub sim_overlapped: f64,
+    pub sim_overlapped: Secs,
     /// Measured PJRT wall time of the real kernels (diagnostic).
-    pub real_kernel: f64,
+    pub real_kernel: Secs,
     /// Number of communication phases.
     pub phases: usize,
     /// Pipeline chunks this exchange was driven in (0 or 1 = monolithic).
     pub chunks: usize,
     /// Global bytes the whole exchange moved on intra-node paths (P2P or
     /// QPI), summed over every rank's transfers — identical across ranks.
-    pub wire_intra_bytes: u64,
+    pub wire_intra_bytes: Bytes,
     /// Global bytes that crossed a node boundary (the NIC traffic the
     /// hierarchical exchange exists to cut).
-    pub wire_inter_bytes: u64,
+    pub wire_inter_bytes: Bytes,
     /// Transfer time of the intra-node tree levels (`hier` only; flat
     /// strategies leave the intra/inter time split at zero).
-    pub sim_intra: f64,
+    pub sim_intra: Secs,
     /// Transfer time of the leader-level inter-node exchange (`hier` only).
-    pub sim_inter: f64,
+    pub sim_inter: Secs,
     /// Per-level wire legs of one exchange (`hier` only): the chunked
     /// scheduler prices cross-level overlap from these via
     /// [`flow_pipeline_time`](crate::simnet::flow_pipeline_time).
@@ -134,7 +135,7 @@ pub struct CommReport {
 impl CommReport {
     /// Total simulated exchange time — what the virtual clock advances by.
     /// Overlapped time is real wall-clock saving, so it subtracts.
-    pub fn sim_total(&self) -> f64 {
+    pub fn sim_total(&self) -> Secs {
         self.sim_transfer + self.sim_kernel + self.sim_host_reduce - self.sim_overlapped
     }
 
@@ -143,7 +144,7 @@ impl CommReport {
     pub fn effective_gbps(&self) -> f64 {
         let t = self.sim_total();
         if t > 0.0 {
-            self.wire_bytes as f64 / t / 1e9
+            self.wire_bytes.as_f64() / t.0 / 1e9
         } else {
             0.0
         }
@@ -155,7 +156,7 @@ impl CommReport {
         if self.wire_raw_bytes == 0 || self.wire_bytes == 0 {
             1.0
         } else {
-            self.wire_raw_bytes as f64 / self.wire_bytes as f64
+            self.wire_raw_bytes.as_f64() / self.wire_bytes.as_f64()
         }
     }
 
@@ -183,18 +184,18 @@ impl CommReport {
             sim_inter,
             legs: _, // caller's to manage
         } = sub;
-        self.wire_bytes += wire_bytes;
-        self.wire_raw_bytes += wire_raw_bytes;
-        self.wire_intra_bytes += wire_intra_bytes;
-        self.wire_inter_bytes += wire_inter_bytes;
-        self.sim_transfer += sim_transfer;
-        self.sim_latency += sim_latency;
-        self.sim_kernel += sim_kernel;
-        self.sim_host_reduce += sim_host_reduce;
-        self.sim_overlapped += sim_overlapped;
-        self.sim_intra += sim_intra;
-        self.sim_inter += sim_inter;
-        self.real_kernel += real_kernel;
+        self.wire_bytes += *wire_bytes;
+        self.wire_raw_bytes += *wire_raw_bytes;
+        self.wire_intra_bytes += *wire_intra_bytes;
+        self.wire_inter_bytes += *wire_inter_bytes;
+        self.sim_transfer += *sim_transfer;
+        self.sim_latency += *sim_latency;
+        self.sim_kernel += *sim_kernel;
+        self.sim_host_reduce += *sim_host_reduce;
+        self.sim_overlapped += *sim_overlapped;
+        self.sim_intra += *sim_intra;
+        self.sim_inter += *sim_inter;
+        self.real_kernel += *real_kernel;
         self.phases += phases;
     }
 
@@ -243,12 +244,12 @@ impl CommReport {
         self.sim_overlapped *= s;
         self.sim_intra *= s;
         self.sim_inter *= s;
-        // round, don't truncate: `as u64` floors, silently dropping bytes
-        // under fractional probe→full projection scales
-        self.wire_bytes = (self.wire_bytes as f64 * s).round() as u64;
-        self.wire_raw_bytes = (self.wire_raw_bytes as f64 * s).round() as u64;
-        self.wire_intra_bytes = (self.wire_intra_bytes as f64 * s).round() as u64;
-        self.wire_inter_bytes = (self.wire_inter_bytes as f64 * s).round() as u64;
+        // scale_round rounds: `as u64` would floor, silently dropping
+        // bytes under fractional probe→full projection scales
+        self.wire_bytes = self.wire_bytes.scale_round(s);
+        self.wire_raw_bytes = self.wire_raw_bytes.scale_round(s);
+        self.wire_intra_bytes = self.wire_intra_bytes.scale_round(s);
+        self.wire_inter_bytes = self.wire_inter_bytes.scale_round(s);
         for leg in &mut self.legs {
             leg.transfer *= s;
             leg.latency *= s;
@@ -528,18 +529,18 @@ mod tests {
     #[test]
     fn merge_accumulates_all_accounting() {
         let sub = CommReport {
-            wire_bytes: 10,
-            wire_raw_bytes: 40,
-            wire_intra_bytes: 6,
-            wire_inter_bytes: 4,
-            sim_transfer: 1.0,
-            sim_latency: 0.1,
-            sim_kernel: 0.2,
-            sim_host_reduce: 0.3,
-            sim_overlapped: 0.05,
-            sim_intra: 0.7,
-            sim_inter: 0.3,
-            real_kernel: 0.01,
+            wire_bytes: Bytes(10),
+            wire_raw_bytes: Bytes(40),
+            wire_intra_bytes: Bytes(6),
+            wire_inter_bytes: Bytes(4),
+            sim_transfer: Secs(1.0),
+            sim_latency: Secs(0.1),
+            sim_kernel: Secs(0.2),
+            sim_host_reduce: Secs(0.3),
+            sim_overlapped: Secs(0.05),
+            sim_intra: Secs(0.7),
+            sim_inter: Secs(0.3),
+            real_kernel: Secs(0.01),
             phases: 3,
             ..Default::default()
         };
@@ -551,10 +552,10 @@ mod tests {
         assert_eq!(rep.wire_intra_bytes, 12);
         assert_eq!(rep.wire_inter_bytes, 8);
         assert_eq!(rep.phases, 6);
-        assert!((rep.sim_transfer - 2.0).abs() < 1e-12);
-        assert!((rep.sim_intra - 1.4).abs() < 1e-12);
-        assert!((rep.sim_inter - 0.6).abs() < 1e-12);
-        assert!((rep.sim_overlapped - 0.1).abs() < 1e-12);
+        assert!((rep.sim_transfer - Secs(2.0)).abs() < 1e-12);
+        assert!((rep.sim_intra - Secs(1.4)).abs() < 1e-12);
+        assert!((rep.sim_inter - Secs(0.6)).abs() < 1e-12);
+        assert!((rep.sim_overlapped - Secs(0.1)).abs() < 1e-12);
         assert!(rep.legs.is_empty(), "merge leaves legs to the caller");
     }
 
@@ -562,12 +563,12 @@ mod tests {
     fn absorb_keeps_intra_inter_split_and_sums_chunks() {
         let sub = CommReport {
             strategy: "hier:ring".into(),
-            wire_bytes: 10,
-            wire_intra_bytes: 6,
-            wire_inter_bytes: 4,
-            sim_transfer: 1.0,
-            sim_intra: 0.7,
-            sim_inter: 0.3,
+            wire_bytes: Bytes(10),
+            wire_intra_bytes: Bytes(6),
+            wire_inter_bytes: Bytes(4),
+            sim_transfer: Secs(1.0),
+            sim_intra: Secs(0.7),
+            sim_inter: Secs(0.3),
             phases: 2,
             chunks: 4,
             ..Default::default()
@@ -581,26 +582,26 @@ mod tests {
         // keep the intra/inter byte and time splits
         assert_eq!(agg.wire_intra_bytes, 12);
         assert_eq!(agg.wire_inter_bytes, 8);
-        assert!((agg.sim_intra - 1.4).abs() < 1e-12);
-        assert!((agg.sim_inter - 0.6).abs() < 1e-12);
+        assert!((agg.sim_intra - Secs(1.4)).abs() < 1e-12);
+        assert!((agg.sim_inter - Secs(0.6)).abs() < 1e-12);
         assert_eq!(agg.phases, 4);
     }
 
     #[test]
     fn scale_times_scales_every_time_and_byte_field() {
         let mut rep = CommReport {
-            wire_bytes: 100,
-            wire_raw_bytes: 400,
-            wire_intra_bytes: 60,
-            wire_inter_bytes: 40,
-            sim_transfer: 1.0,
-            sim_latency: 0.1,
-            sim_kernel: 0.2,
-            sim_host_reduce: 0.3,
-            sim_overlapped: 0.05,
-            sim_intra: 0.7,
-            sim_inter: 0.3,
-            legs: vec![Leg { machine: 2, transfer: 0.5, latency: 0.01 }],
+            wire_bytes: Bytes(100),
+            wire_raw_bytes: Bytes(400),
+            wire_intra_bytes: Bytes(60),
+            wire_inter_bytes: Bytes(40),
+            sim_transfer: Secs(1.0),
+            sim_latency: Secs(0.1),
+            sim_kernel: Secs(0.2),
+            sim_host_reduce: Secs(0.3),
+            sim_overlapped: Secs(0.05),
+            sim_intra: Secs(0.7),
+            sim_inter: Secs(0.3),
+            legs: vec![Leg { machine: 2, transfer: Secs(0.5), latency: Secs(0.01) }],
             ..Default::default()
         };
         let total = rep.sim_total();
@@ -610,8 +611,8 @@ mod tests {
         assert_eq!(rep.wire_intra_bytes, 120);
         assert_eq!(rep.wire_inter_bytes, 80);
         assert!((rep.sim_total() - 2.0 * total).abs() < 1e-12);
-        assert!((rep.legs[0].transfer - 1.0).abs() < 1e-12);
-        assert!((rep.legs[0].latency - 0.02).abs() < 1e-12);
+        assert!((rep.legs[0].transfer - Secs(1.0)).abs() < 1e-12);
+        assert!((rep.legs[0].latency - Secs(0.02)).abs() < 1e-12);
         // identity scale is a no-op fast path
         let before = rep.sim_transfer;
         rep.scale_times(1.0);
@@ -624,10 +625,10 @@ mod tests {
         // scaled byte fields, so a fractional comm_scale silently dropped
         // bytes (e.g. 61M elems over a 1M probe scales by 60.965224)
         let mut rep = CommReport {
-            wire_bytes: 999,
-            wire_raw_bytes: 1_998,
-            wire_intra_bytes: 333,
-            wire_inter_bytes: 667,
+            wire_bytes: Bytes(999),
+            wire_raw_bytes: Bytes(1_998),
+            wire_intra_bytes: Bytes(333),
+            wire_inter_bytes: Bytes(667),
             ..Default::default()
         };
         rep.scale_times(1.5);
@@ -637,7 +638,7 @@ mod tests {
         assert_eq!(rep.wire_inter_bytes, 1_001, "667*1.5 = 1000.5, not 1000");
         // a probe-shaped fractional scale keeps the relative error at
         // rounding level, not a whole truncated byte per field
-        let mut probe = CommReport { wire_bytes: 4_000_000, ..Default::default() };
+        let mut probe = CommReport { wire_bytes: Bytes(4_000_000), ..Default::default() };
         let scale = 60_965_224.0 / 1_000_000.0;
         probe.scale_times(scale);
         assert_eq!(probe.wire_bytes, 243_860_896);
@@ -645,9 +646,10 @@ mod tests {
 
     #[test]
     fn compression_ratio_reads_raw_over_wire() {
-        let none = CommReport { wire_bytes: 100, ..Default::default() };
+        let none = CommReport { wire_bytes: Bytes(100), ..Default::default() };
         assert_eq!(none.compression_ratio(), 1.0, "raw=0 marks uncompressed");
-        let half = CommReport { wire_bytes: 50, wire_raw_bytes: 100, ..Default::default() };
+        let half =
+            CommReport { wire_bytes: Bytes(50), wire_raw_bytes: Bytes(100), ..Default::default() };
         assert_eq!(half.compression_ratio(), 2.0);
         let empty = CommReport::default();
         assert_eq!(empty.compression_ratio(), 1.0);
@@ -656,26 +658,26 @@ mod tests {
     #[test]
     fn report_totals() {
         let r = CommReport {
-            sim_transfer: 0.9,
-            sim_kernel: 0.016,
-            sim_host_reduce: 0.0,
+            sim_transfer: Secs(0.9),
+            sim_kernel: Secs(0.016),
+            sim_host_reduce: Secs(0.0),
             ..Default::default()
         };
-        assert!((r.sim_total() - 0.916).abs() < 1e-12);
+        assert!((r.sim_total() - Secs(0.916)).abs() < 1e-12);
         assert!((r.kernel_share() - 0.016 / 0.916).abs() < 1e-9);
     }
 
     #[test]
     fn overlap_subtracts_from_total_and_raises_effective_bandwidth() {
         let base = CommReport {
-            wire_bytes: 1_000_000_000,
-            sim_transfer: 1.0,
-            sim_kernel: 0.25,
+            wire_bytes: Bytes(1_000_000_000),
+            sim_transfer: Secs(1.0),
+            sim_kernel: Secs(0.25),
             ..Default::default()
         };
-        let overlapped = CommReport { sim_overlapped: 0.2, ..base.clone() };
-        assert!((base.sim_total() - 1.25).abs() < 1e-12);
-        assert!((overlapped.sim_total() - 1.05).abs() < 1e-12);
+        let overlapped = CommReport { sim_overlapped: Secs(0.2), ..base.clone() };
+        assert!((base.sim_total() - Secs(1.25)).abs() < 1e-12);
+        assert!((overlapped.sim_total() - Secs(1.05)).abs() < 1e-12);
         assert!(overlapped.effective_gbps() > base.effective_gbps());
     }
 }

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::mpi::{tags, Payload};
 use crate::simnet::{phase_cost, split_traffic, Transfer};
+use crate::units::Bytes;
 use crate::util::split_even;
 
 use super::{host_add, host_scale, CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
@@ -51,7 +52,7 @@ impl ExchangeStrategy for Ring {
                 .map(|r| Transfer {
                     src: r,
                     dst: (r + 1) % k,
-                    bytes: 4 * parts[seg_of_rank(r)].1 as u64,
+                    bytes: Bytes(4 * parts[seg_of_rank(r)].1 as u64),
                 })
                 .collect()
         };
@@ -75,14 +76,14 @@ impl ExchangeStrategy for Ring {
             let (roff, rlen) = parts[recv_seg];
             let incoming = m.payload.into_f32()?;
             host_add(&mut buf[roff..roff + rlen], &incoming);
-            rep.wire_bytes += 4 * slen as u64;
+            rep.wire_bytes += Bytes(4 * slen as u64);
             let c = step_cost(&mut rep, &|r| (r + k - step) % k);
             rep.sim_transfer += c.total();
             rep.sim_latency += c.latency;
             // the per-step partial sum is a GPU kernel only when kernels are
             // bound; the host fallback must not charge device time
             if ctx.kernels.is_some() {
-                rep.sim_kernel += ctx.links.gpu_reduce_time(4 * rlen as u64);
+                rep.sim_kernel += ctx.links.gpu_reduce_time(Bytes(4 * rlen as u64));
             }
             rep.phases += 1;
         }
@@ -105,7 +106,7 @@ impl ExchangeStrategy for Ring {
             let incoming = m.payload.into_f32()?;
             debug_assert_eq!(incoming.len(), rlen);
             buf[roff..roff + rlen].copy_from_slice(&incoming);
-            rep.wire_bytes += 4 * slen as u64;
+            rep.wire_bytes += Bytes(4 * slen as u64);
             let c = step_cost(&mut rep, &|r| (r + 1 + k - step) % k);
             rep.sim_transfer += c.total();
             rep.sim_latency += c.latency;
@@ -186,7 +187,7 @@ mod tests {
         let parts = split_even(n, k);
         let max_seg = parts.iter().map(|p| p.1).max().unwrap() as u64;
         let transfers: Vec<Transfer> = (0..k)
-            .map(|r| Transfer { src: r, dst: (r + 1) % k, bytes: 4 * max_seg })
+            .map(|r| Transfer { src: r, dst: (r + 1) % k, bytes: Bytes(4 * max_seg) })
             .collect();
         let old = 2.0 * (k - 1) as f64 * phase_time(&topo, &links, &transfers, true);
         assert!(rep.sim_transfer < old, "new={} !< old={old}", rep.sim_transfer);

@@ -50,6 +50,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::simnet::{wfbp_timeline, FlowJob, Leg, TimedJob, MACHINE_WIRE};
+use crate::units::Secs;
 
 use super::{CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp};
 
@@ -318,14 +319,14 @@ pub struct WfbpOutcome {
     /// Merged per-bucket accounting; `sim_total()` equals `comm_visible`.
     pub comm: CommReport,
     /// What the post-backward path would charge: Σ bucket exchange times.
-    pub serial_comm: f64,
+    pub serial_comm: Secs,
     /// Exchange time the worker clock actually pays beyond the backward
     /// pass: `max(makespan − backward, 0)` under WFBP, `serial_comm` post.
-    pub comm_visible: f64,
+    pub comm_visible: Secs,
     /// Exchange time hidden under backward compute: `serial − visible`.
-    pub comm_hidden: f64,
+    pub comm_hidden: Secs,
     /// Joint compute+comm makespan from the start of the backward pass.
-    pub makespan: f64,
+    pub makespan: Secs,
     /// `comm_hidden / serial_comm` ∈ [0, 1] (0 when there is no comm).
     pub overlap_fraction: f64,
     /// Non-empty buckets exchanged.
@@ -351,7 +352,7 @@ pub fn exchange_wfbp(
     buf: &mut [f32],
     op: ReduceOp,
     ctx: &mut ExchangeCtx<'_, '_>,
-    backward_total: f64,
+    backward_total: Secs,
     comm_scale: f64,
     overlap: bool,
 ) -> Result<WfbpOutcome> {
@@ -365,7 +366,7 @@ pub fn exchange_wfbp(
     let mut rep =
         CommReport { strategy: format!("wfbp({})", inner.name()), ..Default::default() };
     let mut jobs: Vec<TimedJob> = Vec::with_capacity(plan.buckets.len());
-    let mut serial = 0.0f64;
+    let mut serial = Secs::ZERO;
     let mut buckets_run = 0usize;
     let saved_off = ctx.slice_off;
     let saved_sf = ctx.sf_bytes;
@@ -390,7 +391,7 @@ pub fn exchange_wfbp(
                     transfer: sub.sim_total(),
                     latency: sub.sim_latency.min(sub.sim_total()),
                 }],
-                kernel: 0.0,
+                kernel: Secs::ZERO,
             }
         } else if !sub.legs.is_empty() {
             // hierarchical inner: per-level legs stream through the level

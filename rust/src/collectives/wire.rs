@@ -60,6 +60,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, Result};
 
 use crate::precision::Wire;
+use crate::units::{Bytes, Kib};
 
 use super::{CommReport, ExchangeCtx, ExchangeStrategy, ReduceOp, StrategyKind};
 
@@ -179,9 +180,10 @@ pub fn wire_bytes_per_elem(strategy: StrategyKind, fmt: WireFormat) -> f64 {
 /// chunk of "256 KiB" was only 128 KiB on the wire and the flow-shop
 /// pipeline was priced at the wrong granularity; this computes the element
 /// count from the active wire's width instead. The f32 × full-width path
-/// reproduces `kib * 1024 / 4` exactly (bit-identical bands).
+/// reproduces `kib * 1024 / 4` exactly (bit-identical bands). Thin alias
+/// of [`Kib::elems`], the typed sizing rule.
 pub fn elems_per_kib(kib: usize, strategy: StrategyKind, fmt: WireFormat) -> usize {
-    ((kib as f64 * 1024.0) / wire_bytes_per_elem(strategy, fmt)).floor() as usize
+    Kib(kib).elems(strategy, fmt).0
 }
 
 /// One codec application: the values the wire delivers (dense, with
@@ -328,9 +330,9 @@ impl ExchangeStrategy for WireCodec {
             let r = enc.wire_bytes as f64 / (4.0 * n.max(1) as f64);
             let raw = rep.wire_bytes;
             rep.wire_raw_bytes = raw;
-            rep.wire_bytes = (raw as f64 * r).round() as u64;
-            rep.wire_intra_bytes = (rep.wire_intra_bytes as f64 * r).round() as u64;
-            rep.wire_inter_bytes = (rep.wire_inter_bytes as f64 * r).round() as u64;
+            rep.wire_bytes = raw.scale_round(r);
+            rep.wire_intra_bytes = rep.wire_intra_bytes.scale_round(r);
+            rep.wire_inter_bytes = rep.wire_inter_bytes.scale_round(r);
             rep.sim_transfer = rep.sim_latency + (rep.sim_transfer - rep.sim_latency) * r;
             rep.sim_intra *= r;
             rep.sim_inter *= r;
@@ -340,8 +342,8 @@ impl ExchangeStrategy for WireCodec {
             // encode reads grad + residual, decode writes the dense buffer;
             // sf's factors fall out of the backward pass (no codec kernel)
             if self.fmt != WireFormat::Sf {
-                rep.sim_kernel += ctx.links.gpu_cast_time(8 * n as u64);
-                rep.sim_kernel += ctx.links.gpu_cast_time(4 * n as u64);
+                rep.sim_kernel += ctx.links.gpu_cast_time(Bytes(8 * n as u64));
+                rep.sim_kernel += ctx.links.gpu_cast_time(Bytes(4 * n as u64));
             }
             rep.strategy = format!("{}/{}", rep.strategy, self.fmt.name());
             Ok(rep)

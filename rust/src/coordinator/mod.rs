@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 use crate::bsp::{run_bsp, BspConfig, BspReport};
 use crate::cluster::Topology;
 use crate::collectives::{
-    wire, CommReport, ExchangeCtx, ReduceOp, StrategyKind, WfbpOutcome, WfbpPlan, WireFormat,
+    CommReport, ExchangeCtx, ReduceOp, StrategyKind, WfbpOutcome, WfbpPlan, WireFormat,
 };
 use crate::easgd::{run_easgd, EasgdConfig, Transport};
 use crate::metrics::Table;
@@ -21,6 +21,7 @@ use crate::models;
 use crate::runtime::Runtime;
 use crate::sgd::{LrSchedule, Scheme};
 use crate::simnet::LinkParams;
+use crate::units::{Kib, Secs};
 
 pub struct Session {
     pub rt: Arc<Runtime>,
@@ -129,7 +130,7 @@ impl Session {
         let mut ar_time = 0.0;
         for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16] {
             let rep = self.measure_exchange(strat, k, "mosaic", bytes, true)?;
-            let t = rep.sim_total();
+            let t = rep.sim_total().0;
             if strat == StrategyKind::Ar {
                 ar_time = t;
             }
@@ -196,7 +197,7 @@ impl Session {
             let mut csv = format!("{model},{batch},{topo},{t1}");
             for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16] {
                 let rep = self.measure_exchange(strat, k, topo, bytes, true)?;
-                let comm_5120 = rep.sim_total() * iters_per_5120;
+                let comm_5120 = rep.sim_total().0 * iters_per_5120;
                 let total = t1 / k as f64 + comm_5120;
                 let speedup = t1 / total;
                 cells.push(format!("{comm_5120:.2}/{speedup:.1}x"));
@@ -348,7 +349,7 @@ impl Session {
                 .unwrap();
             let rep = self.measure_exchange(strat, k, topo, bytes, true)?;
             let iters_per_5120 = 5120.0 / (batch as f64 * k as f64);
-            let total = t1 / k as f64 + rep.sim_total() * iters_per_5120;
+            let total = t1 / k as f64 + rep.sim_total().0 * iters_per_5120;
             Ok(t1 / total)
         };
 
@@ -696,12 +697,11 @@ pub fn probe_wfbp(
     // bucket/chunk budgets are on-wire KiB: wire-width-aware sizing (the
     // probes run the f32 wire, so asa16's native half wire is the only
     // width that differs here)
-    let bucket_elems = wire::elems_per_kib(bucket_kib, strategy, WireFormat::F32);
+    let bucket_elems = Kib(bucket_kib).elems(strategy, WireFormat::F32).0;
     let plan = Arc::new(WfbpPlan::from_layers(layers, bucket_elems).project(probe_elems));
     // a full-scale chunk size maps onto the probe at the same ratio
     let chunk_elems = if chunk_kib > 0 {
-        ((wire::elems_per_kib(chunk_kib, strategy, WireFormat::F32) as f64 / comm_scale)
-            .round() as usize)
+        ((Kib(chunk_kib).elems(strategy, WireFormat::F32).0 as f64 / comm_scale).round() as usize)
             .max(1)
     } else {
         0
@@ -741,7 +741,7 @@ pub fn probe_wfbp(
                 &mut buf,
                 ReduceOp::Sum,
                 &mut ctx,
-                backward_total,
+                Secs(backward_total),
                 comm_scale,
                 overlap,
             )

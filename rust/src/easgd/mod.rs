@@ -43,6 +43,7 @@ use crate::precision::Wire;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::LrSchedule;
 use crate::simnet::{phase_time, LinkParams, Transfer};
+use crate::units::{Bytes, Secs};
 
 use shard::{ShardPlan, ShardPrices};
 
@@ -155,15 +156,15 @@ pub struct EasgdReport {
     /// parameter-server shards the center variable was split across
     pub servers: usize,
     /// max worker virtual clock
-    pub vtime_total: f64,
+    pub vtime_total: Secs,
     /// mean per-worker comm overhead per exchange (sim seconds)
-    pub comm_per_exchange: f64,
+    pub comm_per_exchange: Secs,
     /// total comm overhead summed across workers
-    pub comm_total: f64,
+    pub comm_total: Secs,
     /// mean per-exchange queue wait (binding slice; sim seconds)
-    pub queue_wait_mean: f64,
+    pub queue_wait_mean: Secs,
     /// p95 per-exchange queue wait across all workers' exchanges
-    pub queue_wait_p95: f64,
+    pub queue_wait_p95: Secs,
     /// per-shard `busy / clock_end` — how loaded each server queue ran
     pub shard_busy: Vec<f64>,
     pub breakdown: Breakdown,
@@ -186,23 +187,23 @@ fn exchange_cost(
             let down = phase_time(
                 topo,
                 links,
-                &[Transfer { src: worker_gpu, dst: server_gpu, bytes }],
+                &[Transfer { src: worker_gpu, dst: server_gpu, bytes: Bytes(bytes) }],
                 true,
             );
             let up = phase_time(
                 topo,
                 links,
-                &[Transfer { src: server_gpu, dst: worker_gpu, bytes }],
+                &[Transfer { src: server_gpu, dst: worker_gpu, bytes: Bytes(bytes) }],
                 true,
             );
-            down + up
+            down.0 + up.0
         }
         Transport::PlatoonShm => {
             // posix_ipc shared memory on one node: D2H, copy into the shm
             // segment, copy out, H2D — each way — plus GIL-ish serialization
             // handled by the server queue.
-            let pcie = links.pcie_time(bytes);
-            let shm_copy = bytes as f64 / (links.host_mem_gbps * 1e9);
+            let pcie = links.pcie_time(Bytes(bytes)).0;
+            let shm_copy = bytes as f64 / (links.host_mem_gbps.0 * 1e9);
             2.0 * (pcie + 2.0 * shm_copy + pcie)
         }
     }
@@ -212,9 +213,9 @@ fn exchange_cost(
 fn server_update_cost(transport: Transport, links: &LinkParams, bytes: u64) -> f64 {
     match transport {
         // server applies c += α(w−c) on GPU
-        Transport::CudaAwareMpi => links.gpu_reduce_time(2 * bytes),
+        Transport::CudaAwareMpi => links.gpu_reduce_time(Bytes(2 * bytes)).0,
         // Platoon's server updates on host under the GIL
-        Transport::PlatoonShm => links.host_reduce_time(2 * bytes),
+        Transport::PlatoonShm => links.host_reduce_time(Bytes(2 * bytes)).0,
     }
 }
 
@@ -291,9 +292,9 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
     let h2d_s = match dataset.as_ref() {
         EasgdData::Images(d) => {
             let s = &d.spec;
-            links.pcie_time((cfg.batch * s.channels * s.crop_hw * s.crop_hw * 4) as u64)
+            links.pcie_time(Bytes((cfg.batch * s.channels * s.crop_hw * s.crop_hw * 4) as u64))
         }
-        EasgdData::Features(_) => 0.0,
+        EasgdData::Features(_) => Secs::ZERO,
     };
 
     // world: ranks 0..k-1 workers, ranks k..k+S-1 shard servers
@@ -366,10 +367,10 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
         }
     }
     report.comm_per_exchange = report.comm_total / exchanges.max(1) as f64;
-    report.queue_wait_mean = crate::util::mean(&waits);
-    report.queue_wait_p95 = crate::util::quantile(&waits, 0.95);
+    report.queue_wait_mean = Secs(crate::util::mean(&waits));
+    report.queue_wait_p95 = Secs(crate::util::quantile(&waits, 0.95));
     report.throughput =
-        (cfg.iters * cfg.batch * cfg.workers) as f64 / report.vtime_total.max(1e-12);
+        (cfg.iters * cfg.batch * cfg.workers) as f64 / report.vtime_total.0.max(1e-12);
     Ok(report)
 }
 
@@ -436,8 +437,8 @@ impl EasgdData {
 }
 
 struct WorkerOut {
-    clock: f64,
-    comm_time: f64,
+    clock: Secs,
+    comm_time: Secs,
     exchanges: usize,
     breakdown: Breakdown,
     curve: Vec<(usize, f64, f64)>,
@@ -457,14 +458,14 @@ fn worker_main(
     info: &crate::runtime::ModelInfo,
     arts: &models::ModelArtifacts,
     dataset: &Arc<EasgdData>,
-    h2d_s: f64,
+    h2d_s: Secs,
 ) -> Result<WorkerOut> {
     let mut params = (**init).clone();
     let mut momentum = vec![0.0f32; params.len()];
     // all virtual-time charges go through the ledger (breakdown==clock by
     // construction; see rust/src/audit)
     let mut led = crate::audit::Ledger::new();
-    let mut comm_time = 0.0;
+    let mut comm_time = Secs::ZERO;
     let mut exchanges = 0usize;
     let mut curve = Vec::new();
     let mut queue_waits = Vec::new();
@@ -502,7 +503,7 @@ fn worker_main(
         let mut outs = res.outputs.into_iter();
         params = outs.next().unwrap().into_f32()?;
         momentum = outs.next().unwrap().into_f32()?;
-        led.charge(crate::audit::ChargeKind::Compute, "easgd.train", res.exec_time);
+        led.charge(crate::audit::ChargeKind::Compute, "easgd.train", Secs(res.exec_time));
 
         // elastic exchange every τ iterations: push/pull all S slices
         // concurrently (asa16-family wire formats really round-trip w and
@@ -525,7 +526,7 @@ fn worker_main(
             led.charge(crate::audit::ChargeKind::CommQueue, "easgd.queue", t.queue_wait);
             led.advance_to(crate::audit::ChargeKind::CommTransfer, "easgd.exchange", t.new_clock);
             comm_time += t.t_comm;
-            queue_waits.push(t.queue_wait);
+            queue_waits.push(t.queue_wait.0);
             exchanges += 1;
         }
 
@@ -536,13 +537,13 @@ fn worker_main(
                 vec![HostTensor::f32(vec![params.len()], params.clone()), ex.clone(), ey.clone()],
             )?;
             let correct = r.outputs[1].scalar_i32()? as f64;
-            curve.push((iter + 1, led.clock(), 1.0 - correct / info.eval_batch as f64));
+            curve.push((iter + 1, led.clock().0, 1.0 - correct / info.eval_batch as f64));
         }
     }
 
     // tell every shard server we're done
     for j in 0..plan.servers {
-        comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), led.clock())?;
+        comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), led.clock().0)?;
     }
     let (clock, bd) = led.finish();
     Ok(WorkerOut { clock, comm_time, exchanges, breakdown: bd, curve, queue_waits })

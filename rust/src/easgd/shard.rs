@@ -45,6 +45,7 @@ use crate::cluster::Topology;
 use crate::mpi::{self, tags, Comm, Msg, Payload};
 use crate::precision::Wire;
 use crate::simnet::LinkParams;
+use crate::units::Secs;
 use crate::util::split_even;
 
 use super::EasgdConfig;
@@ -159,13 +160,13 @@ pub struct ServerOut {
 #[derive(Clone, Copy, Debug)]
 pub struct ExchangeTiming {
     /// Worker clock after the exchange: max over slice round-trips.
-    pub new_clock: f64,
+    pub new_clock: Secs,
     /// `new_clock - clock` — what `comm_per_exchange` aggregates.
-    pub t_comm: f64,
+    pub t_comm: Secs,
     /// Queue wait of the binding slice (the round-trip that completed
     /// last): `finish − arrival − handle`, the wait that actually extended
     /// this exchange. `t_comm − queue_wait` is pure wire + handling.
-    pub queue_wait: f64,
+    pub queue_wait: Secs,
 }
 
 /// First half of [`worker_exchange`]: send all S slice pushes without
@@ -177,7 +178,7 @@ pub fn worker_push(
     plan: &ShardPlan,
     wire: Option<Wire>,
     params: &[f32],
-    clock: f64,
+    clock: Secs,
 ) -> Result<()> {
     let s = plan.servers;
     for i in 0..s {
@@ -192,7 +193,7 @@ pub fn worker_push(
             }
             None => Payload::F32(slice.to_vec()),
         };
-        comm.send(plan.server_rank(j), tags::EASGD_PUSH, payload, clock)?;
+        comm.send(plan.server_rank(j), tags::EASGD_PUSH, payload, clock.0)?;
     }
     Ok(())
 }
@@ -208,9 +209,10 @@ pub fn worker_collect(
     prices: &ShardPrices,
     alpha: f32,
     params: &mut [f32],
-    clock: f64,
+    clock: Secs,
 ) -> Result<ExchangeTiming> {
     let s = plan.servers;
+    let Secs(clock) = clock;
     let mut new_clock = clock;
     let mut queue_wait = 0.0;
     for j in 0..s {
@@ -235,7 +237,11 @@ pub fn worker_collect(
                 (finish - (clock + prices.wire_half[j][rank]) - prices.handle[j][rank]).max(0.0);
         }
     }
-    Ok(ExchangeTiming { new_clock, t_comm: new_clock - clock, queue_wait })
+    Ok(ExchangeTiming {
+        new_clock: Secs(new_clock),
+        t_comm: Secs(new_clock - clock),
+        queue_wait: Secs(queue_wait),
+    })
 }
 
 /// Push all S slices of `params`, pull the S center slices back, apply
@@ -251,7 +257,7 @@ pub fn worker_exchange(
     prices: &ShardPrices,
     alpha: f32,
     params: &mut [f32],
-    clock: f64,
+    clock: Secs,
 ) -> Result<ExchangeTiming> {
     worker_push(comm, rank, plan, prices.wire, params, clock)?;
     worker_collect(comm, rank, plan, prices, alpha, params, clock)
@@ -333,7 +339,7 @@ pub fn server_shard_main(
             _ => return Err(anyhow!("unexpected payload at shard server")),
         };
         // queueing: handling starts when both shard and message are ready
-        let finish = queue.serve(arrival, prices.handle[shard][w]);
+        let finish = queue.serve(Secs(arrival), Secs(prices.handle[shard][w])).0;
         last_finish[w] = finish;
         // reply with the center as seen by this worker (pre-update)
         let reply = if packed {
@@ -350,7 +356,7 @@ pub fn server_shard_main(
         served.push(w);
     }
     debug_assert!(queue.audit().is_ok(), "{:?}", queue.audit());
-    Ok(ServerOut { shard, center, served, busy: queue.busy(), clock_end: queue.clock() })
+    Ok(ServerOut { shard, center, served, busy: queue.busy().0, clock_end: queue.clock().0 })
 }
 
 /// Aggregate result of a [`measure_sharded`] probe.
@@ -440,7 +446,7 @@ pub fn measure_sharded(
                 let mut comm_time = 0.0f64;
                 let mut waits = Vec::with_capacity(rounds);
                 for _ in 0..rounds {
-                    led.charge(ChargeKind::Compute, "probe.compute", compute_s);
+                    led.charge(ChargeKind::Compute, "probe.compute", Secs(compute_s));
                     let t = worker_exchange(
                         &mut comm,
                         rank,
@@ -455,19 +461,19 @@ pub fn measure_sharded(
                     // bit-sensitive to this clock)
                     led.charge(ChargeKind::CommQueue, "probe.queue", t.queue_wait);
                     led.advance_to(ChargeKind::CommTransfer, "probe.exchange", t.new_clock);
-                    comm_time += t.t_comm;
-                    waits.push(t.queue_wait);
+                    comm_time += t.t_comm.0;
+                    waits.push(t.queue_wait.0);
                 }
                 for j in 0..plan.servers {
                     comm.send(
                         plan.server_rank(j),
                         tags::CTL,
                         Payload::Ctl("stop".into()),
-                        led.clock(),
+                        led.clock().0,
                     )?;
                 }
                 let (clock, breakdown) = led.finish();
-                Ok(Out::Worker { comm_time, waits, clock, breakdown, params })
+                Ok(Out::Worker { comm_time, waits, clock: clock.0, breakdown, params })
             }
         }));
     }

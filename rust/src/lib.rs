@@ -92,7 +92,7 @@
 //! wire stays bit-identical across delivery schedules
 //! (`tests/prop_wire.rs`). Sizing is wire-width-aware: `--chunk-kib` /
 //! `bucket_kib` budgets are on-wire KiB via
-//! [`collectives::wire::elems_per_kib`], fixing the old hardcoded
+//! [`units::Kib::elems`], fixing the old hardcoded
 //! f32-width `kib·1024/4` rule that halved `asa16` chunk depth. The
 //! elastic EASGD exchange ships full parameters (no gradient stream for a
 //! sparsifier to ride), so `[easgd] wire` accepts dense formats only.
@@ -181,6 +181,25 @@
 //! the DES side: it drives the sharded-EASGD queue and the WFBP flow shop
 //! through exhaustive delivery schedules and real-time perturbations,
 //! asserting bit-identical centers/params/reports for each.
+//!
+//! ## Dimensional types (`units`)
+//!
+//! The pricing model's quantities carry their dimension in the type:
+//! [`units::Secs`] (virtual seconds — [`units::Micros`] normalizes in),
+//! [`units::Bytes`] / [`units::Kib`] / [`units::Elems`] (sizes), and
+//! [`units::GbPerS`] (link bandwidth). Only dimensionally valid operators
+//! exist — `Bytes / GbPerS → Secs`, `Secs + Secs`, `Kib::elems(strategy,
+//! wire) → Elems` — so mixing microseconds into a seconds sum, dividing by
+//! the wrong width, or truncating a byte count is a **compile error**, not
+//! a band drift. Struct boundaries ([`metrics::Breakdown`],
+//! [`collectives::CommReport`], [`audit::Ledger`], [`simnet::LinkParams`],
+//! the engine reports) are typed; float internals are untouched, so every
+//! committed baseline stays byte-identical. The one checked door from
+//! `Bytes` to scaled floats is [`units::Bytes::scale_round`].
+//! `scripts/lint_units.py` (CI `lint` job) keeps the boundary honest:
+//! CAST-TRUNC rejects truncating float→int `as` casts outside `units::`,
+//! MAP-ITER rejects hash-order iteration in modules that feed reports or
+//! the priced clock, RAW-UNIT rejects new unit-suffixed raw fields.
 
 pub mod audit;
 pub mod bsp;
@@ -200,6 +219,7 @@ pub mod sgd;
 pub mod simnet;
 pub mod testkit;
 pub mod trace;
+pub mod units;
 pub mod util;
 
 pub use coordinator::Session;

@@ -36,6 +36,7 @@ use anyhow::{anyhow, Result};
 use crate::data::{crop, ImageSpec};
 use crate::runtime::HostTensor;
 use crate::simnet::LinkParams;
+use crate::units::{Bytes, Secs};
 use crate::util::Rng;
 
 /// Pipeline knobs (CLI: `--prefetch-depth`, `--cache-mib`).
@@ -179,9 +180,9 @@ enum Ctl {
 pub struct LoadedBatch {
     pub x: HostTensor,
     /// real seconds the child spent on disk + preprocess + tensor build
-    pub load_time: f64,
+    pub load_time: Secs,
     /// simulated H2D time (PCIe) for the preprocessed bytes
-    pub h2d_sim: f64,
+    pub h2d_sim: Secs,
     /// whether the raw file bytes came from the decode cache
     pub cache_hit: bool,
 }
@@ -192,11 +193,11 @@ pub struct LoaderReport {
     /// successfully delivered batches (child `Err`s are not counted)
     pub batches_loaded: usize,
     /// real seconds the worker spent blocked in `ready()` on successes
-    pub stall_time: f64,
+    pub stall_time: Secs,
     /// total child-side load seconds across successful batches
-    pub load_time: f64,
+    pub load_time: Secs,
     /// total simulated H2D seconds across successful batches
-    pub h2d_sim: f64,
+    pub h2d_sim: Secs,
     /// 0 = direct (synchronous) path, ≥ 1 = parallel child
     pub prefetch_depth: usize,
     pub cache: CacheStats,
@@ -209,12 +210,12 @@ pub struct ParallelLoader {
     handle: Option<JoinHandle<()>>,
     /// accumulated time the worker spent blocked waiting on the child
     /// (successful deliveries only)
-    pub stall_time: f64,
+    pub stall_time: Secs,
     pub batches_loaded: usize,
     /// total child-side load seconds (successful deliveries only)
-    pub load_time: f64,
+    pub load_time: Secs,
     /// total simulated H2D seconds (successful deliveries only)
-    pub h2d_sim: f64,
+    pub h2d_sim: Secs,
     prefetch_depth: usize,
     cache_counters: Option<Arc<CacheCounters>>,
 }
@@ -246,10 +247,10 @@ impl ParallelLoader {
             tx,
             rx,
             handle: Some(handle),
-            stall_time: 0.0,
+            stall_time: Secs::ZERO,
             batches_loaded: 0,
-            load_time: 0.0,
-            h2d_sim: 0.0,
+            load_time: Secs::ZERO,
+            h2d_sim: Secs::ZERO,
             prefetch_depth: cfg.prefetch_depth.max(1),
             cache_counters,
         }
@@ -273,7 +274,7 @@ impl ParallelLoader {
         let t0 = Instant::now();
         let out = self.rx.recv().map_err(|_| anyhow!("loader child died"))?;
         if let Ok(b) = &out {
-            self.stall_time += t0.elapsed().as_secs_f64();
+            self.stall_time += Secs(t0.elapsed().as_secs_f64());
             self.batches_loaded += 1;
             self.load_time += b.load_time;
             self.h2d_sim += b.h2d_sim;
@@ -376,10 +377,10 @@ pub fn load_one(
     }
     // step 12: host -> device transfer (simulated PCIe charge; the tensor
     // build is the real representational work)
-    let h2d_bytes = 4 * xs.len() as u64;
+    let h2d_bytes = Bytes(4 * xs.len() as u64);
     let h2d_sim = links.pcie_time(h2d_bytes);
     let x = HostTensor::f32(vec![batch, spec.channels, spec.crop_hw, spec.crop_hw], xs);
-    Ok(LoadedBatch { x, load_time: t0.elapsed().as_secs_f64(), h2d_sim, cache_hit })
+    Ok(LoadedBatch { x, load_time: Secs(t0.elapsed().as_secs_f64()), h2d_sim, cache_hit })
 }
 
 /// Runtime-free DES twin of the pipeline: one symmetric worker + its loader
@@ -393,6 +394,7 @@ pub mod sim {
     use crate::audit::{ChargeKind, Ledger, ServerClock};
     use crate::metrics::Breakdown;
     use crate::simnet::LinkParams;
+    use crate::units::{Bytes, Secs};
 
     /// Disk + decode cost model for the simulated child.
     #[derive(Clone, Copy, Debug)]
@@ -445,7 +447,7 @@ pub mod sim {
     /// DES result: final virtual clock + its exact decomposition.
     #[derive(Clone, Copy, Debug)]
     pub struct SimOutcome {
-        pub vtime: f64,
+        pub vtime: Secs,
         pub bd: Breakdown,
         pub cache: CacheStats,
     }
@@ -505,23 +507,24 @@ pub mod sim {
     /// own clock as `LoadStall`.
     pub fn sim_pipeline(cfg: &SimPipelineCfg, disk: &DiskParams, links: &LinkParams) -> SimOutcome {
         let (hits, cache) = sim_cache(cfg);
-        let h2d_s = links.pcie_time(cfg.h2d_bytes);
+        let h2d_s = links.pcie_time(Bytes(cfg.h2d_bytes));
         let mut led = Ledger::new();
         if cfg.prefetch_depth == 0 {
             for i in 0..cfg.iters {
-                led.charge(ChargeKind::LoadStall, "loader.sim.direct", child_cost(cfg, disk, i, hits[i]));
+                let cost = Secs(child_cost(cfg, disk, i, hits[i]));
+                led.charge(ChargeKind::LoadStall, "loader.sim.direct", cost);
                 led.charge(ChargeKind::H2d, "loader.sim.h2d", h2d_s);
-                led.charge(ChargeKind::Compute, "loader.sim.compute", cfg.compute_s);
+                led.charge(ChargeKind::Compute, "loader.sim.compute", Secs(cfg.compute_s));
             }
         } else {
             let q = cfg.prefetch_depth;
             let mut child = ServerClock::new();
-            let mut finish = vec![0.0; cfg.iters];
+            let mut finish = vec![Secs::ZERO; cfg.iters];
             for j in 0..q.min(cfg.iters) {
-                finish[j] = child.serve(0.0, child_cost(cfg, disk, j, hits[j]));
+                finish[j] = child.serve(Secs::ZERO, Secs(child_cost(cfg, disk, j, hits[j])));
             }
             for i in 0..cfg.iters {
-                let cost_i = child_cost(cfg, disk, i, hits[i]);
+                let cost_i = Secs(child_cost(cfg, disk, i, hits[i]));
                 let stall = (finish[i] - led.clock()).max(0.0);
                 led.advance_to(ChargeKind::LoadStall, "loader.sim.stall", led.clock() + stall);
                 // the rest of the child's work hid under earlier compute
@@ -529,9 +532,10 @@ pub mod sim {
                 led.charge(ChargeKind::H2d, "loader.sim.h2d", h2d_s);
                 let nxt = i + q;
                 if nxt < cfg.iters {
-                    finish[nxt] = child.serve(led.clock(), child_cost(cfg, disk, nxt, hits[nxt]));
+                    let cost_n = Secs(child_cost(cfg, disk, nxt, hits[nxt]));
+                    finish[nxt] = child.serve(led.clock(), cost_n);
                 }
-                led.charge(ChargeKind::Compute, "loader.sim.compute", cfg.compute_s);
+                led.charge(ChargeKind::Compute, "loader.sim.compute", Secs(cfg.compute_s));
             }
             child.audit().expect("loader sim child clock");
         }

@@ -11,7 +11,7 @@
 //! Artifacts dir defaults to ./artifacts ($TMPI_ARTIFACTS overrides);
 //! reports land in ./runs.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -23,14 +23,16 @@ use theano_mpi::sgd::{LrSchedule, Scheme};
 use theano_mpi::Session;
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Flags live in a `BTreeMap` so anything that enumerates them (errors,
+/// debug dumps) comes out in one fixed order.
 struct Args {
     positional: Vec<String>,
-    flags: HashMap<String, String>,
+    flags: BTreeMap<String, String>,
 }
 
 fn parse_args(argv: &[String]) -> Result<Args> {
     let mut positional = Vec::new();
-    let mut flags = HashMap::new();
+    let mut flags = BTreeMap::new();
     let mut i = 0;
     while i < argv.len() {
         let a = &argv[i];

@@ -7,7 +7,11 @@
 
 use std::time::Instant;
 
-/// Per-worker virtual-time decomposition of a run (seconds).
+use crate::units::Secs;
+
+/// Per-worker virtual-time decomposition of a run. Every component is a
+/// [`Secs`] — the dimensional type system makes charging a microsecond or
+/// byte quantity into a lane a compile error.
 ///
 /// Fields are only ever charged through [`audit::Ledger`](crate::audit::Ledger)
 /// (enforced by `scripts/lint_charges.py`), and every aggregate here —
@@ -17,42 +21,42 @@ use std::time::Instant;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Breakdown {
     /// PJRT execution of train/grad steps (real, measured).
-    pub compute: f64,
+    pub compute: Secs,
     /// Simulated wire time of parameter exchange (incl. EASGD server
     /// handling).
-    pub comm_transfer: f64,
+    pub comm_transfer: Secs,
     /// Simulated GPU kernel time inside exchange (sum / cast).
-    pub comm_kernel: f64,
+    pub comm_kernel: Secs,
     /// Time spent waiting on peers: EASGD shard-queue waits beyond an
     /// exchange's own wire + handling, and BSP barrier straggle.
-    pub comm_queue: f64,
+    pub comm_queue: Secs,
     /// Exchange time hidden under the backward pass by wait-free backprop
     /// (`overlap = "wfbp"`). Memo only: the clock never paid it, so it is
     /// *not* part of [`comm`](Self::comm) or [`total`](Self::total) —
     /// `comm + comm_hidden` is what the post-backward path would have cost.
-    pub comm_hidden: f64,
+    pub comm_hidden: Secs,
     /// Simulated host CPU reduction time (the AR baseline's butterfly
     /// summation rounds).
-    pub host_reduce: f64,
+    pub host_reduce: Secs,
     /// Time blocked waiting for the parallel loader (overlap miss).
-    pub load_stall: f64,
+    pub load_stall: Secs,
     /// Loader disk+decode time the parallel child hid under compute
     /// (Alg. 1's overlap win). Memo only: the clock never paid it, so it
     /// is *not* part of [`total`](Self::total) — `load_stall + load_hidden`
     /// is what the direct (synchronous) loader would have paid.
-    pub load_hidden: f64,
+    pub load_hidden: Secs,
     /// Simulated H2D staging of input batches. Charged on *both* loader
     /// paths — the PCIe crossing is real either way; the parallel child
     /// only overlaps the disk+decode part (see `load_hidden`).
-    pub h2d: f64,
+    pub h2d: Secs,
     /// SUBGD second half: sgd_apply execution (real, measured).
-    pub apply: f64,
+    pub apply: Secs,
 }
 
 impl Breakdown {
     /// Everything exchange-related the clock paid: wire, kernels, peer
     /// waits, and host reduction.
-    pub fn comm(&self) -> f64 {
+    pub fn comm(&self) -> Secs {
         let Breakdown {
             compute: _,
             comm_transfer,
@@ -70,7 +74,7 @@ impl Breakdown {
 
     /// Sum of every component — reconciles with the virtual clock exactly
     /// (barrier straggle is charged to `comm_queue` by the ledger).
-    pub fn total(&self) -> f64 {
+    pub fn total(&self) -> Secs {
         let Breakdown {
             compute,
             comm_transfer: _, // via comm()
@@ -113,7 +117,7 @@ impl Breakdown {
 
     /// Every component, named — the one source printers and audits iterate
     /// so a new field shows up everywhere or nowhere compiles.
-    pub fn components(&self) -> [(&'static str, f64); 10] {
+    pub fn components(&self) -> [(&'static str, Secs); 10] {
         let Breakdown {
             compute,
             comm_transfer,
@@ -227,29 +231,29 @@ mod tests {
     #[test]
     fn breakdown_totals() {
         let b = Breakdown {
-            compute: 1.0,
-            comm_transfer: 0.5,
-            comm_kernel: 0.01,
-            comm_queue: 0.04,
-            comm_hidden: 0.33,
-            host_reduce: 0.07,
-            load_stall: 0.1,
-            load_hidden: 0.11,
-            h2d: 0.2,
-            apply: 0.05,
+            compute: Secs(1.0),
+            comm_transfer: Secs(0.5),
+            comm_kernel: Secs(0.01),
+            comm_queue: Secs(0.04),
+            comm_hidden: Secs(0.33),
+            host_reduce: Secs(0.07),
+            load_stall: Secs(0.1),
+            load_hidden: Secs(0.11),
+            h2d: Secs(0.2),
+            apply: Secs(0.05),
         };
-        assert!((b.comm() - 0.62).abs() < 1e-12);
+        assert!((b.comm() - Secs(0.62)).abs() < 1e-12);
         // comm_hidden / load_hidden are memos of time NOT paid: never in totals
-        assert!((b.total() - 1.97).abs() < 1e-12);
+        assert!((b.total() - Secs(1.97)).abs() < 1e-12);
         assert!((b.kernel_share_of_comm() - 0.01 / 0.62).abs() < 1e-12);
         let mut sum = b;
         sum.add(&b);
-        assert!((sum.total() - 3.94).abs() < 1e-12);
-        assert!((sum.comm_queue - 0.08).abs() < 1e-12);
-        assert!((sum.comm_hidden - 0.66).abs() < 1e-12);
-        assert!((sum.load_hidden - 0.22).abs() < 1e-12);
-        assert!((sum.host_reduce - 0.14).abs() < 1e-12);
-        assert!((sum.h2d - 0.4).abs() < 1e-12);
+        assert!((sum.total() - Secs(3.94)).abs() < 1e-12);
+        assert!((sum.comm_queue - Secs(0.08)).abs() < 1e-12);
+        assert!((sum.comm_hidden - Secs(0.66)).abs() < 1e-12);
+        assert!((sum.load_hidden - Secs(0.22)).abs() < 1e-12);
+        assert!((sum.host_reduce - Secs(0.14)).abs() < 1e-12);
+        assert!((sum.h2d - Secs(0.4)).abs() < 1e-12);
     }
 
     /// Regression for the piecemeal-added-field hazard: a fully-populated
@@ -260,16 +264,16 @@ mod tests {
     fn fully_populated_breakdown_reconciles_with_field_sum() {
         // distinct powers of two: any omission or double-count is visible
         let b = Breakdown {
-            compute: 1.0,
-            comm_transfer: 2.0,
-            comm_kernel: 4.0,
-            comm_queue: 8.0,
-            comm_hidden: 16.0,
-            host_reduce: 32.0,
-            load_stall: 64.0,
-            load_hidden: 512.0,
-            h2d: 128.0,
-            apply: 256.0,
+            compute: Secs(1.0),
+            comm_transfer: Secs(2.0),
+            comm_kernel: Secs(4.0),
+            comm_queue: Secs(8.0),
+            comm_hidden: Secs(16.0),
+            host_reduce: Secs(32.0),
+            load_stall: Secs(64.0),
+            load_hidden: Secs(512.0),
+            h2d: Secs(128.0),
+            apply: Secs(256.0),
         };
         let comps = b.components();
         assert_eq!(comps.len(), 10);
@@ -277,12 +281,12 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 10, "components() must enumerate each field once");
-        let sum_all: f64 = comps.iter().map(|&(_, v)| v).sum();
-        assert!((sum_all - 1023.0).abs() < 1e-12);
+        let sum_all: Secs = comps.iter().map(|&(_, v)| v).sum();
+        assert!((sum_all - Secs(1023.0)).abs() < 1e-12);
         // total() == field sum minus the memo fields
         assert!((b.total() - (sum_all - b.comm_hidden - b.load_hidden)).abs() < 1e-12);
-        assert!((b.total() - 495.0).abs() < 1e-12);
-        assert!((b.comm() - (2.0 + 4.0 + 8.0 + 32.0)).abs() < 1e-12);
+        assert!((b.total() - Secs(495.0)).abs() < 1e-12);
+        assert!((b.comm() - Secs(2.0 + 4.0 + 8.0 + 32.0)).abs() < 1e-12);
         for m in Breakdown::MEMO_FIELDS {
             assert!(comps.iter().any(|&(n, _)| n == m), "memo field {m} missing");
         }

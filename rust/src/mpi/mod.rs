@@ -12,7 +12,7 @@
 //! clock, and receivers reconcile via `max(local, sent + wire_time)` where
 //! wire time comes from `simnet`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -123,8 +123,10 @@ pub struct Comm {
     rx: Receiver<Msg>,
     /// Out-of-order buffer: messages received while waiting for another
     /// (from, tag) match — MPI's unexpected-message queue. Keys are global
-    /// ranks (group views translate before matching).
-    pending: HashMap<(usize, u64), VecDeque<Msg>>,
+    /// ranks (group views translate before matching). A `BTreeMap` so
+    /// `recv_any*` scans queues in (from, tag) order — wildcard receives
+    /// must not depend on hash iteration order.
+    pending: BTreeMap<(usize, u64), VecDeque<Msg>>,
     barrier: Arc<ClockBarrier>,
     /// Active subgroup view: `group[local] = global` ([`Comm::push_group`]).
     group: Option<Vec<usize>>,
@@ -156,7 +158,7 @@ pub fn world(size: usize) -> Vec<Comm> {
             size,
             senders: txs.clone(),
             rx,
-            pending: HashMap::new(),
+            pending: BTreeMap::new(),
             barrier: barrier.clone(),
             group: None,
         })

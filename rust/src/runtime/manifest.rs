@@ -1,6 +1,6 @@
 //! manifest.json — the contract between aot.py (L2) and this runtime (L3).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
@@ -29,7 +29,7 @@ pub struct ModelInfo {
     pub batch: usize,
     pub eval_batch: usize,
     /// per-worker batch size -> artifact key prefix (e.g. 128 -> "alexnet128")
-    pub batches: HashMap<usize, String>,
+    pub batches: BTreeMap<usize, String>,
     pub classes: Option<usize>,
     pub input_shape: Vec<usize>,
     pub init_file: String,
@@ -67,17 +67,17 @@ pub struct FullScaleModel {
 pub struct KernelIndex {
     pub chunk: usize,
     /// worker count -> sum artifact name
-    pub sum_stack: HashMap<usize, String>,
+    pub sum_stack: BTreeMap<usize, String>,
     /// wire name ("f16"/"bf16") -> artifact names
-    pub fp16_pack: HashMap<String, String>,
-    pub fp16_unpack: HashMap<String, String>,
+    pub fp16_pack: BTreeMap<String, String>,
+    pub fp16_unpack: BTreeMap<String, String>,
 }
 
 #[derive(Clone, Debug)]
 pub struct Manifest {
-    pub artifacts: HashMap<String, ArtifactSig>,
-    pub models: HashMap<String, ModelInfo>,
-    pub full_scale: HashMap<String, FullScaleModel>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub full_scale: BTreeMap<String, FullScaleModel>,
     pub kernels: KernelIndex,
 }
 
@@ -97,7 +97,7 @@ impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
         let root = Json::parse(text)?;
 
-        let mut artifacts = HashMap::new();
+        let mut artifacts = BTreeMap::new();
         for (name, a) in root.get("artifacts")?.as_obj()? {
             artifacts.insert(
                 name.clone(),
@@ -109,9 +109,9 @@ impl Manifest {
             );
         }
 
-        let mut models = HashMap::new();
+        let mut models = BTreeMap::new();
         for (name, m) in root.get("models")?.as_obj()? {
-            let mut batches = HashMap::new();
+            let mut batches = BTreeMap::new();
             for (bs, key) in m.get("batches")?.as_obj()? {
                 batches.insert(bs.parse::<usize>()?, key.as_str()?.to_string());
             }
@@ -146,7 +146,7 @@ impl Manifest {
             );
         }
 
-        let mut full_scale = HashMap::new();
+        let mut full_scale = BTreeMap::new();
         for (name, f) in root.get("full_scale")?.as_obj()? {
             let segments = f
                 .get("segments")?
@@ -180,11 +180,11 @@ impl Manifest {
         }
 
         let k = root.get("kernels")?;
-        let mut sum_stack = HashMap::new();
+        let mut sum_stack = BTreeMap::new();
         for (ks, name) in k.get("sum_stack")?.as_obj()? {
             sum_stack.insert(ks.parse::<usize>()?, name.as_str()?.to_string());
         }
-        let str_map = |v: &Json| -> Result<HashMap<String, String>> {
+        let str_map = |v: &Json| -> Result<BTreeMap<String, String>> {
             Ok(v.as_obj()?
                 .iter()
                 .map(|(a, b)| Ok((a.clone(), b.as_str()?.to_string())))
@@ -250,6 +250,26 @@ mod tests {
         let m = Manifest::parse(&text).unwrap();
         assert_eq!(m.full_scale["alexnet"].layers, vec![30000, 4944]);
         assert_eq!(m.full_scale["alexnet"].segments.len(), 1);
+    }
+
+    #[test]
+    fn map_iteration_is_sorted_regardless_of_source_order() {
+        // every map here is a BTreeMap so `tmpi info` and anything else
+        // that enumerates the manifest emits one fixed order; feed keys
+        // out of order and demand sorted iteration back
+        let text = MINI
+            .replace(
+                r#""m_train": {"#,
+                r#""z_last": {"file": "z.hlo.txt", "inputs": [], "outputs": []},
+                   "a_first": {"file": "a.hlo.txt", "inputs": [], "outputs": []},
+                   "m_train": {"#,
+            )
+            .replace(r#""batches": {"4": "m"}"#, r#""batches": {"32": "m32", "4": "m"}"#);
+        let m = Manifest::parse(&text).unwrap();
+        let names: Vec<&str> = m.artifacts.keys().map(|s| s.as_str()).collect();
+        assert_eq!(names, ["a_first", "m_train", "z_last"]);
+        let batches: Vec<usize> = m.models["m"].batches.keys().copied().collect();
+        assert_eq!(batches, [4, 32], "numeric batch keys sort numerically, not lexically");
     }
 
     #[test]

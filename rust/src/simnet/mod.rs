@@ -17,30 +17,36 @@
 //! staged through host RAM, adding host-memory crossings. QPI-crossing and
 //! inter-node paths always stage through the host on the paper's testbed
 //! (no GPUDirect RDMA; P2P limited to one switch — §6).
+//!
+//! All public boundaries are dimensional ([`crate::units`]): volumes are
+//! [`Bytes`], rates [`GbPerS`], configured latencies [`Micros`], and every
+//! priced duration a [`Secs`] — so a caller cannot feed microseconds into
+//! a timeline or a KiB knob into a byte lane without a conversion.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::{IbGen, PathKind, Topology};
+use crate::units::{Bytes, GbPerS, Micros, Secs};
 
 /// Bandwidths in GB/s, latencies in microseconds.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkParams {
-    pub pcie_gbps: f64,
-    pub pcie_lat_us: f64,
-    pub qpi_gbps: f64,
-    pub qpi_lat_us: f64,
-    pub ib_fdr_gbps: f64,
-    pub ib_qdr_gbps: f64,
-    pub ib_lat_us: f64,
+    pub pcie_gbps: GbPerS,
+    pub pcie_lat_us: Micros,
+    pub qpi_gbps: GbPerS,
+    pub qpi_lat_us: Micros,
+    pub ib_fdr_gbps: GbPerS,
+    pub ib_qdr_gbps: GbPerS,
+    pub ib_lat_us: Micros,
     /// Host memcpy bandwidth for staged paths.
-    pub host_mem_gbps: f64,
+    pub host_mem_gbps: GbPerS,
     /// CPU-side elementwise reduction (the AR baseline sums on the host).
-    pub host_reduce_gbps: f64,
+    pub host_reduce_gbps: GbPerS,
     /// GPU summation kernel effective bandwidth (the ASA sum — §3.2 measured
     /// it at 1.6 % of communication time).
-    pub gpu_reduce_gbps: f64,
+    pub gpu_reduce_gbps: GbPerS,
     /// GPU cast kernel effective bandwidth (fp16 pack/unpack).
-    pub gpu_cast_gbps: f64,
+    pub gpu_cast_gbps: GbPerS,
 }
 
 impl Default for LinkParams {
@@ -48,23 +54,23 @@ impl Default for LinkParams {
         // K80-era constants: PCIe gen3 x16 effective ~12 GB/s, QPI ~16 GB/s,
         // IB FDR ~6.8 GB/s, IB QDR ~4 GB/s; host reduction is memory-bound.
         LinkParams {
-            pcie_gbps: 12.0,
-            pcie_lat_us: 10.0,
-            qpi_gbps: 16.0,
-            qpi_lat_us: 1.0,
-            ib_fdr_gbps: 6.8,
-            ib_qdr_gbps: 4.0,
-            ib_lat_us: 1.5,
-            host_mem_gbps: 10.0,
-            host_reduce_gbps: 5.0,
-            gpu_reduce_gbps: 150.0,
-            gpu_cast_gbps: 200.0,
+            pcie_gbps: GbPerS(12.0),
+            pcie_lat_us: Micros(10.0),
+            qpi_gbps: GbPerS(16.0),
+            qpi_lat_us: Micros(1.0),
+            ib_fdr_gbps: GbPerS(6.8),
+            ib_qdr_gbps: GbPerS(4.0),
+            ib_lat_us: Micros(1.5),
+            host_mem_gbps: GbPerS(10.0),
+            host_reduce_gbps: GbPerS(5.0),
+            gpu_reduce_gbps: GbPerS(150.0),
+            gpu_cast_gbps: GbPerS(200.0),
         }
     }
 }
 
 impl LinkParams {
-    pub fn ib_gbps(&self, gen: IbGen) -> f64 {
+    pub fn ib_gbps(&self, gen: IbGen) -> GbPerS {
         match gen {
             IbGen::Fdr => self.ib_fdr_gbps,
             IbGen::Qdr => self.ib_qdr_gbps,
@@ -72,23 +78,23 @@ impl LinkParams {
     }
 
     /// Time to reduce `bytes` of f32 on the host CPU (AR baseline).
-    pub fn host_reduce_time(&self, bytes: u64) -> f64 {
-        bytes as f64 / (self.host_reduce_gbps * 1e9)
+    pub fn host_reduce_time(&self, bytes: Bytes) -> Secs {
+        bytes / self.host_reduce_gbps
     }
 
     /// Time for the GPU summation kernel over `bytes` (ASA sum).
-    pub fn gpu_reduce_time(&self, bytes: u64) -> f64 {
-        bytes as f64 / (self.gpu_reduce_gbps * 1e9)
+    pub fn gpu_reduce_time(&self, bytes: Bytes) -> Secs {
+        bytes / self.gpu_reduce_gbps
     }
 
     /// Time for the GPU fp16 cast kernel over `bytes` of f32 input.
-    pub fn gpu_cast_time(&self, bytes: u64) -> f64 {
-        bytes as f64 / (self.gpu_cast_gbps * 1e9)
+    pub fn gpu_cast_time(&self, bytes: Bytes) -> Secs {
+        bytes / self.gpu_cast_gbps
     }
 
     /// Host-staged D2H or H2D copy of `bytes` (one PCIe crossing).
-    pub fn pcie_time(&self, bytes: u64) -> f64 {
-        self.pcie_lat_us * 1e-6 + bytes as f64 / (self.pcie_gbps * 1e9)
+    pub fn pcie_time(&self, bytes: Bytes) -> Secs {
+        self.pcie_lat_us.to_secs() + bytes / self.pcie_gbps
     }
 }
 
@@ -97,11 +103,11 @@ impl LinkParams {
 pub struct Transfer {
     pub src: usize,
     pub dst: usize,
-    pub bytes: u64,
+    pub bytes: Bytes,
 }
 
 /// Shared fabric resources that serialize concurrent transfers.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 enum Resource {
     PcieUp(usize),
     PcieDown(usize),
@@ -121,14 +127,14 @@ enum Resource {
 /// per stream while bandwidth accumulates per chunk.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PhaseCost {
-    /// Serialized byte time on the most-loaded shared resource (s).
-    pub bandwidth: f64,
-    /// Worst per-transfer hop-latency sum in the phase (s).
-    pub latency: f64,
+    /// Serialized byte time on the most-loaded shared resource.
+    pub bandwidth: Secs,
+    /// Worst per-transfer hop-latency sum in the phase.
+    pub latency: Secs,
 }
 
 impl PhaseCost {
-    pub fn total(&self) -> f64 {
+    pub fn total(&self) -> Secs {
         self.bandwidth + self.latency
     }
 }
@@ -139,12 +145,12 @@ impl PhaseCost {
 pub struct PipelineStage {
     /// Full wire time of this chunk (bandwidth + latency), as priced by
     /// the strategy for the chunk in isolation.
-    pub transfer: f64,
+    pub transfer: Secs,
     /// Latency part of `transfer` — hidden under the previous chunk's
     /// bandwidth for every stage after the first.
-    pub latency: f64,
+    pub latency: Secs,
     /// Summation/cast/host-reduce time gated on this chunk's arrival.
-    pub kernel: f64,
+    pub kernel: Secs,
 }
 
 /// Overlap-aware makespan of a chunked exchange: the wire and the kernel
@@ -152,15 +158,15 @@ pub struct PipelineStage {
 /// own transfer, and transfers stream back-to-back (later chunks' latency is
 /// pipelined away). Per stage this takes `max(transfer, kernel)` instead of
 /// their sum — chunk *i*'s wire time overlaps chunk *i−1*'s kernels.
-pub fn pipeline_time(stages: &[PipelineStage]) -> f64 {
+pub fn pipeline_time(stages: &[PipelineStage]) -> Secs {
     let mut wire_free = 0.0f64;
     let mut kernel_free = 0.0f64;
     for (i, s) in stages.iter().enumerate() {
-        let t = if i == 0 { s.transfer } else { (s.transfer - s.latency).max(0.0) };
+        let t = if i == 0 { s.transfer.0 } else { (s.transfer.0 - s.latency.0).max(0.0) };
         wire_free += t;
-        kernel_free = kernel_free.max(wire_free) + s.kernel;
+        kernel_free = kernel_free.max(wire_free) + s.kernel.0;
     }
-    kernel_free.max(wire_free)
+    Secs(kernel_free.max(wire_free))
 }
 
 /// Global intra-node vs inter-node byte split of one transfer set. Every
@@ -169,10 +175,10 @@ pub fn pipeline_time(stages: &[PipelineStage]) -> f64 {
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TrafficSplit {
     /// Bytes moved on intra-node paths (P2P or QPI-staged).
-    pub intra_bytes: u64,
+    pub intra_bytes: Bytes,
     /// Bytes that crossed a node boundary — each counted once, though it
     /// occupies both the sender's NIC-out and the receiver's NIC-in.
-    pub inter_bytes: u64,
+    pub inter_bytes: Bytes,
 }
 
 /// Classify a transfer set's bytes by whether they cross a node boundary.
@@ -217,10 +223,10 @@ pub const MACHINE_INTRA_DOWN: usize = 3;
 pub struct Leg {
     pub machine: usize,
     /// Full wire time of the leg (bandwidth + latency).
-    pub transfer: f64,
+    pub transfer: Secs,
     /// Latency part of `transfer`; per machine, only the stream's first
     /// chunk pays it (the wormhole argument of [`PhaseCost`]).
-    pub latency: f64,
+    pub latency: Secs,
 }
 
 /// One chunk's path through the pipeline: its legs in order, then the
@@ -228,7 +234,7 @@ pub struct Leg {
 #[derive(Clone, Debug, Default)]
 pub struct FlowJob {
     pub legs: Vec<Leg>,
-    pub kernel: f64,
+    pub kernel: Secs,
 }
 
 /// Machine id of the single wire resource a *flat* strategy's exchange
@@ -242,7 +248,7 @@ pub const MACHINE_WIRE: usize = 100;
 #[derive(Clone, Debug, Default)]
 pub struct TimedJob {
     /// Gradient-ready time of the bucket's last (input-most) layer.
-    pub release: f64,
+    pub release: Secs,
     pub job: FlowJob,
 }
 
@@ -265,57 +271,54 @@ pub struct TimedJob {
 /// top layer first); machines serve FIFO in that order. The returned
 /// makespan is measured from the start of the backward pass, so it is
 /// always `>= release` of the last job.
-pub fn wfbp_timeline(jobs: &[TimedJob]) -> f64 {
-    let mut machine_free: HashMap<usize, f64> = HashMap::new();
-    let mut seen: HashSet<usize> = HashSet::new();
+pub fn wfbp_timeline(jobs: &[TimedJob]) -> Secs {
+    let mut machine_free: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
     let mut kernel_free = 0.0f64;
     let mut last_release = 0.0f64;
     for tj in jobs {
-        last_release = last_release.max(tj.release);
-        let mut prev_done = tj.release;
+        last_release = last_release.max(tj.release.0);
+        let mut prev_done = tj.release.0;
         for leg in &tj.job.legs {
             let free = machine_free.entry(leg.machine).or_insert(0.0);
             let start = free.max(prev_done);
             // pay latency on first use or whenever the stream stalled
             let t = if seen.insert(leg.machine) || start > *free {
-                leg.transfer
+                leg.transfer.0
             } else {
-                (leg.transfer - leg.latency).max(0.0)
+                (leg.transfer.0 - leg.latency.0).max(0.0)
             };
             prev_done = start + t;
             *free = prev_done;
         }
-        kernel_free = kernel_free.max(prev_done) + tj.job.kernel;
+        kernel_free = kernel_free.max(prev_done) + tj.job.kernel.0;
     }
-    machine_free
-        .values()
-        .copied()
-        .fold(kernel_free.max(last_release), f64::max)
+    Secs(machine_free.values().copied().fold(kernel_free.max(last_release), f64::max))
 }
 
 /// Flow-shop makespan of a chunk stream: machines are serial, a chunk's
 /// legs run in order, and chunks queue FIFO per machine (greedy, no
 /// reordering). A job list whose legs all name one machine plus trailing
 /// kernels reduces exactly to [`pipeline_time`].
-pub fn flow_pipeline_time(jobs: &[FlowJob]) -> f64 {
-    let mut machine_free: HashMap<usize, f64> = HashMap::new();
-    let mut seen: HashSet<usize> = HashSet::new();
+pub fn flow_pipeline_time(jobs: &[FlowJob]) -> Secs {
+    let mut machine_free: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
     let mut kernel_free = 0.0f64;
     for job in jobs {
         let mut prev_done = 0.0f64;
         for leg in &job.legs {
             let t = if seen.insert(leg.machine) {
-                leg.transfer
+                leg.transfer.0
             } else {
-                (leg.transfer - leg.latency).max(0.0)
+                (leg.transfer.0 - leg.latency.0).max(0.0)
             };
             let free = machine_free.entry(leg.machine).or_insert(0.0);
             prev_done = free.max(prev_done) + t;
             *free = prev_done;
         }
-        kernel_free = kernel_free.max(prev_done) + job.kernel;
+        kernel_free = kernel_free.max(prev_done) + job.kernel.0;
     }
-    machine_free.values().copied().fold(kernel_free, f64::max)
+    Secs(machine_free.values().copied().fold(kernel_free, f64::max))
 }
 
 /// Price one phase of concurrent transfers on the topology.
@@ -324,7 +327,7 @@ pub fn phase_time(
     p: &LinkParams,
     transfers: &[Transfer],
     cuda_aware: bool,
-) -> f64 {
+) -> Secs {
     phase_cost(topo, p, transfers, cuda_aware).total()
 }
 
@@ -335,10 +338,10 @@ pub fn phase_cost(
     transfers: &[Transfer],
     cuda_aware: bool,
 ) -> PhaseCost {
-    let mut load: HashMap<Resource, f64> = HashMap::new();
+    let mut load: BTreeMap<Resource, f64> = BTreeMap::new();
     let mut max_lat = 0.0f64;
-    let add = |load: &mut HashMap<Resource, f64>, r: Resource, bytes: u64, gbps: f64| {
-        *load.entry(r).or_insert(0.0) += bytes as f64 / (gbps * 1e9);
+    let add = |load: &mut BTreeMap<Resource, f64>, r: Resource, bytes: Bytes, gbps: GbPerS| {
+        *load.entry(r).or_insert(0.0) += bytes.0 as f64 / (gbps.0 * 1e9);
     };
 
     for t in transfers {
@@ -352,11 +355,11 @@ pub fn phase_cost(
             PathKind::P2p => {
                 add(&mut load, Resource::PcieUp(t.src), t.bytes, p.pcie_gbps);
                 add(&mut load, Resource::PcieDown(t.dst), t.bytes, p.pcie_gbps);
-                lat += 2.0 * p.pcie_lat_us;
+                lat += 2.0 * p.pcie_lat_us.0;
                 if !cuda_aware {
                     // staged through host RAM: two extra memory crossings
                     add(&mut load, Resource::HostMem(src.node), 2 * t.bytes, p.host_mem_gbps);
-                    lat += 2.0 * p.pcie_lat_us;
+                    lat += 2.0 * p.pcie_lat_us.0;
                 }
             }
             PathKind::QpiStaged => {
@@ -365,7 +368,7 @@ pub fn phase_cost(
                 add(&mut load, Resource::Qpi(src.node), t.bytes, p.qpi_gbps);
                 add(&mut load, Resource::HostMem(src.node), 2 * t.bytes, p.host_mem_gbps);
                 add(&mut load, Resource::PcieDown(t.dst), t.bytes, p.pcie_gbps);
-                lat += 2.0 * p.pcie_lat_us + p.qpi_lat_us;
+                lat += 2.0 * p.pcie_lat_us.0 + p.qpi_lat_us.0;
             }
             PathKind::Network => {
                 // no GPUDirect RDMA: D2H, NIC out, NIC in, H2D
@@ -376,13 +379,16 @@ pub fn phase_cost(
                 add(&mut load, Resource::NicIn(dst.node), t.bytes, ib);
                 add(&mut load, Resource::HostMem(dst.node), t.bytes, p.host_mem_gbps);
                 add(&mut load, Resource::PcieDown(t.dst), t.bytes, p.pcie_gbps);
-                lat += 2.0 * p.pcie_lat_us + p.ib_lat_us;
+                lat += 2.0 * p.pcie_lat_us.0 + p.ib_lat_us.0;
             }
         }
         max_lat = max_lat.max(lat * 1e-6);
     }
 
-    PhaseCost { bandwidth: load.values().copied().fold(0.0, f64::max), latency: max_lat }
+    PhaseCost {
+        bandwidth: Secs(load.values().copied().fold(0.0, f64::max)),
+        latency: Secs(max_lat),
+    }
 }
 
 #[cfg(test)]
@@ -397,13 +403,16 @@ mod tests {
     #[test]
     fn zero_bytes_costs_nothing() {
         let t = Topology::mosaic(2);
-        assert_eq!(phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: 0 }], true), 0.0);
+        assert_eq!(
+            phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: Bytes(0) }], true),
+            0.0
+        );
     }
 
     #[test]
     fn p2p_cheaper_than_network() {
         let t = Topology::copper(2);
-        let bytes = 100 << 20;
+        let bytes = Bytes(100 << 20);
         let p2p = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
         let net = phase_time(&t, &p(), &[Transfer { src: 0, dst: 8, bytes }], true);
         assert!(p2p < net, "p2p={p2p} net={net}");
@@ -412,7 +421,7 @@ mod tests {
     #[test]
     fn cuda_aware_helps_p2p_only_when_host_is_bottleneck() {
         let t = Topology::copper(1);
-        let bytes = 256 << 20;
+        let bytes = Bytes(256 << 20);
         let aware = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
         let staged = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], false);
         assert!(staged > aware, "staged={staged} aware={aware}");
@@ -421,7 +430,7 @@ mod tests {
     #[test]
     fn qpi_crossing_costs_more_than_switch_local() {
         let t = Topology::copper(1);
-        let bytes = 64 << 20;
+        let bytes = Bytes(64 << 20);
         let local = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
         let cross = phase_time(&t, &p(), &[Transfer { src: 0, dst: 4, bytes }], true);
         assert!(cross > local, "cross={cross} local={local}");
@@ -430,7 +439,7 @@ mod tests {
     #[test]
     fn shared_nic_serializes() {
         let t = Topology::mosaic(3);
-        let bytes = 64 << 20;
+        let bytes = Bytes(64 << 20);
         // two transfers out of node 0 share its NIC -> ~2x one transfer
         let one = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
         let two = phase_time(
@@ -445,7 +454,7 @@ mod tests {
     #[test]
     fn disjoint_transfers_parallelize() {
         let t = Topology::mosaic(4);
-        let bytes = 64 << 20;
+        let bytes = Bytes(64 << 20);
         let one = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes }], true);
         // 0->1 and 2->3 share nothing: phase is as fast as one transfer
         let both = phase_time(
@@ -460,7 +469,7 @@ mod tests {
     #[test]
     fn latency_counted_once_per_phase() {
         let t = Topology::mosaic(2);
-        let tiny = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: 4 }], true);
+        let tiny = phase_time(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: Bytes(4) }], true);
         // dominated by latency terms (μs scale), far below 1 ms
         assert!(tiny < 1e-3 && tiny > 0.0);
     }
@@ -468,12 +477,12 @@ mod tests {
     #[test]
     fn phase_cost_splits_time() {
         let t = Topology::mosaic(2);
-        let tr = [Transfer { src: 0, dst: 1, bytes: 64 << 20 }];
+        let tr = [Transfer { src: 0, dst: 1, bytes: Bytes(64 << 20) }];
         let c = phase_cost(&t, &p(), &tr, true);
         assert!(c.bandwidth > 0.0 && c.latency > 0.0);
         assert!((c.total() - phase_time(&t, &p(), &tr, true)).abs() < 1e-15);
         // latency is the per-message term: μs scale, independent of bytes
-        let c2 = phase_cost(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: 4 }], true);
+        let c2 = phase_cost(&t, &p(), &[Transfer { src: 0, dst: 1, bytes: Bytes(4) }], true);
         assert!((c.latency - c2.latency).abs() < 1e-15);
     }
 
@@ -481,20 +490,24 @@ mod tests {
     fn pipeline_time_matches_hand_computation() {
         // two stages, no latency: t0 | max(t1 overlaps k0) | k1 drain
         let s = [
-            PipelineStage { transfer: 1.0, latency: 0.0, kernel: 0.5 },
-            PipelineStage { transfer: 1.0, latency: 0.0, kernel: 0.5 },
+            PipelineStage { transfer: Secs(1.0), latency: Secs(0.0), kernel: Secs(0.5) },
+            PipelineStage { transfer: Secs(1.0), latency: Secs(0.0), kernel: Secs(0.5) },
         ];
         // wire: 1.0 then 2.0; k0 runs 1.0..1.5; k1 starts max(2.0, 1.5)=2.0
-        assert!((pipeline_time(&s) - 2.5).abs() < 1e-12);
+        assert!((pipeline_time(&s) - Secs(2.5)).abs() < 1e-12);
     }
 
     #[test]
     fn pipeline_never_exceeds_serial_sum() {
-        let mk = |t: f64, l: f64, k: f64| PipelineStage { transfer: t, latency: l, kernel: k };
+        let mk = |t: f64, l: f64, k: f64| PipelineStage {
+            transfer: Secs(t),
+            latency: Secs(l),
+            kernel: Secs(k),
+        };
         let stages = [mk(0.3, 0.01, 0.2), mk(0.5, 0.01, 0.1), mk(0.2, 0.01, 0.4)];
-        let serial: f64 = stages.iter().map(|s| s.transfer + s.kernel).sum();
+        let serial: Secs = stages.iter().map(|s| s.transfer + s.kernel).sum();
         let piped = pipeline_time(&stages);
-        assert!(piped <= serial + 1e-12, "piped={piped} serial={serial}");
+        assert!(piped <= serial + Secs(1e-12), "piped={piped} serial={serial}");
         // with >1 stage and nonzero kernels there is genuine overlap
         assert!(piped < serial, "no overlap: piped={piped} serial={serial}");
     }
@@ -503,16 +516,16 @@ mod tests {
     fn pipeline_kernel_bound_when_kernels_dominate() {
         // kernels much larger than transfers: makespan ~= t0 + sum(kernels)
         let stages: Vec<PipelineStage> = (0..4)
-            .map(|_| PipelineStage { transfer: 0.01, latency: 0.0, kernel: 1.0 })
+            .map(|_| PipelineStage { transfer: Secs(0.01), latency: Secs(0.0), kernel: Secs(1.0) })
             .collect();
         let t = pipeline_time(&stages);
-        assert!((t - (0.01 + 4.0)).abs() < 1e-9, "{t}");
+        assert!((t - Secs(0.01 + 4.0)).abs() < 1e-9, "{t}");
     }
 
     #[test]
     fn pipeline_single_stage_is_plain_sum() {
-        let s = [PipelineStage { transfer: 0.7, latency: 0.1, kernel: 0.2 }];
-        assert!((pipeline_time(&s) - 0.9).abs() < 1e-12);
+        let s = [PipelineStage { transfer: Secs(0.7), latency: Secs(0.1), kernel: Secs(0.2) }];
+        assert!((pipeline_time(&s) - Secs(0.9)).abs() < 1e-12);
     }
 
     #[test]
@@ -521,11 +534,11 @@ mod tests {
         let s = split_traffic(
             &t,
             &[
-                Transfer { src: 0, dst: 1, bytes: 10 },  // same switch
-                Transfer { src: 0, dst: 4, bytes: 20 },  // cross socket
-                Transfer { src: 0, dst: 8, bytes: 40 },  // cross node
-                Transfer { src: 3, dst: 3, bytes: 99 },  // self: ignored
-                Transfer { src: 1, dst: 9, bytes: 0 },   // empty: ignored
+                Transfer { src: 0, dst: 1, bytes: Bytes(10) }, // same switch
+                Transfer { src: 0, dst: 4, bytes: Bytes(20) }, // cross socket
+                Transfer { src: 0, dst: 8, bytes: Bytes(40) }, // cross node
+                Transfer { src: 3, dst: 3, bytes: Bytes(99) }, // self: ignored
+                Transfer { src: 1, dst: 9, bytes: Bytes(0) },  // empty: ignored
             ],
         );
         assert_eq!(s.intra_bytes, 30);
@@ -535,9 +548,9 @@ mod tests {
     #[test]
     fn flow_single_machine_matches_pipeline_time() {
         let stages = [
-            PipelineStage { transfer: 0.3, latency: 0.01, kernel: 0.2 },
-            PipelineStage { transfer: 0.5, latency: 0.01, kernel: 0.1 },
-            PipelineStage { transfer: 0.2, latency: 0.01, kernel: 0.4 },
+            PipelineStage { transfer: Secs(0.3), latency: Secs(0.01), kernel: Secs(0.2) },
+            PipelineStage { transfer: Secs(0.5), latency: Secs(0.01), kernel: Secs(0.1) },
+            PipelineStage { transfer: Secs(0.2), latency: Secs(0.01), kernel: Secs(0.4) },
         ];
         let jobs: Vec<FlowJob> = stages
             .iter()
@@ -558,13 +571,13 @@ mod tests {
         let jobs: Vec<FlowJob> = (0..3)
             .map(|_| FlowJob {
                 legs: vec![
-                    Leg { machine: 0, transfer: 1.0, latency: 0.0 },
-                    Leg { machine: 1, transfer: 1.0, latency: 0.0 },
+                    Leg { machine: 0, transfer: Secs(1.0), latency: Secs(0.0) },
+                    Leg { machine: 1, transfer: Secs(1.0), latency: Secs(0.0) },
                 ],
-                kernel: 0.0,
+                kernel: Secs(0.0),
             })
             .collect();
-        assert!((flow_pipeline_time(&jobs) - 4.0).abs() < 1e-12);
+        assert!((flow_pipeline_time(&jobs) - Secs(4.0)).abs() < 1e-12);
     }
 
     #[test]
@@ -575,11 +588,11 @@ mod tests {
         let jobs: Vec<FlowJob> = (0..4)
             .map(|_| FlowJob {
                 legs: vec![
-                    Leg { machine: 0, transfer: 1.0, latency: 0.0 },
-                    Leg { machine: 1, transfer: 0.1, latency: 0.0 },
-                    Leg { machine: 0, transfer: 1.0, latency: 0.0 },
+                    Leg { machine: 0, transfer: Secs(1.0), latency: Secs(0.0) },
+                    Leg { machine: 1, transfer: Secs(0.1), latency: Secs(0.0) },
+                    Leg { machine: 0, transfer: Secs(1.0), latency: Secs(0.0) },
                 ],
-                kernel: 0.0,
+                kernel: Secs(0.0),
             })
             .collect();
         let t = flow_pipeline_time(&jobs);
@@ -591,50 +604,50 @@ mod tests {
         let jobs: Vec<FlowJob> = (0..6)
             .map(|i| FlowJob {
                 legs: vec![
-                    Leg { machine: MACHINE_INTRA_UP, transfer: 0.2, latency: 0.01 },
-                    Leg { machine: MACHINE_HOST, transfer: 0.5, latency: 0.01 },
-                    Leg { machine: MACHINE_INTER, transfer: 0.3, latency: 0.02 },
-                    Leg { machine: MACHINE_HOST, transfer: 0.5, latency: 0.01 },
-                    Leg { machine: MACHINE_INTRA_DOWN, transfer: 0.2, latency: 0.01 },
+                    Leg { machine: MACHINE_INTRA_UP, transfer: Secs(0.2), latency: Secs(0.01) },
+                    Leg { machine: MACHINE_HOST, transfer: Secs(0.5), latency: Secs(0.01) },
+                    Leg { machine: MACHINE_INTER, transfer: Secs(0.3), latency: Secs(0.02) },
+                    Leg { machine: MACHINE_HOST, transfer: Secs(0.5), latency: Secs(0.01) },
+                    Leg { machine: MACHINE_INTRA_DOWN, transfer: Secs(0.2), latency: Secs(0.01) },
                 ],
-                kernel: 0.05 * (i % 2) as f64,
+                kernel: Secs(0.05 * (i % 2) as f64),
             })
             .collect();
-        let serial: f64 = jobs
+        let serial: Secs = jobs
             .iter()
-            .map(|j| j.legs.iter().map(|l| l.transfer).sum::<f64>() + j.kernel)
+            .map(|j| j.legs.iter().map(|l| l.transfer).sum::<Secs>() + j.kernel)
             .sum();
         let t = flow_pipeline_time(&jobs);
         // bottleneck: MACHINE_HOST carries 2 legs x 0.5 per job (latency
         // discounted after the first touch)
         let host_floor = 6.0 * 2.0 * 0.5 - 11.0 * 0.01;
         assert!(t >= host_floor - 1e-12, "{t} < host floor {host_floor}");
-        assert!(t <= serial + 1e-12, "{t} > serial {serial}");
+        assert!(t <= serial + Secs(1e-12), "{t} > serial {serial}");
         assert!(t < serial, "streams must overlap");
     }
 
     #[test]
     fn flow_latency_charged_once_per_machine() {
-        let mk = |lat| FlowJob {
-            legs: vec![Leg { machine: 0, transfer: 1.0 + lat, latency: lat }],
-            kernel: 0.0,
+        let mk = |lat: f64| FlowJob {
+            legs: vec![Leg { machine: 0, transfer: Secs(1.0 + lat), latency: Secs(lat) }],
+            kernel: Secs(0.0),
         };
         let jobs = [mk(0.25), mk(0.25), mk(0.25)];
         // first chunk pays 1.25, later chunks 1.0
-        assert!((flow_pipeline_time(&jobs) - 3.25).abs() < 1e-12);
+        assert!((flow_pipeline_time(&jobs) - Secs(3.25)).abs() < 1e-12);
     }
 
     #[test]
     fn wfbp_all_released_at_zero_matches_pipeline_time() {
         let stages = [
-            PipelineStage { transfer: 0.3, latency: 0.01, kernel: 0.2 },
-            PipelineStage { transfer: 0.5, latency: 0.01, kernel: 0.1 },
-            PipelineStage { transfer: 0.2, latency: 0.01, kernel: 0.4 },
+            PipelineStage { transfer: Secs(0.3), latency: Secs(0.01), kernel: Secs(0.2) },
+            PipelineStage { transfer: Secs(0.5), latency: Secs(0.01), kernel: Secs(0.1) },
+            PipelineStage { transfer: Secs(0.2), latency: Secs(0.01), kernel: Secs(0.4) },
         ];
         let jobs: Vec<TimedJob> = stages
             .iter()
             .map(|s| TimedJob {
-                release: 0.0,
+                release: Secs(0.0),
                 job: FlowJob {
                     legs: vec![Leg {
                         machine: MACHINE_WIRE,
@@ -653,13 +666,13 @@ mod tests {
     #[test]
     fn wfbp_single_job_is_release_plus_serial() {
         let jobs = [TimedJob {
-            release: 2.0,
+            release: Secs(2.0),
             job: FlowJob {
-                legs: vec![Leg { machine: MACHINE_WIRE, transfer: 0.7, latency: 0.1 }],
-                kernel: 0.2,
+                legs: vec![Leg { machine: MACHINE_WIRE, transfer: Secs(0.7), latency: Secs(0.1) }],
+                kernel: Secs(0.2),
             },
         }];
-        assert!((wfbp_timeline(&jobs) - 2.9).abs() < 1e-12);
+        assert!((wfbp_timeline(&jobs) - Secs(2.9)).abs() < 1e-12);
     }
 
     #[test]
@@ -667,18 +680,18 @@ mod tests {
         // bucket 0 released early, bucket 1 late: the wire drains and idles
         // until release 5.0, so the makespan is release-bound, not comm-bound
         let mk = |release: f64| TimedJob {
-            release,
+            release: Secs(release),
             job: FlowJob {
-                legs: vec![Leg { machine: MACHINE_WIRE, transfer: 1.0, latency: 0.25 }],
-                kernel: 0.0,
+                legs: vec![Leg { machine: MACHINE_WIRE, transfer: Secs(1.0), latency: Secs(0.25) }],
+                kernel: Secs(0.0),
             },
         };
         let t = wfbp_timeline(&[mk(0.0), mk(5.0)]);
         // the stalled stream restarts: the second bucket pays latency again
-        assert!((t - 6.0).abs() < 1e-12, "{t}");
+        assert!((t - Secs(6.0)).abs() < 1e-12, "{t}");
         // back-to-back releases keep the discount
         let t2 = wfbp_timeline(&[mk(0.0), mk(0.0)]);
-        assert!((t2 - 1.75).abs() < 1e-12, "{t2}");
+        assert!((t2 - Secs(1.75)).abs() < 1e-12, "{t2}");
     }
 
     #[test]
@@ -686,41 +699,41 @@ mod tests {
         // releases at 0.0 and 0.1 but each transfer takes 1.0: job 2 waits
         // for the wire, then streams back-to-back (latency discounted)
         let mk = |release: f64| TimedJob {
-            release,
+            release: Secs(release),
             job: FlowJob {
-                legs: vec![Leg { machine: MACHINE_WIRE, transfer: 1.0, latency: 0.2 }],
-                kernel: 0.3,
+                legs: vec![Leg { machine: MACHINE_WIRE, transfer: Secs(1.0), latency: Secs(0.2) }],
+                kernel: Secs(0.3),
             },
         };
         let t = wfbp_timeline(&[mk(0.0), mk(0.1)]);
         // wire: [0,1.0] then [1.0,1.8]; kernels: [1.0,1.3] then [1.8,2.1]
-        assert!((t - 2.1).abs() < 1e-12, "{t}");
+        assert!((t - Secs(2.1)).abs() < 1e-12, "{t}");
     }
 
     #[test]
     fn wfbp_never_beats_lower_bounds_or_exceeds_serial() {
         let jobs: Vec<TimedJob> = (0..5)
             .map(|i| TimedJob {
-                release: 0.2 * i as f64,
+                release: Secs(0.2 * i as f64),
                 job: FlowJob {
                     legs: vec![Leg {
                         machine: MACHINE_WIRE,
-                        transfer: 0.3 + 0.1 * (i % 2) as f64,
-                        latency: 0.02,
+                        transfer: Secs(0.3 + 0.1 * (i % 2) as f64),
+                        latency: Secs(0.02),
                     }],
-                    kernel: 0.05,
+                    kernel: Secs(0.05),
                 },
             })
             .collect();
         let t = wfbp_timeline(&jobs);
-        let wire: f64 = jobs.iter().map(|j| j.job.legs[0].transfer).sum();
-        let comm: f64 = wire + jobs.iter().map(|j| j.job.kernel).sum::<f64>();
+        let wire: Secs = jobs.iter().map(|j| j.job.legs[0].transfer).sum();
+        let comm: Secs = wire + jobs.iter().map(|j| j.job.kernel).sum::<Secs>();
         let last_release = jobs.last().unwrap().release;
-        assert!(t >= wire - 4.0 * 0.02 - 1e-12, "wire load is a floor: {t}");
+        assert!(t.0 >= wire.0 - 4.0 * 0.02 - 1e-12, "wire load is a floor: {t}");
         assert!(t >= last_release, "cannot finish before the last release");
         // post-backward serial: everything after the last release
         let serial = last_release + comm;
-        assert!(t <= serial + 1e-12, "{t} > serial {serial}");
+        assert!(t <= serial + Secs(1e-12), "{t} > serial {serial}");
         assert!(t < serial, "early releases must overlap");
     }
 
@@ -729,7 +742,7 @@ mod tests {
         let params = p();
         let f = Topology::copper(2); // FDR
         let q = Topology::mosaic(2); // QDR
-        let bytes = 100 << 20;
+        let bytes = Bytes(100 << 20);
         let tf = phase_time(&f, &params, &[Transfer { src: 0, dst: 8, bytes }], true);
         let tq = phase_time(&q, &params, &[Transfer { src: 0, dst: 1, bytes }], true);
         assert!(tf < tq, "fdr={tf} qdr={tq}");

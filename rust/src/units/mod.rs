@@ -1,0 +1,488 @@
+//! Dimensional newtypes for the pricing model.
+//!
+//! Every headline this repo reports is a claim about a virtual-clock
+//! pricing model, so its unit discipline (seconds vs microseconds, bytes
+//! vs KiB vs elements, GB/s) is the central correctness invariant. These
+//! newtypes make it a *compile-time* guarantee instead of a naming
+//! convention: only dimensionally valid operators exist, so mixing
+//! microseconds into a seconds sum, dividing bytes by the wrong rate, or
+//! truncating a byte field simply does not compile.
+//!
+//! * [`Secs`] — the one time currency. Every `Breakdown` field, ledger
+//!   charge, simnet phase/timeline result, and `CommReport` time is a
+//!   `Secs`. Supports only time-shaped arithmetic: `Secs ± Secs`,
+//!   `Secs × f64` (scaling), `Secs / Secs → f64` (ratios), sums,
+//!   comparisons against raw `f64` tolerances.
+//! * [`Micros`] — link latencies as configured (µs). Deliberately has
+//!   **no** arithmetic with [`Secs`]; the only exit is
+//!   [`Micros::to_secs`]. `Secs(1.0) + Micros(5.0)` is a compile error.
+//! * [`Bytes`] — traffic volume. `Bytes / GbPerS → Secs` is the pricing
+//!   rule; `Bytes × f64` exists only as the checked-rounding door
+//!   [`Bytes::scale_round`] (the PR 7 `as u64` truncation bug class).
+//! * [`Kib`] / [`Elems`] — sizing knobs (`chunk_kib`, `bucket_kib`) and
+//!   the element counts they translate to via [`Kib::elems`], the single
+//!   wire-width-aware sizing rule.
+//! * [`GbPerS`] — link bandwidth as configured (GB/s, decimal).
+//!
+//! **Adding a unit:** wrap the raw repr in a one-field tuple struct,
+//! derive the comparison traits the raw type supports, implement *only*
+//! the operators that are dimensionally meaningful (prefer a named
+//! method over `impl Mul` when the operation does something besides pure
+//! scaling — see [`Bytes::scale_round`]), give it a `Display` that
+//! forwards to the repr so format precision (`{:.3}`) keeps working, and
+//! add a round-trip test below. `scripts/lint_units.py`'s RAW-UNIT rule
+//! flags new unit-suffixed raw fields outside this module, so the type
+//! is the path of least resistance.
+//!
+//! The newtypes are `repr`-transparent wrappers in the informal sense:
+//! `.0` projects the raw value, and conversions are written to preserve
+//! the exact float operation order of the code they replaced — the
+//! committed bench baselines and `scripts/verify_*_bands.py` pins are
+//! byte-identical across the typed refactor.
+//!
+//! ```compile_fail
+//! use theano_mpi::units::{Micros, Secs};
+//! // microseconds cannot leak into a seconds sum without to_secs()
+//! let _ = Secs(1.0) + Micros(5.0);
+//! ```
+//!
+//! ```compile_fail
+//! use theano_mpi::units::{Bytes, Secs};
+//! // bytes are not time
+//! let _ = Secs(1.0) + Bytes(5);
+//! ```
+//!
+//! ```compile_fail
+//! use theano_mpi::units::Bytes;
+//! // no unchecked byte scaling: the only float scale is scale_round()
+//! let _ = Bytes(100) * 1.5;
+//! ```
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Sub, SubAssign};
+
+use crate::collectives::{wire, StrategyKind, WireFormat};
+
+/// Simulated/measured time in seconds — the virtual clock's only currency.
+#[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
+pub struct Secs(pub f64);
+
+impl Secs {
+    pub const ZERO: Secs = Secs(0.0);
+
+    pub fn abs(self) -> Secs {
+        Secs(self.0.abs())
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.0.is_finite()
+    }
+
+    /// Larger of the two; accepts a raw `f64` so tolerance floors like
+    /// `total.max(1.0)` read naturally (the literal is in seconds).
+    pub fn max(self, other: impl Into<Secs>) -> Secs {
+        Secs(self.0.max(other.into().0))
+    }
+
+    /// Smaller of the two (see [`max`](Self::max) for the `f64` story).
+    pub fn min(self, other: impl Into<Secs>) -> Secs {
+        Secs(self.0.min(other.into().0))
+    }
+}
+
+impl From<f64> for Secs {
+    fn from(v: f64) -> Secs {
+        Secs(v)
+    }
+}
+
+impl From<Secs> for f64 {
+    fn from(v: Secs) -> f64 {
+        v.0
+    }
+}
+
+impl fmt::Display for Secs {
+    /// Forwards to `f64` so precision/width specs (`{:.3}`) work.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl Add for Secs {
+    type Output = Secs;
+    fn add(self, rhs: Secs) -> Secs {
+        Secs(self.0 + rhs.0)
+    }
+}
+
+impl Sub for Secs {
+    type Output = Secs;
+    fn sub(self, rhs: Secs) -> Secs {
+        Secs(self.0 - rhs.0)
+    }
+}
+
+impl AddAssign for Secs {
+    fn add_assign(&mut self, rhs: Secs) {
+        self.0 += rhs.0;
+    }
+}
+
+impl SubAssign for Secs {
+    fn sub_assign(&mut self, rhs: Secs) {
+        self.0 -= rhs.0;
+    }
+}
+
+impl Sum for Secs {
+    fn sum<I: Iterator<Item = Secs>>(iter: I) -> Secs {
+        Secs(iter.map(|s| s.0).sum())
+    }
+}
+
+/// Dimensionless scaling (probe→full projection, per-iteration counts).
+impl Mul<f64> for Secs {
+    type Output = Secs;
+    fn mul(self, rhs: f64) -> Secs {
+        Secs(self.0 * rhs)
+    }
+}
+
+impl Mul<Secs> for f64 {
+    type Output = Secs;
+    fn mul(self, rhs: Secs) -> Secs {
+        Secs(self * rhs.0)
+    }
+}
+
+impl MulAssign<f64> for Secs {
+    fn mul_assign(&mut self, rhs: f64) {
+        self.0 *= rhs;
+    }
+}
+
+impl Div<f64> for Secs {
+    type Output = Secs;
+    fn div(self, rhs: f64) -> Secs {
+        Secs(self.0 / rhs)
+    }
+}
+
+/// Time over time is a dimensionless ratio (speedups, shares).
+impl Div<Secs> for Secs {
+    type Output = f64;
+    fn div(self, rhs: Secs) -> f64 {
+        self.0 / rhs.0
+    }
+}
+
+impl PartialEq<f64> for Secs {
+    fn eq(&self, other: &f64) -> bool {
+        self.0 == *other
+    }
+}
+
+impl PartialEq<Secs> for f64 {
+    fn eq(&self, other: &Secs) -> bool {
+        *self == other.0
+    }
+}
+
+impl PartialOrd<f64> for Secs {
+    fn partial_cmp(&self, other: &f64) -> Option<std::cmp::Ordering> {
+        self.0.partial_cmp(other)
+    }
+}
+
+impl PartialOrd<Secs> for f64 {
+    fn partial_cmp(&self, other: &Secs) -> Option<std::cmp::Ordering> {
+        self.partial_cmp(&other.0)
+    }
+}
+
+/// Link latency in microseconds, as configured. No arithmetic with
+/// [`Secs`] exists on purpose — normalize through [`to_secs`](Self::to_secs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
+pub struct Micros(pub f64);
+
+impl Micros {
+    /// The one exit into the clock's currency.
+    pub fn to_secs(self) -> Secs {
+        Secs(self.0 * 1e-6)
+    }
+}
+
+impl fmt::Display for Micros {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// Traffic volume in bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Bytes(pub u64);
+
+impl Bytes {
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+
+    pub fn abs_diff(self, other: Bytes) -> Bytes {
+        Bytes(self.0.abs_diff(other.0))
+    }
+
+    /// The single checked door for float-scaling a byte count
+    /// (probe→full projection, codec repricing). Rounds — a bare
+    /// `as u64` floors, silently dropping bytes under fractional scales
+    /// (the PR 7 `scale_times` bug).
+    pub fn scale_round(self, s: f64) -> Bytes {
+        debug_assert!(s.is_finite() && s >= 0.0, "bad byte scale: {s}");
+        Bytes((self.0 as f64 * s).round() as u64)
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Bytes {
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Bytes {
+    type Output = Bytes;
+    fn sub(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 - rhs.0)
+    }
+}
+
+impl Sum for Bytes {
+    fn sum<I: Iterator<Item = Bytes>>(iter: I) -> Bytes {
+        Bytes(iter.map(|b| b.0).sum())
+    }
+}
+
+/// Integer fan-out (k ranks each sending a buffer) keeps bytes exact.
+impl Mul<u64> for Bytes {
+    type Output = Bytes;
+    fn mul(self, rhs: u64) -> Bytes {
+        Bytes(self.0 * rhs)
+    }
+}
+
+impl Mul<Bytes> for u64 {
+    type Output = Bytes;
+    fn mul(self, rhs: Bytes) -> Bytes {
+        Bytes(self * rhs.0)
+    }
+}
+
+/// The pricing rule: volume over bandwidth is time.
+impl Div<GbPerS> for Bytes {
+    type Output = Secs;
+    fn div(self, rhs: GbPerS) -> Secs {
+        Secs(self.0 as f64 / (rhs.0 * 1e9))
+    }
+}
+
+impl PartialEq<u64> for Bytes {
+    fn eq(&self, other: &u64) -> bool {
+        self.0 == *other
+    }
+}
+
+impl PartialEq<Bytes> for u64 {
+    fn eq(&self, other: &Bytes) -> bool {
+        *self == other.0
+    }
+}
+
+impl PartialOrd<u64> for Bytes {
+    fn partial_cmp(&self, other: &u64) -> Option<std::cmp::Ordering> {
+        self.0.partial_cmp(other)
+    }
+}
+
+impl PartialOrd<Bytes> for u64 {
+    fn partial_cmp(&self, other: &Bytes) -> Option<std::cmp::Ordering> {
+        self.partial_cmp(&other.0)
+    }
+}
+
+/// A sizing knob in KiB (`chunk_kib`, `bucket_kib`) — *on-wire* KiB, so
+/// translating to element counts needs the active wire's width.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Kib(pub usize);
+
+impl Kib {
+    /// Elements per this many KiB of on-wire bytes for a strategy × wire —
+    /// the one shared sizing rule for `chunk_kib` and `bucket_kib`
+    /// (subsumes `wire::elems_per_kib`, which delegates here). The
+    /// f32 × full-width path reproduces the historical `kib * 1024 / 4`
+    /// exactly (bit-identical bands).
+    pub fn elems(self, strategy: StrategyKind, fmt: WireFormat) -> Elems {
+        let bpe = wire::wire_bytes_per_elem(strategy, fmt);
+        Elems(((self.0 as f64 * 1024.0) / bpe).floor() as usize)
+    }
+}
+
+impl fmt::Display for Kib {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// A count of f32 elements (what sizing rules hand to the slicers).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Elems(pub usize);
+
+impl fmt::Display for Elems {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// Link bandwidth in GB/s (decimal, as configured in [`crate::simnet::LinkParams`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
+pub struct GbPerS(pub f64);
+
+impl fmt::Display for GbPerS {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::FlatKind;
+
+    #[test]
+    fn secs_arithmetic_and_comparisons() {
+        let a = Secs(0.25) + Secs(0.5);
+        assert_eq!(a, 0.75);
+        assert_eq!(a - Secs(0.25), Secs(0.5));
+        let mut b = a;
+        b += Secs(0.25);
+        b -= Secs(0.5);
+        assert!((b - Secs(0.5)).abs() < 1e-15);
+        assert_eq!(a * 2.0, 1.5);
+        assert_eq!(2.0 * a, 1.5);
+        assert_eq!(a / 3.0, 0.25);
+        assert_eq!(Secs(1.0) / Secs(0.25), 4.0, "time ratio is dimensionless");
+        let mut c = Secs(2.0);
+        c *= 0.5;
+        assert_eq!(c, 1.0);
+        assert!(Secs(1.0) > 0.5 && 0.5 < Secs(1.0) && Secs(-1.0).abs() == 1.0);
+        assert_eq!(Secs(0.2).max(1.0), 1.0);
+        assert_eq!(Secs(0.2).max(Secs(0.1)), 0.2);
+        assert_eq!(Secs(0.2).min(0.1), 0.1);
+        assert_eq!([Secs(1.0), Secs(2.0), Secs(4.0)].into_iter().sum::<Secs>(), 7.0);
+        assert_eq!(Secs::ZERO, 0.0);
+        assert!(Secs(1.0).is_finite() && !Secs(f64::NAN).is_finite());
+        assert_eq!(f64::from(Secs(0.5)), 0.5);
+    }
+
+    #[test]
+    fn micros_normalize_through_to_secs_only() {
+        assert_eq!(Micros(1.5e6).to_secs(), 1.5);
+        assert_eq!(Micros(150.0).to_secs().0.to_bits(), (150.0 * 1e-6f64).to_bits());
+    }
+
+    #[test]
+    fn bytes_over_bandwidth_is_the_pricing_rule() {
+        let t = Bytes(2_000_000_000) / GbPerS(2.0);
+        assert_eq!(t, 1.0);
+        // exact float op order of the code this replaced: b / (g * 1e9)
+        let b = 100u64 << 20;
+        assert_eq!(
+            (Bytes(b) / GbPerS(6.8)).0.to_bits(),
+            (b as f64 / (6.8 * 1e9)).to_bits()
+        );
+    }
+
+    #[test]
+    fn bytes_arithmetic_stays_integer_exact() {
+        assert_eq!(Bytes(10) + Bytes(20), 30);
+        assert_eq!(Bytes(30) - Bytes(10), 20);
+        assert_eq!(Bytes(10) * 3u64, 30);
+        assert_eq!(3u64 * Bytes(10), Bytes(30));
+        assert_eq!([Bytes(1), Bytes(2)].into_iter().sum::<Bytes>(), 3);
+        assert_eq!(Bytes(7).abs_diff(Bytes(10)), 3);
+        assert_eq!(Bytes(5).as_f64(), 5.0);
+        let mut b = Bytes(1);
+        b += Bytes(2);
+        assert_eq!(b, 3);
+        assert!(Bytes(10) > 5 && 5 < Bytes(10));
+    }
+
+    #[test]
+    fn scale_round_rounds_instead_of_truncating() {
+        // the PR 7 scale_times regression values, now pinned at the door
+        assert_eq!(Bytes(999).scale_round(1.5), 1_499, "1498.5 rounds up");
+        assert_eq!(Bytes(333).scale_round(1.5), 500);
+        assert_eq!(Bytes(667).scale_round(1.5), 1_001);
+        assert_eq!(Bytes(4_000_000).scale_round(60_965_224.0 / 1_000_000.0), 243_860_896);
+        assert_eq!(Bytes(100).scale_round(1.0), 100);
+    }
+
+    #[test]
+    fn kib_elems_bit_identical_to_wire_elems_per_kib() {
+        let strategies = [
+            StrategyKind::Ar,
+            StrategyKind::Asa,
+            StrategyKind::Asa16,
+            StrategyKind::Ring,
+            StrategyKind::Hier { inner: FlatKind::Asa16 },
+            StrategyKind::Hier { inner: FlatKind::Ring },
+        ];
+        let formats = [
+            WireFormat::F32,
+            WireFormat::F16,
+            WireFormat::Bf16,
+            WireFormat::TopK { p: 0.01 },
+            WireFormat::TopK { p: 0.5 },
+            WireFormat::OneBit,
+            WireFormat::Sf,
+        ];
+        for s in strategies {
+            for f in formats {
+                for kib in [0usize, 1, 7, 64, 256, 4096] {
+                    assert_eq!(
+                        Kib(kib).elems(s, f).0,
+                        wire::elems_per_kib(kib, s, f),
+                        "kib={kib} strategy={} fmt={}",
+                        s.name(),
+                        f.name()
+                    );
+                }
+            }
+        }
+        // the historical f32 integer rule, exactly
+        assert_eq!(Kib(256).elems(StrategyKind::Asa, WireFormat::F32), Elems(256 * 1024 / 4));
+    }
+
+    #[test]
+    fn display_forwards_format_specs() {
+        assert_eq!(format!("{:.3}", Secs(1.23456)), "1.235");
+        assert_eq!(format!("{:.2}", Secs(0.5)), "0.50");
+        assert_eq!(format!("{}", Bytes(1024)), "1024");
+        assert_eq!(format!("{}", Kib(256)), "256");
+        assert_eq!(format!("{}", Elems(64)), "64");
+        assert_eq!(format!("{:.1}", GbPerS(6.8)), "6.8");
+        assert_eq!(format!("{:.1}", Micros(150.0)), "150.0");
+    }
+}

@@ -132,8 +132,8 @@ impl Json {
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
-pub fn num(n: f64) -> Json {
-    Json::Num(n)
+pub fn num(n: impl Into<f64>) -> Json {
+    Json::Num(n.into())
 }
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
@@ -342,6 +342,20 @@ mod tests {
         assert_eq!(v.get("s").unwrap().as_str().unwrap(), "hi");
         assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
         assert!(v.get("missing").is_err());
+    }
+
+    #[test]
+    fn serialization_is_byte_stable_regardless_of_insertion_order() {
+        // Obj is a BTreeMap precisely so emitted reports/benchmark JSON are
+        // byte-identical run to run; pin the bytes, not just the value
+        let fwd = obj(vec![("zeta", num(1.0)), ("alpha", s("x")), ("mid", Json::Null)]);
+        let rev = obj(vec![("mid", Json::Null), ("alpha", s("x")), ("zeta", num(1.0))]);
+        let want = r#"{"alpha":"x","mid":null,"zeta":1}"#;
+        assert_eq!(fwd.to_string(), want);
+        assert_eq!(rev.to_string(), want);
+        // and a parse -> serialize round trip normalizes source key order
+        let parsed = Json::parse(r#"{"zeta": 1, "mid": null, "alpha": "x"}"#).unwrap();
+        assert_eq!(parsed.to_string(), want);
     }
 
     #[test]

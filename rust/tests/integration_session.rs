@@ -59,7 +59,7 @@ fn table3_speedups_ordered_and_plausible() {
         let mut speedups = Vec::new();
         for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16] {
             let rep = s.measure_exchange(strat, k, topo, bytes, true).unwrap();
-            let total = t1 / k as f64 + rep.sim_total() * iters;
+            let total = t1 / k as f64 + rep.sim_total().0 * iters;
             speedups.push(t1 / total);
         }
         assert!(

@@ -11,6 +11,7 @@
 
 use theano_mpi::loader::sim::{sim_pipeline, DiskParams, SimOutcome, SimPipelineCfg};
 use theano_mpi::simnet::LinkParams;
+use theano_mpi::units::Bytes;
 
 const N_FILES: usize = 16;
 const ITERS: usize = 64;
@@ -35,7 +36,8 @@ fn run(workers: usize, prefetch_depth: usize, cache_mib: usize) -> SimOutcome {
     )
 }
 
-fn pin(got: f64, want: f64, what: &str) {
+fn pin(got: impl Into<f64>, want: f64, what: &str) {
+    let got: f64 = got.into();
     let tol = 1e-12 * want.abs().max(1.0);
     assert!(
         (got - want).abs() <= tol,
@@ -83,10 +85,10 @@ fn direct_path_matches_closed_form() {
         let spike = if (i + 1) % disk.spike_every == 0 { disk.spike_factor } else { 1.0 };
         let decode_s = BATCH_BYTES as f64 / (disk.decode_gbps * 1e9) * spike;
         want += disk_s + decode_s;
-        want += links.pcie_time(H2D_BYTES);
+        want += links.pcie_time(Bytes(H2D_BYTES)).0;
         want += COMPUTE_S;
     }
-    let got = run(8, 0, 0).vtime;
+    let got = run(8, 0, 0).vtime.0;
     assert!((got - want).abs() <= 1e-9 * want, "direct DES {got} vs closed form {want}");
 }
 
@@ -113,7 +115,8 @@ fn breakdown_reconciles_and_memo_stays_off_clock() {
 fn vtime_monotone_in_prefetch_depth_and_cache() {
     for k in [1usize, 8] {
         for c in [0usize, 4] {
-            let v: Vec<f64> = [0usize, 1, 2, 4].iter().map(|&q| run(k, q, c).vtime).collect();
+            let v: Vec<f64> =
+                [0usize, 1, 2, 4].iter().map(|&q| run(k, q, c).vtime.0).collect();
             assert!(
                 v.windows(2).all(|w| w[0] >= w[1]),
                 "vtime not monotone in q at k={k} c={c}: {v:?}"

@@ -255,12 +255,13 @@ fn prop_sim_times_identical_across_ranks_and_positive() {
                 })
             })
             .collect();
-        let times: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let times: Vec<theano_mpi::units::Secs> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
         for t in &times {
             if *t <= 0.0 {
                 return Err(format!("non-positive sim time {t} (k={k}, n={n})"));
             }
-            if (t - times[0]).abs() > 1e-12 {
+            if (*t - times[0]).abs() > 1e-12 {
                 return Err("ranks computed different sim times".into());
             }
         }

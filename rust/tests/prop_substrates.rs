@@ -5,6 +5,7 @@ use theano_mpi::cluster::{PathKind, Topology};
 use theano_mpi::precision::{f16_bits_to_f32, f32_to_f16_bits, Wire};
 use theano_mpi::simnet::{phase_time, LinkParams, Transfer};
 use theano_mpi::testkit::prop;
+use theano_mpi::units::Bytes;
 use theano_mpi::util::json::Json;
 use theano_mpi::util::{split_even, Rng};
 
@@ -61,8 +62,8 @@ fn prop_phase_time_monotone_in_bytes() {
         }
         let small = 1 + rng.below(1 << 20) as u64;
         let big = small * (2 + rng.below(8) as u64);
-        let ts = phase_time(&t, &p, &[Transfer { src: a, dst: b, bytes: small }], true);
-        let tb = phase_time(&t, &p, &[Transfer { src: a, dst: b, bytes: big }], true);
+        let ts = phase_time(&t, &p, &[Transfer { src: a, dst: b, bytes: Bytes(small) }], true);
+        let tb = phase_time(&t, &p, &[Transfer { src: a, dst: b, bytes: Bytes(big) }], true);
         if tb < ts {
             return Err(format!("bigger transfer cheaper: {tb} < {ts}"));
         }
@@ -85,13 +86,13 @@ fn prop_adding_transfers_never_speeds_a_phase() {
             if a == b {
                 b = (b + 1) % n;
             }
-            Transfer { src: a, dst: b, bytes: 1 + rng.below(1 << 22) as u64 }
+            Transfer { src: a, dst: b, bytes: Bytes(1 + rng.below(1 << 22) as u64) }
         };
         let t1 = mk(rng);
         let t2 = mk(rng);
         let one = phase_time(&t, &p, &[t1], true);
         let both = phase_time(&t, &p, &[t1, t2], true);
-        if both + 1e-12 < one {
+        if both.0 + 1e-12 < one.0 {
             return Err(format!("adding a transfer reduced phase time: {both} < {one}"));
         }
         Ok(())
@@ -112,10 +113,10 @@ fn prop_cuda_aware_never_slower() {
         if a == b {
             b = (b + 1) % n;
         }
-        let tr = Transfer { src: a, dst: b, bytes: 1 + rng.below(1 << 24) as u64 };
+        let tr = Transfer { src: a, dst: b, bytes: Bytes(1 + rng.below(1 << 24) as u64) };
         let aware = phase_time(&t, &p, &[tr], true);
         let staged = phase_time(&t, &p, &[tr], false);
-        if aware > staged + 1e-12 {
+        if aware.0 > staged.0 + 1e-12 {
             return Err(format!("cuda-aware slower: {aware} > {staged}"));
         }
         Ok(())

@@ -32,6 +32,7 @@ use theano_mpi::coordinator::{probe_exchange, probe_exchange_wire};
 use theano_mpi::mpi;
 use theano_mpi::simnet::LinkParams;
 use theano_mpi::testkit::{allclose, gauss_vec, prop, run_exchange_wire};
+use theano_mpi::units::Secs;
 
 fn lossy_formats() -> [WireFormat; 5] {
     [
@@ -279,7 +280,7 @@ fn run_staggered(
                             &mut buf,
                             ReduceOp::Sum,
                             &mut ctx,
-                            1e-3,
+                            Secs(1e-3),
                             1.0,
                             true,
                         )
@@ -401,7 +402,7 @@ fn compressed_probes_cut_wire_bytes_at_alexnet_scale() {
             rep.compression_ratio()
         );
         assert!(
-            (rep.wire_bytes as f64) * 10.0 <= dense.wire_bytes as f64,
+            rep.wire_bytes.as_f64() * 10.0 <= dense.wire_bytes.as_f64(),
             "{}: wire bytes {} not >= 10x under dense {}",
             fmt.name(),
             rep.wire_bytes,

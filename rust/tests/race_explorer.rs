@@ -38,6 +38,7 @@ use theano_mpi::easgd::EasgdConfig;
 use theano_mpi::mpi::{self, tags, Payload};
 use theano_mpi::simnet::LinkParams;
 use theano_mpi::testkit::{permutations, Turnstile};
+use theano_mpi::units::Secs;
 
 fn exhaustive() -> bool {
     std::env::var("TMPI_RACE_EXHAUSTIVE").map(|v| v == "1").unwrap_or(false)
@@ -113,7 +114,7 @@ fn run_probe(
                     if let Some(g) = &gate {
                         g.wait_turn(rank);
                     }
-                    shard::worker_push(&mut comm, rank, &plan, None, &params, clock)?;
+                    shard::worker_push(&mut comm, rank, &plan, None, &params, Secs(clock))?;
                     if let Some(g) = &gate {
                         g.advance();
                     }
@@ -121,10 +122,10 @@ fn run_probe(
                         thread::sleep(Duration::from_micros(sleeps[rank]));
                     }
                     let t = shard::worker_collect(
-                        &mut comm, rank, &plan, &prices, alpha, &mut params, clock,
+                        &mut comm, rank, &plan, &prices, alpha, &mut params, Secs(clock),
                     )?;
-                    clock = t.new_clock;
-                    waits.push(t.queue_wait);
+                    clock = t.new_clock.0;
+                    waits.push(t.queue_wait.0);
                 }
                 for j in 0..plan.servers {
                     comm.send(plan.server_rank(j), tags::CTL, Payload::Ctl("stop".into()), clock)?;
@@ -311,7 +312,7 @@ fn run_wfbp_staggered(
                     &mut buf,
                     ReduceOp::Sum,
                     &mut ctx,
-                    1e-3, // backward-pass seconds the buckets overlap
+                    Secs(1e-3), // backward-pass seconds the buckets overlap
                     1.0,
                     true,
                 )
@@ -452,7 +453,7 @@ fn measure_sharded_matches_explorer_baseline() {
     for (w, bd) in probe.breakdowns.iter().enumerate() {
         let clock = probe.worker_clocks[w];
         assert!(
-            (bd.total() - clock).abs() <= 1e-9 * clock.max(1.0),
+            (bd.total().0 - clock).abs() <= 1e-9 * clock.max(1.0),
             "worker {w}: breakdown {} != clock {clock}",
             bd.total()
         );

@@ -38,13 +38,13 @@ fn run_kind(
 
 fn assert_lower_bounds(rep: &CommReport, topo: &Topology, k: usize, label: &str) {
     let links = LinkParams::default();
-    let ib = links.ib_gbps(topo.ib);
-    let inter_bound = rep.wire_inter_bytes as f64 / (topo.n_nodes as f64 * ib * 1e9);
-    let fastest = links.pcie_gbps.max(links.qpi_gbps).max(links.host_mem_gbps);
+    let ib = links.ib_gbps(topo.ib).0;
+    let inter_bound = rep.wire_inter_bytes.as_f64() / (topo.n_nodes as f64 * ib * 1e9);
+    let fastest = links.pcie_gbps.0.max(links.qpi_gbps.0).max(links.host_mem_gbps.0);
     let resources = (2 * k + 2 * topo.n_nodes) as f64;
-    let intra_bound = rep.wire_intra_bytes as f64 / (fastest * 1e9 * resources);
+    let intra_bound = rep.wire_intra_bytes.as_f64() / (fastest * 1e9 * resources);
     assert!(
-        rep.sim_transfer + 1e-15 >= inter_bound,
+        rep.sim_transfer.0 + 1e-15 >= inter_bound,
         "{label}: sim_transfer {} prices below the NIC bound {} ({} inter bytes over {} NICs)",
         rep.sim_transfer,
         inter_bound,
@@ -52,7 +52,7 @@ fn assert_lower_bounds(rep: &CommReport, topo: &Topology, k: usize, label: &str)
         topo.n_nodes
     );
     assert!(
-        rep.sim_transfer + 1e-15 >= intra_bound,
+        rep.sim_transfer.0 + 1e-15 >= intra_bound,
         "{label}: sim_transfer {} prices below the intra bound {}",
         rep.sim_transfer,
         intra_bound
@@ -82,11 +82,11 @@ fn no_strategy_prices_below_its_traffic_bounds() {
                 &format!("chunked({}) on {}", kind.name(), topo.name),
             );
             let links = LinkParams::default();
-            let ib = links.ib_gbps(topo.ib);
+            let ib = links.ib_gbps(topo.ib).0;
             let inter_bound =
-                chunked.wire_inter_bytes as f64 / (topo.n_nodes as f64 * ib * 1e9);
+                chunked.wire_inter_bytes.as_f64() / (topo.n_nodes as f64 * ib * 1e9);
             assert!(
-                chunked.sim_total() + 1e-15 >= inter_bound,
+                chunked.sim_total().0 + 1e-15 >= inter_bound,
                 "{}: overlapped total {} below NIC bound {}",
                 kind.name(),
                 chunked.sim_total(),
@@ -120,7 +120,7 @@ fn hier_moves_strictly_fewer_nic_bytes_than_flat_inner_on_copper() {
         let flat_asa = run_kind(StrategyKind::Asa, None, k, n, topo.clone());
         let hier_asa =
             run_kind(StrategyKind::Hier { inner: FlatKind::Asa }, None, k, n, topo.clone());
-        let cut = flat_asa.wire_inter_bytes as f64 / hier_asa.wire_inter_bytes as f64;
+        let cut = flat_asa.wire_inter_bytes.as_f64() / hier_asa.wire_inter_bytes.as_f64();
         assert!(cut > 7.0, "copper({nodes}): expected ~8x NIC cut vs flat ASA, got {cut}x");
     }
 }

@@ -18,6 +18,7 @@ use theano_mpi::collectives::{
 };
 use theano_mpi::simnet::LinkParams;
 use theano_mpi::testkit::{all_strategy_kinds, run_exchange};
+use theano_mpi::units::Secs;
 use theano_mpi::{mpi, models};
 
 /// Run one bucketed exchange across `bufs.len()` threads; rank 0's outcome.
@@ -64,7 +65,7 @@ fn run_wfbp(
                     &mut buf,
                     op,
                     &mut ctx,
-                    backward,
+                    Secs(backward),
                     1.0,
                     overlap,
                 )
@@ -190,7 +191,7 @@ fn single_bucket_prices_and_computes_exactly_as_today() {
         assert_eq!(out.buckets, 1);
         assert!(out.comm_hidden.abs() < 1e-12, "nothing can hide after the pass");
         assert!(
-            (out.makespan - (backward + mono_rep.sim_total())).abs() < 1e-12,
+            (out.makespan - (Secs(backward) + mono_rep.sim_total())).abs() < 1e-12,
             "{}",
             kind.name()
         );
@@ -211,7 +212,7 @@ fn pricing_invariants_hold_across_strategies_and_backward_scales() {
             let label = format!("{} backward={backward}", kind.name());
             assert!(out.comm_hidden >= 0.0, "{label}");
             assert!(
-                out.comm_hidden <= out.serial_comm + 1e-15,
+                out.comm_hidden.0 <= out.serial_comm.0 + 1e-15,
                 "{label}: hidden {} > serial {}",
                 out.comm_hidden,
                 out.serial_comm
@@ -232,12 +233,12 @@ fn pricing_invariants_hold_across_strategies_and_backward_scales() {
             assert!(out.makespan >= backward - 1e-15, "{label}");
             let wire_floor = out.comm.sim_transfer - out.comm.sim_latency;
             assert!(
-                out.makespan + 1e-12 >= wire_floor,
+                out.makespan.0 + 1e-12 >= wire_floor.0,
                 "{label}: makespan {} below wire floor {wire_floor}",
                 out.makespan
             );
             assert!(
-                out.makespan <= backward + out.serial_comm + 1e-12,
+                out.makespan.0 <= backward + out.serial_comm.0 + 1e-12,
                 "{label}: makespan {} exceeds the no-overlap schedule",
                 out.makespan
             );
@@ -277,7 +278,7 @@ fn wait_free_strictly_beats_post_backward_when_compute_can_hide_it() {
     assert!(wf.overlap_fraction > 0.0);
     assert!(wf.makespan < post.makespan);
     // and the end-to-end iteration wins: makespan < backward + serial comm
-    assert!(wf.makespan < backward + post.serial_comm);
+    assert!(wf.makespan.0 < backward + post.serial_comm.0);
 }
 
 #[test]

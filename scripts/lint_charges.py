@@ -17,13 +17,15 @@ accounting discipline textually:
                  (`sim_*`, `real_kernel`). `collectives/mod.rs` owns the
                  report (exhaustive merge/scale); strategy impls that build
                  reports carry per-file waivers.
-  UNIT-SUFFIX    two identifiers with *different* unit suffixes
-                 ({_bytes,_elems,_s,_us,_gbps,_kib}) immediately joined by
-                 +, -, or a comparison — adding bytes to seconds etc.
-                 Multiplication/division convert units and are exempt.
   BD-LITERAL     a `Breakdown { .. }` struct literal using the `..` rest
                  shorthand outside `metrics::`/`audit::` — non-exhaustive
                  construction silently zeroes fields added later.
+
+The historical UNIT-SUFFIX rule (textually matching `_bytes + _s` style
+mixing) is retired: the `units::` newtypes (Secs/Bytes/Kib/Elems/GbPerS)
+make dimensional mixing a *compile* error, and `scripts/lint_units.py`
+polices the remaining textual surface (float->int casts, hash-order
+nondeterminism, new raw unit-suffixed fields).
 
 Scope: `rust/src/**/*.rs` (unit tests included — they must follow the same
 discipline; integration tests under `rust/tests/` assert *on* the ledger
@@ -58,14 +60,11 @@ BD_FIELDS = (
 # CommReport's time fields (collectives/mod.rs).
 CR_FIELDS = "sim_transfer|sim_kernel|sim_overlapped|sim_intra|sim_inter|real_kernel"
 
-UNIT_SUFFIXES = ("_bytes", "_elems", "_s", "_us", "_gbps", "_kib")
-
 # directory-level owners: (rule, path substrings where the rule never fires)
 OWNERS = {
     "CHARGE-CLOCK": ("rust/src/audit/",),
     "CHARGE-BD": ("rust/src/audit/", "rust/src/metrics/"),
     "CHARGE-CR": ("rust/src/audit/", "rust/src/collectives/mod.rs"),
-    "UNIT-SUFFIX": (),
     "BD-LITERAL": ("rust/src/audit/", "rust/src/metrics/"),
 }
 
@@ -77,11 +76,6 @@ RE_CLOCK_COMPOUND = re.compile(r"(?<![\w.])(\w*clock|vtime)\s*[-+*/]=")
 RE_CLOCK_ASSIGN = re.compile(r"(?<![\w.])(\w*clock|vtime)\s*=(?![=>])\s*(.+)$")
 RE_BD_COMPOUND = re.compile(r"\.(%s)\s*[-+*/]=" % BD_FIELDS)
 RE_CR_COMPOUND = re.compile(r"(?<![\w.(])(?:\w+\.)?(%s)\s*[-+*/]=" % CR_FIELDS)
-# ident OP ident with both idents unit-suffixed — the operator must be
-# immediately between them so `a_us * 1e-6 + b_s` (converted) passes
-RE_UNIT_PAIR = re.compile(
-    r"([A-Za-z_]\w*)\s*(\+|-|<=|>=|==|<|>)\s*([A-Za-z_]\w*)"
-)
 RE_BD_LITERAL_OPEN = re.compile(r"(?<!\w)Breakdown\s*\{")
 RE_LET_DESTRUCTURE = re.compile(r"\blet\s+Breakdown\s*\{")
 
@@ -121,13 +115,6 @@ def strip_noise(lines):
     return out
 
 
-def unit_suffix(ident):
-    for suf in UNIT_SUFFIXES:
-        if ident.endswith(suf) and len(ident) > len(suf):
-            return suf
-    return None
-
-
 def lint_file(relpath, raw_lines):
     findings = []
     lines = strip_noise(raw_lines)
@@ -155,11 +142,6 @@ def lint_file(relpath, raw_lines):
         m = RE_CR_COMPOUND.search(line)
         if m:
             hit("CHARGE-CR", i, f"raw arithmetic on CommReport time field `{m.group(1)}`")
-        for m in RE_UNIT_PAIR.finditer(line):
-            a, op, b = m.group(1), m.group(2), m.group(3)
-            sa, sb = unit_suffix(a), unit_suffix(b)
-            if sa and sb and sa != sb:
-                hit("UNIT-SUFFIX", i, f"`{a} {op} {b}` mixes {sa} with {sb}")
         # Breakdown literal exhaustiveness: track `..` inside the braces
         if bd_literal_depth is None:
             m = RE_BD_LITERAL_OPEN.search(line)

@@ -1,0 +1,266 @@
+#!/usr/bin/env python3
+"""Dimensional-safety lint: the textual rules the `units::` newtypes can't enforce.
+
+`rust/src/units/` makes mixing seconds with microseconds or bytes with
+element counts a *compile* error, but three bug families still live outside
+the type system's reach:
+
+  CAST-TRUNC   a float -> integer `as` cast outside `units/`. Rust's `as`
+               silently truncates toward zero; every deliberate conversion
+               goes through a checked door (`Bytes::scale_round`,
+               `Kib::elems`) or carries an explicit `.round()`/`.ceil()`/
+               `.floor()` plus a justified waiver here.
+  MAP-ITER     a `HashMap`/`HashSet` mention in `rust/src` or `rust/benches`.
+               Hash iteration order is seeded per process; anything feeding
+               reports, JSON, or the priced clock must use BTreeMap/BTreeSet
+               (or sorted iteration). Keyed-only maps that are never
+               iterated carry waivers saying so.
+  RAW-UNIT     a new `pub` struct field with a unit suffix (`_s`, `_us`,
+               `_bytes`, `_kib`, `_gbps`, `_elems`, `_secs`) declared as a
+               raw numeric type outside `units/`. New quantities take a
+               newtype; the pre-existing config knobs and wire-codec
+               counters are waived where they stand.
+
+Scope: `rust/src/**/*.rs` and `rust/benches/**/*.rs` (unit tests included).
+`rust/src/units/` owns all three rules — the doors live there.
+
+Waivers: `scripts/lint_units_waivers.txt`, one per line:
+
+    RULE-ID<space>path-substring<space or tab># justification (required)
+
+A finding whose rule and path match a waiver is suppressed. Waivers that
+matched nothing are reported as STALE (warning; remove them). Exit status
+is 1 iff any unwaived finding remains, 2 on a malformed waiver file.
+
+Stdlib only; run from the repo root: `python3 scripts/lint_units.py`.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = (
+    os.path.join(REPO, "rust", "src"),
+    os.path.join(REPO, "rust", "benches"),
+)
+WAIVER_FILE = os.path.join(REPO, "scripts", "lint_units_waivers.txt")
+
+# units/ owns every rule: the checked doors themselves live there
+OWNERS = {
+    "CAST-TRUNC": ("rust/src/units/",),
+    "MAP-ITER": ("rust/src/units/",),
+    "RAW-UNIT": ("rust/src/units/",),
+}
+
+INT_TYPES = r"(?:u8|u16|u32|u64|u128|usize|i8|i16|i32|i64|i128|isize)"
+RE_AS_INT = re.compile(r"\bas\s+(%s)\b" % INT_TYPES)
+# float evidence inside the cast operand: literals, f32/f64 mentions,
+# float-producing method tails
+RE_FLOAT_MARK = re.compile(
+    r"\d\.\d|\de[+-]?\d|\bf32\b|\bf64\b|\.floor\(\)|\.ceil\(\)|\.round\(\)"
+    r"|\.sqrt\(\)|\.fract\(\)|\.as_f64\(\)|\.to_secs\(\)"
+)
+RE_MAP = re.compile(r"\b(HashMap|HashSet)\b")
+UNIT_SUFFIXES = ("_s", "_us", "_secs", "_bytes", "_kib", "_gbps", "_elems")
+RE_RAW_FIELD = re.compile(
+    r"\bpub\s+([a-z_]\w*)\s*:\s*(?:Option<\s*)?(f32|f64|%s)\b" % INT_TYPES
+)
+
+RE_LINE_COMMENT = re.compile(r"//.*$")
+RE_STRING = re.compile(r'"(?:[^"\\]|\\.)*"')
+RE_CHAR = re.compile(r"'(?:[^'\\]|\\.)'")
+
+
+def strip_noise(lines):
+    """Blank out string/char literals and // and /* */ comments, keeping
+    line numbers stable (same coarse pass as lint_charges.py)."""
+    out = []
+    in_block = False
+    for line in lines:
+        if in_block:
+            end = line.find("*/")
+            if end < 0:
+                out.append("")
+                continue
+            line = " " * (end + 2) + line[end + 2 :]
+            in_block = False
+        line = RE_STRING.sub('""', line)
+        line = RE_CHAR.sub("' '", line)
+        line = RE_LINE_COMMENT.sub("", line)
+        while True:
+            start = line.find("/*")
+            if start < 0:
+                break
+            end = line.find("*/", start + 2)
+            if end < 0:
+                line = line[:start]
+                in_block = True
+                break
+            line = line[:start] + " " * (end + 2 - start) + line[end + 2 :]
+        out.append(line)
+    return out
+
+
+def cast_operand(line, cast_start):
+    """The expression text a trailing `as <int>` applies to: a balanced
+    parenthesized group, or the chain of ident/field/index tokens, scanned
+    backward from the cast keyword."""
+    j = cast_start
+    while j > 0 and line[j - 1].isspace():
+        j -= 1
+    if j == 0:
+        return ""
+    if line[j - 1] in ")]":
+        close, open_ = line[j - 1], "(" if line[j - 1] == ")" else "["
+        depth = 0
+        k = j - 1
+        while k >= 0:
+            if line[k] == close:
+                depth += 1
+            elif line[k] == open_:
+                depth -= 1
+                if depth == 0:
+                    break
+            k -= 1
+        start = max(k, 0)
+        # include a leading method/ident chain: `x.clamp(...)`, `v[0]`
+        while start > 0 and (line[start - 1].isalnum() or line[start - 1] in "_."):
+            start -= 1
+        return line[start:j]
+    start = j
+    while start > 0 and (line[start - 1].isalnum() or line[start - 1] in "_."):
+        start -= 1
+    return line[start:j]
+
+
+def lint_file(relpath, raw_lines):
+    findings = []
+    lines = strip_noise(raw_lines)
+
+    def hit(rule, lineno, msg):
+        findings.append((rule, relpath, lineno, msg))
+
+    for i, line in enumerate(lines, start=1):
+        for m in RE_AS_INT.finditer(line):
+            operand = cast_operand(line, m.start())
+            if RE_FLOAT_MARK.search(operand):
+                hit(
+                    "CAST-TRUNC",
+                    i,
+                    f"float -> {m.group(1)} `as` cast (`{operand.strip()} as "
+                    f"{m.group(1)}`) — use a units:: door or waive with the "
+                    f"rounding rationale",
+                )
+        m = RE_MAP.search(line)
+        if m:
+            hit(
+                "MAP-ITER",
+                i,
+                f"`{m.group(1)}` — hash iteration order is nondeterministic; "
+                f"use BTreeMap/BTreeSet or waive a keyed-only map",
+            )
+        m = RE_RAW_FIELD.search(line)
+        if m and any(
+            m.group(1).endswith(suf) and len(m.group(1)) > len(suf)
+            for suf in UNIT_SUFFIXES
+        ):
+            hit(
+                "RAW-UNIT",
+                i,
+                f"raw unit-suffixed field `{m.group(1)}: {m.group(2)}` — "
+                f"new quantities take a units:: newtype",
+            )
+
+    return [
+        f
+        for f in findings
+        if not any(owner in relpath for owner in OWNERS.get(f[0], ()))
+    ]
+
+
+def load_waivers():
+    waivers = []
+    if not os.path.exists(WAIVER_FILE):
+        return waivers
+    with open(WAIVER_FILE, encoding="utf-8") as fh:
+        for n, raw in enumerate(fh, start=1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if "#" not in line:
+                print(
+                    f"lint_units: {WAIVER_FILE}:{n}: waiver without a "
+                    f"`# justification` comment — refusing it",
+                    file=sys.stderr,
+                )
+                sys.exit(2)
+            body = line.split("#", 1)[0].split()
+            if len(body) != 2:
+                print(
+                    f"lint_units: {WAIVER_FILE}:{n}: expected "
+                    f"`RULE path # why`, got: {line}",
+                    file=sys.stderr,
+                )
+                sys.exit(2)
+            waivers.append({"rule": body[0], "path": body[1], "line": n, "used": False})
+    return waivers
+
+
+def collect_findings():
+    all_findings = []
+    for scan in SCAN_DIRS:
+        for root, _dirs, files in os.walk(scan):
+            for name in sorted(files):
+                if not name.endswith(".rs"):
+                    continue
+                path = os.path.join(root, name)
+                rel = os.path.relpath(path, REPO).replace(os.sep, "/")
+                with open(path, encoding="utf-8") as fh:
+                    all_findings.extend(lint_file(rel, fh.read().splitlines()))
+    return all_findings
+
+
+def main():
+    all_findings = collect_findings()
+    waivers = load_waivers()
+    unwaived = []
+    for rule, rel, lineno, msg in all_findings:
+        waived = False
+        for w in waivers:
+            if w["rule"] == rule and w["path"] in rel:
+                w["used"] = True
+                waived = True
+                break
+        if not waived:
+            unwaived.append((rule, rel, lineno, msg))
+
+    for rule, rel, lineno, msg in unwaived:
+        print(f"{rel}:{lineno}: [{rule}] {msg}")
+
+    stale = [w for w in waivers if not w["used"]]
+    for w in stale:
+        print(
+            f"lint_units: WARNING: stale waiver "
+            f"({WAIVER_FILE}:{w['line']}: {w['rule']} {w['path']}) matched nothing — remove it",
+            file=sys.stderr,
+        )
+
+    if unwaived:
+        print(
+            f"lint_units: {len(unwaived)} finding(s) — go through units:: "
+            f"or add a justified waiver to scripts/lint_units_waivers.txt",
+            file=sys.stderr,
+        )
+        return 1
+    suffix = f", {len(stale)} stale waiver(s)" if stale else ""
+    print(
+        f"lint_units: clean ({len(all_findings) - len(unwaived)} waived finding(s){suffix})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Unit tests for scripts/lint_units.py (stdlib only).
+
+Run from the repo root:
+    python3 -m unittest discover -s scripts -p "test_*.py"
+"""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import lint_units  # noqa: E402
+
+
+def lint(src, path="rust/src/somewhere/mod.rs"):
+    return [f[0] for f in lint_units.lint_file(path, src.splitlines())]
+
+
+class CastTrunc(unittest.TestCase):
+    def test_float_literal_cast_flagged(self):
+        self.assertEqual(lint("let b = (x * 255.0) as u8;"), ["CAST-TRUNC"])
+        self.assertEqual(lint("let n = (p * 1e9) as u64;"), ["CAST-TRUNC"])
+
+    def test_rounded_float_cast_still_flagged(self):
+        # explicit rounding is float evidence too: the waiver records the
+        # rounding rationale, the lint does not silently bless it
+        self.assertEqual(lint("let i = (x / y).round() as usize;"), ["CAST-TRUNC"])
+        self.assertEqual(lint("let k = (p * n as f64).ceil() as usize;"), ["CAST-TRUNC"])
+        self.assertEqual(lint("let k = frac.floor() as u64;"), ["CAST-TRUNC"])
+
+    def test_integer_casts_pass(self):
+        self.assertEqual(lint("let b = bytes as usize;"), [])
+        self.assertEqual(lint("let t = step as u64;"), [])
+        self.assertEqual(lint("let w = (v[0] as u32 as u64) << 32;"), [])
+        # int -> float is widening, not truncation
+        self.assertEqual(lint("let f = n as f64;"), [])
+
+    def test_operand_binding_not_line_binding(self):
+        # a float elsewhere on the line must not taint an integer cast
+        self.assertEqual(lint("comm.send(next, TAG + step as u64, p, 0.0)?;"), [])
+        # ...but the cast's own parenthesized operand is inspected
+        self.assertEqual(lint("f((a * 2.5) as usize, 7);"), ["CAST-TRUNC"])
+
+    def test_units_module_owns_the_rule(self):
+        src = "let e = (kib as f64 * 1024.0 / bpe).floor() as usize;"
+        self.assertEqual(lint(src, "rust/src/units/mod.rs"), [])
+        self.assertEqual(lint(src, "rust/src/bsp/mod.rs"), ["CAST-TRUNC"])
+
+    def test_comments_and_strings_ignored(self):
+        self.assertEqual(lint("// (x * 2.0) as usize"), [])
+        self.assertEqual(lint('let s = "(x * 2.0) as usize";'), [])
+
+
+class MapIter(unittest.TestCase):
+    def test_hash_containers_flagged(self):
+        self.assertEqual(lint("use std::collections::HashMap;"), ["MAP-ITER"])
+        self.assertEqual(lint("let mut seen = HashSet::new();"), ["MAP-ITER"])
+        self.assertEqual(lint("pending: HashMap<(usize, u64), VecDeque<Msg>>,"), ["MAP-ITER"])
+
+    def test_btree_containers_pass(self):
+        self.assertEqual(lint("use std::collections::BTreeMap;"), [])
+        self.assertEqual(lint("let mut m = BTreeMap::new();"), [])
+        self.assertEqual(lint("waiting: BTreeSet<usize>,"), [])
+
+
+class RawUnit(unittest.TestCase):
+    def test_new_raw_suffixed_field_flagged(self):
+        self.assertEqual(lint("    pub stall_s: f64,"), ["RAW-UNIT"])
+        self.assertEqual(lint("    pub spill_bytes: u64,"), ["RAW-UNIT"])
+        self.assertEqual(lint("    pub link_gbps: f32,"), ["RAW-UNIT"])
+        self.assertEqual(lint("    pub hint_bytes: Option<u64>,"), ["RAW-UNIT"])
+
+    def test_typed_fields_pass(self):
+        self.assertEqual(lint("    pub load_stall: Secs,"), [])
+        self.assertEqual(lint("    pub wire_inter_bytes: Bytes,"), [])
+        self.assertEqual(lint("    pub pcie_gbps: GbPerS,"), [])
+
+    def test_unsuffixed_and_private_fields_pass(self):
+        self.assertEqual(lint("    pub workers: usize,"), [])
+        # private fields are module-internal; the lint polices the API
+        self.assertEqual(lint("    total_bytes: u64,"), [])
+        # a bare suffix is not a unit-carrying name
+        self.assertEqual(lint("    pub _s: f64,"), [])
+
+
+class RepoIsClean(unittest.TestCase):
+    def test_tree_lints_clean_with_committed_waivers(self):
+        """The acceptance bar: zero unwaived findings on rust/src + benches."""
+        findings = lint_units.collect_findings()
+        waivers = lint_units.load_waivers()
+        for rule, rel, line, msg in findings:
+            matched = any(w["rule"] == rule and w["path"] in rel for w in waivers)
+            self.assertTrue(matched, f"unwaived: {rel}:{line} [{rule}] {msg}")
+
+    def test_waiver_count_is_pinned(self):
+        """Every waiver is a standing debt; growing the list is a deliberate
+        act that must show up in review as an edit to this pin."""
+        waivers = lint_units.load_waivers()
+        by_rule = {}
+        for w in waivers:
+            by_rule[w["rule"]] = by_rule.get(w["rule"], 0) + 1
+        self.assertEqual(
+            by_rule,
+            {"CAST-TRUNC": 5, "MAP-ITER": 3, "RAW-UNIT": 6},
+            "waiver census moved — fix the code through units:: or update "
+            "this pin alongside a justified new waiver",
+        )
+
+    def test_no_stale_waivers(self):
+        findings = lint_units.collect_findings()
+        for w in lint_units.load_waivers():
+            used = any(
+                w["rule"] == rule and w["path"] in rel for rule, rel, _l, _m in findings
+            )
+            self.assertTrue(used, f"stale waiver: {w['rule']} {w['path']}")
+
+    def test_waiver_without_justification_rejected(self):
+        import tempfile
+
+        with tempfile.NamedTemporaryFile("w", suffix=".txt", delete=False) as f:
+            f.write("CAST-TRUNC rust/src/data/mod.rs\n")  # no `# why`
+            bad = f.name
+        old = lint_units.WAIVER_FILE
+        lint_units.WAIVER_FILE = bad
+        try:
+            with self.assertRaises(SystemExit):
+                lint_units.load_waivers()
+        finally:
+            lint_units.WAIVER_FILE = old
+            os.unlink(bad)
+
+
+if __name__ == "__main__":
+    unittest.main()
