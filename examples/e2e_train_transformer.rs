@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut cfg = BspConfig::quick("transformer", workers, iters);
     cfg.scheme = Scheme::Subgd;
-    cfg.strategy = strategy;
+    cfg.plan.strategy = strategy;
     cfg.lr = LrSchedule::StepDecay { base: 3e-3, factor: 0.5, every: iters / 2 };
     cfg.momentum = 0.9;
     cfg.eval_every = (iters / 20).max(5);

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut cfg = BspConfig::quick("mlp", 2, 60);
     cfg.scheme = Scheme::Subgd;
-    cfg.strategy = StrategyKind::Asa;
+    cfg.plan.strategy = StrategyKind::Asa;
     cfg.lr = LrSchedule::Const { base: 0.05 };
     cfg.eval_every = 10;
 

@@ -24,7 +24,7 @@ fn sharded_contention_sweep() -> anyhow::Result<()> {
     let mut s1 = None;
     for servers in [1usize, 2, 4] {
         let mut cfg = EasgdConfig::quick("mlp", 8, 0);
-        cfg.servers = servers;
+        cfg.plan.servers = servers;
         cfg.tau = 1;
         cfg.topology = "copper".into();
         let probe = measure_sharded(&cfg, 1_000_000, 4, 2e-3, 1.0)?;

@@ -22,7 +22,7 @@ fn wfbp_e2e(rt: &Arc<Runtime>) -> anyhow::Result<()> {
     base.sim_model = Some("alexnet".into());
     for overlap in [OverlapMode::Post, OverlapMode::Wfbp] {
         let mut cfg = base.clone();
-        cfg.overlap = overlap;
+        cfg.plan.overlap = overlap;
         let rep = run_bsp(rt, &cfg)?;
         report(&format!("wfbp_e2e/mlp_simalexnet/{}/vtime", overlap.name()), rep.vtime_total, "s");
         report(

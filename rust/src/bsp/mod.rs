@@ -26,13 +26,14 @@ use anyhow::{anyhow, Context, Result};
 use crate::audit::{ChargeKind, Ledger};
 use crate::cluster::Topology;
 use crate::collectives::{
-    wfbp, CommReport, ExchangeCtx, OverlapMode, ReduceOp, StrategyKind, WfbpPlan, WireFormat,
+    wfbp, CommReport, ExchangeCtx, OverlapMode, ReduceOp, WfbpPlan, WireFormat,
 };
 use crate::data::{FeatureDataset, ImageDataset, ImageSpec, TokenStream};
 use crate::loader::{DecodeCache, LoaderConfig, LoaderReport, ParallelLoader};
 use crate::metrics::Breakdown;
 use crate::models;
 use crate::mpi::{self, Comm};
+use crate::plan::ExchangePlan;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::{LrSchedule, Scheme};
 use crate::simnet::LinkParams;
@@ -47,10 +48,9 @@ pub struct BspConfig {
     /// per-worker batch size (must have an AOT artifact)
     pub batch: usize,
     pub scheme: Scheme,
-    pub strategy: StrategyKind,
-    /// on-wire format of the exchange (`f32|f16|bf16|topk:<p>|onebit|sf`);
-    /// compressed formats wrap the strategy in the error-feedback codec
-    pub wire: WireFormat,
+    /// every exchange-shaping knob (strategy, wire, chunking, overlap):
+    /// one [`ExchangePlan`], fed by legacy keys/flags or `tmpi plan`
+    pub plan: ExchangePlan,
     pub lr: LrSchedule,
     pub momentum: f64,
     pub iters: usize,
@@ -76,20 +76,6 @@ pub struct BspConfig {
     pub exchange_momentum: bool,
     /// cross-rank parameter checksum every N iters (0 = off; test hook)
     pub integrity_every: usize,
-    /// KiB per pipeline chunk of the exchange (0 = monolithic exchange)
-    pub chunk_kib: usize,
-    /// overlap chunk transfers with the previous chunk's kernels; with
-    /// `false` chunks are priced serially (the ablation knob)
-    pub pipeline: bool,
-    /// when to exchange gradients relative to the backward pass (SUBGD
-    /// only): whole-vector after the step (`None`), layer buckets after
-    /// the step (`Post`, the ablation), or wait-free as each bucket's
-    /// gradients become ready (`Wfbp`)
-    pub overlap: OverlapMode,
-    /// KiB per WFBP gradient bucket, coalescing layers from the top of the
-    /// network down (0 = one bucket per layer); full-scale KiB when
-    /// `sim_model` is set
-    pub bucket_kib: usize,
 }
 
 impl BspConfig {
@@ -98,11 +84,11 @@ impl BspConfig {
     /// post-update weights, whose backward pass is already over. Checked
     /// at the top of [`run_bsp`]; pure so config handling can test it.
     pub fn validate_overlap(&self) -> Result<()> {
-        if self.overlap.bucketed() && self.scheme != Scheme::Subgd {
+        if self.plan.overlap.bucketed() && self.scheme != Scheme::Subgd {
             return Err(anyhow!(
                 "overlap={} exchanges gradients during the backward pass and so \
                  requires scheme=subgd (awagd exchanges post-update weights)",
-                self.overlap.name()
+                self.plan.overlap.name()
             ));
         }
         Ok(())
@@ -114,8 +100,7 @@ impl BspConfig {
             workers,
             batch: 0, // filled from manifest default at run time
             scheme: Scheme::Subgd,
-            strategy: StrategyKind::Asa,
-            wire: WireFormat::F32,
+            plan: ExchangePlan::default(),
             lr: LrSchedule::Const { base: 0.01 },
             momentum: 0.9,
             iters,
@@ -130,10 +115,6 @@ impl BspConfig {
             data_dir: None,
             exchange_momentum: false,
             integrity_every: 0,
-            chunk_kib: 0,
-            pipeline: true,
-            overlap: OverlapMode::None,
-            bucket_kib: 0,
         }
     }
 }
@@ -245,16 +226,16 @@ pub fn run_bsp(rt: &Arc<Runtime>, cfg: &BspConfig) -> Result<BspReport> {
     // (projected onto the proxy vector), else from the proxy's own
     // segment table.
     cfg.validate_overlap()?;
-    let wfbp_plan: Option<Arc<WfbpPlan>> = if cfg.overlap.bucketed() {
+    let wfbp_plan: Option<Arc<WfbpPlan>> = if cfg.plan.overlap.bucketed() {
         let table: Vec<(String, usize)> = match &cfg.sim_model {
             Some(fs) => models::full_scale_layer_table(&rt.manifest, fs)?,
             None => info.segments.iter().map(|(n, _, sz)| (n.clone(), *sz)).collect(),
         };
         // the bucket budget is *on-wire* KiB: elems come from the active
         // wire's bytes-per-elem, not a hardcoded 4 (the sizing bugfix)
-        let bucket_elems = Kib(cfg.bucket_kib).elems(cfg.strategy, cfg.wire).0;
+        let bucket_elems = Kib(cfg.plan.bucket_kib).elems(cfg.plan.strategy, cfg.plan.wire_format()).0;
         let mut plan = WfbpPlan::from_layers(&table, bucket_elems);
-        if cfg.wire == WireFormat::Sf {
+        if cfg.plan.wire_format() == WireFormat::Sf {
             // sufficient factors apply to all-fc buckets only; the fc dims
             // tables tell annotate_sf which those are
             let dims_model = cfg
@@ -393,15 +374,15 @@ fn worker_main(
     let mut last_loss = f64::NAN;
     let kernels = rt.kernels();
     // route the exchange through the chunked pipeline scheduler when asked
-    let strategy: Box<dyn crate::collectives::ExchangeStrategy> = if cfg.chunk_kib > 0 {
+    let strategy: Box<dyn crate::collectives::ExchangeStrategy> = if cfg.plan.chunk_kib > 0 {
         Box::new(crate::collectives::ChunkedPipeline::new(
-            cfg.strategy.build(cfg.wire),
+            cfg.plan.strategy.build(cfg.plan.wire_format()),
             // on-wire KiB per chunk (the sizing bugfix): wire-width-aware
-            Kib(cfg.chunk_kib).elems(cfg.strategy, cfg.wire).0.max(1),
-            cfg.pipeline,
+            Kib(cfg.plan.chunk_kib).elems(cfg.plan.strategy, cfg.plan.wire_format()).0.max(1),
+            cfg.plan.pipeline,
         ))
     } else {
-        cfg.strategy.build(cfg.wire)
+        cfg.plan.strategy.build(cfg.plan.wire_format())
     };
     let mut rng = crate::util::Rng::new(cfg.seed).fork(rank as u64 + 1);
 
@@ -516,7 +497,7 @@ fn worker_main(
                             &mut ctx,
                             backward,
                             comm_scale,
-                            cfg.overlap == OverlapMode::Wfbp,
+                            cfg.plan.overlap == OverlapMode::Wfbp,
                         )?;
                         // out.comm.sim_total() == out.comm_visible, so the
                         // ledger's clock pays exactly the visible time; the
@@ -843,7 +824,7 @@ mod tests {
         cfg.scheme = Scheme::Awagd;
         assert!(cfg.validate_overlap().is_ok(), "awagd without overlap is valid");
         for overlap in [OverlapMode::Post, OverlapMode::Wfbp] {
-            cfg.overlap = overlap;
+            cfg.plan.overlap = overlap;
             cfg.scheme = Scheme::Awagd;
             let err = cfg.validate_overlap().unwrap_err().to_string();
             assert!(

@@ -15,6 +15,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::bsp::BspConfig;
 use crate::collectives::{OverlapMode, StrategyKind, WireFormat};
 use crate::easgd::{EasgdConfig, Transport};
+use crate::plan::{validate_sizing_kib, ExchangePlan};
 use crate::sgd::{LrSchedule, Scheme};
 
 /// A parsed config value.
@@ -150,19 +151,6 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
     if let Some(v) = t.get("scheme") {
         cfg.scheme = Scheme::parse(v.as_str()?).ok_or_else(|| anyhow!("bad scheme"))?;
     }
-    if let Some(v) = t.get("strategy") {
-        cfg.strategy = StrategyKind::from_name(v.as_str()?)?;
-    }
-    // `exchange` is the preferred spelling (it also selects `hier:<inner>`
-    // compositions); it wins when both keys are present
-    if let Some(v) = t.get("exchange") {
-        cfg.strategy = StrategyKind::from_name(v.as_str()?)?;
-    }
-    // gradient wire format: dense (f32|f16|bf16) or compressed
-    // (topk:<p>|onebit|sf); compressed wires carry per-rank error feedback
-    if let Some(v) = t.get("wire") {
-        cfg.wire = WireFormat::from_name(v.as_str()?)?;
-    }
     if let Some(v) = t.get("momentum") {
         cfg.momentum = v.as_f64()?;
     }
@@ -196,21 +184,73 @@ pub fn bsp_from_table(table: &Table) -> Result<BspConfig> {
     if let Some(v) = t.get("exchange_momentum") {
         cfg.exchange_momentum = v.as_bool()?;
     }
-    if let Some(v) = t.get("chunk_kib") {
-        cfg.chunk_kib = v.as_usize()?;
-    }
-    if let Some(v) = t.get("pipeline") {
-        cfg.pipeline = v.as_bool()?;
-    }
-    // wait-free backprop: when to exchange gradients vs the backward pass
-    if let Some(v) = t.get("overlap") {
-        cfg.overlap = OverlapMode::from_name(v.as_str()?)?;
-    }
-    if let Some(v) = t.get("bucket_kib") {
-        cfg.bucket_kib = v.as_usize()?;
+    // legacy exchange knobs in [train] fill the embedded plan...
+    apply_plan_keys(&mut cfg.plan, t)?;
+    // ...and an explicit [plan] section (e.g. pasted from `tmpi plan`
+    // output) wins over them key by key
+    if let Some(p) = table.get("plan") {
+        apply_plan_keys(&mut cfg.plan, p)?;
     }
     cfg.lr = lr_from(t)?;
     Ok(cfg)
+}
+
+/// Apply exchange-plan keys from a key-value section over `plan`'s current
+/// values: `strategy`/`exchange` (the latter wins when both appear), `wire`,
+/// `chunk_kib`, `pipeline`, `overlap`, `bucket_kib`, `servers`. Written-out
+/// sizing zeros are rejected ([`validate_sizing_kib`]) — omitting the key
+/// is how the monolithic/off default is spelled.
+pub fn apply_plan_keys(plan: &mut ExchangePlan, t: &BTreeMap<String, Value>) -> Result<()> {
+    if let Some(v) = t.get("strategy") {
+        plan.strategy = StrategyKind::from_name(v.as_str()?)?;
+    }
+    // `exchange` is the preferred spelling (it also selects `hier:<inner>`
+    // compositions); it wins when both keys are present
+    if let Some(v) = t.get("exchange") {
+        plan.strategy = StrategyKind::from_name(v.as_str()?)?;
+    }
+    // gradient wire format: dense (f32|f16|bf16) or compressed
+    // (topk:<p>|onebit|sf); compressed wires carry per-rank error feedback
+    if let Some(v) = t.get("wire") {
+        plan.wire = Some(WireFormat::from_name(v.as_str()?)?);
+    }
+    if let Some(v) = t.get("chunk_kib") {
+        plan.chunk_kib = validate_sizing_kib("chunk_kib", v.as_usize()?)?;
+    }
+    if let Some(v) = t.get("pipeline") {
+        plan.pipeline = v.as_bool()?;
+    }
+    // wait-free backprop: when to exchange gradients vs the backward pass
+    if let Some(v) = t.get("overlap") {
+        plan.overlap = OverlapMode::from_name(v.as_str()?)?;
+    }
+    if let Some(v) = t.get("bucket_kib") {
+        plan.bucket_kib = validate_sizing_kib("bucket_kib", v.as_usize()?)?;
+    }
+    // parameter-server shards (EASGD; BSP ignores the axis); same message
+    // as ShardPlan::new's run-time validation
+    if let Some(v) = t.get("servers") {
+        plan.servers = v.as_usize()?;
+        if plan.servers == 0 {
+            bail!("servers must be >= 1 (got 0)");
+        }
+    }
+    Ok(())
+}
+
+/// Parse a standalone plan file (`tmpi plan` output / `--plan <path>`):
+/// a `[plan]` section applied over [`ExchangePlan::default`].
+pub fn plan_from_file(path: &Path) -> Result<ExchangePlan> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+    plan_from_text(&text)
+}
+
+pub fn plan_from_text(text: &str) -> Result<ExchangePlan> {
+    let table = parse(text)?;
+    let t = table.get("plan").ok_or_else(|| anyhow!("no [plan] section"))?;
+    let mut plan = ExchangePlan::default();
+    apply_plan_keys(&mut plan, t)?;
+    Ok(plan)
 }
 
 /// lr schedule keys: lr (base) + lr_policy = "const"|"step"|"poly" (+
@@ -275,36 +315,23 @@ pub fn easgd_from_file(path: &Path) -> Result<EasgdConfig> {
     if let Some(v) = t.get("sim_model") {
         cfg.sim_model = Some(v.as_str()?.to_string());
     }
-    if let Some(v) = t.get("chunk_kib") {
-        cfg.chunk_kib = v.as_usize()?;
-    }
-    if let Some(v) = t.get("pipeline") {
-        cfg.pipeline = v.as_bool()?;
-    }
-    // wire-format driver for the elastic exchange (asa16-family halves it)
-    if let Some(v) = t.get("exchange") {
-        cfg.exchange = StrategyKind::from_name(v.as_str()?)?;
+    // legacy exchange knobs in [easgd] fill the embedded plan (the
+    // `exchange` strategy name is the wire-format driver here), then an
+    // explicit [plan] section wins key by key
+    apply_plan_keys(&mut cfg.plan, t)?;
+    if let Some(p) = table.get("plan") {
+        apply_plan_keys(&mut cfg.plan, p)?;
     }
     // elastic exchange wire override: dense formats only — the center
     // pull/push ships full parameters, not gradients, so sparsifying
     // wires have no error-feedback stream to ride on
-    if let Some(v) = t.get("wire") {
-        let fmt = WireFormat::from_name(v.as_str()?)?;
+    if let Some(fmt) = cfg.plan.wire {
         if fmt.compressed() {
             bail!(
                 "easgd wire '{}' unsupported: elastic exchange ships full \
                  parameters, not gradients (use f32|f16|bf16)",
                 fmt.name()
             );
-        }
-        cfg.wire = Some(fmt);
-    }
-    // parameter-server shards (the center variable splits across them);
-    // same message as ShardPlan::new's run-time validation
-    if let Some(v) = t.get("servers") {
-        cfg.servers = v.as_usize()?;
-        if cfg.servers == 0 {
-            bail!("servers must be >= 1 (got 0)");
         }
     }
     cfg.lr = lr_from(t)?;
@@ -363,11 +390,11 @@ transport = "platoon-shm"
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.batch, 32);
         assert_eq!(cfg.scheme, Scheme::Subgd);
-        assert_eq!(cfg.strategy, StrategyKind::Asa16);
-        assert_eq!(cfg.wire, WireFormat::F16);
+        assert_eq!(cfg.plan.strategy, StrategyKind::Asa16);
+        assert_eq!(cfg.plan.wire, Some(WireFormat::F16));
         assert_eq!(cfg.sim_model.as_deref(), Some("alexnet"));
-        assert_eq!(cfg.chunk_kib, 4096);
-        assert!(cfg.pipeline);
+        assert_eq!(cfg.plan.chunk_kib, 4096);
+        assert!(cfg.plan.pipeline);
         assert!(cfg.use_loader);
         assert_eq!(cfg.prefetch_depth, 4);
         assert_eq!(cfg.cache_mib, 64);
@@ -385,11 +412,11 @@ transport = "platoon-shm"
         use crate::collectives::FlatKind;
         let t = parse("[train]\nstrategy = \"asa\"\nexchange = \"hier:asa16\"").unwrap();
         let cfg = bsp_from_table(&t).unwrap();
-        assert_eq!(cfg.strategy, StrategyKind::Hier { inner: FlatKind::Asa16 });
+        assert_eq!(cfg.plan.strategy, StrategyKind::Hier { inner: FlatKind::Asa16 });
         // and alone
         let t = parse("[train]\nexchange = \"hier:ring\"").unwrap();
         assert_eq!(
-            bsp_from_table(&t).unwrap().strategy,
+            bsp_from_table(&t).unwrap().plan.strategy,
             StrategyKind::Hier { inner: FlatKind::Ring }
         );
     }
@@ -399,7 +426,7 @@ transport = "platoon-shm"
         let p = std::env::temp_dir().join(format!("tmpi_cfg_ex_{}.toml", std::process::id()));
         std::fs::write(&p, "[easgd]\nworkers = 2\nexchange = \"hier:asa16\"").unwrap();
         let cfg = easgd_from_file(&p).unwrap();
-        assert!(cfg.exchange.half_wire());
+        assert!(cfg.plan.strategy.half_wire());
         std::fs::write(&p, "[easgd]\nexchange = \"hier:warp\"").unwrap();
         let err = easgd_from_file(&p).unwrap_err().to_string();
         assert!(err.contains("warp") && err.contains("asa16"), "{err}");
@@ -410,15 +437,15 @@ transport = "platoon-shm"
     fn overlap_and_bucket_kib_keys_parse_and_reject_bad_modes() {
         let t = parse("[train]\noverlap = \"wfbp\"\nbucket_kib = 4096").unwrap();
         let cfg = bsp_from_table(&t).unwrap();
-        assert_eq!(cfg.overlap, OverlapMode::Wfbp);
-        assert_eq!(cfg.bucket_kib, 4096);
+        assert_eq!(cfg.plan.overlap, OverlapMode::Wfbp);
+        assert_eq!(cfg.plan.bucket_kib, 4096);
         // the serial ablation and the default
         let t = parse("[train]\noverlap = \"post\"").unwrap();
-        assert_eq!(bsp_from_table(&t).unwrap().overlap, OverlapMode::Post);
+        assert_eq!(bsp_from_table(&t).unwrap().plan.overlap, OverlapMode::Post);
         let t = parse("[train]\nworkers = 2").unwrap();
         let cfg = bsp_from_table(&t).unwrap();
-        assert_eq!(cfg.overlap, OverlapMode::None);
-        assert_eq!(cfg.bucket_kib, 0);
+        assert_eq!(cfg.plan.overlap, OverlapMode::None);
+        assert_eq!(cfg.plan.bucket_kib, 0);
         // bad mode names the valid set
         let t = parse("[train]\noverlap = \"sometimes\"").unwrap();
         let err = bsp_from_table(&t).unwrap_err().to_string();
@@ -428,14 +455,14 @@ transport = "platoon-shm"
     #[test]
     fn wire_key_parses_compressed_formats_and_rejects_junk() {
         let t = parse("[train]\nwire = \"topk:0.01\"").unwrap();
-        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::TopK { p: 0.01 });
+        assert_eq!(bsp_from_table(&t).unwrap().plan.wire, Some(WireFormat::TopK { p: 0.01 }));
         let t = parse("[train]\nwire = \"onebit\"").unwrap();
-        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::OneBit);
+        assert_eq!(bsp_from_table(&t).unwrap().plan.wire, Some(WireFormat::OneBit));
         let t = parse("[train]\nwire = \"sf\"").unwrap();
-        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::Sf);
+        assert_eq!(bsp_from_table(&t).unwrap().plan.wire, Some(WireFormat::Sf));
         // default stays full-width
         let t = parse("[train]\nworkers = 2").unwrap();
-        assert_eq!(bsp_from_table(&t).unwrap().wire, WireFormat::F32);
+        assert_eq!(bsp_from_table(&t).unwrap().plan.wire_format(), WireFormat::F32);
         // bad name lists the valid family
         let t = parse("[train]\nwire = \"q4\"").unwrap();
         let err = bsp_from_table(&t).unwrap_err().to_string();
@@ -446,10 +473,10 @@ transport = "platoon-shm"
     fn easgd_wire_key_allows_dense_and_rejects_compressed() {
         let p = std::env::temp_dir().join(format!("tmpi_cfg_wire_{}.toml", std::process::id()));
         std::fs::write(&p, "[easgd]\nworkers = 2\nwire = \"bf16\"").unwrap();
-        assert_eq!(easgd_from_file(&p).unwrap().wire, Some(WireFormat::Bf16));
+        assert_eq!(easgd_from_file(&p).unwrap().plan.wire, Some(WireFormat::Bf16));
         // unset leaves the strategy-derived default
         std::fs::write(&p, "[easgd]\nworkers = 2").unwrap();
-        assert_eq!(easgd_from_file(&p).unwrap().wire, None);
+        assert_eq!(easgd_from_file(&p).unwrap().plan.wire, None);
         std::fs::write(&p, "[easgd]\nwire = \"onebit\"").unwrap();
         let err = easgd_from_file(&p).unwrap_err().to_string();
         assert!(err.contains("full") && err.contains("parameters"), "{err}");
@@ -464,7 +491,7 @@ transport = "platoon-shm"
         assert!(err.contains("asa16"), "{err}");
         // and case-insensitive names parse fine
         let t = parse("[train]\nstrategy = \"RING\"").unwrap();
-        assert_eq!(bsp_from_table(&t).unwrap().strategy, StrategyKind::Ring);
+        assert_eq!(bsp_from_table(&t).unwrap().plan.strategy, StrategyKind::Ring);
     }
 
     #[test]
@@ -483,14 +510,88 @@ transport = "platoon-shm"
         let p = std::env::temp_dir().join(format!("tmpi_cfg_srv_{}.toml", std::process::id()));
         std::fs::write(&p, "[easgd]\nworkers = 8\nservers = 4").unwrap();
         let cfg = easgd_from_file(&p).unwrap();
-        assert_eq!(cfg.servers, 4);
+        assert_eq!(cfg.plan.servers, 4);
         // default stays the single-server paper model
         std::fs::write(&p, "[easgd]\nworkers = 8").unwrap();
-        assert_eq!(easgd_from_file(&p).unwrap().servers, 1);
+        assert_eq!(easgd_from_file(&p).unwrap().plan.servers, 1);
         std::fs::write(&p, "[easgd]\nservers = 0").unwrap();
         let err = easgd_from_file(&p).unwrap_err().to_string();
         assert!(err.contains("servers"), "{err}");
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn written_out_sizing_zeros_are_rejected() {
+        // ISSUE 10 satellite: `chunk_kib = 0` / `bucket_kib = 0` used to
+        // pass straight through as_usize(); an explicit 0 is a typo'd real
+        // size, not a way to spell the default
+        for (section, key) in
+            [("train", "chunk_kib"), ("train", "bucket_kib"), ("easgd", "chunk_kib")]
+        {
+            let text = format!("[{section}]\nworkers = 2\n{key} = 0");
+            let t = parse(&text).unwrap();
+            let err = if section == "train" {
+                bsp_from_table(&t).unwrap_err().to_string()
+            } else {
+                let p =
+                    std::env::temp_dir().join(format!("tmpi_cfg_zero_{}.toml", std::process::id()));
+                std::fs::write(&p, &text).unwrap();
+                let e = easgd_from_file(&p).unwrap_err().to_string();
+                let _ = std::fs::remove_file(p);
+                e
+            };
+            assert!(err.contains(&format!("{key} = 0")), "{err}");
+            assert!(err.contains("1..=1048576"), "{err}");
+            assert!(err.contains("omit the key"), "{err}");
+        }
+        // the upper bound is enforced too
+        let t = parse("[train]\nchunk_kib = 1048577").unwrap();
+        let err = bsp_from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // omitting the keys keeps the monolithic/off defaults
+        let t = parse("[train]\nworkers = 2").unwrap();
+        let cfg = bsp_from_table(&t).unwrap();
+        assert_eq!(cfg.plan.chunk_kib, 0);
+        assert_eq!(cfg.plan.bucket_kib, 0);
+    }
+
+    #[test]
+    fn plan_section_wins_over_legacy_train_keys() {
+        let t = parse(
+            "[train]\nexchange = \"asa\"\nchunk_kib = 1024\n\n[plan]\nexchange = \"ring\"",
+        )
+        .unwrap();
+        let cfg = bsp_from_table(&t).unwrap();
+        // [plan] overrides the keys it names; the rest keep legacy values
+        assert_eq!(cfg.plan.strategy, StrategyKind::Ring);
+        assert_eq!(cfg.plan.chunk_kib, 1024);
+        // same layering for [easgd]
+        let p = std::env::temp_dir().join(format!("tmpi_cfg_plan_{}.toml", std::process::id()));
+        std::fs::write(&p, "[easgd]\nworkers = 4\nservers = 2\n\n[plan]\nservers = 4").unwrap();
+        assert_eq!(easgd_from_file(&p).unwrap().plan.servers, 4);
+        // compressed wires stay rejected even when smuggled via [plan]
+        std::fs::write(&p, "[easgd]\nworkers = 4\n\n[plan]\nwire = \"onebit\"").unwrap();
+        let err = easgd_from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("full") && err.contains("parameters"), "{err}");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn standalone_plan_files_parse_and_require_the_section() {
+        let plan = plan_from_text(
+            "# cached by tmpi plan\n[plan]\nexchange = \"asa16\"\nchunk_kib = 256\n\
+             pipeline = false\noverlap = \"wfbp\"\nbucket_kib = 4096\nservers = 2",
+        )
+        .unwrap();
+        assert_eq!(plan.strategy, StrategyKind::Asa16);
+        assert_eq!(plan.chunk_kib, 256);
+        assert!(!plan.pipeline);
+        assert_eq!(plan.overlap, OverlapMode::Wfbp);
+        assert_eq!(plan.bucket_kib, 4096);
+        assert_eq!(plan.servers, 2);
+        assert_eq!(plan.wire, None);
+        let err = plan_from_text("[train]\nexchange = \"asa\"").unwrap_err().to_string();
+        assert!(err.contains("[plan]"), "{err}");
     }
 
     #[test]

@@ -237,7 +237,7 @@ impl Session {
             let mut cfg = BspConfig::quick(model, k, iters);
             cfg.batch = batch;
             cfg.scheme = Scheme::Subgd;
-            cfg.strategy = strategy;
+            cfg.plan.strategy = strategy;
             cfg.lr = match model {
                 // GoogLeNet policy (footnote 13): poly 0.5
                 "googlenet" => LrSchedule::Poly { base: lrs[i], power: 0.5, max_iters: iters },

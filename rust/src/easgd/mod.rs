@@ -39,6 +39,7 @@ use crate::data::{FeatureDataset, ImageDataset, ImageSpec};
 use crate::metrics::Breakdown;
 use crate::models;
 use crate::mpi::{self, tags, Payload};
+use crate::plan::ExchangePlan;
 use crate::precision::Wire;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sgd::LrSchedule;
@@ -82,29 +83,17 @@ pub struct EasgdConfig {
     pub seed: u64,
     /// scale exchange time to a full-scale model (like BSP's sim_model)
     pub sim_model: Option<String>,
-    /// KiB per pipeline chunk of the elastic exchange (0 = monolithic)
-    pub chunk_kib: usize,
-    /// stream chunks so the server's elastic update of chunk i−1 overlaps
-    /// chunk i's arrival (only meaningful with `chunk_kib > 0`)
-    pub pipeline: bool,
-    /// Wire-format driver for the elastic exchange (`exchange = "..."` in
-    /// the TOML, same names as BSP): an `asa16`-family strategy (`asa16`,
-    /// `hier:asa16`) moves w/c as f16 halves — half the priced bytes, real
-    /// rounding on the payload. EASGD's exchange is worker↔server
-    /// point-to-point, so the collective *structure* of the name has no
-    /// effect here; only its wire format does.
-    pub exchange: StrategyKind,
-    /// Explicit elastic wire override (`wire = "f32|f16|bf16"`). `None`
-    /// derives the wire from `exchange` (asa16-family implies f16 — the
-    /// historical behavior). Compressed formats (topk/onebit/sf) are
-    /// rejected at the config/CLI layer: the elastic exchange ships full
-    /// parameters, not gradients, so there is no error-feedback stream for
-    /// a sparsifier to ride on.
-    pub wire: Option<WireFormat>,
-    /// Parameter-server shards: the center variable splits into this many
-    /// rank-segment-aligned slices, one server rank (own simulated GPU)
-    /// and one independent request queue per slice.
-    pub servers: usize,
+    /// Every exchange-shaping knob in one [`ExchangePlan`]. `plan.strategy`
+    /// is the wire-format *driver* here (EASGD's exchange is worker↔server
+    /// point-to-point, so only the name's wire matters: an asa16-family
+    /// strategy moves w/c as f16 halves); `plan.wire` is the explicit dense
+    /// override (compressed formats are rejected at the config/CLI layer —
+    /// the elastic exchange ships full parameters, not gradients, so there
+    /// is no error-feedback stream for a sparsifier to ride on);
+    /// `plan.servers` shards the center variable into rank-segment-aligned
+    /// slices, one server rank and one request queue per slice. BSP-only
+    /// axes (`overlap`, `bucket_kib`) are ignored.
+    pub plan: ExchangePlan,
 }
 
 impl EasgdConfig {
@@ -123,11 +112,7 @@ impl EasgdConfig {
             transport: Transport::CudaAwareMpi,
             seed: 42,
             sim_model: None,
-            chunk_kib: 0,
-            pipeline: true,
-            exchange: StrategyKind::Asa,
-            wire: None,
-            servers: 1,
+            plan: ExchangePlan::default(),
         }
     }
 
@@ -135,14 +120,14 @@ impl EasgdConfig {
     /// `wire` override wins; otherwise an asa16-family `exchange` implies
     /// f16. `None` means full-width f32 (no packing).
     pub fn elastic_wire(&self) -> Option<Wire> {
-        match self.wire {
+        match self.plan.wire {
             Some(WireFormat::F32) => None,
             Some(WireFormat::F16) => Some(Wire::F16),
             Some(WireFormat::Bf16) => Some(Wire::Bf16),
             // config/CLI reject compressed formats here; treat any that
             // slip through as full-width rather than corrupt the payload
             Some(_) => None,
-            None => self.exchange.half_wire().then_some(Wire::F16),
+            None => self.plan.strategy.half_wire().then_some(Wire::F16),
         }
     }
 }
@@ -229,10 +214,10 @@ fn server_update_cost(transport: Transport, links: &LinkParams, bytes: u64) -> f
 /// `full - down_wire`.
 fn server_handle_cost(cfg: &EasgdConfig, links: &LinkParams, bytes: u64, down_wire: f64) -> f64 {
     let full = server_update_cost(cfg.transport, links, bytes);
-    if cfg.chunk_kib == 0 || !cfg.pipeline {
+    if cfg.plan.chunk_kib == 0 || !cfg.plan.pipeline {
         return full;
     }
-    let chunks = (bytes as usize).div_ceil(cfg.chunk_kib * 1024).max(1) as f64;
+    let chunks = (bytes as usize).div_ceil(cfg.plan.chunk_kib * 1024).max(1) as f64;
     // updates of chunks 0..m-1 overlap the arrival of chunks 1..m
     let hidden = (full - full / chunks).min(down_wire * (chunks - 1.0) / chunks).max(0.0);
     full - hidden
@@ -259,7 +244,7 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
 
     // worker GPUs 0..k-1, shard servers on GPUs k..k+S-1 (each its own
     // simulated GPU; own nodes on mosaic)
-    let plan = Arc::new(ShardPlan::new(info.param_count, cfg.workers, cfg.servers)?);
+    let plan = Arc::new(ShardPlan::new(info.param_count, cfg.workers, cfg.plan.servers)?);
     let topo = Topology::by_name(&cfg.topology, plan.world_size())
         .ok_or_else(|| anyhow!("unknown topology"))?;
     let links = LinkParams::default();
@@ -341,8 +326,8 @@ pub fn run_easgd(rt: &Arc<Runtime>, cfg: &EasgdConfig) -> Result<EasgdReport> {
         iters: cfg.iters,
         tau: cfg.tau,
         alpha: cfg.alpha,
-        servers: cfg.servers,
-        shard_busy: vec![0.0; cfg.servers],
+        servers: cfg.plan.servers,
+        shard_busy: vec![0.0; cfg.plan.servers],
         ..Default::default()
     };
     let mut exchanges = 0usize;
@@ -560,16 +545,16 @@ mod tests {
         let mut cfg = EasgdConfig::quick("mlp", 4, 10);
         let full = server_handle_cost(&cfg, &links, bytes, 1.0);
         assert!(full > 0.0);
-        cfg.chunk_kib = 1024; // 8 chunks; ample wire to hide under
+        cfg.plan.chunk_kib = 1024; // 8 chunks; ample wire to hide under
         let piped = server_handle_cost(&cfg, &links, bytes, 1.0);
         assert!((piped - full / 8.0).abs() < 1e-15, "piped={piped} full={full}");
         // updates cannot hide under wire time that does not exist
         assert_eq!(server_handle_cost(&cfg, &links, bytes, 0.0), full);
-        cfg.chunk_kib = 4; // absurdly fine chunking must not price below
+        cfg.plan.chunk_kib = 4; // absurdly fine chunking must not price below
         let tiny_wire = full * 0.25;
         let clamped = server_handle_cost(&cfg, &links, bytes, tiny_wire);
         assert!(clamped >= full - tiny_wire, "clamped={clamped} full={full}");
-        cfg.pipeline = false;
+        cfg.plan.pipeline = false;
         assert_eq!(server_handle_cost(&cfg, &links, bytes, 1.0), full);
     }
 
@@ -582,9 +567,9 @@ mod tests {
         assert!(half < full);
         // the knob that selects it
         let mut cfg = EasgdConfig::quick("mlp", 2, 10);
-        assert!(!cfg.exchange.half_wire());
-        cfg.exchange = StrategyKind::from_name("hier:asa16").unwrap();
-        assert!(cfg.exchange.half_wire());
+        assert!(!cfg.plan.strategy.half_wire());
+        cfg.plan.strategy = StrategyKind::from_name("hier:asa16").unwrap();
+        assert!(cfg.plan.strategy.half_wire());
     }
 
     #[test]

@@ -397,7 +397,7 @@ pub fn probe_center(elems: usize) -> Vec<f32> {
 }
 
 /// Comm-only contention probe: `cfg.workers` workers exchange an
-/// `elems`-element vector against `cfg.servers` shard queues every round,
+/// `elems`-element vector against `cfg.plan.servers` shard queues every round,
 /// advancing their clocks by `compute_s` between exchanges — the EASGD
 /// queueing model without a `Runtime` (benches and the differential suite
 /// run this without artifacts). Real buffers move; τ is effectively 1.
@@ -408,7 +408,7 @@ pub fn measure_sharded(
     compute_s: f64,
     comm_scale: f64,
 ) -> Result<ShardProbe> {
-    let plan = Arc::new(ShardPlan::new(elems, cfg.workers, cfg.servers)?);
+    let plan = Arc::new(ShardPlan::new(elems, cfg.workers, cfg.plan.servers)?);
     let topo = Topology::by_name(&cfg.topology, plan.world_size())
         .ok_or_else(|| anyhow!("unknown topology '{}'", cfg.topology))?;
     let links = LinkParams::default();
@@ -531,14 +531,14 @@ mod tests {
     #[test]
     fn prices_scale_with_slice_bytes_and_wire_format() {
         let mut cfg = EasgdConfig::quick("mlp", 4, 1);
-        cfg.servers = 2;
+        cfg.plan.servers = 2;
         cfg.topology = "mosaic".into();
         let plan = ShardPlan::new(1 << 20, 4, 2).unwrap();
         let topo = Topology::by_name("mosaic", plan.world_size()).unwrap();
         let links = LinkParams::default();
         let f32p = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
         assert_eq!(f32p.wire, None);
-        cfg.exchange = StrategyKind::Asa16;
+        cfg.plan.strategy = StrategyKind::Asa16;
         let f16p = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
         assert_eq!(f16p.wire, Some(Wire::F16));
         for j in 0..2 {
@@ -550,12 +550,12 @@ mod tests {
             }
         }
         // an explicit dense override wins over the strategy-derived default
-        cfg.wire = Some(crate::collectives::WireFormat::F32);
+        cfg.plan.wire = Some(crate::collectives::WireFormat::F32);
         let forced = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
         assert_eq!(forced.wire, None);
         assert_eq!(forced.wire_half[0][0], f32p.wire_half[0][0]);
-        cfg.exchange = StrategyKind::Asa;
-        cfg.wire = Some(crate::collectives::WireFormat::Bf16);
+        cfg.plan.strategy = StrategyKind::Asa;
+        cfg.plan.wire = Some(crate::collectives::WireFormat::Bf16);
         let bf = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
         assert_eq!(bf.wire, Some(Wire::Bf16));
         assert_eq!(bf.wire_half[0][0], f16p.wire_half[0][0]);
@@ -568,13 +568,13 @@ mod tests {
     #[test]
     fn chunk_pipelining_shrinks_handle_per_shard() {
         let mut cfg = EasgdConfig::quick("mlp", 2, 1);
-        cfg.servers = 2;
+        cfg.plan.servers = 2;
         let plan = ShardPlan::new(2 << 20, 2, 2).unwrap(); // 4 MiB slices
         let topo = Topology::by_name("mosaic", plan.world_size()).unwrap();
         let links = LinkParams::default();
         let mono = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
-        cfg.chunk_kib = 256;
-        cfg.pipeline = true;
+        cfg.plan.chunk_kib = 256;
+        cfg.plan.pipeline = true;
         let piped = ShardPrices::new(&cfg, &topo, &links, &plan, 1.0);
         assert!(piped.handle[0][0] < mono.handle[0][0]);
         assert_eq!(piped.wire_half[0][0], mono.wire_half[0][0]);

@@ -182,6 +182,29 @@
 //! through exhaustive delivery schedules and real-time perturbations,
 //! asserting bit-identical centers/params/reports for each.
 //!
+//! ## Exchange planner (`plan` / `tmpi plan`)
+//!
+//! The knobs above — exchange strategy, wire format, `chunk_kib`,
+//! `pipeline`, `overlap`, `bucket_kib`, `servers` — used to live as
+//! scattered fields on `BspConfig`/`EasgdConfig`. They are now one value:
+//! [`plan::ExchangePlan`], the single exchange configuration both engines
+//! consume and every legacy TOML key / CLI flag parses into
+//! ([`config::apply_plan_keys`]; a `[plan]` section overrides legacy
+//! spellings). On top of that struct sits the planner: [`plan::search`]
+//! sweeps the exchange space with the same simnet probes the benches use
+//! (`coordinator::probe_exchange_wire`, `probe_wfbp`,
+//! `easgd::shard::measure_sharded`) — exhaustive over the discrete axes
+//! (strategy × overlap × servers), greedy with pruning over the
+//! `chunk_kib`/`bucket_kib` ladders — and is guaranteed never to score
+//! worse than any hand-picked default because the defaults are scored
+//! first under the same objective. `tmpi plan` emits the winner as a
+//! `[plan]` TOML cached under a `(model, topology, …)`
+//! [`plan::PlanInputs::fingerprint`]; `tmpi train --plan auto` /
+//! `tmpi easgd --plan auto` load (or rebuild) the cached plan, and
+//! explicit flags still win over a loaded plan.
+//! `scripts/verify_plan_bands.py` is the stdlib twin that pins
+//! `bench_plan`'s scores in CI.
+//!
 //! ## Dimensional types (`units`)
 //!
 //! The pricing model's quantities carry their dimension in the type:
@@ -213,6 +236,7 @@ pub mod loader;
 pub mod metrics;
 pub mod models;
 pub mod mpi;
+pub mod plan;
 pub mod precision;
 pub mod runtime;
 pub mod sgd;

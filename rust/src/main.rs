@@ -1,8 +1,9 @@
 //! `tmpi` — the Theano-MPI-rs launcher (the paper's process-management CLI).
 //!
 //! ```text
-//! tmpi train  [--config run.toml] [--model m] [--workers k] [--iters n] ...
-//! tmpi easgd  [--config run.toml] [--alpha a] [--tau t] ...
+//! tmpi train  [--config run.toml] [--plan auto|file.toml] [--model m] ...
+//! tmpi easgd  [--config run.toml] [--plan auto|file.toml] [--alpha a] ...
+//! tmpi plan   [--model m] [--batch b] [--workers k] [--topology t] [--mode bsp|easgd]
 //! tmpi repro  <fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all> [--iters n]
 //! tmpi topo   <copper|mosaic>
 //! tmpi info
@@ -19,8 +20,13 @@ use theano_mpi::bsp::{run_bsp, BspConfig};
 use theano_mpi::collectives::{OverlapMode, StrategyKind, WireFormat};
 use theano_mpi::config;
 use theano_mpi::easgd::{run_easgd, EasgdConfig, Transport};
+use theano_mpi::models;
+use theano_mpi::plan::{self, validate_sizing_kib, ExchangePlan, PlanInputs, PlanMode};
 use theano_mpi::sgd::{LrSchedule, Scheme};
 use theano_mpi::Session;
+
+/// Where `tmpi plan` / `--plan auto` cache fingerprinted plan files.
+const PLAN_CACHE_DIR: &str = "runs/plans";
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 /// Flags live in a `BTreeMap` so anything that enumerates them (errors,
@@ -90,14 +96,14 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
         cfg.scheme = Scheme::parse(s).ok_or_else(|| anyhow!("bad --scheme"))?;
     }
     if let Some(s) = args.get("strategy") {
-        cfg.strategy = StrategyKind::from_name(s)?;
+        cfg.plan.strategy = StrategyKind::from_name(s)?;
     }
     // preferred spelling; also selects hier:<inner> compositions
     if let Some(s) = args.get("exchange") {
-        cfg.strategy = StrategyKind::from_name(s)?;
+        cfg.plan.strategy = StrategyKind::from_name(s)?;
     }
     if let Some(w) = args.get("wire") {
-        cfg.wire = WireFormat::from_name(w)?;
+        cfg.plan.wire = Some(WireFormat::from_name(w)?);
     }
     if let Some(lr) = args.f64_("lr")? {
         cfg.lr = LrSchedule::Const { base: lr };
@@ -127,22 +133,67 @@ fn apply_bsp_flags(cfg: &mut BspConfig, args: &Args) -> Result<()> {
         cfg.seed = s as u64;
     }
     if let Some(c) = args.usize_("chunk-kib")? {
-        cfg.chunk_kib = c;
+        cfg.plan.chunk_kib = validate_sizing_kib("--chunk-kib", c)?;
     }
     if let Some(p) = args.get("pipeline") {
-        cfg.pipeline = match p {
+        cfg.plan.pipeline = match p {
             "true" => true,
             "false" => false,
             _ => bail!("bad --pipeline (true|false)"),
         };
     }
     if let Some(o) = args.get("overlap") {
-        cfg.overlap = OverlapMode::from_name(o)?;
+        cfg.plan.overlap = OverlapMode::from_name(o)?;
     }
     if let Some(b) = args.usize_("bucket-kib")? {
-        cfg.bucket_kib = b;
+        cfg.plan.bucket_kib = validate_sizing_kib("--bucket-kib", b)?;
     }
     Ok(())
+}
+
+/// The full-scale model the planner prices for a runnable config: an
+/// explicit `sim_model` wins, else the proxy's full-scale counterpart,
+/// else the model name itself.
+fn plan_model(model: &str, sim_model: &Option<String>) -> String {
+    sim_model
+        .clone()
+        .or_else(|| models::full_scale_of(model).map(str::to_string))
+        .unwrap_or_else(|| model.to_string())
+}
+
+/// Resolve `--plan auto|<path>` into an [`ExchangePlan`]. `auto` searches
+/// (or reloads) the fingerprinted cache entry under [`PLAN_CACHE_DIR`].
+fn resolve_plan(
+    spec: &str,
+    model: String,
+    batch: usize,
+    workers: usize,
+    topology: String,
+    cuda_aware: bool,
+    mode: PlanMode,
+) -> Result<ExchangePlan> {
+    if spec != "auto" {
+        let p = plan::load_plan(std::path::Path::new(spec))?;
+        println!("plan: {} (from {spec})", p.summary());
+        return Ok(p);
+    }
+    let inputs = PlanInputs {
+        model,
+        // the planner needs a real batch for the backward-overlap budget;
+        // 32 is the paper's common per-worker batch when none is set yet
+        batch: if batch == 0 { 32 } else { batch },
+        workers,
+        topology,
+        cuda_aware,
+        mode,
+    };
+    let (p, path, hit) = plan::auto_plan(&inputs, std::path::Path::new(PLAN_CACHE_DIR))?;
+    println!(
+        "plan: {} ({} {path:?})",
+        p.summary(),
+        if hit { "cached" } else { "searched ->" }
+    );
+    Ok(p)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -151,6 +202,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => BspConfig::quick("mlp", 2, 50),
     };
     apply_bsp_flags(&mut cfg, args)?;
+    if let Some(spec) = args.get("plan") {
+        cfg.plan = resolve_plan(
+            spec,
+            plan_model(&cfg.model, &cfg.sim_model),
+            cfg.batch,
+            cfg.workers,
+            cfg.topology.clone(),
+            cfg.cuda_aware,
+            PlanMode::Bsp,
+        )?;
+        // explicit exchange flags still win over the loaded plan
+        apply_bsp_flags(&mut cfg, args)?;
+    }
     if cfg.eval_every == 0 {
         cfg.eval_every = (cfg.iters / 10).max(1);
     }
@@ -161,7 +225,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.workers,
         cfg.iters,
         cfg.scheme.name(),
-        cfg.strategy.name(),
+        cfg.plan.strategy.name(),
         cfg.topology
     );
     let rep = run_bsp(&sess.rt, &cfg)?;
@@ -186,10 +250,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         rep.breakdown.comm(),
         rep.breakdown.kernel_share_of_comm() * 100.0
     );
-    if cfg.overlap.bucketed() {
+    if cfg.plan.overlap.bucketed() {
         println!(
             "overlap ({}): comm hidden under backward = {:.2}s, overlap_fraction = {:.1}%",
-            cfg.overlap.name(),
+            cfg.plan.overlap.name(),
             rep.breakdown.comm_hidden,
             rep.overlap_fraction * 100.0
         );
@@ -252,24 +316,39 @@ fn cmd_easgd(args: &Args) -> Result<()> {
             _ => bail!("bad --transport (mpi|shm)"),
         };
     }
-    if let Some(s) = args.usize_("servers")? {
-        cfg.servers = s;
-    }
     if let Some(t) = args.get("topology") {
         cfg.topology = t.to_string();
     }
+    // resolve --plan before the per-knob flags so explicit flags win
+    if let Some(spec) = args.get("plan") {
+        cfg.plan = resolve_plan(
+            spec,
+            plan_model(&cfg.model, &cfg.sim_model),
+            cfg.batch,
+            cfg.workers,
+            cfg.topology.clone(),
+            true,
+            PlanMode::Easgd,
+        )?;
+    }
+    if let Some(s) = args.usize_("servers")? {
+        if s == 0 {
+            bail!("--servers must be >= 1 (got 0)");
+        }
+        cfg.plan.servers = s;
+    }
     if let Some(c) = args.usize_("chunk-kib")? {
-        cfg.chunk_kib = c;
+        cfg.plan.chunk_kib = validate_sizing_kib("--chunk-kib", c)?;
     }
     if let Some(p) = args.get("pipeline") {
-        cfg.pipeline = match p {
+        cfg.plan.pipeline = match p {
             "true" => true,
             "false" => false,
             _ => bail!("bad --pipeline (true|false)"),
         };
     }
     if let Some(s) = args.get("exchange") {
-        cfg.exchange = StrategyKind::from_name(s)?;
+        cfg.plan.strategy = StrategyKind::from_name(s)?;
     }
     // dense wires only: the elastic exchange ships full parameters
     if let Some(w) = args.get("wire") {
@@ -277,7 +356,7 @@ fn cmd_easgd(args: &Args) -> Result<()> {
         if fmt.compressed() {
             bail!("--wire {}: elastic exchange ships full parameters (use f32|f16|bf16)", fmt.name());
         }
-        cfg.wire = Some(fmt);
+        cfg.plan.wire = Some(fmt);
     }
     if cfg.eval_every == 0 {
         cfg.eval_every = (cfg.iters / 5).max(1);
@@ -287,7 +366,7 @@ fn cmd_easgd(args: &Args) -> Result<()> {
         "easgd {} x{} workers, {} server shard(s), alpha={} tau={} transport={}",
         cfg.model,
         cfg.workers,
-        cfg.servers,
+        cfg.plan.servers,
         cfg.alpha,
         cfg.tau,
         cfg.transport.name()
@@ -307,6 +386,45 @@ fn cmd_easgd(args: &Args) -> Result<()> {
             .collect::<Vec<_>>()
             .join(" ")
     );
+    Ok(())
+}
+
+/// `tmpi plan` — search the exchange space for a model + fabric, print the
+/// scored candidates, and cache the winner under its fingerprint.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let mode = PlanMode::from_name(args.get("mode").unwrap_or("bsp"))?;
+    let model = plan_model(args.get("model").unwrap_or("alexnet"), &None);
+    let topology = args
+        .get("topology")
+        .map(str::to_string)
+        .unwrap_or_else(|| models::paper_topology(&model).to_string());
+    let inputs = PlanInputs {
+        model,
+        batch: args.usize_("batch")?.unwrap_or(32),
+        workers: args.usize_("workers")?.unwrap_or(8),
+        topology,
+        cuda_aware: args.get("cuda-aware").map(|c| c == "true").unwrap_or(true),
+        mode,
+    };
+    println!(
+        "planning {} batch={} k={} topo={} mode={} (fingerprint {:016x})",
+        inputs.model,
+        inputs.batch,
+        inputs.workers,
+        inputs.topology,
+        inputs.mode.name(),
+        inputs.fingerprint()?
+    );
+    let choice = plan::search(&inputs)?;
+    println!("scored {} candidates; hand-picked baselines:", choice.evaluated);
+    for (p, s) in &choice.default_scores {
+        println!("  {:<44} {:.6e} s", p.summary(), s.0);
+    }
+    println!("winner: {:<36} {:.6e} s", choice.plan.summary(), choice.score.0);
+    println!();
+    print!("{}", choice.plan.to_toml());
+    let path = plan::store_plan(&inputs, &choice, std::path::Path::new(PLAN_CACHE_DIR))?;
+    println!("\ncached -> {path:?} (tmpi train --plan auto picks this up)");
     Ok(())
 }
 
@@ -370,7 +488,7 @@ fn cmd_info() -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tmpi <train|easgd|repro|topo|info> [flags]\n\
+        "usage: tmpi <train|easgd|plan|repro|topo|info> [flags]\n\
          \n\
          tmpi train --model mlp --workers 4 --iters 100 --exchange asa --scheme subgd\n\
          tmpi train --model mlp --workers 8 --chunk-kib 256 --pipeline true\n\
@@ -381,6 +499,10 @@ fn usage() -> ! {
          tmpi train --config examples/configs/alexnet_bsp.toml\n\
          tmpi easgd --model mlp --workers 4 --alpha 0.5 --tau 1 --transport mpi\n\
          tmpi easgd --model mlp --workers 8 --tau 1 --servers 4 --topology copper\n\
+         tmpi plan --model alexnet --batch 128 --workers 8 --topology mosaic  # search + cache\n\
+         tmpi plan --model googlenet --workers 4 --mode easgd\n\
+         tmpi train --model alexnet --workers 8 --plan auto      # cached/searched plan\n\
+         tmpi train --config run.toml --plan runs/plans/alexnet-mosaic-k8-0123456789abcdef.toml\n\
          tmpi repro <fig3|table1|table2|table3|fig4|fig5|easgd|easgd-grid|all> [--iters n]\n\
          tmpi topo <copper|mosaic>\n\
          tmpi info"
@@ -395,6 +517,7 @@ fn main() -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "easgd" => cmd_easgd(&args),
+        "plan" => cmd_plan(&args),
         "repro" => cmd_repro(&args),
         "topo" => {
             let name = args.positional.first().map(|s| s.as_str()).unwrap_or("copper");

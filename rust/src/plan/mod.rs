@@ -1,0 +1,707 @@
+//! Exchange auto-tuner: one [`ExchangePlan`] for every exchange knob, and
+//! the `tmpi plan` search that fills it in.
+//!
+//! The paper hand-tunes its exchange per model and cluster (AlexNet vs
+//! GoogLeNet, 2→8 GPUs, BSP vs EASGD); our reproduction exposes a config
+//! space — exchange × chunk_kib × bucket_kib × overlap × servers × wire ×
+//! topology — far too large for hand-picking, while one simnet evaluation
+//! costs microseconds. [`search`] walks that space with the runtime-free
+//! probes ([`crate::coordinator::probe_exchange_wire`],
+//! [`crate::coordinator::probe_wfbp`], [`crate::easgd::shard::measure_sharded`]):
+//! exhaustive over the discrete axes (strategy, overlap, servers), greedy
+//! over the chunk/bucket size ladders (each ladder walk stops at the first
+//! rung that fails to improve — the cost curves are unimodal in practice,
+//! and the hand-picked defaults are scored first so pruning can never cost
+//! the never-loses guarantee).
+//!
+//! The winning plan is emitted as a `[plan]` TOML section and cached under
+//! a `(model, topology)` slug plus an FNV-1a fingerprint of everything the
+//! score depends on (mode, batch, workers, cuda_aware, topology, and the
+//! full-scale layer table) — a stale cache entry is therefore *unreachable*:
+//! any input change moves the fingerprint and so the file name.
+//!
+//! Search-space scope: the default search covers the flat strategies
+//! (`ar|asa|asa16|ring`) with the dense f32 wire, overlap off or wait-free,
+//! because those are the configurations the stdlib Python twin
+//! (`scripts/verify_plan_bands.py`) can price to float equality — the CI
+//! bench gate pins every planner score against it. `hier:<inner>` and the
+//! compressed wires remain reachable through explicit plan files
+//! (`tmpi train --plan <path>`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::Topology;
+use crate::collectives::wfbp::BWD_FRACTION;
+use crate::collectives::{OverlapMode, StrategyKind, WireFormat};
+use crate::coordinator::{probe_exchange_wire, probe_wfbp};
+use crate::easgd::{shard, EasgdConfig};
+use crate::models;
+use crate::units::{Kib, Secs};
+
+/// Bump when the fingerprinted input set or the TOML schema changes: old
+/// cache entries must miss rather than be misread.
+pub const PLAN_FORMAT_VERSION: u64 = 1;
+
+/// Upper bound on `chunk_kib` / `bucket_kib` (1 GiB): anything larger than
+/// the largest full-scale model is a typo, not a tuning choice.
+pub const SIZING_KIB_MAX: usize = 1_048_576;
+
+/// Validate an *explicitly written* sizing knob (`chunk_kib` / `bucket_kib`
+/// in TOML, `--chunk-kib` / `--bucket-kib` on the CLI). `0` spells the
+/// monolithic/off behavior only by omission — written out it is almost
+/// always a typo'd real size, so it is rejected like any other bad value.
+pub fn validate_sizing_kib(key: &str, kib: usize) -> Result<usize> {
+    if kib == 0 || kib > SIZING_KIB_MAX {
+        bail!(
+            "{key} = {kib} out of range (valid: 1..={SIZING_KIB_MAX} KiB; \
+             omit the key for the monolithic/off default)"
+        );
+    }
+    Ok(kib)
+}
+
+/// Every exchange-shaping knob in one place: how gradients (BSP) or
+/// parameters (EASGD) move between ranks. `BspConfig`/`EasgdConfig` embed
+/// one of these instead of loose fields; legacy TOML keys and CLI flags
+/// still parse into it (`crate::config::apply_plan_keys`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExchangePlan {
+    /// collective structure (`ar|allreduce|asa|asa16|ring|hier:<inner>`)
+    pub strategy: StrategyKind,
+    /// on-wire format override (`f32|f16|bf16|topk:<p>|onebit|sf`).
+    /// `None` = no override: f32 for BSP ([`Self::wire_format`]), the
+    /// strategy-derived wire for EASGD (`EasgdConfig::elastic_wire`).
+    pub wire: Option<WireFormat>,
+    /// KiB per pipeline chunk of the exchange (0 = monolithic)
+    pub chunk_kib: usize,
+    /// overlap chunk transfers with the previous chunk's kernels; `false`
+    /// prices chunks serially (the ablation knob)
+    pub pipeline: bool,
+    /// when to exchange gradients relative to the backward pass (BSP/SUBGD
+    /// only): whole-vector after the step (`None`), layer buckets after
+    /// the step (`Post`), or wait-free per bucket (`Wfbp`)
+    pub overlap: OverlapMode,
+    /// KiB per WFBP gradient bucket (0 = one bucket per layer); full-scale
+    /// KiB when the run prices against a `sim_model`
+    pub bucket_kib: usize,
+    /// EASGD parameter-server shards (BSP ignores this axis)
+    pub servers: usize,
+}
+
+impl Default for ExchangePlan {
+    fn default() -> ExchangePlan {
+        ExchangePlan {
+            strategy: StrategyKind::Asa,
+            wire: None,
+            chunk_kib: 0,
+            pipeline: true,
+            overlap: OverlapMode::None,
+            bucket_kib: 0,
+            servers: 1,
+        }
+    }
+}
+
+impl ExchangePlan {
+    /// The dense-default wire of the BSP exchange: an explicit override
+    /// wins, otherwise full-width f32.
+    pub fn wire_format(&self) -> WireFormat {
+        self.wire.unwrap_or(WireFormat::F32)
+    }
+
+    /// Emit the `[plan]` TOML section this plan parses back from
+    /// (`crate::config::plan_from_text`). Sizing knobs at their off
+    /// default (0) and an unset wire are omitted rather than written —
+    /// written-out zeros are rejected by [`validate_sizing_kib`].
+    pub fn to_toml(&self) -> String {
+        let mut out = String::from("[plan]\n");
+        out.push_str(&format!("exchange = \"{}\"\n", self.strategy.name()));
+        if let Some(w) = self.wire {
+            out.push_str(&format!("wire = \"{}\"\n", w.name()));
+        }
+        if self.chunk_kib > 0 {
+            out.push_str(&format!("chunk_kib = {}\n", self.chunk_kib));
+        }
+        out.push_str(&format!("pipeline = {}\n", self.pipeline));
+        out.push_str(&format!("overlap = \"{}\"\n", self.overlap.name()));
+        if self.bucket_kib > 0 {
+            out.push_str(&format!("bucket_kib = {}\n", self.bucket_kib));
+        }
+        out.push_str(&format!("servers = {}\n", self.servers));
+        out
+    }
+
+    /// One-line human summary (`tmpi plan` output, cache-file header).
+    pub fn summary(&self) -> String {
+        let mut parts = vec![format!("exchange={}", self.strategy.name())];
+        if let Some(w) = self.wire {
+            parts.push(format!("wire={}", w.name()));
+        }
+        if self.chunk_kib > 0 {
+            parts.push(format!("chunk_kib={}", self.chunk_kib));
+            parts.push(format!("pipeline={}", self.pipeline));
+        }
+        if self.overlap.bucketed() {
+            parts.push(format!("overlap={}", self.overlap.name()));
+            parts.push(format!("bucket_kib={}", self.bucket_kib));
+        }
+        if self.servers > 1 {
+            parts.push(format!("servers={}", self.servers));
+        }
+        parts.join(" ")
+    }
+}
+
+/// Which training loop the plan drives — the two score different
+/// quantities (visible gradient-exchange time vs elastic round-trip).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    Bsp,
+    Easgd,
+}
+
+impl PlanMode {
+    pub const NAMES: &'static str = "bsp|easgd";
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanMode::Bsp => "bsp",
+            PlanMode::Easgd => "easgd",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<PlanMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "bsp" | "train" => Ok(PlanMode::Bsp),
+            "easgd" => Ok(PlanMode::Easgd),
+            _ => Err(anyhow!("unknown plan mode '{s}' (valid: {})", Self::NAMES)),
+        }
+    }
+}
+
+/// Everything the planner's score depends on — and therefore everything
+/// the cache fingerprint must cover.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanInputs {
+    /// full-scale model name (proxy names resolve via
+    /// [`models::full_scale_of`])
+    pub model: String,
+    /// per-worker batch size (sets the backward-pass overlap budget)
+    pub batch: usize,
+    pub workers: usize,
+    /// "mosaic" (1 GPU/node) or "copper" (8 GPU/node)
+    pub topology: String,
+    pub cuda_aware: bool,
+    pub mode: PlanMode,
+}
+
+impl PlanInputs {
+    fn full_scale_name(&self) -> &str {
+        models::full_scale_of(&self.model).unwrap_or(self.model.as_str())
+    }
+
+    /// The full-scale `(layer, params)` table the probes price against.
+    pub fn layer_table(&self) -> Result<Vec<(String, usize)>> {
+        models::builtin_full_scale_layers(self.full_scale_name()).ok_or_else(|| {
+            anyhow!(
+                "no built-in full-scale layer table for model '{}' \
+                 (valid: alexnet|googlenet|vggnet and their proxies)",
+                self.model
+            )
+        })
+    }
+
+    fn full_elems(&self) -> Result<usize> {
+        Ok(self.layer_table()?.iter().map(|(_, p)| p).sum())
+    }
+
+    /// Paper-calibrated 1-GPU seconds for one `batch`-sized step
+    /// (Table 3's per-5120-image pace, falling back to the model's
+    /// batch-32 row like `Session::table1`).
+    fn step_seconds(&self) -> Result<f64> {
+        let full = self.full_scale_name();
+        let t5120 = models::paper_train_5120(full, self.batch)
+            .or_else(|| models::paper_train_5120(full, 32))
+            .ok_or_else(|| anyhow!("no paper train-time row for model '{full}'"))?;
+        Ok(t5120 * self.batch as f64 / 5120.0)
+    }
+
+    /// Backward-pass seconds WFBP may hide wire time under.
+    fn backward_total(&self) -> Result<f64> {
+        Ok(self.step_seconds()? * BWD_FRACTION)
+    }
+
+    /// Human-readable cache-key prefix; the fingerprint carries the rest.
+    pub fn slug(&self) -> String {
+        format!("{}-{}-k{}", self.model, self.topology, self.workers)
+    }
+
+    /// FNV-1a over every score input (format version first, then mode,
+    /// batch, workers, cuda_aware, topology, model, and the layer table
+    /// name-by-name). The layer table arrives as an ordered `Vec`, so the
+    /// digest is independent of whatever map a caller assembled inputs
+    /// from — pinned by `fingerprint_stable_across_map_ordering`.
+    pub fn fingerprint(&self) -> Result<u64> {
+        let layers = self.layer_table()?;
+        let mut h = Fnv::new();
+        h.eat(PLAN_FORMAT_VERSION);
+        h.eat(match self.mode {
+            PlanMode::Bsp => 0,
+            PlanMode::Easgd => 1,
+        });
+        h.eat(self.batch as u64);
+        h.eat(self.workers as u64);
+        h.eat(u64::from(self.cuda_aware));
+        h.eat_str(&self.topology);
+        h.eat_str(&self.model);
+        h.eat(layers.len() as u64);
+        for (name, params) in &layers {
+            h.eat_str(name);
+            h.eat(*params as u64);
+        }
+        Ok(h.finish())
+    }
+
+    /// Cache location under `dir`: `{slug}-{fingerprint:016x}.toml`.
+    pub fn cache_file(&self, dir: &Path) -> Result<PathBuf> {
+        Ok(dir.join(format!("{}-{:016x}.toml", self.slug(), self.fingerprint()?)))
+    }
+}
+
+/// FNV-1a (same constants as the dataset segment-store fingerprint in
+/// [`crate::data`]); strings are length-prefixed so `("ab","c")` and
+/// `("a","bc")` cannot collide.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn eat_byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn eat(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.eat_byte(b);
+        }
+    }
+
+    fn eat_str(&mut self, s: &str) {
+        self.eat(s.len() as u64);
+        for b in s.bytes() {
+            self.eat_byte(b);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scoring: one simnet number per candidate plan.
+
+/// Simulated seconds one exchange of `plan` costs under `inputs` — the
+/// planner's objective. BSP monolithic/chunked plans price a full-vector
+/// exchange ([`probe_exchange_wire`], `sim_total`); bucketed-overlap plans
+/// price the *visible* (non-hidden) exchange time ([`probe_wfbp`],
+/// `comm_visible`); EASGD plans price one elastic round-trip per worker
+/// ([`shard::measure_sharded`], `comm_per_exchange`).
+pub fn score_plan(inputs: &PlanInputs, plan: &ExchangePlan) -> Result<Secs> {
+    match inputs.mode {
+        PlanMode::Bsp => score_bsp(inputs, plan),
+        PlanMode::Easgd => score_easgd(inputs, plan),
+    }
+}
+
+fn score_bsp(inputs: &PlanInputs, plan: &ExchangePlan) -> Result<Secs> {
+    let layers = inputs.layer_table()?;
+    let full_elems: usize = layers.iter().map(|(_, p)| p).sum();
+    let topo = Topology::by_name(&inputs.topology, inputs.workers)
+        .ok_or_else(|| anyhow!("unknown topology '{}'", inputs.topology))?;
+    if plan.overlap.bucketed() {
+        let out = probe_wfbp(
+            plan.strategy,
+            inputs.workers,
+            topo,
+            &layers,
+            inputs.cuda_aware,
+            plan.bucket_kib,
+            plan.chunk_kib,
+            inputs.backward_total()?,
+            plan.overlap == OverlapMode::Wfbp,
+        )?;
+        return Ok(out.comm_visible);
+    }
+    // a full-scale chunk size becomes a chunk *count*, which the probe
+    // projects back onto its capped buffer at the same ratio
+    let chunks = if plan.chunk_kib > 0 {
+        let chunk_elems = Kib(plan.chunk_kib).elems(plan.strategy, plan.wire_format()).0.max(1);
+        full_elems.div_ceil(chunk_elems)
+    } else {
+        0
+    };
+    let rep = probe_exchange_wire(
+        plan.strategy,
+        plan.wire_format(),
+        inputs.workers,
+        topo,
+        4 * full_elems as u64,
+        inputs.cuda_aware,
+        chunks,
+        plan.pipeline,
+        None,
+    )?;
+    Ok(rep.sim_total())
+}
+
+fn score_easgd(inputs: &PlanInputs, plan: &ExchangePlan) -> Result<Secs> {
+    let full_elems = inputs.full_elems()?;
+    let probe_elems = 1_000_000.min(full_elems).max(1);
+    let comm_scale = full_elems as f64 / probe_elems as f64;
+    let mut cfg = EasgdConfig::quick(&inputs.model, inputs.workers, 1);
+    cfg.topology = inputs.topology.clone();
+    cfg.batch = inputs.batch;
+    cfg.plan = plan.clone();
+    let probe = shard::measure_sharded(&cfg, probe_elems, 3, inputs.step_seconds()?, comm_scale)?;
+    Ok(Secs(probe.comm_per_exchange))
+}
+
+// ---------------------------------------------------------------------------
+// Search.
+
+/// Chunk-size rungs (KiB) the greedy walk descends while improving.
+pub const CHUNK_LADDER: [usize; 5] = [64, 256, 1024, 4096, 16384];
+
+/// Bucket-size rungs (KiB) for the WFBP axis; 0 = one bucket per layer.
+pub const BUCKET_LADDER: [usize; 4] = [0, 1024, 4096, 16384];
+
+/// The flat strategies the default search sweeps — exactly the set the
+/// stdlib Python twin prices, so every searched score is CI-pinnable.
+pub const SEARCH_STRATEGIES: [StrategyKind; 4] =
+    [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring];
+
+/// A search result: the winning plan, its score, how many candidates were
+/// priced, and the scored hand-picked defaults (the never-loses baseline —
+/// `bench_plan` asserts against these).
+#[derive(Clone, Debug)]
+pub struct PlanChoice {
+    pub plan: ExchangePlan,
+    pub score: Secs,
+    pub evaluated: usize,
+    pub default_scores: Vec<(ExchangePlan, Secs)>,
+}
+
+/// The configurations a careful operator would try by hand — the paper's
+/// per-model settings and this repo's own example configs. [`search`]
+/// scores these *first*, so its argmin can never lose to any of them
+/// (pinned by `planner_never_loses_to_hand_picked_defaults`).
+pub fn hand_picked_defaults(mode: PlanMode) -> Vec<ExchangePlan> {
+    let base = ExchangePlan::default();
+    match mode {
+        PlanMode::Bsp => vec![
+            // the quick() default: monolithic ASA
+            base.clone(),
+            ExchangePlan { strategy: StrategyKind::Ar, ..base.clone() },
+            ExchangePlan { strategy: StrategyKind::Ring, ..base.clone() },
+            ExchangePlan { strategy: StrategyKind::Asa16, ..base.clone() },
+            // the chunked-pipeline example config
+            ExchangePlan { chunk_kib: 4096, ..base.clone() },
+            // wait-free backprop, per-layer buckets
+            ExchangePlan { overlap: OverlapMode::Wfbp, ..base },
+        ],
+        PlanMode::Easgd => vec![
+            // the paper's single-server elastic setup
+            base.clone(),
+            ExchangePlan { strategy: StrategyKind::Asa16, ..base.clone() },
+            ExchangePlan { chunk_kib: 256, ..base },
+        ],
+    }
+}
+
+/// Search the exchange space for `inputs`: exhaustive over the discrete
+/// axes (strategy × overlap for BSP; strategy × servers for EASGD), greedy
+/// over the chunk/bucket ladders (a ladder walk stops at the first rung
+/// that fails to improve on the axis' running best). Hand-picked defaults
+/// are scored first, so pruning can never surrender the never-loses
+/// guarantee.
+pub fn search(inputs: &PlanInputs) -> Result<PlanChoice> {
+    let mut best_plan = ExchangePlan::default();
+    let mut best_score = Secs(f64::INFINITY);
+    let mut evaluated = 0usize;
+    let mut default_scores = Vec::new();
+
+    {
+        let mut eval = |plan: ExchangePlan| -> Result<Secs> {
+            let s = score_plan(inputs, &plan)?;
+            evaluated += 1;
+            // strict `<`: earlier candidates (the defaults) win ties, so
+            // the choice is deterministic across sweep orderings
+            if s.0 < best_score.0 {
+                best_score = s;
+                best_plan = plan;
+            }
+            Ok(s)
+        };
+
+        for plan in hand_picked_defaults(inputs.mode) {
+            let s = eval(plan.clone())?;
+            default_scores.push((plan, s));
+        }
+
+        match inputs.mode {
+            PlanMode::Bsp => {
+                for strategy in SEARCH_STRATEGIES {
+                    let mono = ExchangePlan { strategy, ..ExchangePlan::default() };
+                    let mut rung_best = eval(mono.clone())?;
+                    for kib in CHUNK_LADDER {
+                        let s = eval(ExchangePlan { chunk_kib: kib, ..mono.clone() })?;
+                        if s.0 >= rung_best.0 {
+                            break;
+                        }
+                        rung_best = s;
+                    }
+                    let wfbp =
+                        ExchangePlan { overlap: OverlapMode::Wfbp, ..ExchangePlan::default() };
+                    let mut rung_best = Secs(f64::INFINITY);
+                    for kib in BUCKET_LADDER {
+                        let s = eval(ExchangePlan { strategy, bucket_kib: kib, ..wfbp.clone() })?;
+                        if s.0 >= rung_best.0 {
+                            break;
+                        }
+                        rung_best = s;
+                    }
+                }
+            }
+            PlanMode::Easgd => {
+                let mut servers_axis = Vec::new();
+                let mut s = 1usize;
+                while s <= inputs.workers {
+                    servers_axis.push(s);
+                    s *= 2;
+                }
+                for servers in servers_axis {
+                    for strategy in [StrategyKind::Asa, StrategyKind::Asa16] {
+                        let mono =
+                            ExchangePlan { strategy, servers, ..ExchangePlan::default() };
+                        let mut rung_best = eval(mono.clone())?;
+                        for kib in CHUNK_LADDER {
+                            let s = eval(ExchangePlan { chunk_kib: kib, ..mono.clone() })?;
+                            if s.0 >= rung_best.0 {
+                                break;
+                            }
+                            rung_best = s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(PlanChoice { plan: best_plan, score: best_score, evaluated, default_scores })
+}
+
+// ---------------------------------------------------------------------------
+// Cache: emitted-TOML files keyed by slug + fingerprint.
+
+/// Write `choice` to its fingerprinted cache file under `dir` and return
+/// the path. The file is a self-contained `[plan]` TOML (header comments
+/// record provenance) that [`load_plan`] / `tmpi train --plan` read back.
+pub fn store_plan(inputs: &PlanInputs, choice: &PlanChoice, dir: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = inputs.cache_file(dir)?;
+    let mut text = String::new();
+    text.push_str("# tmpi plan — auto-tuned exchange plan (simnet-scored)\n");
+    text.push_str(&format!(
+        "# model = {}  batch = {}  workers = {}  topology = {}  mode = {}\n",
+        inputs.model,
+        inputs.batch,
+        inputs.workers,
+        inputs.topology,
+        inputs.mode.name()
+    ));
+    text.push_str(&format!(
+        "# fingerprint = {:016x}  candidates = {}  score = {:.6e} s\n",
+        inputs.fingerprint()?,
+        choice.evaluated,
+        choice.score.0
+    ));
+    text.push_str(&choice.plan.to_toml());
+    std::fs::write(&path, &text).map_err(|e| anyhow!("writing {path:?}: {e}"))?;
+    Ok(path)
+}
+
+/// Read a plan file (`[plan]` section over [`ExchangePlan::default`]).
+pub fn load_plan(path: &Path) -> Result<ExchangePlan> {
+    crate::config::plan_from_file(path)
+}
+
+/// `--plan auto`: load the cached plan for `inputs` if its fingerprint
+/// matches, otherwise run [`search`] and cache the result. Returns the
+/// plan, the cache path, and whether it was a cache hit.
+pub fn auto_plan(inputs: &PlanInputs, dir: &Path) -> Result<(ExchangePlan, PathBuf, bool)> {
+    let path = inputs.cache_file(dir)?;
+    if path.is_file() {
+        return Ok((load_plan(&path)?, path, true));
+    }
+    let choice = search(inputs)?;
+    let path = store_plan(inputs, &choice, dir)?;
+    Ok((choice.plan, path, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+
+    fn inputs(model: &str, workers: usize, mode: PlanMode) -> PlanInputs {
+        PlanInputs {
+            model: model.to_string(),
+            batch: 128,
+            workers,
+            topology: "mosaic".to_string(),
+            cuda_aware: true,
+            mode,
+        }
+    }
+
+    #[test]
+    fn sizing_validation_names_the_range() {
+        assert_eq!(validate_sizing_kib("chunk_kib", 1).unwrap(), 1);
+        assert_eq!(validate_sizing_kib("chunk_kib", SIZING_KIB_MAX).unwrap(), SIZING_KIB_MAX);
+        let err = validate_sizing_kib("chunk_kib", 0).unwrap_err().to_string();
+        assert!(err.contains("chunk_kib = 0"), "{err}");
+        assert!(err.contains("1..=1048576"), "{err}");
+        assert!(err.contains("omit the key"), "{err}");
+        let err = validate_sizing_kib("bucket_kib", SIZING_KIB_MAX + 1).unwrap_err().to_string();
+        assert!(err.contains("bucket_kib"), "{err}");
+    }
+
+    #[test]
+    fn toml_round_trips_through_config_parser() {
+        use crate::collectives::FlatKind;
+        let plans = [
+            ExchangePlan::default(),
+            ExchangePlan {
+                strategy: StrategyKind::Hier { inner: FlatKind::Asa16 },
+                wire: Some(WireFormat::TopK { p: 0.01 }),
+                chunk_kib: 256,
+                pipeline: false,
+                ..ExchangePlan::default()
+            },
+            ExchangePlan {
+                strategy: StrategyKind::Ring,
+                overlap: OverlapMode::Wfbp,
+                bucket_kib: 4096,
+                ..ExchangePlan::default()
+            },
+            ExchangePlan { servers: 4, wire: Some(WireFormat::Bf16), ..ExchangePlan::default() },
+        ];
+        for plan in plans {
+            let parsed = crate::config::plan_from_text(&plan.to_toml()).unwrap();
+            assert_eq!(parsed, plan, "round-trip through:\n{}", plan.to_toml());
+        }
+    }
+
+    #[test]
+    fn fingerprint_stable_across_map_ordering() {
+        // a caller assembling inputs out of a key-value map must land on
+        // the same fingerprint regardless of insertion order
+        let build = |pairs: &[(&str, &str)]| {
+            let mut m = BTreeMap::new();
+            for (k, v) in pairs {
+                m.insert(k.to_string(), v.to_string());
+            }
+            PlanInputs {
+                model: m["model"].clone(),
+                batch: m["batch"].parse().unwrap(),
+                workers: m["workers"].parse().unwrap(),
+                topology: m["topology"].clone(),
+                cuda_aware: m["cuda_aware"] == "true",
+                mode: PlanMode::from_name(&m["mode"]).unwrap(),
+            }
+        };
+        let fwd = build(&[
+            ("model", "alexnet"),
+            ("batch", "128"),
+            ("workers", "4"),
+            ("topology", "mosaic"),
+            ("cuda_aware", "true"),
+            ("mode", "bsp"),
+        ]);
+        let rev = build(&[
+            ("mode", "bsp"),
+            ("cuda_aware", "true"),
+            ("topology", "mosaic"),
+            ("workers", "4"),
+            ("batch", "128"),
+            ("model", "alexnet"),
+        ]);
+        assert_eq!(fwd.fingerprint().unwrap(), rev.fingerprint().unwrap());
+        // ...and every scored input moves it
+        let fp = fwd.fingerprint().unwrap();
+        for other in [
+            PlanInputs { workers: 8, ..fwd.clone() },
+            PlanInputs { batch: 32, ..fwd.clone() },
+            PlanInputs { topology: "copper".into(), ..fwd.clone() },
+            PlanInputs { cuda_aware: false, ..fwd.clone() },
+            PlanInputs { mode: PlanMode::Easgd, ..fwd.clone() },
+            PlanInputs { model: "googlenet".into(), ..fwd.clone() },
+        ] {
+            assert_ne!(fp, other.fingerprint().unwrap(), "{other:?}");
+        }
+    }
+
+    #[test]
+    fn proxy_names_resolve_to_full_scale_tables() {
+        let vgg = inputs("vgg", 2, PlanMode::Bsp);
+        let vggnet = inputs("vggnet", 2, PlanMode::Bsp);
+        assert_eq!(vgg.layer_table().unwrap(), vggnet.layer_table().unwrap());
+        let err = inputs("mlp", 2, PlanMode::Bsp).layer_table().unwrap_err().to_string();
+        assert!(err.contains("mlp"), "{err}");
+    }
+
+    #[test]
+    fn planner_never_loses_to_hand_picked_defaults() {
+        let ins = inputs("alexnet", 2, PlanMode::Bsp);
+        let choice = search(&ins).unwrap();
+        assert_eq!(choice.default_scores.len(), hand_picked_defaults(PlanMode::Bsp).len());
+        for (plan, score) in &choice.default_scores {
+            assert!(
+                choice.score.0 <= score.0,
+                "planner pick {:?} ({:.6}s) loses to default {:?} ({:.6}s)",
+                choice.plan,
+                choice.score.0,
+                plan,
+                score.0
+            );
+        }
+        // re-scoring the winner reproduces its reported score exactly
+        let again = score_plan(&ins, &choice.plan).unwrap();
+        assert_eq!(again.0.to_bits(), choice.score.0.to_bits());
+    }
+
+    #[test]
+    fn easgd_search_never_loses_and_caches_round_trip() {
+        let ins = inputs("googlenet", 2, PlanMode::Easgd);
+        let choice = search(&ins).unwrap();
+        for (_, score) in &choice.default_scores {
+            assert!(choice.score.0 <= score.0);
+        }
+        let dir = std::env::temp_dir().join(format!("tmpi_plans_{}", std::process::id()));
+        let path = store_plan(&ins, &choice, &dir).unwrap();
+        assert_eq!(load_plan(&path).unwrap(), choice.plan);
+        // auto_plan now hits the cache without re-searching
+        let (plan, hit_path, hit) = auto_plan(&ins, &dir).unwrap();
+        assert!(hit);
+        assert_eq!(hit_path, path);
+        assert_eq!(plan, choice.plan);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -14,7 +14,7 @@ use theano_mpi::precision::Wire;
 
 fn cfg(workers: usize, servers: usize, topo: &str) -> EasgdConfig {
     let mut c = EasgdConfig::quick("mlp", workers, 0);
-    c.servers = servers;
+    c.plan.servers = servers;
     c.topology = topo.to_string();
     c
 }
@@ -98,7 +98,7 @@ fn single_server_matches_serial_reference_bit_exact() {
     for half in [false, true] {
         let mut c = cfg(3, 1, "mosaic");
         if half {
-            c.exchange = StrategyKind::Asa16;
+            c.plan.strategy = StrategyKind::Asa16;
         }
         let probe = measure_sharded(&c, 10_000, 3, 1e-3, 1.0).unwrap();
         let (centers, params) = replay(3, 3, 10_000, 1, half, c.alpha as f32, &probe.served);
@@ -117,7 +117,7 @@ fn multi_shard_matches_serial_reference_bit_exact() {
     for half in [false, true] {
         let mut c = cfg(4, 3, "copper");
         if half {
-            c.exchange = StrategyKind::Asa16;
+            c.plan.strategy = StrategyKind::Asa16;
         }
         let probe = measure_sharded(&c, 10_001, 3, 1e-3, 1.0).unwrap();
         let (centers, params) = replay(4, 3, 10_001, 3, half, c.alpha as f32, &probe.served);
@@ -236,7 +236,7 @@ fn four_shards_beat_one_at_tau1_k8_on_copper() {
 #[test]
 fn f16_wire_halves_sharded_comm() {
     let mut c = cfg(8, 1, "copper");
-    c.exchange = StrategyKind::Asa16;
+    c.plan.strategy = StrategyKind::Asa16;
     let probe = measure_sharded(&c, 1_000_000, 1, 0.0, 1.0).unwrap();
     assert!(
         (probe.comm_total - 0.006969882352941175).abs() < 1e-10,
@@ -252,10 +252,10 @@ fn f16_wire_halves_sharded_comm() {
 #[test]
 fn chunk_pipelining_composes_with_sharding() {
     let mut mono = cfg(8, 2, "copper");
-    mono.chunk_kib = 0;
+    mono.plan.chunk_kib = 0;
     let mut piped = cfg(8, 2, "copper");
-    piped.chunk_kib = 256;
-    piped.pipeline = true;
+    piped.plan.chunk_kib = 256;
+    piped.plan.pipeline = true;
     let a = measure_sharded(&mono, 1_000_000, 2, 1e-3, 1.0).unwrap();
     let b = measure_sharded(&piped, 1_000_000, 2, 1e-3, 1.0).unwrap();
     assert!(
@@ -266,7 +266,7 @@ fn chunk_pipelining_composes_with_sharding() {
     );
     // the ablation: chunking without the pipeline prices like monolithic
     let mut serial = piped.clone();
-    serial.pipeline = false;
+    serial.plan.pipeline = false;
     let c = measure_sharded(&serial, 1_000_000, 2, 1e-3, 1.0).unwrap();
     assert!((c.comm_total - a.comm_total).abs() < 1e-12);
 }

@@ -78,19 +78,19 @@ pipeline = false
 fn config_toml_roundtrip_for_hier_knobs() {
     let table = config::parse(HIER_TOML).unwrap();
     let cfg = config::bsp_from_table(&table).unwrap();
-    assert_eq!(cfg.strategy, StrategyKind::Hier { inner: FlatKind::Asa16 });
-    assert_eq!(cfg.strategy.name(), "hier:asa16");
-    assert_eq!(cfg.chunk_kib, 256);
-    assert!(cfg.pipeline);
+    assert_eq!(cfg.plan.strategy, StrategyKind::Hier { inner: FlatKind::Asa16 });
+    assert_eq!(cfg.plan.strategy.name(), "hier:asa16");
+    assert_eq!(cfg.plan.chunk_kib, 256);
+    assert!(cfg.plan.pipeline);
     assert_eq!(cfg.topology, "copper");
 
     let p = std::env::temp_dir().join(format!("tmpi_golden_{}.toml", std::process::id()));
     std::fs::write(&p, HIER_TOML).unwrap();
     let ecfg = config::easgd_from_file(&p).unwrap();
-    assert_eq!(ecfg.exchange, StrategyKind::Hier { inner: FlatKind::Asa16 });
-    assert!(ecfg.exchange.half_wire());
-    assert_eq!(ecfg.chunk_kib, 128);
-    assert!(!ecfg.pipeline);
+    assert_eq!(ecfg.plan.strategy, StrategyKind::Hier { inner: FlatKind::Asa16 });
+    assert!(ecfg.plan.strategy.half_wire());
+    assert_eq!(ecfg.plan.chunk_kib, 128);
+    assert!(!ecfg.plan.pipeline);
     let _ = std::fs::remove_file(p);
 }
 
@@ -117,6 +117,6 @@ fn strategy_names_roundtrip_through_config_text() {
     for name in ["ar", "asa", "asa16", "ring", "hier:ar", "hier:asa", "hier:asa16", "hier:ring"] {
         let toml = format!("[train]\nexchange = \"{name}\"");
         let cfg = config::bsp_from_table(&config::parse(&toml).unwrap()).unwrap();
-        assert_eq!(cfg.strategy.name(), name, "{name} must round-trip");
+        assert_eq!(cfg.plan.strategy.name(), name, "{name} must round-trip");
     }
 }

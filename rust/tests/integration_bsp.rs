@@ -6,8 +6,7 @@
 use std::sync::Arc;
 
 use theano_mpi::bsp::{run_bsp, BspConfig};
-use theano_mpi::collectives::{FlatKind, OverlapMode, StrategyKind};
-use theano_mpi::precision::Wire;
+use theano_mpi::collectives::{FlatKind, OverlapMode, StrategyKind, WireFormat};
 use theano_mpi::runtime::Runtime;
 use theano_mpi::sgd::{LrSchedule, Scheme};
 
@@ -59,7 +58,7 @@ fn all_strategies_train_mlp() {
     let Some(rt) = rt() else { return };
     for strat in [StrategyKind::Ar, StrategyKind::Asa, StrategyKind::Asa16, StrategyKind::Ring] {
         let mut cfg = BspConfig::quick("mlp", 3, 25);
-        cfg.strategy = strat;
+        cfg.plan.strategy = strat;
         cfg.lr = LrSchedule::Const { base: 0.05 };
         cfg.integrity_every = 5;
         let rep = run_bsp(&rt, &cfg).unwrap();
@@ -76,8 +75,8 @@ fn all_strategies_train_mlp() {
 fn asa16_bf16_wire_works() {
     let Some(rt) = rt() else { return };
     let mut cfg = BspConfig::quick("mlp", 2, 15);
-    cfg.strategy = StrategyKind::Asa16;
-    cfg.wire = Wire::Bf16;
+    cfg.plan.strategy = StrategyKind::Asa16;
+    cfg.plan.wire = Some(WireFormat::Bf16);
     cfg.lr = LrSchedule::Const { base: 0.05 };
     let rep = run_bsp(&rt, &cfg).unwrap();
     assert!(rep.final_train_loss < 2.5);
@@ -174,9 +173,9 @@ fn breakdown_reconciles_exactly_across_grid() {
             for (strat, chunk_kib) in exchanges {
                 for topo in ["copper", "mosaic"] {
                     let mut cfg = BspConfig::quick("mlp", k, 2);
-                    cfg.strategy = strat;
-                    cfg.chunk_kib = chunk_kib;
-                    cfg.overlap = overlap;
+                    cfg.plan.strategy = strat;
+                    cfg.plan.chunk_kib = chunk_kib;
+                    cfg.plan.overlap = overlap;
                     cfg.topology = topo.to_string();
                     cfg.lr = LrSchedule::Const { base: 0.01 };
                     let rep = run_bsp(&rt, &cfg).unwrap();

@@ -65,7 +65,7 @@ fn larger_tau_reduces_comm_total() {
 fn sharded_easgd_trains_and_reports_queue_metrics() {
     let Some(rt) = rt() else { return };
     let mut cfg = EasgdConfig::quick("mlp", 4, 30);
-    cfg.servers = 2;
+    cfg.plan.servers = 2;
     cfg.lr = LrSchedule::Const { base: 0.05 };
     cfg.eval_every = 10;
     let rep = run_easgd(&rt, &cfg).unwrap();
@@ -93,7 +93,7 @@ fn breakdown_reconciles_across_shard_grid() {
     for servers in [1usize, 4] {
         for topo in ["copper", "mosaic"] {
             let mut cfg = EasgdConfig::quick("mlp", 4, 12);
-            cfg.servers = servers;
+            cfg.plan.servers = servers;
             cfg.topology = topo.into();
             cfg.lr = LrSchedule::Const { base: 0.05 };
             let rep = run_easgd(&rt, &cfg).unwrap();

@@ -71,7 +71,7 @@ fn run_probe(
     sleeps: &[u64],
 ) -> RunOut {
     let mut cfg = EasgdConfig::quick("mlp", k, rounds);
-    cfg.servers = s;
+    cfg.plan.servers = s;
     cfg.topology = "copper".into();
     let plan = Arc::new(ShardPlan::new(elems, k, s).unwrap());
     let topo = Topology::by_name(&cfg.topology, plan.world_size()).unwrap();
@@ -441,7 +441,7 @@ fn wfbp_flow_shop_is_stagger_independent() {
 fn measure_sharded_matches_explorer_baseline() {
     let (k, s, elems, rounds) = (3, 2, 96, 3);
     let mut cfg = EasgdConfig::quick("mlp", k, rounds);
-    cfg.servers = s;
+    cfg.plan.servers = s;
     cfg.topology = "copper".into();
     let probe = shard::measure_sharded(&cfg, elems, rounds, 0.0, 1.0).unwrap();
     let baseline = run_probe(k, s, elems, rounds, &vec![0.0; k], None, &vec![0; k]);

@@ -21,11 +21,16 @@ not fail the gate — refresh the baselines deliberately to start tracking
 them (see README "Refreshing bench baselines"). Wall-clock metrics (unit
 "s_wall") are machine-dependent and are never gated.
 
+When `$GITHUB_STEP_SUMMARY` is set (GitHub Actions), a markdown table of
+every gated metric with its delta vs baseline is appended to that file —
+stdout output is unchanged, so local runs and log-scraping keep working.
+
 Exit status: 0 clean, 1 on any regression or missing metric.
 """
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -63,10 +68,18 @@ def entry_unit(entry):
     return entry.get("unit") if isinstance(entry, dict) else None
 
 
-def gate(current_path, baseline_path, tolerance):
+def gate(current_path, baseline_path, tolerance, summary=None):
+    """Gate one (current, baseline) pair. When `summary` is a list, one row
+    dict per considered metric is appended for the markdown step summary."""
     current = load(current_path)
     baseline = load(baseline_path)
     failures, checked, new = [], 0, []
+
+    def note(name, status, cur=None, ref=None, better=None):
+        if summary is not None:
+            summary.append({"pair": f"{current_path} vs {baseline_path}",
+                            "name": name, "status": status, "current": cur,
+                            "baseline": ref, "better": better})
 
     for name, base in sorted(baseline.items()):
         if entry_unit(base) == "s_wall":
@@ -74,6 +87,7 @@ def gate(current_path, baseline_path, tolerance):
         ref, err = entry_value(base)
         if err is not None:
             failures.append(f"{name}: baseline {err} — fix {baseline_path}")
+            note(name, "MALFORMED")
             continue
         # direction must be explicit: a silently-defaulted direction would
         # gate higher-is-better metrics (overlap fractions, speedups)
@@ -85,13 +99,16 @@ def gate(current_path, baseline_path, tolerance):
                 f"(got {better!r}) — regenerate with "
                 f"scripts/verify_wfbp_bands.py --write-baselines"
             )
+            note(name, "MALFORMED", ref=ref)
             continue
         if name not in current:
             failures.append(f"{name}: missing from the current run (baseline {ref})")
+            note(name, "MISSING", ref=ref, better=better)
             continue
         cur, err = entry_value(current[name])
         if err is not None:
             failures.append(f"{name}: current {err}")
+            note(name, "MALFORMED", ref=ref, better=better)
             continue
         checked += 1
         # budget around a zero reference degenerates to an absolute epsilon
@@ -108,10 +125,13 @@ def gate(current_path, baseline_path, tolerance):
                 f"{name}: {cur:.6g} regressed vs {ref:.6g}{pct} "
                 f"(budget {tolerance * 100.0:.0f}%, better={better})"
             )
+        note(name, "FAIL" if regressed else "OK", cur=cur, ref=ref, better=better)
 
     for name, m in sorted(current.items()):
         if name not in baseline and entry_unit(m) != "s_wall":
             new.append(name)
+            v, _ = entry_value(m)
+            note(name, "NEW", cur=v)
 
     tag = f"{current_path} vs {baseline_path}"
     print(f"bench-gate: {tag}: {checked} metrics checked, {len(new)} new, {len(failures)} failing")
@@ -121,6 +141,42 @@ def gate(current_path, baseline_path, tolerance):
     for f in failures:
         print(f"  FAIL {f}")
     return not failures
+
+
+def fmt_num(v):
+    return "—" if v is None else f"{v:.6g}"
+
+
+def render_step_summary(rows, tolerance, ok):
+    """Markdown for $GITHUB_STEP_SUMMARY: one table per gated pair with
+    deltas vs baseline. Pure function of the collected rows (testable)."""
+    lines = [f"## bench-gate: {'OK' if ok else 'FAILED'} "
+             f"(budget {tolerance * 100.0:.0f}%)", ""]
+    by_pair = {}
+    for r in rows:
+        by_pair.setdefault(r["pair"], []).append(r)
+    for pair, pair_rows in by_pair.items():
+        lines += [f"### {pair}", "",
+                  "| metric | current | baseline | delta | better | status |",
+                  "|---|---|---|---|---|---|"]
+        for r in pair_rows:
+            cur, ref = r["current"], r["baseline"]
+            if cur is not None and ref:
+                delta = f"{(cur / ref - 1.0) * 100.0:+.2f}%"
+            else:
+                delta = "—"
+            status = r["status"]
+            if status in ("FAIL", "MISSING", "MALFORMED"):
+                status = f"**{status}**"
+            lines.append(f"| {r['name']} | {fmt_num(cur)} | {fmt_num(ref)} "
+                         f"| {delta} | {r['better'] or '—'} | {status} |")
+        lines.append("")
+    return "\n".join(lines) + "\n"
+
+
+def write_step_summary(rows, tolerance, ok, path):
+    with open(path, "a") as f:
+        f.write(render_step_summary(rows, tolerance, ok))
 
 
 def main():
@@ -133,9 +189,13 @@ def main():
     if len(args.pairs) % 2:
         ap.error("arguments must come in <current.json> <baseline.json> pairs")
     ok = True
+    rows = []
     for cur, base in zip(args.pairs[::2], args.pairs[1::2]):
-        ok &= gate(cur, base, args.tolerance)
+        ok &= gate(cur, base, args.tolerance, summary=rows)
     print("bench-gate:", "OK" if ok else "FAILED")
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        write_step_summary(rows, args.tolerance, ok, summary_path)
     return 0 if ok else 1
 
 

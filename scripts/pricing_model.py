@@ -161,6 +161,111 @@ def elems_per_kib(kib, half_wire, fmt):
     return math.floor((kib * 1024.0) / wire_bytes_per_elem(half_wire, fmt))
 
 
+# --- plan::ExchangePlan / plan::search mirror --------------------------------
+# The `tmpi plan` auto-tuner (`rust/src/plan/mod.rs`): plans are dicts with
+# the same fields as `ExchangePlan`, and `plan_search` walks the identical
+# candidate order (hand-picked defaults first, then exhaustive discrete
+# axes with greedy chunk/bucket ladders, strict `<` so earlier candidates
+# win ties). Scoring is injected as a callback: `verify_plan_bands.py`
+# wires in the strategy pricers from `verify_wfbp_bands.py`, keeping this
+# module free of anything that wasn't shared.
+
+PLAN_CHUNK_LADDER = [64, 256, 1024, 4096, 16384]
+PLAN_BUCKET_LADDER = [0, 1024, 4096, 16384]
+PLAN_SEARCH_STRATEGIES = ["ar", "asa", "asa16", "ring"]
+
+
+def plan_default():
+    """`ExchangePlan::default()` as a dict."""
+    return {"strategy": "asa", "wire": None, "chunk_kib": 0, "pipeline": True,
+            "overlap": "none", "bucket_kib": 0, "servers": 1}
+
+
+def plan_half_wire(strategy):
+    """`StrategyKind::half_wire`: asa16 (flat or hier inner) ships f16."""
+    return strategy.split(":")[-1] == "asa16"
+
+
+def plan_chunk_count(full_elems, plan):
+    """`plan::score_bsp`'s chunk-count derivation: a full-scale on-wire
+    chunk budget (`Kib::elems`) becomes a chunk *count* the probe projects
+    onto its capped buffer."""
+    if plan["chunk_kib"] == 0:
+        return 0
+    chunk_elems = max(
+        elems_per_kib(plan["chunk_kib"], plan_half_wire(plan["strategy"]),
+                      plan["wire"] or "f32"), 1)
+    return -(-full_elems // chunk_elems)
+
+
+def plan_hand_picked_defaults(mode):
+    """`plan::hand_picked_defaults`: the never-loses baseline set."""
+    base = plan_default()
+    if mode == "bsp":
+        return [base,
+                {**plan_default(), "strategy": "ar"},
+                {**plan_default(), "strategy": "ring"},
+                {**plan_default(), "strategy": "asa16"},
+                {**plan_default(), "chunk_kib": 4096},
+                {**plan_default(), "overlap": "wfbp"}]
+    return [base,
+            {**plan_default(), "strategy": "asa16"},
+            {**plan_default(), "chunk_kib": 256}]
+
+
+def plan_search(mode, workers, score):
+    """`plan::search` twin: same candidate order, same greedy pruning
+    (`s >= rung_best` stops a ladder walk), same strict-`<` argmin.
+    `score(plan) -> seconds`. Returns the Rust `PlanChoice` as a dict."""
+    state = {"plan": None, "score": float("inf"), "evaluated": 0}
+
+    def ev(plan):
+        s = score(plan)
+        state["evaluated"] += 1
+        if s < state["score"]:
+            state["plan"], state["score"] = plan, s
+        return s
+
+    default_scores = [(p, ev(p)) for p in plan_hand_picked_defaults(mode)]
+
+    if mode == "bsp":
+        for strategy in PLAN_SEARCH_STRATEGIES:
+            mono = {**plan_default(), "strategy": strategy}
+            rung_best = ev(mono)
+            for kib in PLAN_CHUNK_LADDER:
+                s = ev({**mono, "chunk_kib": kib})
+                if s >= rung_best:
+                    break
+                rung_best = s
+            rung_best = float("inf")
+            for kib in PLAN_BUCKET_LADDER:
+                s = ev({**plan_default(), "strategy": strategy,
+                        "overlap": "wfbp", "bucket_kib": kib})
+                if s >= rung_best:
+                    break
+                rung_best = s
+    elif mode == "easgd":
+        servers_axis, s = [], 1
+        while s <= workers:
+            servers_axis.append(s)
+            s *= 2
+        for servers in servers_axis:
+            for strategy in ("asa", "asa16"):
+                mono = {**plan_default(), "strategy": strategy,
+                        "servers": servers}
+                rung_best = ev(mono)
+                for kib in PLAN_CHUNK_LADDER:
+                    sc = ev({**mono, "chunk_kib": kib})
+                    if sc >= rung_best:
+                        break
+                    rung_best = sc
+    else:
+        raise ValueError(mode)
+
+    return {"plan": state["plan"], "score": state["score"],
+            "evaluated": state["evaluated"], "default_scores": default_scores}
+
+
 # --- loader::sim::DiskParams::default() -------------------------------------
 DISK_GBPS = 1.0
 DISK_LAT_US = 100.0

@@ -159,6 +159,83 @@ class MalformedEntries(GateHarness):
         self.assertIn("2 failing", out)
 
 
+class StepSummary(GateHarness):
+    """The $GITHUB_STEP_SUMMARY markdown table (ISSUE 10 satellite):
+    stdout must be unchanged; the summary is an additive side channel."""
+
+    def run_gate_with_summary(self, current, baseline, tolerance=0.10):
+        rows = []
+        with tempfile.TemporaryDirectory() as d:
+            cur_p = os.path.join(d, "current.json")
+            base_p = os.path.join(d, "baseline.json")
+            with open(cur_p, "w") as f:
+                json.dump({"metrics": current}, f)
+            with open(base_p, "w") as f:
+                json.dump({"metrics": baseline}, f)
+            out = io.StringIO()
+            with contextlib.redirect_stdout(out):
+                ok = bench_gate.gate(cur_p, base_p, tolerance, summary=rows)
+        return ok, out.getvalue(), rows
+
+    def test_stdout_identical_with_and_without_summary(self):
+        current = {"t": self.m(1.2), "brand_new": self.m(2.0)}
+        baseline = {"t": self.m(1.0, "lower"), "gone": self.m(3.0, "lower")}
+        _, out_plain = self.run_gate(current, baseline)
+        _, out_summary, _ = self.run_gate_with_summary(current, baseline)
+        # the temp dir differs per run; everything after the path header must
+        # be byte-identical
+        strip = lambda s: s.split("baseline.json: ", 1)[1]  # noqa: E731
+        self.assertEqual(strip(out_plain), strip(out_summary))
+
+    def test_rows_cover_every_metric_with_status(self):
+        ok, _, rows = self.run_gate_with_summary(
+            {"t": self.m(1.2), "f": self.m(0.9), "brand_new": self.m(2.0)},
+            {"t": self.m(1.0, "lower"), "f": self.m(1.0, "lower"),
+             "gone": self.m(3.0, "lower")},
+        )
+        self.assertFalse(ok)
+        by_name = {r["name"]: r["status"] for r in rows}
+        self.assertEqual(by_name["t"], "FAIL")
+        self.assertEqual(by_name["f"], "OK")
+        self.assertEqual(by_name["gone"], "MISSING")
+        self.assertEqual(by_name["brand_new"], "NEW")
+
+    def test_markdown_table_has_deltas_and_bolded_failures(self):
+        _, _, rows = self.run_gate_with_summary(
+            {"t": self.m(1.2), "f": self.m(1.0)},
+            {"t": self.m(1.0, "lower"), "f": self.m(1.0, "higher")},
+        )
+        md = bench_gate.render_step_summary(rows, 0.10, ok=False)
+        self.assertIn("## bench-gate: FAILED (budget 10%)", md)
+        self.assertIn("| metric | current | baseline | delta | better | status |", md)
+        self.assertIn("+20.00%", md)  # t regressed by 20%
+        self.assertIn("**FAIL**", md)
+        self.assertIn("+0.00%", md)  # f unchanged
+        # plain OK rows are not bolded
+        self.assertIn("| OK |", md)
+
+    def test_write_step_summary_appends_to_file(self):
+        _, _, rows = self.run_gate_with_summary(
+            {"t": self.m(0.5)}, {"t": self.m(1.0, "lower")})
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "summary.md")
+            with open(path, "w") as f:
+                f.write("pre-existing content\n")
+            bench_gate.write_step_summary(rows, 0.10, True, path)
+            with open(path) as f:
+                text = f.read()
+        self.assertTrue(text.startswith("pre-existing content\n"))
+        self.assertIn("## bench-gate: OK", text)
+        self.assertIn("-50.00%", text)
+
+    def test_missing_baseline_value_renders_dash(self):
+        _, _, rows = self.run_gate_with_summary(
+            {"brand_new": self.m(2.0), "t": self.m(1.0)},
+            {"t": self.m(1.0, "lower")})
+        md = bench_gate.render_step_summary(rows, 0.10, ok=True)
+        self.assertIn("| brand_new | 2 | — | — | — | NEW |", md)
+
+
 class EntryValueUnit(unittest.TestCase):
     def test_entry_value_accepts_ints_and_floats(self):
         self.assertEqual(bench_gate.entry_value({"value": 3})[0], 3)

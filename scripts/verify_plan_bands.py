@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Python port of the `tmpi plan` exchange auto-tuner scoring.
+
+Stdlib-only twin of `rust/src/plan/mod.rs`: the BSP plan objective
+(`score_plan`) re-derived from the strategy pricers in
+`verify_wfbp_bands.py`, driven through the identical search walk
+(`pricing_model.plan_search` — hand-picked defaults first, exhaustive
+discrete axes, greedy chunk/bucket ladders). Every score
+`rust/benches/bench_plan.rs` reports over its sweep grid
+(AlexNet-128 / GoogLeNet-32 x copper/mosaic x k in {2,4,8}) is recomputed
+here; the committed baseline `bench/baselines/BENCH_plan.json` is
+generated from this model and the CI `plan-smoke` step gates the bench
+against it:
+
+    python3 scripts/verify_plan_bands.py                    # verify bands
+    python3 scripts/verify_plan_bands.py --write-baselines  # + regenerate
+        bench/baselines/BENCH_plan.json
+
+The default search is twin-portable by construction: flat strategies with
+the dense f32 wire (the configurations this port prices to float
+equality). `hier:<inner>` and compressed wires are explicit-plan-only in
+Rust and are rejected here. EASGD plan scoring rides the threaded
+`measure_sharded` probe and is pinned by Rust unit tests
+(`plan::tests::easgd_search_never_loses_and_caches_round_trip`), not by
+this port.
+
+The script exits non-zero if any band fails. NOTE: this container carries
+no Rust toolchain — this port is the only numeric verification the
+planner bands get before the driver's tier-1 runs.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import verify_wfbp_bands as wb  # noqa: E402
+from pricing_model import (  # noqa: E402
+    by_name,
+    elems_per_kib,
+    plan_chunk_count,
+    plan_half_wire,
+    plan_search,
+)
+
+# The bench_plan sweep grid (ISSUE 10): paper models at their paper batch,
+# both fabrics, 2 -> 8 workers.
+SWEEP = [("alexnet", 128), ("googlenet", 32)]
+TOPOLOGIES = ["copper", "mosaic"]
+WORKER_COUNTS = [2, 4, 8]
+
+
+def step_seconds(model, batch):
+    """`PlanInputs::step_seconds`: Table 3 pace with the batch-32 fallback."""
+    t5120 = wb.PAPER_TRAIN_5120.get((model, batch))
+    if t5120 is None:
+        t5120 = wb.PAPER_TRAIN_5120[(model, 32)]
+    return t5120 * batch / 5120.0
+
+
+def score_bsp(model, batch, workers, topology, plan, cuda_aware=True):
+    """`plan::score_bsp`: comm_visible for bucketed-overlap plans,
+    sim_total of the full-vector exchange otherwise."""
+    if plan["wire"] not in (None, "f32"):
+        raise ValueError(f"wire {plan['wire']!r} is explicit-plan-only (not ported)")
+    table = wb.TABLES[model]
+    full = sum(p for _, p in table)
+    topo = by_name(topology, workers)
+    strategy = plan["strategy"]
+    if plan["overlap"] != "none":
+        if plan["chunk_kib"]:
+            raise ValueError("bucketed plans with chunk_kib are not ported")
+        backward = step_seconds(model, batch) * wb.BWD_FRACTION
+        bucket_elems = elems_per_kib(plan["bucket_kib"],
+                                     plan_half_wire(strategy), "f32")
+        out = wb.probe_wfbp(strategy, workers, topo, table, backward,
+                            overlap=(plan["overlap"] == "wfbp"),
+                            bucket_elems=bucket_elems, cuda_aware=cuda_aware)
+        return out["comm_visible"]
+    chunks = plan_chunk_count(full, plan)
+    rep = wb.probe_exchange(strategy, workers, topo, full, chunks=chunks,
+                            pipeline=plan["pipeline"], cuda_aware=cuda_aware)
+    return wb.sim_total(rep)
+
+
+def collect_metrics():
+    """Recompute every metric bench_plan emits over the sweep grid,
+    asserting the never-loses property along the way."""
+    metrics = {}
+    failures = []
+
+    def put(name, value, better):
+        metrics[name] = {"value": value, "better": better}
+
+    def check(cond, msg):
+        if not cond:
+            failures.append(msg)
+
+    for model, batch in SWEEP:
+        for topo_name in TOPOLOGIES:
+            for k in WORKER_COUNTS:
+                tag = f"plan/{model}/{topo_name}/k{k}"
+                choice = plan_search(
+                    "bsp", k,
+                    lambda p: score_bsp(model, batch, k, topo_name, p))
+                default_best = min(s for _, s in choice["default_scores"])
+                put(f"{tag}/best_score", choice["score"], "lower")
+                put(f"{tag}/default_best", default_best, "lower")
+                put(f"{tag}/advantage", default_best / choice["score"], "higher")
+                put(f"{tag}/candidates", choice["evaluated"], "higher")
+                for dplan, dscore in choice["default_scores"]:
+                    check(choice["score"] <= dscore,
+                          f"{tag}: planner pick {choice['plan']} "
+                          f"({choice['score']:.6e}s) loses to default "
+                          f"{dplan} ({dscore:.6e}s)")
+                again = score_bsp(model, batch, k, topo_name, choice["plan"])
+                check(again == choice["score"],
+                      f"{tag}: re-scoring the winner gives {again!r}, "
+                      f"search reported {choice['score']!r}")
+
+    return metrics, failures
+
+
+def write_baselines(metrics, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    note = ("generated by scripts/verify_plan_bands.py --write-baselines; "
+            "values mirror bench_plan's runtime-free planner sweep")
+    path = os.path.join(out_dir, "BENCH_plan.json")
+    with open(path, "w") as f:
+        json.dump({"note": note, "metrics": metrics}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(metrics)} metrics)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="regenerate bench/baselines/BENCH_plan.json")
+    ap.add_argument("--baseline-dir", default=None)
+    args = ap.parse_args()
+    baseline_dir = args.baseline_dir or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "bench", "baselines")
+
+    metrics, failures = collect_metrics()
+
+    width = max(len(k) for k in metrics)
+    for name in sorted(metrics):
+        print(f"{name:{width}s} {metrics[name]['value']!r}")
+
+    if args.write_baselines:
+        write_baselines(metrics, baseline_dir)
+
+    print(f"\n{len(metrics)} metrics;", "bands OK" if not failures else "bands FAILED")
+    for f in failures:
+        print(" FAIL", f)
+    return 0 if not failures else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
